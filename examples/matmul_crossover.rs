@@ -1,0 +1,27 @@
+//! Figure 2 reproduction: the serial/parallel crossover for matmul.
+//!
+//! ```bash
+//! cargo run --release --example matmul_crossover
+//! ```
+//!
+//! Sweeps matrix orders and prints three curves — serial, the paper's
+//! naive per-row-thread platform (crossover ≈ order 1000, matching the
+//! paper's "minimum 1000 and above"), and OHM's managed execution
+//! (crossover an order of magnitude earlier). Also writes
+//! `reports/fig2_matmul.csv`.
+
+use ohm::config::ExperimentConfig;
+use ohm::experiments;
+
+fn main() {
+    let cfg = ExperimentConfig {
+        matmul_orders: vec![16, 32, 64, 128, 256, 512, 750, 1000, 1500, 2048],
+        ..Default::default()
+    };
+    let out = experiments::run("fig2", &cfg).expect("fig2");
+    print!("{}", out.text);
+    let paths = experiments::save(&out, std::path::Path::new(&cfg.out_dir)).expect("save");
+    for p in paths {
+        println!("wrote {}", p.display());
+    }
+}

@@ -1,0 +1,26 @@
+//! Table 3 / Figure 5 reproduction: quicksort pivot strategies,
+//! serial vs parallel.
+//!
+//! ```bash
+//! cargo run --release --example sort_pivots
+//! ```
+//!
+//! Prints our simulated grid next to the paper's published values and the
+//! Fig 5 chart; writes `reports/table3_quicksort.csv` and
+//! `reports/fig5_quicksort_series.csv`.
+
+use ohm::config::ExperimentConfig;
+use ohm::experiments;
+
+fn main() {
+    let cfg = ExperimentConfig::default(); // paper sizes: 1000..2000, 4 cores
+    for id in ["table3", "fig5"] {
+        let out = experiments::run(id, &cfg).expect(id);
+        print!("{}", out.text);
+        let paths = experiments::save(&out, std::path::Path::new(&cfg.out_dir)).expect("save");
+        for p in paths {
+            println!("wrote {}", p.display());
+        }
+        println!();
+    }
+}

@@ -1,0 +1,101 @@
+"""AOT pipeline: lower every L2 model variant to HLO text + manifest.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out-dir`` (default ``../artifacts`` relative to the
+``python/`` package root):
+
+* ``<name>.hlo.txt``  — one per registry variant
+* ``manifest.tsv``    — one line per artifact, tab-separated:
+      name  file  n_inputs  input_specs  output_spec
+  where a spec is ``dtype:d0xd1x...`` and input_specs are
+  ``;``-joined.  The rust loader (`runtime::artifact`) parses exactly
+  this format; keep the two in sync.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged — make
+compares mtimes).  Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Sequence
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+MANIFEST_NAME = "manifest.tsv"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_spec(spec) -> str:
+    dims = "x".join(str(d) for d in spec.shape)
+    return f"{spec.dtype}:{dims}" if dims else f"{spec.dtype}:scalar"
+
+
+def lower_variant(name: str, fn, specs: Sequence[jax.ShapeDtypeStruct]):
+    """Lower one variant; returns (hlo_text, output_spec)."""
+    lowered = jax.jit(fn).lower(*specs)
+    out_aval = jax.eval_shape(fn, *specs)[0]
+    return to_hlo_text(lowered), out_aval
+
+
+def export_all(out_dir: str, only: List[str] | None = None) -> List[str]:
+    """Lower every registry variant into out_dir; returns manifest lines."""
+    os.makedirs(out_dir, exist_ok=True)
+    reg = model.registry()
+    names = only if only else sorted(reg)
+    lines: List[str] = []
+    for name in names:
+        if name not in reg:
+            raise SystemExit(f"unknown variant {name!r}; have {sorted(reg)}")
+        fn, specs = reg[name]
+        text, out_spec = lower_variant(name, fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        in_specs = ";".join(_fmt_spec(s) for s in specs)
+        lines.append(
+            "\t".join([name, fname, str(len(specs)), in_specs, _fmt_spec(out_spec)])
+        )
+        print(f"  lowered {name}: {len(text)} chars", file=sys.stderr)
+    with open(os.path.join(out_dir, MANIFEST_NAME), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+        help="artifact output directory",
+    )
+    ap.add_argument(
+        "--only",
+        nargs="*",
+        default=None,
+        help="lower only these variant names (default: all)",
+    )
+    args = ap.parse_args()
+    lines = export_all(os.path.abspath(args.out_dir), args.only)
+    print(f"wrote {len(lines)} artifacts + {MANIFEST_NAME} to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

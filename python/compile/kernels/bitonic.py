@@ -1,0 +1,129 @@
+"""L1 Pallas kernel: bitonic sorting network.
+
+Hardware adaptation of the paper's parallel quicksort (DESIGN.md
+§Hardware-Adaptation).  Quicksort's recursion is control-flow- and
+data-dependent, which does not map onto a fixed-shape dataflow device;
+the canonical TPU equivalent of "divide the array among cores and sort
+sub-ranges in parallel" is the bitonic network: O(log^2 n) stages of
+data-independent compare-exchanges, every stage perfectly parallel with
+zero synchronization inside a stage — the same overhead structure the
+paper engineers for (sync only at stage joins, disjoint writes).
+
+The whole network runs inside one Pallas kernel (array resident in
+VMEM), with ``interpret=True`` for CPU-PJRT executability.  Oracle:
+``jnp.sort`` via ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(x: jax.Array, idx: jax.Array, k: jax.Array, j: jax.Array) -> jax.Array:
+    """One bitonic substage over the whole array (vectorized).
+
+    Element i is paired with i^j; the pair is ordered ascending when
+    (i & k) == 0, descending otherwise.  Both halves of every pair
+    compute the same min/max, so writes are disjoint and branch-free —
+    the kernel-level analogue of the paper's "no multiple copies of the
+    same index" output rule (Table 2).
+    """
+    partner = idx ^ j
+    px = jnp.take(x, partner, axis=0)
+    ascending = (idx & k) == 0
+    is_low = idx < partner
+    take_min = jnp.where(ascending, is_low, ~is_low)
+    lo = jnp.minimum(x, px)
+    hi = jnp.maximum(x, px)
+    return jnp.where(take_min, lo, hi)
+
+
+def _bitonic_kernel(x_ref, o_ref, *, log_n: int):
+    """Full bitonic sort network: log_n stages, stage kk has kk+1 substages."""
+    x = x_ref[...]
+    n = x.shape[0]
+    idx = jax.lax.iota(jnp.int32, n)
+
+    def stage_body(kk, x):
+        k = jnp.int32(2) << kk  # k = 2^(kk+1)
+
+        def substage_body(jj, x):
+            j = k >> (jj + 1)  # j = k/2, k/4, ..., 1
+            return _compare_exchange(x, idx, k, j)
+
+        return jax.lax.fori_loop(0, kk + 1, substage_body, x)
+
+    o_ref[...] = jax.lax.fori_loop(0, log_n, stage_body, x)
+
+
+def _stage_kernel(x_ref, o_ref, *, k: int, j: int):
+    """A single (k, j) substage as its own kernel (test granularity)."""
+    x = x_ref[...]
+    idx = jax.lax.iota(jnp.int32, x.shape[0])
+    o_ref[...] = _compare_exchange(x, idx, jnp.int32(k), jnp.int32(j))
+
+
+def _check_pow2(n: int) -> int:
+    log_n = n.bit_length() - 1
+    assert 1 << log_n == n, f"bitonic network needs power-of-two length, got {n}"
+    return log_n
+
+
+def sort(x: jax.Array) -> jax.Array:
+    """Bitonic-sort a power-of-two-length 1-D array ascending."""
+    (n,) = x.shape
+    log_n = _check_pow2(n)
+    if n == 1:
+        return x
+    kernel = functools.partial(_bitonic_kernel, log_n=log_n)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def sort_stage(x: jax.Array, k: int, j: int) -> jax.Array:
+    """Run one compare-exchange substage (used by stage-level tests)."""
+    (n,) = x.shape
+    _check_pow2(n)
+    kernel = functools.partial(_stage_kernel, k=k, j=j)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _max_sentinel(dtype) -> jax.Array:
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(jnp.inf, dtype=dtype)
+    return jnp.array(jnp.iinfo(dtype).max, dtype=dtype)
+
+
+def sort_padded(x: jax.Array) -> jax.Array:
+    """Sort any-length 1-D array: pad with +max to the next power of two.
+
+    The sentinels sort to the tail and are sliced off, so the visible
+    result is exact for any input that does not itself contain the
+    sentinel value at the clipped positions.
+    """
+    (n,) = x.shape
+    if n == 0:
+        return x
+    np2 = 1 << max(0, (n - 1).bit_length())
+    if np2 == n:
+        return sort(x)
+    pad = jnp.full((np2 - n,), _max_sentinel(x.dtype), dtype=x.dtype)
+    return sort(jnp.concatenate([x, pad]))[:n]
+
+
+def comparator_count(n: int) -> int:
+    """Total compare-exchange ops (perf model: work = n/2 per substage)."""
+    log_n = _check_pow2(n)
+    substages = log_n * (log_n + 1) // 2
+    return substages * (n // 2)

@@ -1,0 +1,148 @@
+"""L1 Pallas kernel: tiled matrix multiplication.
+
+The paper's matmul parallelization distributes row/column work among
+cores (master-slave) and keeps the inter-product additions core-local so
+no synchronization happens inside a row-column product.  The TPU mapping
+of that insight (DESIGN.md §Hardware-Adaptation):
+
+* the Pallas grid plays the role of the master-slave distribution —
+  each (i, j) grid step owns one disjoint output tile, so there is no
+  output synchronization (the paper's "replication of output matrix"
+  overhead is structurally absent);
+* the K-loop accumulates into the output tile held in VMEM — the
+  paper's "inter-product addition" stays core-local;
+* tiles are 128x128 by default, matching the MXU systolic array shape,
+  staged HBM->VMEM by BlockSpec.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO that
+any backend (including the rust-side PJRT CPU client) runs.  Correctness
+is pinned against the pure-jnp oracle in ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tile.  On a real TPU this is the systolic array
+# native shape; under interpret=True it only affects the loop structure.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k_steps: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ y[k,j].
+
+    The grid iterates k innermost; the output tile is revisited across
+    the K steps and accumulated in place (VMEM-resident on TPU), so the
+    only synchronization in the whole matmul is the implicit join at
+    grid completion — exactly the paper's overhead-managed schedule.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Tiled Pallas matmul, f32 accumulation, f32 result.
+
+    Requires dimensions to be multiples of the block shape; callers with
+    ragged shapes go through :func:`matmul_padded`.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch: {x.shape} @ {y.shape}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shape ({m},{k})x({k},{n}) not a multiple of blocks "
+        f"({block_m},{block_n},{block_k}); use matmul_padded"
+    )
+    n_k_steps = k // block_k
+    kernel = functools.partial(_matmul_kernel, n_k_steps=n_k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, n_k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two block <= preferred that keeps padding < 2x."""
+    b = preferred
+    while b > 8 and _round_up(dim, b) >= 2 * dim and b > dim:
+        b //= 2
+    return b
+
+
+def matmul_padded(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Matmul for arbitrary shapes: zero-pad to tile multiples, slice back.
+
+    Zero padding is exact for matmul (padded rows/cols contribute 0), so
+    no tolerance is lost; this is how the L2 model exposes the paper's
+    order-1000 matrices (padded to 1024) to the 128-tile kernel.
+    """
+    m, k = x.shape
+    _, n = y.shape
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = matmul(xp, yp, block_m=bm, block_n=bn, block_k=bk)
+    return out[:m, :n]
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, in_dtype_bits: int = 32) -> int:
+    """Estimated VMEM working set of one grid step (perf model for §Perf).
+
+    x tile + y tile (input dtype) + f32 output/accumulator tile; the
+    double-buffered pipeline doubles the input tiles.
+    """
+    in_bytes = in_dtype_bits // 8
+    x_tile = block_m * block_k * in_bytes
+    y_tile = block_k * block_n * in_bytes
+    o_tile = block_m * block_n * 4
+    return 2 * (x_tile + y_tile) + o_tile
+
+
+def mxu_utilization(m: int, n: int, k: int, block_m: int, block_n: int, block_k: int) -> float:
+    """Fraction of MXU-issue slots doing useful work (padding waste only)."""
+    mp, np_, kp = _round_up(m, block_m), _round_up(n, block_n), _round_up(k, block_k)
+    return (m * n * k) / float(mp * np_ * kp)

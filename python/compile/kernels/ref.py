@@ -1,0 +1,30 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has exactly one oracle here; pytest pins
+kernel-vs-oracle agreement across shape/dtype sweeps (hypothesis).  The
+oracles are deliberately the most boring possible jnp expressions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """f32-accumulated matmul — oracle for kernels.matmul.matmul*."""
+    return jnp.matmul(
+        x.astype(jnp.float32),
+        y.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def sort(x: jax.Array) -> jax.Array:
+    """Ascending sort — oracle for kernels.bitonic.sort*."""
+    return jnp.sort(x)
+
+
+def matmul_chain(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    """(A @ B) @ C in f32 — oracle for the L2 matrix-chain model."""
+    return matmul(matmul(a, b), c)

@@ -1,0 +1,126 @@
+"""L2: JAX compute graphs for the paper's two DLA domains.
+
+Each public ``build_*`` function returns ``(fn, example_specs)`` where
+``fn`` is the jit-able computation (calling the L1 Pallas kernels) and
+``example_specs`` are the ``jax.ShapeDtypeStruct`` arguments used to
+lower it.  ``aot.py`` lowers every registered variant to HLO text for
+the rust runtime; nothing in this module runs at request time.
+
+All functions return 1-tuples: the AOT recipe lowers with
+``return_tuple=True`` and the rust side unwraps with ``to_tuple1()``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic as bitonic_kernel
+from .kernels import matmul as matmul_kernel
+
+Spec = jax.ShapeDtypeStruct
+ModelFn = Callable[..., tuple]
+Variant = Tuple[ModelFn, List[Spec]]
+
+
+def build_matmul(n: int, dtype=jnp.float32) -> Variant:
+    """Square order-n matmul C = A @ B through the tiled Pallas kernel.
+
+    Orders that are not tile multiples (the paper's order-1000 case) go
+    through the zero-padding wrapper — exact for matmul.
+    """
+
+    def fn(x, y):
+        return (matmul_kernel.matmul_padded(x, y),)
+
+    spec = Spec((n, n), dtype)
+    return fn, [spec, spec]
+
+
+def build_matmul_rect(m: int, k: int, n: int, dtype=jnp.float32) -> Variant:
+    """Rectangular matmul (m,k) @ (k,n) — exercises ragged tiling."""
+
+    def fn(x, y):
+        return (matmul_kernel.matmul_padded(x, y),)
+
+    return fn, [Spec((m, k), dtype), Spec((k, n), dtype)]
+
+
+def build_matmul_chain(n: int, dtype=jnp.float32) -> Variant:
+    """(A @ B) @ C — the paper's 'matrix chain multiplication' mention.
+
+    Two kernel invocations fused into one artifact; XLA sees both
+    pallas-lowered loops in a single module and can pipeline them.
+    """
+
+    def fn(a, b, c):
+        ab = matmul_kernel.matmul_padded(a, b)
+        return (matmul_kernel.matmul_padded(ab, c),)
+
+    spec = Spec((n, n), dtype)
+    return fn, [spec, spec, spec]
+
+
+def build_matmul_native(n: int, dtype=jnp.float32) -> Variant:
+    """Square matmul through XLA's native dot (no Pallas).
+
+    §Perf (L2): under ``interpret=True`` the Pallas kernel lowers to a
+    while-loop of dynamic-slice/dot/dynamic-update-slice, which the CPU
+    backend executes tile by tile; the native ``jnp.matmul`` lowers to a
+    single fused ``dot`` the backend dispatches to its optimized kernel.
+    On a real TPU the Pallas/Mosaic path is the optimized one; on the CPU
+    PJRT plugin the native variant is the roofline reference. The runtime
+    bench (`runtime_xla`) measures both; the coordinator prefers
+    ``matmul_native_<n>`` when present.
+    """
+
+    def fn(x, y):
+        return (jnp.matmul(x, y, preferred_element_type=jnp.float32),)
+
+    spec = Spec((n, n), dtype)
+    return fn, [spec, spec]
+
+
+def build_bitonic(n: int, dtype=jnp.float32) -> Variant:
+    """Sort n values ascending via the bitonic-network kernel.
+
+    n may be any positive size; non-powers-of-two pad with +max
+    sentinels inside the graph (see kernels.bitonic.sort_padded).
+    """
+
+    def fn(x):
+        return (bitonic_kernel.sort_padded(x),)
+
+    return fn, [Spec((n,), dtype)]
+
+
+def build_topk_of_sorted(n: int, k: int, dtype=jnp.float32) -> Variant:
+    """Smallest-k via full bitonic sort + slice (coordinator demo op)."""
+
+    def fn(x):
+        return (bitonic_kernel.sort_padded(x)[:k],)
+
+    return fn, [Spec((n,), dtype)]
+
+
+# ---------------------------------------------------------------------------
+# Variant registry: everything aot.py exports, keyed by artifact name.
+# Sizes mirror the paper's evaluation sweep (Fig 2 orders around the
+# crossover at 1000; Table 3 element counts 1000..2000) plus tile-exact
+# sizes for the runtime integration tests.
+# ---------------------------------------------------------------------------
+
+def registry() -> Dict[str, Variant]:
+    reg: Dict[str, Variant] = {}
+    for n in (64, 128, 256, 512, 1000, 1024):
+        reg[f"matmul_{n}"] = build_matmul(n)
+    for n in (256, 1000):
+        reg[f"matmul_native_{n}"] = build_matmul_native(n)
+    reg["matmul_rect_96x160x224"] = build_matmul_rect(96, 160, 224)
+    reg["matmul_chain_256"] = build_matmul_chain(256)
+    for n in (1000, 1100, 1500, 2000, 1024, 4096):
+        reg[f"bitonic_{n}"] = build_bitonic(n)
+    reg["topk_2048_16"] = build_topk_of_sorted(2048, 16)
+    return reg

@@ -1,0 +1,46 @@
+"""AOT pipeline: HLO-text emission + manifest format (rust-side contract)."""
+
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_contains_entry():
+    fn, specs = model.build_matmul(64)
+    text, out_spec = aot.lower_variant("matmul_64", fn, specs)
+    assert "ENTRY" in text and "HloModule" in text
+    assert out_spec.shape == (64, 64)
+    # No Mosaic custom-calls may leak into CPU-executable artifacts.
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_export_subset_and_manifest(tmp_path):
+    out = str(tmp_path)
+    lines = aot.export_all(out, only=["matmul_64", "bitonic_1024"])
+    assert len(lines) == 2
+    assert os.path.exists(os.path.join(out, "matmul_64.hlo.txt"))
+    assert os.path.exists(os.path.join(out, "bitonic_1024.hlo.txt"))
+    manifest = open(os.path.join(out, aot.MANIFEST_NAME)).read().strip().splitlines()
+    assert len(manifest) == 2
+    name, fname, n_in, in_specs, out_spec = manifest[0].split("\t")
+    assert name == "bitonic_1024" or name == "matmul_64"
+    # spec grammar: dtype:dims
+    for s in in_specs.split(";"):
+        dtype, dims = s.split(":")
+        assert dtype == "float32"
+        assert all(d.isdigit() for d in dims.split("x"))
+
+
+def test_spec_format():
+    assert aot._fmt_spec(jnp.zeros((3, 4), jnp.float32)) == "float32:3x4"
+    assert aot._fmt_spec(jnp.zeros((5,), jnp.int32)) == "int32:5"
+    assert aot._fmt_spec(jnp.zeros((), jnp.float32)) == "float32:scalar"
+
+
+def test_export_unknown_variant_fails(tmp_path):
+    with pytest.raises(SystemExit, match="unknown variant"):
+        aot.export_all(str(tmp_path), only=["nope"])

@@ -1,0 +1,97 @@
+"""L1 bitonic-network kernel vs jnp.sort oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitonic as bk
+from compile.kernels import ref
+
+
+def _rand(n, dtype, seed):
+    k = jax.random.PRNGKey(seed)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jax.random.normal(k, (n,), dtype=jnp.float32).astype(dtype)
+    return jax.random.randint(k, (n,), -1000, 1000, dtype=dtype)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 64, 256, 1024])
+def test_sort_pow2_f32(n):
+    x = _rand(n, jnp.float32, n)
+    np.testing.assert_array_equal(bk.sort(x), ref.sort(x))
+
+
+@pytest.mark.parametrize("n", [4, 128, 512])
+def test_sort_pow2_i32(n):
+    x = _rand(n, jnp.int32, n)
+    np.testing.assert_array_equal(bk.sort(x), ref.sort(x))
+
+
+def test_sort_single_element():
+    x = jnp.array([42.0], dtype=jnp.float32)
+    np.testing.assert_array_equal(bk.sort(x), x)
+
+
+def test_sort_rejects_non_pow2():
+    with pytest.raises(AssertionError, match="power-of-two"):
+        bk.sort(jnp.zeros((1000,), jnp.float32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 2048), seed=st.integers(0, 2**16))
+def test_sort_padded_any_length_f32(n, seed):
+    """Hypothesis sweep: arbitrary lengths via +inf sentinel padding."""
+    x = _rand(n, jnp.float32, seed)
+    np.testing.assert_array_equal(bk.sort_padded(x), ref.sort(x))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 1024), seed=st.integers(0, 2**16))
+def test_sort_padded_any_length_i32(n, seed):
+    x = _rand(n, jnp.int32, seed)
+    np.testing.assert_array_equal(bk.sort_padded(x), ref.sort(x))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_sort_duplicates_and_presorted(seed):
+    """Few-unique and adversarial (sorted / reverse) inputs."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.randint(k, (256,), 0, 4, dtype=jnp.int32)
+    np.testing.assert_array_equal(bk.sort(x), ref.sort(x))
+    asc = jnp.arange(256, dtype=jnp.int32)
+    np.testing.assert_array_equal(bk.sort(asc), asc)
+    np.testing.assert_array_equal(bk.sort(asc[::-1]), asc)
+
+
+def test_sort_is_permutation():
+    x = _rand(512, jnp.float32, 9)
+    got = np.asarray(bk.sort(x))
+    assert sorted(np.asarray(x).tolist()) == got.tolist()
+
+
+@pytest.mark.parametrize(
+    "k,j", [(2, 1), (4, 2), (4, 1), (8, 4), (8, 2), (8, 1)]
+)
+def test_single_stage_is_involution_free_and_pairwise(k, j):
+    """One substage orders each (i, i^j) pair per its k-block direction."""
+    n = 16
+    x = _rand(n, jnp.float32, k * 31 + j)
+    out = np.asarray(bk.sort_stage(x, k, j))
+    xin = np.asarray(x)
+    for i in range(n):
+        p = i ^ j
+        lo_i, hi_i = min(i, p), max(i, p)
+        pair = sorted([xin[lo_i], xin[hi_i]])
+        if (i & k) == 0:  # ascending block
+            assert out[lo_i] == pair[0] and out[hi_i] == pair[1]
+        else:
+            assert out[lo_i] == pair[1] and out[hi_i] == pair[0]
+
+
+def test_comparator_count():
+    # n=8: log=3 -> 6 substages * 4 comparators = 24
+    assert bk.comparator_count(8) == 24
+    assert bk.comparator_count(2) == 1

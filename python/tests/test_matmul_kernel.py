@@ -1,0 +1,119 @@
+"""L1 matmul kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, dtype, seed):
+    k = jax.random.PRNGKey(seed)
+    return jax.random.normal(k, shape, dtype=jnp.float32).astype(dtype)
+
+
+TILE_EXACT = [(128, 128, 128), (128, 256, 128), (256, 128, 384)]
+
+
+@pytest.mark.parametrize("m,k,n", TILE_EXACT)
+def test_matmul_tile_exact(m, k, n):
+    x = _rand((m, k), jnp.float32, 0)
+    y = _rand((k, n), jnp.float32, 1)
+    got = mk.matmul(x, y)
+    want = ref.matmul(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_ragged_shapes():
+    x = _rand((100, 128), jnp.float32, 0)
+    y = _rand((128, 128), jnp.float32, 1)
+    with pytest.raises(AssertionError, match="matmul_padded"):
+        mk.matmul(x, y)
+
+
+def test_matmul_rejects_contraction_mismatch():
+    x = _rand((128, 128), jnp.float32, 0)
+    y = _rand((256, 128), jnp.float32, 1)
+    with pytest.raises(AssertionError, match="contraction"):
+        mk.matmul_padded(x, y)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 160),
+    n=st.integers(1, 160),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_padded_matches_ref_f32(m, k, n, seed):
+    """Hypothesis sweep over ragged shapes (paper's order-1000 path)."""
+    x = _rand((m, k), jnp.float32, seed)
+    y = _rand((k, n), jnp.float32, seed + 1)
+    got = mk.matmul_padded(x, y)
+    want = ref.matmul(x, y)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_padded_matches_ref_bf16(m, k, n, seed):
+    """bf16 inputs, f32 accumulation: tolerance scaled to bf16 mantissa."""
+    x = _rand((m, k), jnp.bfloat16, seed)
+    y = _rand((k, n), jnp.bfloat16, seed + 1)
+    got = mk.matmul_padded(x, y)
+    want = ref.matmul(x, y)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("block", [32, 64, 128])
+def test_matmul_block_shape_invariance(block):
+    """Result must not depend on the chosen tile shape."""
+    x = _rand((128, 128), jnp.float32, 7)
+    y = _rand((128, 128), jnp.float32, 8)
+    got = mk.matmul(x, y, block_m=block, block_n=block, block_k=block)
+    want = ref.matmul(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_order_1000_paper_case():
+    """The paper's crossover order: 1000 is not a tile multiple."""
+    x = _rand((1000, 1000), jnp.float32, 3)
+    y = _rand((1000, 1000), jnp.float32, 4)
+    got = mk.matmul_padded(x, y)
+    want = ref.matmul(x, y)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_zero_and_identity():
+    n = 128
+    eye = jnp.eye(n, dtype=jnp.float32)
+    x = _rand((n, n), jnp.float32, 5)
+    np.testing.assert_allclose(mk.matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        mk.matmul(x, jnp.zeros((n, n), jnp.float32)), jnp.zeros((n, n)), atol=0
+    )
+
+
+def test_vmem_bytes_model():
+    # 128^3 f32 tiles: 2*(64KiB+64KiB) + 64KiB = 320 KiB — fits 16 MiB VMEM.
+    b = mk.vmem_bytes(128, 128, 128, 32)
+    assert b == 2 * (128 * 128 * 4 + 128 * 128 * 4) + 128 * 128 * 4
+    assert b < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_model():
+    assert mk.mxu_utilization(128, 128, 128, 128, 128, 128) == 1.0
+    u = mk.mxu_utilization(1000, 1000, 1000, 128, 128, 128)
+    assert 0.85 < u < 1.0  # 1000^3 / 1024^3

@@ -1,0 +1,80 @@
+"""L2 model graphs: shapes, numerics vs oracles, registry completeness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=dtype)
+
+
+def test_registry_names_and_specs():
+    reg = model.registry()
+    # Every paper-sweep size must be present.
+    for n in (64, 128, 256, 512, 1000, 1024):
+        assert f"matmul_{n}" in reg
+    for n in (1000, 1100, 1500, 2000):
+        assert f"bitonic_{n}" in reg
+    for name, (fn, specs) in reg.items():
+        assert callable(fn)
+        assert all(isinstance(s, jax.ShapeDtypeStruct) for s in specs), name
+
+
+def test_matmul_model_numerics():
+    fn, specs = model.build_matmul(96)
+    x, y = _rand(specs[0].shape, 0), _rand(specs[1].shape, 1)
+    (got,) = fn(x, y)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rect_model_numerics():
+    fn, specs = model.build_matmul_rect(50, 70, 30)
+    x, y = _rand((50, 70), 2), _rand((70, 30), 3)
+    (got,) = fn(x, y)
+    assert got.shape == (50, 30)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_chain_model_numerics():
+    fn, _ = model.build_matmul_chain(64)
+    a, b, c = _rand((64, 64), 4), _rand((64, 64), 5), _rand((64, 64), 6)
+    (got,) = fn(a, b, c)
+    np.testing.assert_allclose(got, ref.matmul_chain(a, b, c), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n", [1000, 1024, 7])
+def test_bitonic_model_numerics(n):
+    fn, _ = model.build_bitonic(n)
+    x = _rand((n,), n)
+    (got,) = fn(x)
+    np.testing.assert_array_equal(got, ref.sort(x))
+
+
+def test_topk_model_numerics():
+    fn, _ = model.build_topk_of_sorted(200, 10)
+    x = _rand((200,), 11)
+    (got,) = fn(x)
+    np.testing.assert_array_equal(got, ref.sort(x)[:10])
+
+
+def test_models_are_jittable():
+    """Every registry variant must trace under jit (lowering precondition)."""
+    reg = model.registry()
+    for name in ("matmul_64", "bitonic_1024", "matmul_chain_256", "topk_2048_16"):
+        fn, specs = reg[name]
+        jax.jit(fn).lower(*specs)  # raises if untraceable
+
+
+def test_matmul_native_matches_pallas_variant():
+    """The native-dot artifact must agree with the Pallas-kernel artifact."""
+    fn_native, specs = model.build_matmul_native(96)
+    fn_pallas, _ = model.build_matmul(96)
+    x, y = _rand((96, 96), 20), _rand((96, 96), 21)
+    (a,) = fn_native(x, y)
+    (b,) = fn_pallas(x, y)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,43 @@
+//! Bench: adversarial-input ablation — comparison counts per
+//! (distribution × pivot strategy); explains the random pivot's existence.
+
+use ohm::bench::Runner;
+use ohm::sort::{baselines, serial_quicksort, PivotStrategy};
+use ohm::workload::arrays::{self, Distribution};
+
+fn main() {
+    let mut r = Runner::new("ablation_adversarial");
+    let n = 2000usize;
+    for dist in [
+        Distribution::UniformRandom,
+        Distribution::Sorted,
+        Distribution::Reverse,
+        Distribution::FewUnique { k: 4 },
+        Distribution::Sawtooth { run: 100 },
+    ] {
+        for s in [
+            PivotStrategy::Left,
+            PivotStrategy::Mean,
+            PivotStrategy::Right,
+            PivotStrategy::Random,
+            PivotStrategy::MedianOf3,
+        ] {
+            let mut xs = arrays::generate(n, dist, 42);
+            let ops = serial_quicksort(&mut xs, s, 42);
+            r.record(
+                &format!("comparisons/{}", s.name()),
+                &format!("dist={}", dist.name()),
+                vec![ops.comparisons as f64],
+                "ops",
+            );
+        }
+        // Input-insensitive baselines for contrast.
+        let mut xs = arrays::generate(n, dist, 42);
+        let m = baselines::mergesort(&mut xs);
+        r.record("comparisons/mergesort", &format!("dist={}", dist.name()), vec![m.comparisons as f64], "ops");
+        let mut xs = arrays::generate(n, dist, 42);
+        let b = baselines::bitonic(&mut xs);
+        r.record("comparisons/bitonic", &format!("dist={}", dist.name()), vec![b.comparisons as f64], "ops");
+    }
+    r.finish();
+}

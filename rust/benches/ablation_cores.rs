@@ -1,0 +1,34 @@
+//! Bench: cores ablation (`abl-cores`) — ideal Amdahl vs overhead-adjusted
+//! speedup, and a simulated strong-scaling run for the matmul tree.
+
+use ohm::bench::Runner;
+use ohm::experiments::fig2::matmul_tree;
+use ohm::overhead::{amdahl, OverheadParams, WorkEstimate};
+use ohm::sim::Machine;
+
+fn main() {
+    let mut r = Runner::new("ablation_cores");
+    let params = OverheadParams::paper_2022();
+
+    for (label, work_ns, bytes) in [
+        ("matmul-512", 512f64.powi(3), (2 * 512 * 512 * 4) as u64),
+        ("matmul-64", 64f64.powi(3), (2 * 64 * 64 * 4) as u64),
+        ("sort-2000", 2000.0 * 11.0 * 225.0, 16_000u64),
+    ] {
+        let est = WorkEstimate::fully_parallel(work_ns, bytes);
+        for (p, ideal, adj) in amdahl::sweep(&params, &est, &[1, 2, 4, 8, 16, 32]) {
+            r.record(&format!("{label}/ideal"), &format!("cores={p}"), vec![ideal], "x");
+            r.record(&format!("{label}/adjusted"), &format!("cores={p}"), vec![adj], "x");
+        }
+    }
+
+    // Strong scaling of the actual simulated schedule (matmul 512,
+    // manager-agnostic fixed 4-per-core tasks).
+    for p in [1usize, 2, 4, 8, 16] {
+        let machine = Machine::new(p, params);
+        let rep = machine.run(&matmul_tree(512, 1.0, 4 * p), false);
+        r.record("matmul-512/simulated-speedup", &format!("cores={p}"), vec![rep.speedup()], "x");
+    }
+
+    r.finish();
+}

@@ -1,0 +1,46 @@
+//! Bench: grain ablation (`abl-grain`) — virtual time vs task count /
+//! fork cutoff, plus the manager's predicted optimum for comparison.
+
+use ohm::bench::Runner;
+use ohm::config::ExperimentConfig;
+use ohm::experiments::fig2::matmul_tree;
+use ohm::overhead::{model, OverheadParams, WorkEstimate};
+use ohm::sim::Machine;
+use ohm::sort::{parallel::simulate_with_cutoff, PivotStrategy, SortCostModel};
+use ohm::workload::arrays;
+
+fn main() {
+    let mut r = Runner::new("ablation_grain");
+    let cfg = ExperimentConfig::default();
+    let params = OverheadParams::paper_2022();
+    let machine = Machine::new(cfg.cores, params);
+
+    // Matmul 512: task-count sweep + manager prediction.
+    let n = 512usize;
+    let mut tasks = 1usize;
+    while tasks <= 16 * cfg.cores {
+        let rep = machine.run(&matmul_tree(n, 1.0, tasks), false);
+        r.record("matmul-512/sweep", &format!("tasks={tasks}"), vec![rep.makespan_ns / 1e3], "us(virtual)");
+        tasks *= 2;
+    }
+    let est = WorkEstimate::fully_parallel((n as f64).powi(3), (2 * n * n * 4) as u64);
+    let (best_tasks, best_pred) = model::best_grain(&params, &est, cfg.cores, 64 * cfg.cores);
+    r.record(
+        "matmul-512/manager-pick",
+        &format!("tasks={best_tasks}"),
+        vec![best_pred / 1e3],
+        "us(virtual)",
+    );
+
+    // Quicksort 2000: cutoff sweep.
+    let model_s = SortCostModel::paper_2022();
+    let mut cutoff = 16usize;
+    while cutoff <= 2000 {
+        let mut xs = arrays::uniform_i64(2000, cfg.seed);
+        let rep = simulate_with_cutoff(&mut xs, PivotStrategy::Mean, cutoff, cfg.seed, &model_s, &machine);
+        r.record("sort-2000/sweep", &format!("cutoff={cutoff}"), vec![rep.makespan_ns / 1e3], "us(virtual)");
+        cutoff *= 2;
+    }
+
+    r.finish();
+}

@@ -1,0 +1,37 @@
+//! Bench: Strassen cutoff ablation — the extension case for the paper's
+//! "division effort vs problem size" rule: the optimal cutoff balances
+//! saved multiplications against extra additions (and allocation churn).
+
+use ohm::bench::{BenchCfg, Runner};
+use ohm::dla::{matmul, strassen};
+use ohm::pool::ThreadPool;
+use ohm::workload::matrices;
+
+fn main() {
+    let mut r = Runner::with_cfg(
+        "ablation_strassen",
+        BenchCfg { warmup_iters: 1, sample_count: 5, max_total_ns: 20_000_000_000 },
+    );
+    let n = 256usize;
+    let a = matrices::uniform(n, n, 1);
+    let b = matrices::uniform(n, n, 2);
+
+    r.measure("classical-ikj", &format!("order={n}"), || matmul::serial(&a, &b));
+    for cutoff in [16usize, 32, 64, 128] {
+        r.measure("strassen", &format!("order={n},cutoff={cutoff}"), || {
+            strassen::strassen(&a, &b, cutoff)
+        });
+        // Model ops for the same configuration (deterministic).
+        r.record(
+            "strassen-model-ops",
+            &format!("order={n},cutoff={cutoff}"),
+            vec![strassen::work_ops(n, cutoff)],
+            "ops",
+        );
+    }
+    let pool = ThreadPool::new(4);
+    r.measure("strassen-parallel-2lvl", &format!("order={n},cutoff=64"), || {
+        strassen::strassen_parallel(&a, &b, &pool, 64, 2)
+    });
+    r.finish();
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerates **Figure 2** (matmul serial vs parallel by order).
+//!
+//! Virtual-time series (deterministic, the paper's actual figure) plus
+//! wall-clock measurements of the real engines on this host (perf
+//! tracking for §Perf). Output: console + `target/ohm-bench/fig2_matmul.csv`.
+
+use ohm::bench::{BenchCfg, Runner};
+use ohm::dla::matmul;
+use ohm::experiments::fig2;
+use ohm::pool::ThreadPool;
+use ohm::workload::matrices;
+
+fn main() {
+    let mut r = Runner::new("fig2_matmul");
+
+    // --- The paper's figure: virtual time per order (3 engines) -------
+    for &n in &[16usize, 32, 64, 128, 256, 512, 750, 1000, 1500, 2048] {
+        let (serial, naive, managed) = fig2::row(n, 1.0, 4);
+        r.record("fig2/serial", &format!("order={n}"), vec![serial * 1e3], "us(virtual)");
+        r.record("fig2/parallel-naive", &format!("order={n}"), vec![naive * 1e3], "us(virtual)");
+        r.record("fig2/parallel-managed", &format!("order={n}"), vec![managed * 1e3], "us(virtual)");
+    }
+
+    // --- Host wall-clock: real engines (perf baseline for §Perf) ------
+    let mut wall = Runner::with_cfg(
+        "fig2_matmul_wall",
+        BenchCfg { warmup_iters: 1, sample_count: 5, max_total_ns: 10_000_000_000 },
+    );
+    let pool = ThreadPool::new(4);
+    for &n in &[64usize, 128, 256] {
+        let a = matrices::uniform(n, n, 1);
+        let b = matrices::uniform(n, n, 2);
+        wall.measure("serial-ijk", &format!("order={n}"), || matmul::serial_ijk(&a, &b));
+        wall.measure("serial-ikj", &format!("order={n}"), || matmul::serial(&a, &b));
+        wall.measure("blocked-64", &format!("order={n}"), || matmul::blocked(&a, &b, 64));
+        wall.measure("pool-parallel-8t", &format!("order={n}"), || matmul::parallel(&a, &b, &pool, 8));
+    }
+
+    r.finish();
+    wall.finish();
+}

@@ -1,0 +1,67 @@
+//! Bench: pool micro-benchmarks — the L3 hot paths behind every α/β/γ
+//! constant (join latency, scope spawn throughput, deque churn).
+//! §Perf tracks these before/after optimization.
+
+use ohm::bench::{BenchCfg, Runner};
+use ohm::pool::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn main() {
+    let mut r = Runner::with_cfg(
+        "pool_micro",
+        BenchCfg { warmup_iters: 3, sample_count: 11, max_total_ns: 8_000_000_000 },
+    );
+
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads);
+
+        // join with trivial branches: pure fork-join overhead (α+β path).
+        r.measure("join-noop", &format!("threads={threads}"), || {
+            pool.join(|| std::hint::black_box(1), || std::hint::black_box(2))
+        });
+
+        // Nested join tree, 1024 leaves: amortized fork-join cost.
+        r.measure("join-tree-1024", &format!("threads={threads}"), || {
+            fn tree(pool: &ThreadPool, depth: usize) -> u64 {
+                if depth == 0 {
+                    return 1;
+                }
+                let (a, b) = pool.join(|| tree(pool, depth - 1), || tree(pool, depth - 1));
+                a + b
+            }
+            tree(&pool, 10)
+        });
+
+        // scope spawn throughput, 1000 empty tasks (spawn+steal churn).
+        r.measure("scope-1000-noop", &format!("threads={threads}"), || {
+            let c = AtomicU64::new(0);
+            pool.scope(|s| {
+                for _ in 0..1000 {
+                    let c = &c;
+                    s.spawn(move |_| {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            });
+            c.load(Ordering::Relaxed)
+        });
+
+        // install round-trip (external thread → worker → back).
+        r.measure("install-roundtrip", &format!("threads={threads}"), || {
+            pool.install(|| std::hint::black_box(7))
+        });
+
+        // for_each_index with real (small) work per task.
+        r.measure("for-each-256x1us", &format!("threads={threads}"), || {
+            pool.for_each_index(256, |i| {
+                let mut acc = i as u64;
+                for k in 0..220 {
+                    acc = acc.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(k);
+                }
+                std::hint::black_box(acc);
+            })
+        });
+    }
+
+    r.finish();
+}

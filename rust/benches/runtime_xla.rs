@@ -1,0 +1,72 @@
+//! Bench: PJRT runtime — artifact execution latency (the L1/L2 serving
+//! path) vs the pure-rust engines; cold compile vs warm cache.
+//!
+//! Skips politely when `make artifacts` has not run.
+
+use ohm::bench::{BenchCfg, Runner};
+use ohm::dla::matmul;
+use ohm::runtime::{self, Runtime};
+use ohm::workload::{arrays, matrices};
+
+fn main() {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("runtime_xla: no artifacts (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Runtime::load(&dir).expect("load runtime");
+    let mut r = Runner::with_cfg(
+        "runtime_xla",
+        BenchCfg { warmup_iters: 1, sample_count: 5, max_total_ns: 20_000_000_000 },
+    );
+
+    // Cold compile time per artifact (fresh runtime each).
+    for name in ["matmul_64", "matmul_256", "bitonic_1000"] {
+        let fresh = Runtime::load(&dir).unwrap();
+        let t = std::time::Instant::now();
+        fresh.warm(name).unwrap();
+        r.record("compile-cold", &format!("artifact={name}"), vec![t.elapsed().as_nanos() as f64], "ns");
+    }
+
+    // Warm execution latency: XLA (pallas-lowered HLO) vs rust serial.
+    for n in [64usize, 128, 256] {
+        let a = matrices::uniform(n, n, 1);
+        let b = matrices::uniform(n, n, 2);
+        rt.warm(&format!("matmul_{n}")).unwrap();
+        r.measure("matmul-xla", &format!("order={n}"), || {
+            runtime::matmul_xla(&rt, &a, &b).unwrap()
+        });
+        r.measure("matmul-rust-serial", &format!("order={n}"), || matmul::serial(&a, &b));
+    }
+
+    // §Perf L2: interpret-pallas tile loop vs XLA native fused dot.
+    for n in [256usize, 1000] {
+        let name = format!("matmul_native_{n}");
+        if rt.manifest().get(&name).is_none() {
+            continue; // older artifact bundle
+        }
+        let a = matrices::uniform(n, n, 1);
+        let b = matrices::uniform(n, n, 2);
+        rt.warm(&name).unwrap();
+        rt.warm(&format!("matmul_{n}")).unwrap();
+        r.measure("matmul-xla-native-dot", &format!("order={n}"), || {
+            rt.exec_f32(&name, &[a.data(), b.data()]).unwrap()
+        });
+        r.measure("matmul-xla-pallas-interp", &format!("order={n}"), || {
+            rt.exec_f32(&format!("matmul_{n}"), &[a.data(), b.data()]).unwrap()
+        });
+    }
+
+    for n in [1000usize, 2000] {
+        let xs = arrays::uniform_f32(n, 3);
+        rt.warm(&format!("bitonic_{n}")).unwrap();
+        r.measure("sort-xla-bitonic", &format!("n={n}"), || runtime::sort_xla(&rt, &xs).unwrap());
+        r.measure("sort-rust-std", &format!("n={n}"), || {
+            let mut v = xs.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        });
+    }
+
+    r.finish();
+}

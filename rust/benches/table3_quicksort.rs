@@ -1,0 +1,52 @@
+//! Bench: regenerates **Table 3 / Figure 5** (quicksort, serial vs
+//! parallel × pivot strategy) plus host wall-clock sort baselines.
+
+use ohm::bench::{BenchCfg, Runner};
+use ohm::config::ExperimentConfig;
+use ohm::experiments::table3;
+use ohm::exec::ExecCtx;
+use ohm::sort::{parallel_quicksort, serial_quicksort, PivotStrategy};
+use ohm::workload::arrays;
+
+fn main() {
+    let mut r = Runner::new("table3_quicksort");
+
+    // --- The paper's table: virtual ms per (n, column) ----------------
+    let cfg = ExperimentConfig { reps: 3, ..Default::default() };
+    for (n, cells) in table3::grid(&cfg) {
+        let cols = ["serial", "par-left", "par-mean", "par-right", "par-random"];
+        for (name, ms) in cols.iter().zip(cells) {
+            r.record(&format!("table3/{name}"), &format!("n={n}"), vec![ms * 1e3], "us(virtual)");
+        }
+    }
+
+    // --- Host wall-clock: serial vs threaded quicksort ----------------
+    let mut wall = Runner::with_cfg(
+        "table3_quicksort_wall",
+        BenchCfg { warmup_iters: 1, sample_count: 7, max_total_ns: 8_000_000_000 },
+    );
+    let ctx = ExecCtx::threaded(4);
+    for &n in &[10_000usize, 100_000] {
+        let proto = arrays::uniform_i64(n, 9);
+        for s in [PivotStrategy::Left, PivotStrategy::Mean, PivotStrategy::Random, PivotStrategy::MedianOf3] {
+            wall.measure(&format!("serial-{}", s.name()), &format!("n={n}"), || {
+                let mut xs = proto.clone();
+                serial_quicksort(&mut xs, s, 1);
+                xs
+            });
+        }
+        wall.measure("threaded-mean-4t", &format!("n={n}"), || {
+            let mut xs = proto.clone();
+            parallel_quicksort(&mut xs, PivotStrategy::Mean, &ctx);
+            xs
+        });
+        wall.measure("std-sort-unstable", &format!("n={n}"), || {
+            let mut xs = proto.clone();
+            xs.sort_unstable();
+            xs
+        });
+    }
+
+    r.finish();
+    wall.finish();
+}

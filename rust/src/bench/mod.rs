@@ -1,0 +1,165 @@
+//! Measurement harness (offline `criterion` substitute).
+//!
+//! Each file in `rust/benches/` is a `harness = false` binary that uses
+//! [`Runner`] to measure closures with warmup, adaptive iteration counts,
+//! and robust statistics, then emits an aligned console table and a CSV
+//! under `target/ohm-bench/` for EXPERIMENTS.md.
+//!
+//! Virtual-time experiments (the simulator) do not need repetition for
+//! statistical confidence — they are deterministic — so [`Runner::record`]
+//! also accepts externally-computed values (e.g. simulated microseconds).
+
+use crate::stats::Summary;
+use crate::util::timer::fmt_ns;
+use std::fs;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Bench configuration (env-overridable for quick smoke runs).
+#[derive(Debug, Clone)]
+pub struct BenchCfg {
+    pub warmup_iters: usize,
+    pub sample_count: usize,
+    /// Stop sampling early once total measured time exceeds this budget.
+    pub max_total_ns: u64,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        BenchCfg {
+            warmup_iters: crate::util::env_or("OHM_BENCH_WARMUP", 3),
+            sample_count: crate::util::env_or("OHM_BENCH_SAMPLES", 15),
+            max_total_ns: crate::util::env_or("OHM_BENCH_BUDGET_NS", 5_000_000_000),
+        }
+    }
+}
+
+/// One measured row.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub name: String,
+    /// Free-form parameter columns (e.g. "n=1000,pivot=mean").
+    pub params: String,
+    pub summary: Summary,
+    /// Unit label for values ("ns" for wall time, "us(virtual)" for sim).
+    pub unit: &'static str,
+}
+
+/// Collects records for one bench binary and writes console + CSV output.
+pub struct Runner {
+    bench_name: String,
+    cfg: BenchCfg,
+    records: Vec<Record>,
+}
+
+impl Runner {
+    pub fn new(bench_name: &str) -> Self {
+        eprintln!("== bench: {bench_name}");
+        Runner { bench_name: bench_name.into(), cfg: BenchCfg::default(), records: Vec::new() }
+    }
+
+    pub fn with_cfg(bench_name: &str, cfg: BenchCfg) -> Self {
+        eprintln!("== bench: {bench_name}");
+        Runner { bench_name: bench_name.into(), cfg, records: Vec::new() }
+    }
+
+    /// Measure wall time of `f` (ns). `f` is run `warmup_iters` times
+    /// untimed, then up to `sample_count` timed runs within the budget.
+    pub fn measure<T>(&mut self, name: &str, params: &str, mut f: impl FnMut() -> T) -> &Record {
+        for _ in 0..self.cfg.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.cfg.sample_count);
+        let budget_start = Instant::now();
+        for _ in 0..self.cfg.sample_count {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+            if budget_start.elapsed().as_nanos() as u64 > self.cfg.max_total_ns {
+                break;
+            }
+        }
+        self.push(name, params, samples, "ns")
+    }
+
+    /// Record externally-computed values (e.g. deterministic virtual time).
+    pub fn record(&mut self, name: &str, params: &str, values: Vec<f64>, unit: &'static str) -> &Record {
+        self.push(name, params, values, unit)
+    }
+
+    fn push(&mut self, name: &str, params: &str, samples: Vec<f64>, unit: &'static str) -> &Record {
+        let summary = Summary::of(&samples).expect("bench produced no samples");
+        let med = if unit == "ns" { fmt_ns(summary.median) } else { format!("{:.1}{unit}", summary.median) };
+        eprintln!(
+            "  {name:<38} {params:<34} median={med:>12}  rsd={:>5.1}%  n={}",
+            summary.rsd() * 100.0,
+            summary.n
+        );
+        self.records.push(Record { name: name.into(), params: params.into(), summary, unit });
+        self.records.last().unwrap()
+    }
+
+    /// All records so far (for in-bench comparisons / assertions).
+    pub fn records(&self) -> &[Record] {
+        &self.records
+    }
+
+    /// Write `target/ohm-bench/<bench_name>.csv` and return its path.
+    pub fn finish(self) -> PathBuf {
+        let dir = PathBuf::from("target/ohm-bench");
+        fs::create_dir_all(&dir).expect("create bench output dir");
+        let path = dir.join(format!("{}.csv", self.bench_name));
+        let mut f = fs::File::create(&path).expect("create bench csv");
+        writeln!(f, "bench,name,params,unit,n,mean,std,min,median,p90,max").unwrap();
+        for r in &self.records {
+            let s = &r.summary;
+            writeln!(
+                f,
+                "{},{},\"{}\",{},{},{:.3},{:.3},{:.3},{:.3},{:.3},{:.3}",
+                self.bench_name, r.name, r.params, r.unit, s.n, s.mean, s.std, s.min, s.median, s.p90, s.max
+            )
+            .unwrap();
+        }
+        eprintln!("== wrote {}", path.display());
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_positive_samples() {
+        let cfg = BenchCfg { warmup_iters: 1, sample_count: 5, max_total_ns: u64::MAX };
+        let mut r = Runner::with_cfg("unit-test", cfg);
+        let rec = r.measure("spin", "k=1000", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(rec.summary.mean > 0.0);
+        assert_eq!(rec.summary.n, 5);
+    }
+
+    #[test]
+    fn record_and_csv_roundtrip() {
+        let mut r = Runner::with_cfg("unit-test-csv", BenchCfg::default());
+        r.record("sim", "n=4", vec![1.0, 2.0, 3.0], "us");
+        let path = r.finish();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("bench,name,params"));
+        assert!(text.contains("unit-test-csv,sim,\"n=4\",us,3,"));
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let cfg = BenchCfg { warmup_iters: 0, sample_count: 1000, max_total_ns: 1 };
+        let mut r = Runner::with_cfg("unit-test-budget", cfg);
+        let rec = r.measure("sleepy", "", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(rec.summary.n < 1000);
+    }
+}

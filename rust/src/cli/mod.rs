@@ -1,0 +1,337 @@
+//! Command-line interface (offline `clap` substitute) and the launcher.
+//!
+//! ```text
+//! ohm experiment <id|all> [--out-dir D] [--cores N] [--reps N] [--config F]
+//! ohm matmul --n N [--engine serial|threaded|simulated|xla] [--cores N]
+//!            [--algo strassen [--cutoff C]]
+//! ohm sort --n N [--pivot left|mean|right|random|median3] [--engine ...]
+//! ohm serve [--jobs N] [--threads N] [--no-xla] [--seed S]
+//!           [--listen ADDR [--conns N]]   # TCP line-protocol front end
+//! ohm calibrate [--budget-ms N]
+//! ohm gantt (--matmul N | --sort N) [--cores N]
+//! ohm artifacts [--dir D]
+//! ```
+//!
+//! `run()` returns the console output as a `String` so the whole surface
+//! is unit-testable; `main.rs` just prints it.
+
+pub mod parser;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Coordinator, CoordinatorCfg};
+use crate::dla::matmul;
+use crate::exec::ExecCtx;
+use crate::overhead::calibrate::Calibration;
+use crate::overhead::OverheadParams;
+use crate::report::gantt;
+use crate::runtime::Runtime;
+use crate::sort::{parallel_quicksort, PivotStrategy};
+use crate::workload::traces::{self, TraceSpec};
+use crate::workload::{arrays, matrices};
+use anyhow::{bail, Context, Result};
+use parser::Args;
+use std::fmt::Write as _;
+use std::path::Path;
+
+const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|calibrate|gantt|artifacts> [flags]
+  experiment <id|all>   regenerate paper tables/figures (see DESIGN.md §5)
+  matmul --n N          run one overhead-managed matmul
+  sort --n N            run one overhead-managed quicksort
+  serve                 run a job trace through the coordinator
+                        (--listen ADDR for the TCP front end)
+  calibrate             probe host overhead constants
+  gantt                 render a simulated schedule
+  artifacts             list AOT artifacts\n";
+
+/// Entry point; `argv` excludes the binary name.
+pub fn run(argv: &[String]) -> Result<String> {
+    let args = Args::parse(argv)?;
+    match args.command() {
+        None | Some("help") => Ok(USAGE.to_string()),
+        Some("experiment") => cmd_experiment(&args),
+        Some("matmul") => cmd_matmul(&args),
+        Some("sort") => cmd_sort(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("gantt") => cmd_gantt(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn experiment_cfg(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(c) = args.get_parsed::<usize>("cores")? {
+        cfg.cores = c;
+    }
+    if let Some(r) = args.get_parsed::<usize>("reps")? {
+        cfg.reps = r.max(1);
+    }
+    if let Some(d) = args.get("out-dir") {
+        cfg.out_dir = d.to_string();
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed")? {
+        cfg.seed = s;
+    }
+    Ok(cfg)
+}
+
+fn cmd_experiment(args: &Args) -> Result<String> {
+    let id = args.positional(1).context("experiment id required (or `all`)")?;
+    let cfg = experiment_cfg(args)?;
+    let outs = if id == "all" {
+        crate::experiments::run_all(&cfg)?
+    } else {
+        vec![crate::experiments::run(id, &cfg)?]
+    };
+    let dir = Path::new(&cfg.out_dir);
+    let mut text = String::new();
+    for out in &outs {
+        let paths = crate::experiments::save(out, dir)?;
+        writeln!(text, "== {} — {}", out.id, out.title).unwrap();
+        text.push_str(&out.text);
+        for p in paths {
+            writeln!(text, "  wrote {}", p.display()).unwrap();
+        }
+        text.push('\n');
+    }
+    Ok(text)
+}
+
+fn make_ctx(args: &Args, default_engine: &str) -> Result<ExecCtx> {
+    let cores = args.get_parsed::<usize>("cores")?.unwrap_or(4);
+    let engine = args.get("engine").unwrap_or(default_engine);
+    Ok(match engine {
+        "serial" => ExecCtx::serial(),
+        "threaded" => ExecCtx::threaded(cores),
+        "simulated" => ExecCtx::simulated(cores, OverheadParams::paper_2022()),
+        other => bail!("unknown engine {other:?} (serial|threaded|simulated|xla)"),
+    })
+}
+
+fn cmd_matmul(args: &Args) -> Result<String> {
+    let n = args.get_parsed::<usize>("n")?.context("--n required")?;
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let a = matrices::uniform(n, n, seed);
+    let b = matrices::uniform(n, n, seed ^ 0xABCD);
+    if args.get("engine") == Some("xla") {
+        let rt = Runtime::load(&Runtime::default_dir())?;
+        let sw = crate::util::Stopwatch::start();
+        let c = crate::runtime::matmul_xla(&rt, &a, &b)?;
+        return Ok(format!(
+            "matmul n={n} engine=xla ({}): {:.3} ms, ‖C‖_F = {:.3}\n",
+            rt.platform(),
+            sw.elapsed_ns() as f64 / 1e6,
+            c.frobenius()
+        ));
+    }
+    if args.get("algo") == Some("strassen") {
+        let cutoff = args.get_parsed::<usize>("cutoff")?.unwrap_or(crate::dla::strassen::DEFAULT_CUTOFF);
+        let sw = crate::util::Stopwatch::start();
+        let c = crate::dla::strassen::strassen(&a, &b, cutoff);
+        return Ok(format!(
+            "matmul n={n} algo=strassen cutoff={cutoff}: {:.3} ms wall, {:.0} model-ops (classical {:.0})\n‖C‖_F = {:.3}\n",
+            sw.elapsed_ns() as f64 / 1e6,
+            crate::dla::strassen::work_ops(n, cutoff),
+            (n as f64).powi(3),
+            c.frobenius(),
+        ));
+    }
+    let ctx = make_ctx(args, "simulated")?;
+    let (c, rep) = matmul::run(&a, &b, &ctx);
+    Ok(format!(
+        "matmul n={n} engine={}: {:.3} ms ({}), speedup {}, ledger: {}\n‖C‖_F = {:.3}\n",
+        ctx.engine_name(),
+        rep.time_us() / 1e3,
+        if rep.virtual_ns.is_some() { "virtual" } else { "wall" },
+        rep.speedup().map_or("n/a".into(), |s| format!("{s:.2}×")),
+        rep.ledger.summary(),
+        c.frobenius(),
+    ))
+}
+
+fn cmd_sort(args: &Args) -> Result<String> {
+    let n = args.get_parsed::<usize>("n")?.context("--n required")?;
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let pivot = match args.get("pivot") {
+        Some(p) => PivotStrategy::from_name(p).with_context(|| format!("bad pivot {p:?}"))?,
+        None => PivotStrategy::Mean,
+    };
+    if args.get("engine") == Some("xla") {
+        let rt = Runtime::load(&Runtime::default_dir())?;
+        let xs = arrays::uniform_f32(n, seed);
+        let sw = crate::util::Stopwatch::start();
+        let out = crate::runtime::sort_xla(&rt, &xs)?;
+        let ok = out.windows(2).all(|w| w[0] <= w[1]);
+        return Ok(format!(
+            "sort n={n} engine=xla: {:.3} ms, sorted={ok}\n",
+            sw.elapsed_ns() as f64 / 1e6
+        ));
+    }
+    let ctx = make_ctx(args, "simulated")?;
+    let mut xs = arrays::uniform_i64(n, seed);
+    let rep = parallel_quicksort(&mut xs, pivot, &ctx);
+    Ok(format!(
+        "sort n={n} pivot={} engine={}: {:.3} ms ({}), speedup {}, ledger: {}\nsorted={}\n",
+        pivot.name(),
+        ctx.engine_name(),
+        rep.time_us() / 1e3,
+        if rep.virtual_ns.is_some() { "virtual" } else { "wall" },
+        rep.speedup().map_or("n/a".into(), |s| format!("{s:.2}×")),
+        rep.ledger.summary(),
+        crate::sort::is_sorted(&xs),
+    ))
+}
+
+fn cmd_serve(args: &Args) -> Result<String> {
+    if let Some(addr) = args.get("listen") {
+        // TCP serving mode: line protocol (see coordinator::server).
+        let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
+        let conns = args.get_parsed::<usize>("conns")?;
+        let server = crate::coordinator::server::Server::bind(addr)?;
+        eprintln!("ohm serving on {}", server.local_addr());
+        server.serve(CoordinatorCfg { threads, ..Default::default() }, conns)?;
+        return Ok(format!("server on {} finished\n", server.local_addr()));
+    }
+    let jobs = args.get_parsed::<usize>("jobs")?.unwrap_or(50);
+    let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let runtime = if args.has("no-xla") {
+        None
+    } else {
+        Runtime::load(&Runtime::default_dir()).ok()
+    };
+    let rt_desc = match &runtime {
+        Some(rt) => format!("xla runtime: {} ({} artifacts)", rt.platform(), rt.names().len()),
+        None => "xla runtime: disabled".to_string(),
+    };
+    let mut coord = Coordinator::new(CoordinatorCfg { threads, ..Default::default() }, runtime);
+    let spec = TraceSpec { jobs, ..Default::default() };
+    let trace = traces::generate(&spec, seed);
+    let results = coord.run_trace(&trace);
+    let ok = results.iter().filter(|r| r.ok).count();
+    let mut out = format!("{rt_desc}\nran {} jobs: {ok} ok, {} failed\n", results.len(), results.len() - ok);
+    out.push_str(&coord.telemetry.render());
+    Ok(out)
+}
+
+fn cmd_calibrate(args: &Args) -> Result<String> {
+    let budget = args.get_parsed::<u64>("budget-ms")?.unwrap_or(1000);
+    let cal = Calibration::with_fallback(budget);
+    Ok(format!(
+        "calibration (probed={}):\n  α spawn  = {:>12.1} ns\n  β sync   = {:>12.1} ns\n  γ msg    = {:>12.1} ns\n  δ byte   = {:>12.4} ns\n  matmul op = {:>11.3} ns\n  sort op   = {:>11.3} ns\n",
+        cal.probed,
+        cal.params.alpha_spawn_ns,
+        cal.params.beta_sync_ns,
+        cal.params.gamma_msg_ns,
+        cal.params.delta_byte_ns,
+        cal.matmul_op_ns,
+        cal.sort_op_ns,
+    ))
+}
+
+fn cmd_gantt(args: &Args) -> Result<String> {
+    let cores = args.get_parsed::<usize>("cores")?.unwrap_or(4);
+    let ctx = ExecCtx::simulated(cores, OverheadParams::paper_2022()).with_trace(true);
+    let render = |rep: &crate::exec::RunReport| {
+        let mut out = gantt::render(&rep.timeline, cores, 100);
+        // Quantitative Fig-1: where the machine time actually went.
+        let sim_report = crate::sim::SimReport {
+            makespan_ns: rep.virtual_ns.unwrap_or(0.0),
+            serial_ns: rep.serial_equiv_ns.unwrap_or(0.0),
+            ledger: rep.ledger,
+            core_busy_ns: vec![0.0; cores],
+            timeline: rep.timeline.clone(),
+        };
+        out.push_str(&crate::sim::Breakdown::of(&sim_report).summary());
+        out.push('\n');
+        out
+    };
+    if let Some(n) = args.get_parsed::<usize>("matmul")? {
+        let a = matrices::uniform(n, n, 1);
+        let b = matrices::uniform(n, n, 2);
+        let (_, rep) = matmul::run(&a, &b, &ctx);
+        return Ok(render(&rep));
+    }
+    if let Some(n) = args.get_parsed::<usize>("sort")? {
+        let mut xs = arrays::uniform_i64(n, 1);
+        let rep = parallel_quicksort(&mut xs, PivotStrategy::Mean, &ctx);
+        return Ok(render(&rep));
+    }
+    bail!("gantt needs --matmul N or --sort N")
+}
+
+fn cmd_artifacts(args: &Args) -> Result<String> {
+    let dir = args.get("dir").map(Path::new).map(Path::to_path_buf).unwrap_or_else(Runtime::default_dir);
+    let rt = Runtime::load(&dir)?;
+    let mut out = format!("artifact dir: {} (platform {})\n", dir.display(), rt.platform());
+    for name in rt.names() {
+        let spec = rt.manifest().get(name).unwrap();
+        let ins: Vec<String> = spec
+            .inputs
+            .iter()
+            .map(|t| format!("{}[{}]", t.dtype, t.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("×")))
+            .collect();
+        writeln!(out, "  {:<26} {} -> {:?}", name, ins.join(", "), spec.output.dims).unwrap();
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn call(argv: &[&str]) -> Result<String> {
+        run(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(call(&[]).unwrap().contains("usage"));
+        assert!(call(&["bogus"]).is_err());
+    }
+
+    #[test]
+    fn matmul_simulated() {
+        let out = call(&["matmul", "--n", "64"]).unwrap();
+        assert!(out.contains("matmul n=64"), "{out}");
+        assert!(out.contains("virtual"));
+    }
+
+    #[test]
+    fn sort_all_engines_cpu() {
+        for engine in ["serial", "threaded", "simulated"] {
+            let out = call(&["sort", "--n", "500", "--engine", engine, "--pivot", "left"]).unwrap();
+            assert!(out.contains("sorted=true"), "{engine}: {out}");
+        }
+    }
+
+    #[test]
+    fn sort_rejects_bad_pivot() {
+        assert!(call(&["sort", "--n", "10", "--pivot", "zzz"]).is_err());
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let out = call(&["gantt", "--sort", "2000"]).unwrap();
+        assert!(out.contains("core  0"), "{out}");
+    }
+
+    #[test]
+    fn calibrate_fast_budget() {
+        let out = call(&["calibrate", "--budget-ms", "50"]).unwrap();
+        assert!(out.contains("α spawn"));
+    }
+
+    #[test]
+    fn experiment_single_to_tmpdir() {
+        let dir = std::env::temp_dir().join("ohm-cli-exp");
+        let out = call(&["experiment", "table1", "--out-dir", dir.to_str().unwrap()]).unwrap();
+        assert!(out.contains("Table 1"));
+        assert!(dir.join("table1.txt").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal argv parser: positionals + `--flag [value]` pairs.
+//!
+//! A flag followed by another flag (or end of argv) is boolean
+//! (`--no-xla`); otherwise it takes the next token as its value.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0usize;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                let takes_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+                if takes_value {
+                    a.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.flags.insert(name.to_string(), String::new());
+                    i += 1;
+                }
+            } else {
+                a.positionals.push(tok.clone());
+                i += 1;
+            }
+        }
+        Ok(a)
+    }
+
+    /// The subcommand (first positional).
+    pub fn command(&self) -> Option<&str> {
+        self.positional(0)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// Raw flag value (empty string for boolean flags).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// Parse a typed flag value; `None` when absent, error when malformed.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(_) => bail!("flag --{name}: cannot parse {v:?}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse(&["sort", "--n", "100", "--no-xla", "--pivot", "mean"]);
+        assert_eq!(a.command(), Some("sort"));
+        assert_eq!(a.get("n"), Some("100"));
+        assert!(a.has("no-xla"));
+        assert_eq!(a.get("pivot"), Some("mean"));
+        assert_eq!(a.get("absent"), None);
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = parse(&["x", "--n", "42", "--bad", "abc"]);
+        assert_eq!(a.get_parsed::<usize>("n").unwrap(), Some(42));
+        assert_eq!(a.get_parsed::<usize>("missing").unwrap(), None);
+        assert!(a.get_parsed::<usize>("bad").is_err());
+    }
+
+    #[test]
+    fn boolean_flag_at_end() {
+        let a = parse(&["serve", "--no-xla"]);
+        assert!(a.has("no-xla"));
+    }
+
+    #[test]
+    fn multiple_positionals() {
+        let a = parse(&["experiment", "fig2", "--reps", "2"]);
+        assert_eq!(a.positional(1), Some("fig2"));
+    }
+}

@@ -1,0 +1,270 @@
+//! Experiment configuration: a TOML-subset parser (offline `serde`/`toml`
+//! substitute) plus the typed [`ExperimentConfig`] the launcher consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with integers,
+//! floats, booleans, quoted strings, and flat arrays of those; `#`
+//! comments. That subset covers every config this repo ships.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_array(&self) -> Option<Vec<usize>> {
+        match self {
+            Value::Array(xs) => xs.iter().map(|v| v.as_usize()).collect(),
+            _ => None,
+        }
+    }
+}
+
+fn parse_scalar(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"').context("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("unparseable value {s:?}")
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if let Some(stripped) = s.strip_prefix('[') {
+        let inner = stripped.strip_suffix(']').context("unterminated array")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(parse_scalar)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(s)
+}
+
+/// Sections → keys → values.
+pub type Table = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut table: Table = BTreeMap::new();
+    let mut section = String::new();
+    table.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = match raw.find('#') {
+            // Only strip comments outside strings (strings in our configs
+            // never contain '#'; documented subset).
+            Some(i) => &raw[..i],
+            None => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let name = stripped
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: bad section header", lineno + 1))?;
+            section = name.trim().to_string();
+            table.entry(section.clone()).or_default();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let value = parse_value(v).with_context(|| format!("line {}", lineno + 1))?;
+        table.get_mut(&section).unwrap().insert(k.trim().to_string(), value);
+    }
+    Ok(table)
+}
+
+/// Typed launcher config (defaults reproduce the paper's experiments).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Virtual core count of the simulated machine.
+    pub cores: usize,
+    /// Matmul orders for Fig 2.
+    pub matmul_orders: Vec<usize>,
+    /// Element counts for Table 3 / Fig 5.
+    pub sort_sizes: Vec<usize>,
+    /// Workload seed.
+    pub seed: u64,
+    /// Output directory for CSV/reports.
+    pub out_dir: String,
+    /// Repetitions per cell (averaged over seeds).
+    pub reps: usize,
+    /// Overhead parameter set: "paper_2022" | "ideal" | "calibrated".
+    pub params_name: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            cores: 4,
+            matmul_orders: vec![16, 32, 64, 128, 256, 512, 1000],
+            sort_sizes: vec![1000, 1100, 1500, 2000],
+            seed: 42,
+            out_dir: "reports".to_string(),
+            reps: 3,
+            params_name: "paper_2022".to_string(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file ([experiment] section); missing keys
+    /// keep their defaults.
+    pub fn load(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_table(&parse(&text)?)
+    }
+
+    pub fn from_table(t: &Table) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(sec) = t.get("experiment") {
+            if let Some(v) = sec.get("cores") {
+                cfg.cores = v.as_usize().context("cores")?;
+            }
+            if let Some(v) = sec.get("matmul_orders") {
+                cfg.matmul_orders = v.as_usize_array().context("matmul_orders")?;
+            }
+            if let Some(v) = sec.get("sort_sizes") {
+                cfg.sort_sizes = v.as_usize_array().context("sort_sizes")?;
+            }
+            if let Some(v) = sec.get("seed") {
+                cfg.seed = v.as_usize().context("seed")? as u64;
+            }
+            if let Some(v) = sec.get("out_dir") {
+                cfg.out_dir = v.as_str().context("out_dir")?.to_string();
+            }
+            if let Some(v) = sec.get("reps") {
+                cfg.reps = v.as_usize().context("reps")?.max(1);
+            }
+            if let Some(v) = sec.get("params") {
+                cfg.params_name = v.as_str().context("params")?.to_string();
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Resolve the overhead parameter set by name.
+    pub fn params(&self) -> crate::overhead::OverheadParams {
+        match self.params_name.as_str() {
+            "ideal" => crate::overhead::OverheadParams::ideal(),
+            "calibrated" => crate::overhead::calibrate::Calibration::with_fallback(500).params,
+            _ => crate::overhead::OverheadParams::paper_2022(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_arrays() {
+        let t = parse(
+            r#"
+# top comment
+top = 1
+[experiment]
+cores = 8
+seed = 7          # trailing comment
+out_dir = "out/x"
+matmul_orders = [16, 32]
+ratio = 0.5
+flag = true
+"#,
+        )
+        .unwrap();
+        assert_eq!(t[""]["top"], Value::Int(1));
+        let e = &t["experiment"];
+        assert_eq!(e["cores"].as_usize(), Some(8));
+        assert_eq!(e["out_dir"].as_str(), Some("out/x"));
+        assert_eq!(e["matmul_orders"].as_usize_array(), Some(vec![16, 32]));
+        assert_eq!(e["ratio"].as_f64(), Some(0.5));
+        assert_eq!(e["flag"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("k = [1, oops]").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn config_defaults_and_overrides() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.cores, 4);
+        assert_eq!(d.sort_sizes, vec![1000, 1100, 1500, 2000]);
+        let t = parse("[experiment]\ncores = 16\nsort_sizes = [100, 200]\n").unwrap();
+        let c = ExperimentConfig::from_table(&t).unwrap();
+        assert_eq!(c.cores, 16);
+        assert_eq!(c.sort_sizes, vec![100, 200]);
+        assert_eq!(c.matmul_orders, d.matmul_orders, "unset keys keep defaults");
+    }
+
+    #[test]
+    fn params_by_name() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.params(), crate::overhead::OverheadParams::paper_2022());
+        c.params_name = "ideal".into();
+        assert_eq!(c.params(), crate::overhead::OverheadParams::ideal());
+    }
+}

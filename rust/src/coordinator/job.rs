@@ -1,0 +1,79 @@
+//! Job model for the coordinator: typed requests + results.
+
+use crate::workload::traces::{TraceJob, TraceKind};
+
+/// A schedulable request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: u64,
+    pub kind: TraceKind,
+    pub seed: u64,
+    /// Arrival offset, µs (0 for ad-hoc submissions).
+    pub arrival_us: u64,
+}
+
+impl Job {
+    pub fn from_trace(id: u64, t: &TraceJob) -> Job {
+        Job { id, kind: t.kind, seed: t.seed, arrival_us: t.arrival_us }
+    }
+
+    /// Stable key for shape-batching: jobs with equal keys can share a
+    /// compiled executable / decision.
+    pub fn shape_key(&self) -> String {
+        match self.kind {
+            TraceKind::Matmul { n } => format!("matmul/{n}"),
+            TraceKind::Sort { n } => format!("sort/{n}"),
+        }
+    }
+}
+
+/// Which engine the policy routed a job to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RoutedEngine {
+    Xla,
+    CpuSerial,
+    CpuParallel,
+}
+
+impl RoutedEngine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutedEngine::Xla => "xla",
+            RoutedEngine::CpuSerial => "cpu-serial",
+            RoutedEngine::CpuParallel => "cpu-parallel",
+        }
+    }
+}
+
+/// Completed-job record.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub id: u64,
+    pub shape_key: String,
+    pub engine: RoutedEngine,
+    /// Wall-clock service time, µs.
+    pub service_us: f64,
+    /// Checksum of the output (cross-engine sanity).
+    pub checksum: f64,
+    pub ok: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_keys() {
+        let j = Job { id: 1, kind: TraceKind::Matmul { n: 64 }, seed: 0, arrival_us: 0 };
+        assert_eq!(j.shape_key(), "matmul/64");
+        let s = Job { id: 2, kind: TraceKind::Sort { n: 1000 }, seed: 0, arrival_us: 0 };
+        assert_eq!(s.shape_key(), "sort/1000");
+    }
+
+    #[test]
+    fn from_trace_copies_fields() {
+        let t = TraceJob { arrival_us: 55, kind: TraceKind::Sort { n: 10 }, seed: 9 };
+        let j = Job::from_trace(3, &t);
+        assert_eq!((j.id, j.arrival_us, j.seed), (3, 55, 9));
+    }
+}

@@ -1,0 +1,237 @@
+//! The coordinator: OHM's serving-style front end.
+//!
+//! A stream of jobs (matmul / sort requests) is routed per-job by the
+//! **overhead-aware policy**:
+//!
+//! * matmul with a matching AOT artifact → the **XLA engine** (PJRT,
+//!   compiled once per shape, cached — Python never runs);
+//! * otherwise → CPU, where the [`Manager`](crate::overhead::Manager)
+//!   picks serial or pool-parallel execution per the paper's methodology;
+//! * sorts with a matching `bitonic_<n>` artifact can opt into XLA too.
+//!
+//! Consecutive same-shape jobs are dispatched as one **shape batch**,
+//! amortizing executable lookup and decision-making (and, on a warm
+//! cache, skipping recompilation entirely) — the coordinator-level
+//! analogue of the paper's "don't pay setup costs per work item".
+
+pub mod job;
+pub mod server;
+pub mod telemetry;
+
+pub use job::{Job, JobResult, RoutedEngine};
+pub use telemetry::Telemetry;
+
+use crate::dla::matmul;
+use crate::exec::ExecCtx;
+use crate::overhead::Decision;
+use crate::runtime::{self, Runtime};
+use crate::sort::{self, PivotStrategy};
+use crate::util::Stopwatch;
+use crate::workload::traces::{TraceJob, TraceKind};
+use crate::workload::{arrays, matrices};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorCfg {
+    /// Worker threads for the CPU-parallel engine.
+    pub threads: usize,
+    /// Route sort jobs to XLA bitonic artifacts when available.
+    pub xla_sort: bool,
+    /// Pivot strategy for CPU sorts.
+    pub pivot: PivotStrategy,
+}
+
+impl Default for CoordinatorCfg {
+    fn default() -> Self {
+        CoordinatorCfg { threads: 4, xla_sort: true, pivot: PivotStrategy::Mean }
+    }
+}
+
+/// The coordinator instance.
+pub struct Coordinator {
+    cfg: CoordinatorCfg,
+    cpu: ExecCtx,
+    runtime: Option<Runtime>,
+    pub telemetry: Telemetry,
+    next_id: u64,
+}
+
+impl Coordinator {
+    /// Build with an optional XLA runtime (None ⇒ CPU-only routing).
+    pub fn new(cfg: CoordinatorCfg, runtime: Option<Runtime>) -> Coordinator {
+        let cpu = ExecCtx::threaded(cfg.threads);
+        Coordinator { cfg, cpu, runtime, telemetry: Telemetry::default(), next_id: 1 }
+    }
+
+    /// Route a job without executing it (policy unit under test).
+    pub fn route(&self, kind: &TraceKind) -> RoutedEngine {
+        match kind {
+            TraceKind::Matmul { n } => match &self.runtime {
+                Some(rt) if runtime::has_matmul(rt, *n) => RoutedEngine::Xla,
+                _ => self.cpu_engine_for(matmul_work_est(*n)),
+            },
+            TraceKind::Sort { n } => match &self.runtime {
+                Some(rt) if self.cfg.xla_sort && runtime::has_sort(rt, *n) => RoutedEngine::Xla,
+                _ => self.cpu_engine_for(sort_work_est(*n)),
+            },
+        }
+    }
+
+    fn cpu_engine_for(&self, est: crate::overhead::WorkEstimate) -> RoutedEngine {
+        match self.cpu.manager.decide(&est) {
+            Decision::Parallel { .. } => RoutedEngine::CpuParallel,
+            Decision::Serial { .. } => RoutedEngine::CpuSerial,
+        }
+    }
+
+    /// Submit one ad-hoc job; returns its result.
+    pub fn submit(&mut self, kind: TraceKind, seed: u64) -> JobResult {
+        let job = Job { id: self.next_id, kind, seed, arrival_us: 0 };
+        self.next_id += 1;
+        let r = self.execute(&job);
+        self.telemetry.record(&r);
+        r
+    }
+
+    /// Run a whole trace, dispatching consecutive same-shape jobs as
+    /// batches. Returns per-job results in submission order.
+    pub fn run_trace(&mut self, trace: &[TraceJob]) -> Vec<JobResult> {
+        let mut results = Vec::with_capacity(trace.len());
+        let mut i = 0usize;
+        while i < trace.len() {
+            let mut j = i + 1;
+            let key = Job::from_trace(0, &trace[i]).shape_key();
+            while j < trace.len() && Job::from_trace(0, &trace[j]).shape_key() == key {
+                j += 1;
+            }
+            self.telemetry.record_batch(j - i);
+            for t in &trace[i..j] {
+                let job = Job::from_trace(self.next_id, t);
+                self.next_id += 1;
+                let r = self.execute(&job);
+                self.telemetry.record(&r);
+                results.push(r);
+            }
+            i = j;
+        }
+        results
+    }
+
+    fn execute(&self, job: &Job) -> JobResult {
+        let engine = self.route(&job.kind);
+        let sw = Stopwatch::start();
+        let (checksum, ok) = match (&job.kind, engine) {
+            (TraceKind::Matmul { n }, RoutedEngine::Xla) => {
+                let a = matrices::uniform(*n, *n, job.seed);
+                let b = matrices::uniform(*n, *n, job.seed ^ 0xABCD);
+                match runtime::matmul_xla(self.runtime.as_ref().unwrap(), &a, &b) {
+                    Ok(c) => (c.frobenius(), true),
+                    Err(_) => (0.0, false),
+                }
+            }
+            (TraceKind::Matmul { n }, _) => {
+                let a = matrices::uniform(*n, *n, job.seed);
+                let b = matrices::uniform(*n, *n, job.seed ^ 0xABCD);
+                let (c, _) = matmul::run(&a, &b, &self.cpu);
+                (c.frobenius(), true)
+            }
+            (TraceKind::Sort { n }, RoutedEngine::Xla) => {
+                let xs = arrays::uniform_f32(*n, job.seed);
+                match runtime::sort_xla(self.runtime.as_ref().unwrap(), &xs) {
+                    Ok(sorted) => {
+                        let ok = sorted.windows(2).all(|w| w[0] <= w[1]);
+                        (sorted.iter().map(|&v| v as f64).sum(), ok)
+                    }
+                    Err(_) => (0.0, false),
+                }
+            }
+            (TraceKind::Sort { n }, _) => {
+                let mut xs = arrays::uniform_i64(*n, job.seed);
+                let _ = sort::parallel_quicksort(&mut xs, self.cfg.pivot, &self.cpu);
+                let ok = sort::is_sorted(&xs);
+                (xs.iter().map(|&v| v as f64).sum(), ok)
+            }
+        };
+        JobResult {
+            id: job.id,
+            shape_key: job.shape_key(),
+            engine,
+            service_us: sw.elapsed_ns() as f64 / 1e3,
+            checksum,
+            ok,
+        }
+    }
+}
+
+fn matmul_work_est(n: usize) -> crate::overhead::WorkEstimate {
+    crate::overhead::WorkEstimate::fully_parallel((n as f64).powi(3), (2 * n * n * 4) as u64)
+}
+
+fn sort_work_est(n: usize) -> crate::overhead::WorkEstimate {
+    sort::estimate(n, &sort::SortCostModel::host(4.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::traces::{self, TraceSpec};
+
+    fn cpu_coordinator() -> Coordinator {
+        Coordinator::new(CoordinatorCfg { threads: 2, ..Default::default() }, None)
+    }
+
+    #[test]
+    fn routes_small_matmul_serial_large_parallel() {
+        let c = cpu_coordinator();
+        assert_eq!(c.route(&TraceKind::Matmul { n: 8 }), RoutedEngine::CpuSerial);
+        assert_eq!(c.route(&TraceKind::Matmul { n: 512 }), RoutedEngine::CpuParallel);
+    }
+
+    #[test]
+    fn submit_executes_and_records() {
+        let mut c = cpu_coordinator();
+        let r = c.submit(TraceKind::Sort { n: 500 }, 3);
+        assert!(r.ok);
+        assert_eq!(r.shape_key, "sort/500");
+        assert_eq!(c.telemetry.completed, 1);
+    }
+
+    #[test]
+    fn trace_runs_all_jobs_exactly_once() {
+        let mut c = cpu_coordinator();
+        let spec = TraceSpec {
+            jobs: 20,
+            matmul_orders: vec![16, 32],
+            sort_sizes: vec![100, 200],
+            ..Default::default()
+        };
+        let trace = traces::generate(&spec, 7);
+        let results = c.run_trace(&trace);
+        assert_eq!(results.len(), 20);
+        let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 20, "every job completes exactly once");
+        assert!(results.iter().all(|r| r.ok));
+        assert!(c.telemetry.batches >= 1);
+        assert_eq!(c.telemetry.completed, 20);
+    }
+
+    #[test]
+    fn batching_groups_consecutive_shapes() {
+        let mut c = cpu_coordinator();
+        let t = |n: usize| TraceJob { arrival_us: 0, kind: TraceKind::Sort { n }, seed: 1 };
+        let trace = vec![t(100), t(100), t(100), t(200), t(100)];
+        c.run_trace(&trace);
+        assert_eq!(c.telemetry.batches, 3, "three consecutive-shape groups");
+        assert_eq!(c.telemetry.batched_jobs, 5);
+    }
+
+    #[test]
+    fn routing_is_deterministic() {
+        let c = cpu_coordinator();
+        for _ in 0..5 {
+            assert_eq!(c.route(&TraceKind::Matmul { n: 100 }), c.route(&TraceKind::Matmul { n: 100 }));
+        }
+    }
+}

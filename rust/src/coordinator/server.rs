@@ -1,0 +1,170 @@
+//! Line-protocol TCP front end for the coordinator — the serving shape
+//! of the framework (requests in, routed execution, latency out).
+//!
+//! Protocol (one request per line, ASCII):
+//!
+//! ```text
+//! MATMUL <n> [seed]      → OK MATMUL n=<n> engine=<e> us=<t> checksum=<c>
+//! SORT <n> [seed]        → OK SORT n=<n> engine=<e> us=<t> checksum=<c>
+//! STATS                  → multi-line telemetry table, terminated by "."
+//! PING                   → PONG
+//! QUIT                   → BYE (closes the connection)
+//! ```
+//!
+//! Unknown/malformed input answers `ERR <reason>` and keeps the
+//! connection open. One worker thread serves connections sequentially
+//! (the CPU pool underneath is already parallel); this is deliberately a
+//! *thin* request loop per DESIGN.md — the paper's contribution lives in
+//! the manager/policy, not in connection juggling.
+
+use super::{Coordinator, CoordinatorCfg};
+use crate::workload::traces::TraceKind;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// A running server bound to a local port.
+pub struct Server {
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str) -> Result<Server> {
+        Ok(Server { listener: TcpListener::bind(addr)? })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound socket has an address")
+    }
+
+    /// Serve until `max_conns` connections have completed (None = forever).
+    pub fn serve(&self, cfg: CoordinatorCfg, max_conns: Option<usize>) -> Result<()> {
+        let runtime = crate::runtime::Runtime::load(&crate::runtime::Runtime::default_dir()).ok();
+        let mut coord = Coordinator::new(cfg, runtime);
+        let mut served = 0usize;
+        for stream in self.listener.incoming() {
+            handle_conn(stream?, &mut coord)?;
+            served += 1;
+            if max_conns.is_some_and(|m| served >= m) {
+                break;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: &mut Coordinator) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break; // client hung up
+        }
+        match respond(coord, line.trim()) {
+            Response::Line(s) => writeln!(out, "{s}")?,
+            Response::Block(s) => {
+                for l in s.lines() {
+                    writeln!(out, "{l}")?;
+                }
+                writeln!(out, ".")?;
+            }
+            Response::Bye => {
+                writeln!(out, "BYE")?;
+                break;
+            }
+        }
+        out.flush()?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+enum Response {
+    Line(String),
+    Block(String),
+    Bye,
+}
+
+fn respond(coord: &mut Coordinator, line: &str) -> Response {
+    let mut toks = line.split_whitespace();
+    match toks.next().map(|s| s.to_ascii_uppercase()).as_deref() {
+        Some("PING") => Response::Line("PONG".into()),
+        Some("QUIT") => Response::Bye,
+        Some("STATS") => Response::Block(coord.telemetry.render()),
+        Some(cmd @ ("MATMUL" | "SORT")) => {
+            let n: usize = match toks.next().and_then(|t| t.parse().ok()) {
+                Some(n) if n > 0 && n <= 4096 => n,
+                _ => return Response::Line(format!("ERR {cmd} needs n in 1..=4096")),
+            };
+            let seed: u64 = toks.next().and_then(|t| t.parse().ok()).unwrap_or(42);
+            let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
+            let r = coord.submit(kind, seed);
+            if r.ok {
+                Response::Line(format!(
+                    "OK {cmd} n={n} engine={} us={:.1} checksum={:.4}",
+                    r.engine.name(),
+                    r.service_us,
+                    r.checksum
+                ))
+            } else {
+                Response::Line(format!("ERR {cmd} n={n} failed on engine {}", r.engine.name()))
+            }
+        }
+        Some(other) => Response::Line(format!("ERR unknown command {other:?}")),
+        None => Response::Line("ERR empty request".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    fn roundtrip(lines: &[&str]) -> Vec<String> {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let h = std::thread::spawn(move || {
+            server
+                .serve(CoordinatorCfg { threads: 2, ..Default::default() }, Some(1))
+                .unwrap();
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for l in lines {
+            writeln!(conn, "{l}").unwrap();
+        }
+        writeln!(conn, "QUIT").unwrap();
+        conn.flush().unwrap();
+        let reader = BufReader::new(conn);
+        let out: Vec<String> = reader.lines().map(|l| l.unwrap()).collect();
+        h.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn ping_and_quit() {
+        let out = roundtrip(&["PING"]);
+        assert_eq!(out, vec!["PONG".to_string(), "BYE".to_string()]);
+    }
+
+    #[test]
+    fn matmul_and_sort_requests() {
+        let out = roundtrip(&["MATMUL 32 7", "SORT 500"]);
+        assert!(out[0].starts_with("OK MATMUL n=32"), "{out:?}");
+        assert!(out[0].contains("checksum="));
+        assert!(out[1].starts_with("OK SORT n=500"), "{out:?}");
+    }
+
+    #[test]
+    fn stats_block_and_errors() {
+        let out = roundtrip(&["SORT 100", "STATS", "FROB", "MATMUL 0", "MATMUL abc"]);
+        assert!(out.iter().any(|l| l.contains("coordinator telemetry")));
+        assert!(out.iter().any(|l| l == "."), "stats block terminator");
+        assert!(out.iter().any(|l| l.starts_with("ERR unknown command")));
+        assert_eq!(out.iter().filter(|l| l.starts_with("ERR MATMUL needs n")).count(), 2);
+    }
+}

@@ -1,0 +1,95 @@
+//! Coordinator telemetry: per-engine service-time accounting.
+
+use super::job::{JobResult, RoutedEngine};
+use crate::report::{table::f, AsciiTable};
+use crate::stats::Summary;
+use std::collections::BTreeMap;
+
+/// Aggregates job results for reporting.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    per_engine: BTreeMap<&'static str, Vec<f64>>,
+    per_shape: BTreeMap<String, Vec<f64>>,
+    pub completed: u64,
+    pub failed: u64,
+    /// Shape-batch statistics: consecutive same-shape groups dispatched.
+    pub batches: u64,
+    pub batched_jobs: u64,
+}
+
+impl Telemetry {
+    pub fn record(&mut self, r: &JobResult) {
+        if r.ok {
+            self.completed += 1;
+        } else {
+            self.failed += 1;
+        }
+        self.per_engine.entry(r.engine.name()).or_default().push(r.service_us);
+        self.per_shape.entry(r.shape_key.clone()).or_default().push(r.service_us);
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batched_jobs += size as u64;
+    }
+
+    pub fn engine_count(&self, e: RoutedEngine) -> usize {
+        self.per_engine.get(e.name()).map_or(0, |v| v.len())
+    }
+
+    /// Render the service-time summary table.
+    pub fn render(&self) -> String {
+        let mut t = AsciiTable::new(
+            "coordinator telemetry: service time (µs)",
+            &["group", "jobs", "mean", "median", "p90", "max"],
+        );
+        for (name, vals) in self.per_engine.iter().map(|(k, v)| (format!("engine:{k}"), v)).chain(
+            self.per_shape.iter().map(|(k, v)| (format!("shape:{k}"), v)),
+        ) {
+            if let Some(s) = Summary::of(vals) {
+                t.row(vec![
+                    name,
+                    s.n.to_string(),
+                    f(s.mean, 1),
+                    f(s.median, 1),
+                    f(s.p90, 1),
+                    f(s.max, 1),
+                ]);
+            }
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "completed={} failed={} batches={} (avg batch {:.1})\n",
+            self.completed,
+            self.failed,
+            self.batches,
+            if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 },
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn res(engine: RoutedEngine, us: f64, ok: bool) -> JobResult {
+        JobResult { id: 0, shape_key: "matmul/64".into(), engine, service_us: us, checksum: 0.0, ok }
+    }
+
+    #[test]
+    fn records_and_renders() {
+        let mut t = Telemetry::default();
+        t.record(&res(RoutedEngine::Xla, 100.0, true));
+        t.record(&res(RoutedEngine::Xla, 200.0, true));
+        t.record(&res(RoutedEngine::CpuSerial, 50.0, false));
+        t.record_batch(2);
+        assert_eq!(t.completed, 2);
+        assert_eq!(t.failed, 1);
+        assert_eq!(t.engine_count(RoutedEngine::Xla), 2);
+        let s = t.render();
+        assert!(s.contains("engine:xla"));
+        assert!(s.contains("shape:matmul/64"));
+        assert!(s.contains("batches=1"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Matrix-chain multiplication (the paper's "matrix chain multiplication
+//! problems" mention): optimal parenthesization by dynamic programming,
+//! then overhead-managed evaluation of the chosen tree.
+
+use super::matmul;
+use super::matrix::Matrix;
+use crate::exec::{ExecCtx, RunReport};
+
+/// DP solution: minimal multiply-add cost and split table.
+#[derive(Debug, Clone)]
+pub struct ChainPlan {
+    /// Dimensions: matrix `i` is `dims[i] × dims[i+1]`.
+    pub dims: Vec<usize>,
+    /// `split[i][j]` = k of the optimal top split of the product i..=j.
+    split: Vec<Vec<usize>>,
+    /// Minimal multiply-add count.
+    pub cost: f64,
+}
+
+/// Classic O(n³) matrix-chain-order DP.
+pub fn plan(dims: &[usize]) -> ChainPlan {
+    let n = dims.len() - 1;
+    assert!(n >= 1, "need at least one matrix");
+    let mut cost = vec![vec![0.0f64; n]; n];
+    let mut split = vec![vec![0usize; n]; n];
+    for len in 2..=n {
+        for i in 0..=n - len {
+            let j = i + len - 1;
+            cost[i][j] = f64::INFINITY;
+            for k in i..j {
+                let c = cost[i][k]
+                    + cost[k + 1][j]
+                    + dims[i] as f64 * dims[k + 1] as f64 * dims[j + 1] as f64;
+                if c < cost[i][j] {
+                    cost[i][j] = c;
+                    split[i][j] = k;
+                }
+            }
+        }
+    }
+    ChainPlan { dims: dims.to_vec(), split, cost: cost[0][n - 1] }
+}
+
+impl ChainPlan {
+    /// Multiply-add cost of always associating left-to-right (baseline).
+    /// `(((M₁·M₂)·M₃)…)`: step `i` costs `d₀·dᵢ·dᵢ₊₁`.
+    pub fn left_assoc_cost(&self) -> f64 {
+        let d = &self.dims;
+        (1..d.len() - 1)
+            .map(|i| d[0] as f64 * d[i] as f64 * d[i + 1] as f64)
+            .sum()
+    }
+
+    /// Evaluate the optimal tree over `mats` with the overhead-managed
+    /// matmul; returns the product and the merged run report.
+    pub fn evaluate(&self, mats: &[Matrix], ctx: &ExecCtx) -> (Matrix, RunReport) {
+        assert_eq!(mats.len() + 1, self.dims.len());
+        for (i, m) in mats.iter().enumerate() {
+            assert_eq!((m.rows(), m.cols()), (self.dims[i], self.dims[i + 1]));
+        }
+        self.eval_range(mats, 0, mats.len() - 1, ctx)
+    }
+
+    fn eval_range(&self, mats: &[Matrix], i: usize, j: usize, ctx: &ExecCtx) -> (Matrix, RunReport) {
+        if i == j {
+            return (mats[i].clone(), RunReport::wall_only(0));
+        }
+        let k = self.split[i][j];
+        let (l, rl) = self.eval_range(mats, i, k, ctx);
+        let (r, rr) = self.eval_range(mats, k + 1, j, ctx);
+        let (prod, rp) = matmul::run(&l, &r, ctx);
+        let mut rep = rp;
+        rep.wall_ns += rl.wall_ns + rr.wall_ns;
+        rep.virtual_ns = match (rep.virtual_ns, rl.virtual_ns, rr.virtual_ns) {
+            (Some(c), a, b) => Some(c + a.unwrap_or(0.0) + b.unwrap_or(0.0)),
+            (None, _, _) => None,
+        };
+        rep.serial_equiv_ns = match (rep.serial_equiv_ns, rl.serial_equiv_ns, rr.serial_equiv_ns) {
+            (Some(c), a, b) => Some(c + a.unwrap_or(0.0) + b.unwrap_or(0.0)),
+            (None, _, _) => None,
+        };
+        rep.ledger = rep.ledger.merged(&rl.ledger).merged(&rr.ledger);
+        (prod, rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::matrices;
+
+    #[test]
+    fn clrs_textbook_instance() {
+        // CLRS example: dims 30,35,15,5,10,20,25 → optimal 15125.
+        let p = plan(&[30, 35, 15, 5, 10, 20, 25]);
+        assert_eq!(p.cost as u64, 15_125);
+    }
+
+    #[test]
+    fn optimal_no_worse_than_left_assoc() {
+        let p = plan(&[40, 20, 30, 10, 30]);
+        assert!(p.cost <= p.left_assoc_cost());
+        // Known: optimal = 26000 for this instance.
+        assert_eq!(p.cost as u64, 26_000);
+    }
+
+    #[test]
+    fn evaluate_matches_direct_product() {
+        let dims = [6usize, 10, 4, 8];
+        let mats: Vec<Matrix> = (0..3)
+            .map(|i| matrices::small_int(dims[i], dims[i + 1], i as u64))
+            .collect();
+        let p = plan(&dims);
+        let ctx = ExecCtx::serial();
+        let (got, _) = p.evaluate(&mats, &ctx);
+        let want = matmul::serial(&matmul::serial(&mats[0], &mats[1]), &mats[2]);
+        assert!(got.approx_eq(&want, 1e-6));
+    }
+
+    #[test]
+    fn single_matrix_chain_is_identity() {
+        let m = matrices::small_int(3, 4, 9);
+        let p = plan(&[3, 4]);
+        let (got, _) = p.evaluate(std::slice::from_ref(&m), &ExecCtx::serial());
+        assert_eq!(got, m);
+        assert_eq!(p.cost, 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Dense Linear Algebra domain (paper §"Overheads of parallelism in
+//! Matrix Multiplication and their Management": Table 1, Fig 1, Fig 2).
+
+pub mod chain;
+pub mod matmul;
+pub mod matrix;
+pub mod strassen;
+
+pub use matrix::Matrix;

@@ -1,0 +1,209 @@
+//! Strassen matrix multiplication — the extension case study for the
+//! paper's methodology.
+//!
+//! Strassen trades one multiplication for ~18 additions per recursion
+//! level, so it only pays above a *cutoff* order — the same
+//! "size of problem vs effort of division" trade-off the paper manages
+//! for fork-join. OHM treats the Strassen cutoff exactly like the fork
+//! cutoff: predicted from calibrated per-op costs, ablated in
+//! `ablation_grain`-style sweeps, and testable.
+//!
+//! The recursion is also a natural fork-join workload: the seven
+//! sub-products are independent (spawnable on the pool), while the
+//! combining additions synchronize — a richer dependency structure than
+//! row-block matmul, which is why the paper's "each problem space
+//! requires detailed and independent analysis" conclusion applies.
+
+use super::matmul;
+use super::matrix::Matrix;
+use crate::pool::ThreadPool;
+
+/// Below this order, fall back to the tuned classical kernel.
+pub const DEFAULT_CUTOFF: usize = 64;
+
+/// Serial Strassen with classical fallback below `cutoff`.
+pub fn strassen(a: &Matrix, b: &Matrix, cutoff: usize) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    assert!(a.rows() == a.cols() && b.rows() == b.cols(), "square only");
+    let n = a.rows();
+    let cutoff = cutoff.max(2);
+    if n <= cutoff || n % 2 != 0 {
+        return matmul::serial(a, b);
+    }
+    let (a11, a12, a21, a22) = split(a);
+    let (b11, b12, b21, b22) = split(b);
+
+    let m1 = strassen(&add(&a11, &a22), &add(&b11, &b22), cutoff);
+    let m2 = strassen(&add(&a21, &a22), &b11, cutoff);
+    let m3 = strassen(&a11, &sub(&b12, &b22), cutoff);
+    let m4 = strassen(&a22, &sub(&b21, &b11), cutoff);
+    let m5 = strassen(&add(&a11, &a12), &b22, cutoff);
+    let m6 = strassen(&sub(&a21, &a11), &add(&b11, &b12), cutoff);
+    let m7 = strassen(&sub(&a12, &a22), &add(&b21, &b22), cutoff);
+
+    combine(n, &m1, &m2, &m3, &m4, &m5, &m6, &m7)
+}
+
+/// Pool-parallel Strassen: the seven sub-products fork on the pool at the
+/// top `levels` of the recursion (7-way scope), then serial below.
+pub fn strassen_parallel(
+    a: &Matrix,
+    b: &Matrix,
+    pool: &ThreadPool,
+    cutoff: usize,
+    levels: usize,
+) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    assert!(a.rows() == a.cols() && b.rows() == b.cols(), "square only");
+    let n = a.rows();
+    if levels == 0 || n <= cutoff.max(2) || n % 2 != 0 {
+        return strassen(a, b, cutoff);
+    }
+    let (a11, a12, a21, a22) = split(a);
+    let (b11, b12, b21, b22) = split(b);
+
+    // The seven products are independent: classic master-slave fork.
+    let inputs: [(Matrix, Matrix); 7] = [
+        (add(&a11, &a22), add(&b11, &b22)),
+        (add(&a21, &a22), b11.clone()),
+        (a11.clone(), sub(&b12, &b22)),
+        (a22.clone(), sub(&b21, &b11)),
+        (add(&a11, &a12), b22.clone()),
+        (sub(&a21, &a11), add(&b11, &b12)),
+        (sub(&a12, &a22), add(&b21, &b22)),
+    ];
+    let mut products: Vec<Option<Matrix>> = (0..7).map(|_| None).collect();
+    {
+        let slots: Vec<(&mut Option<Matrix>, &(Matrix, Matrix))> =
+            products.iter_mut().zip(inputs.iter()).collect();
+        pool.scope(|s| {
+            for (slot, (x, y)) in slots {
+                s.spawn(move |_| {
+                    *slot = Some(strassen_parallel(x, y, pool, cutoff, levels - 1));
+                });
+            }
+        });
+    }
+    let p: Vec<Matrix> = products.into_iter().map(Option::unwrap).collect();
+    combine(n, &p[0], &p[1], &p[2], &p[3], &p[4], &p[5], &p[6])
+}
+
+/// Multiply-add count of Strassen at the given cutoff (work model for the
+/// overhead manager: n^log2(7) multiplies + O(n²) adds per level).
+pub fn work_ops(n: usize, cutoff: usize) -> f64 {
+    if n <= cutoff.max(2) || n % 2 != 0 {
+        return (n as f64).powi(3);
+    }
+    let half = n / 2;
+    7.0 * work_ops(half, cutoff) + 18.0 * (half as f64) * (half as f64)
+}
+
+fn split(m: &Matrix) -> (Matrix, Matrix, Matrix, Matrix) {
+    let h = m.rows() / 2;
+    let quad = |r0: usize, c0: usize| {
+        Matrix::from_fn(h, h, |r, c| m.get(r0 + r, c0 + c))
+    };
+    (quad(0, 0), quad(0, h), quad(h, 0), quad(h, h))
+}
+
+fn add(x: &Matrix, y: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for (o, &v) in out.data_mut().iter_mut().zip(y.data()) {
+        *o += v;
+    }
+    out
+}
+
+fn sub(x: &Matrix, y: &Matrix) -> Matrix {
+    let mut out = x.clone();
+    for (o, &v) in out.data_mut().iter_mut().zip(y.data()) {
+        *o -= v;
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn combine(
+    n: usize,
+    m1: &Matrix,
+    m2: &Matrix,
+    m3: &Matrix,
+    m4: &Matrix,
+    m5: &Matrix,
+    m6: &Matrix,
+    m7: &Matrix,
+) -> Matrix {
+    let h = n / 2;
+    let mut c = Matrix::zeros(n, n);
+    for r in 0..h {
+        for col in 0..h {
+            let c11 = m1.get(r, col) + m4.get(r, col) - m5.get(r, col) + m7.get(r, col);
+            let c12 = m3.get(r, col) + m5.get(r, col);
+            let c21 = m2.get(r, col) + m4.get(r, col);
+            let c22 = m1.get(r, col) - m2.get(r, col) + m3.get(r, col) + m6.get(r, col);
+            c.set(r, col, c11);
+            c.set(r, col + h, c12);
+            c.set(r + h, col, c21);
+            c.set(r + h, col + h, c22);
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::matrices;
+
+    #[test]
+    fn matches_classical_pow2() {
+        for n in [2usize, 4, 8, 64, 128] {
+            let a = matrices::uniform(n, n, n as u64);
+            let b = matrices::uniform(n, n, n as u64 + 1);
+            let got = strassen(&a, &b, 8);
+            let want = matmul::serial(&a, &b);
+            assert!(got.approx_eq(&want, 1e-3), "n={n}: |Δ|={}", got.max_abs_diff(&want));
+        }
+    }
+
+    #[test]
+    fn odd_orders_fall_back_cleanly() {
+        // 100 = 4·25: recursion stops at the odd order 25.
+        let a = matrices::uniform(100, 100, 1);
+        let b = matrices::uniform(100, 100, 2);
+        let got = strassen(&a, &b, 8);
+        assert!(got.approx_eq(&matmul::serial(&a, &b), 1e-3));
+    }
+
+    #[test]
+    fn parallel_matches_serial_strassen() {
+        let pool = ThreadPool::new(3);
+        let a = matrices::uniform(128, 128, 3);
+        let b = matrices::uniform(128, 128, 4);
+        let ser = strassen(&a, &b, 16);
+        let par = strassen_parallel(&a, &b, &pool, 16, 2);
+        // Same recursion/splitting order ⇒ identical float schedule.
+        assert_eq!(ser, par);
+    }
+
+    #[test]
+    fn small_int_exactness() {
+        let a = matrices::small_int(64, 64, 5);
+        let b = matrices::small_int(64, 64, 6);
+        // Integer-valued inputs in a small range: Strassen's adds and
+        // subtracts are exact in f32, so the result is exactly classical.
+        assert_eq!(strassen(&a, &b, 8), matmul::serial(&a, &b));
+    }
+
+    #[test]
+    fn work_model_beats_cubic_above_cutoff() {
+        let classical = 1024f64.powi(3);
+        let s = work_ops(1024, 64);
+        assert!(s < classical, "strassen {s} !< classical {classical}");
+        // And respects the fallback below cutoff.
+        assert_eq!(work_ops(32, 64), 32f64.powi(3));
+        // Crossover behaviour: tiny cutoff does MORE total ops at small n
+        // (the addition overhead) — the paper's division-overhead story.
+        assert!(work_ops(64, 2) > 0.5 * work_ops(64, 64));
+    }
+}

@@ -1,0 +1,196 @@
+//! Unified execution backends.
+//!
+//! Domain operations (matmul, sort) run under an [`ExecCtx`] that selects
+//! one of three engines sharing identical algorithmic code paths:
+//!
+//! * **Serial** — reference engine; also the paper's baseline columns.
+//! * **Threaded** — the real work-stealing pool ([`crate::pool`]); measures
+//!   wall-clock and fills the ledger from pool metrics. The engine of
+//!   choice on genuine multicore hosts.
+//! * **Simulated** — the discrete-event machine ([`crate::sim`]); executes
+//!   the computation for real (single-threaded) while charging calibrated
+//!   overheads against a virtual clock. The engine behind every number in
+//!   EXPERIMENTS.md (this container has one physical core).
+//!
+//! The [`crate::overhead::Manager`] is consulted by domain code to pick
+//! serial-vs-parallel and grain, making the paper's management policy a
+//! cross-cutting concern rather than per-algorithm ad-hoc tuning.
+
+use crate::overhead::{calibrate::Calibration, Ledger, Manager, OverheadParams};
+use crate::pool::ThreadPool;
+use crate::sim::Machine;
+
+/// Execution engine selection.
+pub enum Engine {
+    Serial,
+    Threaded(ThreadPool),
+    Simulated(Machine),
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Engine::Serial => write!(f, "Serial"),
+            Engine::Threaded(p) => write!(f, "Threaded({})", p.threads()),
+            Engine::Simulated(m) => write!(f, "Simulated({} cores)", m.cores),
+        }
+    }
+}
+
+/// Execution context: engine + overhead policy + calibrated op costs.
+#[derive(Debug)]
+pub struct ExecCtx {
+    pub engine: Engine,
+    pub manager: Manager,
+    pub cal: Calibration,
+    /// Record full Gantt timelines on the simulated engine.
+    pub trace: bool,
+}
+
+impl ExecCtx {
+    /// Serial reference context.
+    pub fn serial() -> Self {
+        let cal = Calibration::paper_defaults();
+        ExecCtx { engine: Engine::Serial, manager: Manager::new(cal.params, 1), cal, trace: false }
+    }
+
+    /// Real thread pool with `threads` workers.
+    pub fn threaded(threads: usize) -> Self {
+        let cal = Calibration::paper_defaults();
+        ExecCtx {
+            engine: Engine::Threaded(ThreadPool::new(threads)),
+            manager: Manager::new(cal.params, threads),
+            cal,
+            trace: false,
+        }
+    }
+
+    /// Simulated machine with `cores` virtual cores and overhead `params`.
+    pub fn simulated(cores: usize, params: OverheadParams) -> Self {
+        let mut cal = Calibration::paper_defaults();
+        cal.params = params;
+        ExecCtx {
+            engine: Engine::Simulated(Machine::new(cores, params)),
+            manager: Manager::new(params, cores),
+            cal,
+            trace: false,
+        }
+    }
+
+    /// Replace the calibration (op costs + params) wholesale.
+    pub fn with_calibration(mut self, cal: Calibration) -> Self {
+        let cores = self.cores();
+        self.manager = Manager::new(cal.params, cores);
+        if let Engine::Simulated(m) = &mut self.engine {
+            m.params = cal.params;
+        }
+        self.cal = cal;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Core count visible to the manager.
+    pub fn cores(&self) -> usize {
+        match &self.engine {
+            Engine::Serial => 1,
+            Engine::Threaded(p) => p.threads(),
+            Engine::Simulated(m) => m.cores,
+        }
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        match &self.engine {
+            Engine::Serial => "serial",
+            Engine::Threaded(_) => "threaded",
+            Engine::Simulated(_) => "simulated",
+        }
+    }
+}
+
+/// Outcome of one executed region.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Real wall-clock of the run, ns.
+    pub wall_ns: u64,
+    /// Virtual time, ns (simulated engine only).
+    pub virtual_ns: Option<f64>,
+    /// Serial-equivalent time for the same work, ns (virtual engines).
+    pub serial_equiv_ns: Option<f64>,
+    pub ledger: Ledger,
+    /// Gantt timeline (simulated engine with `trace` on).
+    pub timeline: Vec<crate::sim::Segment>,
+}
+
+impl RunReport {
+    pub fn wall_only(wall_ns: u64) -> Self {
+        RunReport {
+            wall_ns,
+            virtual_ns: None,
+            serial_equiv_ns: None,
+            ledger: Ledger::default(),
+            timeline: Vec::new(),
+        }
+    }
+
+    /// The experiment clock: virtual time when simulated, else wall time,
+    /// in microseconds.
+    pub fn time_us(&self) -> f64 {
+        match self.virtual_ns {
+            Some(v) => v / 1e3,
+            None => self.wall_ns as f64 / 1e3,
+        }
+    }
+
+    /// Speedup vs the serial equivalent (virtual engines), if known.
+    pub fn speedup(&self) -> Option<f64> {
+        match (self.virtual_ns, self.serial_equiv_ns) {
+            (Some(v), Some(s)) if v > 0.0 => Some(s / v),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_constructors_report_cores() {
+        assert_eq!(ExecCtx::serial().cores(), 1);
+        assert_eq!(ExecCtx::threaded(3).cores(), 3);
+        assert_eq!(ExecCtx::simulated(8, OverheadParams::paper_2022()).cores(), 8);
+    }
+
+    #[test]
+    fn engine_names() {
+        assert_eq!(ExecCtx::serial().engine_name(), "serial");
+        assert_eq!(ExecCtx::threaded(2).engine_name(), "threaded");
+        assert_eq!(ExecCtx::simulated(2, OverheadParams::ideal()).engine_name(), "simulated");
+    }
+
+    #[test]
+    fn report_clock_prefers_virtual() {
+        let mut r = RunReport::wall_only(5_000);
+        assert!((r.time_us() - 5.0).abs() < 1e-9);
+        r.virtual_ns = Some(9_000.0);
+        r.serial_equiv_ns = Some(18_000.0);
+        assert!((r.time_us() - 9.0).abs() < 1e-9);
+        assert!((r.speedup().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_calibration_updates_manager_and_machine() {
+        let mut cal = Calibration::paper_defaults();
+        cal.params = OverheadParams::ideal();
+        let ctx = ExecCtx::simulated(4, OverheadParams::paper_2022()).with_calibration(cal);
+        assert_eq!(ctx.manager.params, OverheadParams::ideal());
+        match &ctx.engine {
+            Engine::Simulated(m) => assert_eq!(m.params, OverheadParams::ideal()),
+            _ => unreachable!(),
+        }
+    }
+}

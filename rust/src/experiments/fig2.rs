@@ -1,0 +1,169 @@
+//! Fig 2: matmul runtime, serial vs parallel, across matrix orders.
+//!
+//! Three curves:
+//!
+//! * **serial** — `n³ · op_ns` on one core (no overheads, by definition);
+//! * **parallel-naive** — the paper's measured platform: one raw thread
+//!   per row block with 2012-Windows thread costs
+//!   ([`OverheadParams::openmp_2012`]); its crossover with serial lands at
+//!   order ≈10³, reproducing the paper's "minimum 1000 and above" claim;
+//! * **parallel-managed** — the same machine under OHM's manager (pooled
+//!   tasks, overhead-optimal grain, [`OverheadParams::paper_2022`]): the
+//!   crossover moves down by an order of magnitude, which is the paper's
+//!   thesis — *manage* the overheads and parallelism pays off much earlier.
+//!
+//! Matmul's task graph is data-independent, so this experiment builds the
+//! cost trees directly (no element computation) — the equivalence of tree
+//! and real execution is pinned by `dla::matmul` unit tests.
+
+use super::ExpOutput;
+use crate::config::ExperimentConfig;
+use crate::overhead::{model, OverheadParams, WorkEstimate};
+use crate::report::{table::f, AsciiTable, Chart};
+use crate::sim::{Machine, Node, SimCtx};
+
+/// Build the row-block fork-join tree of an n×n matmul without computing.
+pub fn matmul_tree(n: usize, op_ns: f64, tasks: usize) -> Node {
+    let tasks = tasks.clamp(1, n.max(1));
+    let chunk_rows = n.div_ceil(tasks);
+    let row_bytes = (2 * n * 4) as u64; // A row + C row
+    let mut c = SimCtx::new();
+    let mut row = 0usize;
+    let mut inputs = Vec::new();
+    while row < n {
+        let rows = chunk_rows.min(n - row);
+        inputs.push((rows, rows as u64 * row_bytes));
+        row += rows;
+    }
+    c.fork_each(inputs, |rows, cc| {
+        cc.work(rows as f64 * (n * n) as f64 * op_ns, "matmul-chunk");
+    });
+    c.into_node()
+}
+
+/// One Fig-2 row: (order, serial_ms, naive_ms, managed_ms).
+pub fn row(n: usize, op_ns: f64, cores: usize) -> (f64, f64, f64) {
+    let serial_ns = (n as f64).powi(3) * op_ns;
+
+    // Naive: one task per row on the unmanaged 2012 platform.
+    let naive_machine = Machine::new(cores, OverheadParams::openmp_2012());
+    let naive = naive_machine.run(&matmul_tree(n, op_ns, n), false);
+
+    // Managed: pooled tasks, grain chosen by the manager.
+    let params = OverheadParams::paper_2022();
+    let est = WorkEstimate::fully_parallel(serial_ns, (2 * n * n * 4) as u64);
+    let (tasks, _) = model::best_grain(&params, &est, cores, 64 * cores);
+    let managed_machine = Machine::new(cores, params);
+    let managed = managed_machine.run(&matmul_tree(n, op_ns, tasks), false);
+
+    (serial_ns / 1e6, naive.makespan_ns / 1e6, managed.makespan_ns / 1e6)
+}
+
+pub fn run(cfg: &ExperimentConfig) -> ExpOutput {
+    let op_ns = 1.0; // calibrated per-multiply-add cost (paper scale)
+    let mut t = AsciiTable::new(
+        "Figure 2 (data): matmul runtime by matrix order, ms (virtual, 4-core sim)",
+        &["order", "serial", "parallel-naive(2012)", "parallel-managed(OHM)"],
+    );
+    let mut chart = Chart::new("Figure 2: serial vs parallel matmul", "order", "time ms");
+    let mut rows = Vec::new();
+    let (mut s_pts, mut n_pts, mut m_pts) = (Vec::new(), Vec::new(), Vec::new());
+    let mut crossover_naive = None;
+    let mut crossover_managed = None;
+    for &n in &cfg.matmul_orders {
+        let (s, nv, mg) = row(n, op_ns, cfg.cores);
+        if nv < s && crossover_naive.is_none() {
+            crossover_naive = Some(n);
+        }
+        if mg < s && crossover_managed.is_none() {
+            crossover_managed = Some(n);
+        }
+        t.row(vec![n.to_string(), f(s, 3), f(nv, 3), f(mg, 3)]);
+        rows.push(vec![n.to_string(), f(s, 4), f(nv, 4), f(mg, 4)]);
+        s_pts.push((n as f64, s));
+        n_pts.push((n as f64, nv));
+        m_pts.push((n as f64, mg));
+    }
+    chart.series("serial", s_pts);
+    chart.series("naive", n_pts);
+    chart.series("managed", m_pts);
+    let mut text = t.render();
+    text.push('\n');
+    text.push_str(&chart.render());
+    text.push_str(&format!(
+        "\ncrossover (parallel beats serial): naive at order {} — paper claims ≥1000; \
+         managed at order {} — the gain from overhead management.\n",
+        crossover_naive.map_or("none".into(), |n| n.to_string()),
+        crossover_managed.map_or("none".into(), |n| n.to_string()),
+    ));
+    ExpOutput {
+        id: "fig2",
+        title: "Fig 2: matmul serial vs parallel across orders",
+        text,
+        csv: vec![(
+            "fig2_matmul".into(),
+            vec!["order", "serial_ms", "naive_ms", "managed_ms"],
+            rows,
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_crossover_near_paper_threshold() {
+        // Scan a fine grid: the serial/naive crossover must land in
+        // [500, 1500] — the paper's "minimum 1000 and above" band.
+        let mut crossover = None;
+        for n in (100..=2000).step_by(50) {
+            let (s, nv, _) = row(n, 1.0, 4);
+            if nv < s {
+                crossover = Some(n);
+                break;
+            }
+        }
+        let c = crossover.expect("naive parallel must eventually win");
+        assert!((500..=1500).contains(&c), "naive crossover at {c}");
+    }
+
+    #[test]
+    fn managed_crossover_much_earlier() {
+        let mut crossover = None;
+        for n in (8..=1024).step_by(8) {
+            let (s, _, mg) = row(n, 1.0, 4);
+            if mg < s {
+                crossover = Some(n);
+                break;
+            }
+        }
+        let c = crossover.expect("managed parallel must win");
+        assert!(c <= 256, "managed crossover at {c} — should be far below 1000");
+    }
+
+    #[test]
+    fn large_order_speedup_approaches_cores() {
+        let (s, _, mg) = row(2048, 1.0, 4);
+        let speedup = s / mg;
+        assert!(speedup > 2.0 && speedup <= 4.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn tree_work_is_exact() {
+        let tree = matmul_tree(100, 2.0, 7);
+        assert!((tree.total_work_ns() - 100.0f64.powi(3) * 2.0).abs() < 1e-3);
+        assert_eq!(tree.spawn_count(), 7);
+    }
+
+    #[test]
+    fn run_produces_full_sweep() {
+        let cfg = ExperimentConfig {
+            matmul_orders: vec![64, 128],
+            ..Default::default()
+        };
+        let out = run(&cfg);
+        assert_eq!(out.csv[0].2.len(), 2);
+        assert!(out.text.contains("crossover"));
+    }
+}

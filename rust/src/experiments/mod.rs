@@ -1,0 +1,109 @@
+//! Experiment runners — one per paper table/figure plus ablations
+//! (DESIGN.md §5 experiment index).
+//!
+//! Each runner produces an [`ExpOutput`]: a console rendering (tables,
+//! charts, diagrams) plus CSV series, saved under the config's `out_dir`.
+//! All numeric experiments run on the simulated machine with
+//! paper-calibrated overheads — deterministic, reproducible (see
+//! DESIGN.md §Substitutions).
+
+pub mod ablations;
+pub mod fig2;
+pub mod paper_text;
+pub mod table3;
+
+use crate::config::ExperimentConfig;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// One experiment's rendered output.
+#[derive(Debug, Clone)]
+pub struct ExpOutput {
+    pub id: &'static str,
+    pub title: &'static str,
+    /// Console rendering.
+    pub text: String,
+    /// CSV artifacts: (file stem, headers, rows).
+    pub csv: Vec<(String, Vec<&'static str>, Vec<Vec<String>>)>,
+}
+
+/// All experiment ids, in presentation order.
+pub const ALL: &[&str] = &[
+    "table1", "fig1", "fig2", "fig3", "table2", "fig4", "table3", "fig5",
+    "abl-grain", "abl-cores", "abl-adversarial", "abl-hetero",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, cfg: &ExperimentConfig) -> Result<ExpOutput> {
+    Ok(match id {
+        "table1" => paper_text::table1(cfg),
+        "table2" => paper_text::table2(cfg),
+        "fig1" => paper_text::fig1(),
+        "fig3" => paper_text::fig3(),
+        "fig4" => paper_text::fig4(),
+        "fig2" => fig2::run(cfg),
+        "table3" => table3::run_table(cfg),
+        "fig5" => table3::run_fig5(cfg),
+        "abl-grain" => ablations::grain(cfg),
+        "abl-cores" => ablations::cores(cfg),
+        "abl-adversarial" => ablations::adversarial(cfg),
+        "abl-hetero" => ablations::hetero(cfg),
+        _ => bail!("unknown experiment {id:?}; known: {ALL:?}"),
+    })
+}
+
+/// Run every experiment.
+pub fn run_all(cfg: &ExperimentConfig) -> Result<Vec<ExpOutput>> {
+    ALL.iter().map(|id| run(id, cfg)).collect()
+}
+
+/// Persist an output under `dir`: `<id>.txt` plus each CSV.
+pub fn save(out: &ExpOutput, dir: &Path) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::new();
+    let txt = dir.join(format!("{}.txt", out.id));
+    std::fs::write(&txt, &out.text)?;
+    paths.push(txt);
+    for (stem, headers, rows) in &out.csv {
+        let p = dir.join(format!("{stem}.csv"));
+        crate::report::csv::write_csv(&p, headers, rows)?;
+        paths.push(p);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            matmul_orders: vec![16, 32, 64],
+            sort_sizes: vec![200, 400],
+            reps: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(run("nope", &tiny_cfg()).is_err());
+    }
+
+    #[test]
+    fn qualitative_experiments_run() {
+        for id in ["table1", "table2", "fig1", "fig3", "fig4"] {
+            let out = run(id, &tiny_cfg()).unwrap();
+            assert!(!out.text.is_empty(), "{id}");
+        }
+    }
+
+    #[test]
+    fn save_writes_files() {
+        let out = run("table1", &tiny_cfg()).unwrap();
+        let dir = std::env::temp_dir().join("ohm-exp-save-test");
+        let paths = save(&out, &dir).unwrap();
+        assert!(paths[0].exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

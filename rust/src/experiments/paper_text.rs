@@ -1,0 +1,52 @@
+//! Qualitative paper artifacts (Table 1, Table 2, Fig 1, Fig 3, Fig 4) as
+//! experiment outputs, parameterized by the live overhead model.
+
+use super::ExpOutput;
+use crate::config::ExperimentConfig;
+use crate::report::paper;
+use crate::sort::SortCostModel;
+
+pub fn table1(cfg: &ExperimentConfig) -> ExpOutput {
+    ExpOutput {
+        id: "table1",
+        title: "Table 1: matmul serial vs parallel scope analysis",
+        text: paper::table1(&cfg.params(), cfg.cores, 1.0),
+        csv: vec![],
+    }
+}
+
+pub fn table2(cfg: &ExperimentConfig) -> ExpOutput {
+    ExpOutput {
+        id: "table2",
+        title: "Table 2: parametric analysis for parallel quicksort",
+        text: paper::table2(&cfg.params(), cfg.cores, &SortCostModel::paper_2022()),
+        csv: vec![],
+    }
+}
+
+pub fn fig1() -> ExpOutput {
+    ExpOutput { id: "fig1", title: "Fig 1: overhead analysis & management (matmul)", text: paper::fig1(), csv: vec![] }
+}
+
+pub fn fig3() -> ExpOutput {
+    ExpOutput { id: "fig3", title: "Fig 3: serial quicksort algorithm", text: paper::fig3(), csv: vec![] }
+}
+
+pub fn fig4() -> ExpOutput {
+    ExpOutput { id: "fig4", title: "Fig 4: parallel quicksort workflow", text: paper::fig4(), csv: vec![] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_emit_text() {
+        let cfg = ExperimentConfig::default();
+        assert!(table1(&cfg).text.contains("Order of matrix"));
+        assert!(table2(&cfg).text.contains("Pivot"));
+        assert!(fig1().text.contains("FORK-JOIN SWITCH"));
+        assert!(fig3().text.contains("QUICKSORT"));
+        assert!(fig4().text.contains("master"));
+    }
+}

@@ -1,0 +1,70 @@
+//! # OHM — Overhead Management in Multi-Core Environment
+//!
+//! Production-shaped reproduction of *"Overhead Management in Multi-Core
+//! Environment"* (Shrawankar & Joshi, CS.DC 2022) as a three-layer
+//! Rust + JAX + Pallas framework.
+//!
+//! The paper's thesis: adding cores does not speed anything up unless the
+//! overheads of parallelism — **thread creation**, **synchronization**,
+//! **inter-core communication**, and **data distribution** — are identified
+//! "to the root level" and managed, by switching between serial and parallel
+//! execution (fork-join) with master-slave data distribution. OHM makes that
+//! methodology executable:
+//!
+//! * [`pool`] — a from-scratch work-stealing fork-join thread pool (the
+//!   paper's OpenMP "parallel sections" substitute), fully instrumented.
+//! * [`sim`] — a deterministic discrete-event multicore simulator: the
+//!   evaluation testbed. It executes the same task DAGs as the real pool but
+//!   charges calibrated overhead costs against a virtual clock, which is how
+//!   the paper's crossovers are reproduced on any host (see DESIGN.md
+//!   §Substitutions).
+//! * [`overhead`] — the paper's contribution as code: an analytic overhead
+//!   model (α spawn, β sync, γ message, δ byte), a calibrator, a per-run
+//!   overhead ledger, and an adaptive manager that decides serial-vs-parallel
+//!   and picks grain sizes.
+//! * [`dla`] / [`sort`] — the two evaluated domains: matrix multiplication
+//!   (serial, blocked, master-slave parallel, simulated, XLA-offloaded) and
+//!   quicksort (four pivot strategies × serial/parallel/simulated, plus
+//!   mergesort / samplesort / bitonic baselines).
+//! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX+Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); Python never runs on the request path.
+//! * [`coordinator`] — job queue, overhead-aware backend policy, shape
+//!   batching for XLA jobs, telemetry.
+//! * [`experiments`] / [`report`] — one runner per paper table/figure
+//!   (Table 1–3, Fig 1–5) plus ablations, with ASCII/CSV emitters.
+//! * [`bench`], [`prop`], [`cli`], [`config`], [`stats`], [`workload`],
+//!   [`util`] — in-repo substrates for criterion / proptest / clap / serde,
+//!   which are unavailable in this offline build (DESIGN.md §2).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use ohm::exec::ExecCtx;
+//! use ohm::overhead::OverheadParams;
+//! use ohm::sort::{parallel_quicksort, PivotStrategy};
+//! use ohm::workload::arrays;
+//!
+//! let mut data = arrays::uniform_i64(100_000, 42);
+//! let ctx = ExecCtx::simulated(4, OverheadParams::paper_2022());
+//! let rep = parallel_quicksort(&mut data, PivotStrategy::Mean, &ctx);
+//! assert!(data.windows(2).all(|w| w[0] <= w[1]));
+//! println!("virtual time: {} µs, spawns: {}", rep.time_us(), rep.ledger.spawns);
+//! ```
+
+pub mod util;
+pub mod stats;
+pub mod workload;
+pub mod prop;
+pub mod bench;
+pub mod pool;
+pub mod sim;
+pub mod overhead;
+pub mod exec;
+pub mod dla;
+pub mod sort;
+pub mod runtime;
+pub mod coordinator;
+pub mod report;
+pub mod config;
+pub mod experiments;
+pub mod cli;

@@ -1,0 +1,15 @@
+//! `ohm` — launcher binary for the OHM framework.
+//!
+//! See `ohm help` (or `cli::USAGE`) for the command surface; DESIGN.md §5
+//! maps each paper table/figure to `ohm experiment <id>`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match ohm::cli::run(&argv) {
+        Ok(text) => print!("{text}"),
+        Err(e) => {
+            eprintln!("ohm: error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Amdahl's-law analysis — quantifying the paper's central criticism.
+//!
+//! "Only increasing the number of employed cores cannot optimize the
+//! results": the ideal Amdahl speedup `1 / ((1-f) + f/p)` ignores the
+//! overhead terms, which *grow* with `p`. This module computes both curves
+//! so the `abl-cores` ablation can plot the widening gap (cf. Yavits et
+//! al., the paper's ref [3]).
+
+use super::model::{self, OverheadParams, WorkEstimate};
+
+/// Ideal Amdahl speedup for parallel fraction `f` on `p` cores.
+pub fn ideal_speedup(f: f64, p: usize) -> f64 {
+    assert!((0.0..=1.0).contains(&f) && p >= 1);
+    1.0 / ((1.0 - f) + f / p as f64)
+}
+
+/// Overhead-adjusted speedup predicted by the model for the best grain.
+pub fn adjusted_speedup(params: &OverheadParams, est: &WorkEstimate, p: usize) -> f64 {
+    let (_, tp) = model::best_grain(params, est, p, 64 * p);
+    model::predict_serial_ns(est) / tp
+}
+
+/// One row of the cores ablation: `(p, ideal, adjusted)`.
+pub fn sweep(params: &OverheadParams, est: &WorkEstimate, cores: &[usize]) -> Vec<(usize, f64, f64)> {
+    cores
+        .iter()
+        .map(|&p| (p, ideal_speedup(est.parallel_fraction, p), adjusted_speedup(params, est, p)))
+        .collect()
+}
+
+/// The core count beyond which adding cores *slows the region down*
+/// (returns `None` if no maximum within `max_p`). This is the paper's
+/// "challenge to Amdahl's law" made concrete.
+pub fn saturation_point(params: &OverheadParams, est: &WorkEstimate, max_p: usize) -> Option<usize> {
+    let mut best = (1usize, adjusted_speedup(params, est, 1));
+    for p in 2..=max_p {
+        let s = adjusted_speedup(params, est, p);
+        if s > best.1 {
+            best = (p, s);
+        }
+    }
+    if best.0 < max_p {
+        Some(best.0)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_limits() {
+        assert!((ideal_speedup(1.0, 8) - 8.0).abs() < 1e-12);
+        assert!((ideal_speedup(0.0, 8) - 1.0).abs() < 1e-12);
+        // f=0.5: asymptote at 2.
+        assert!(ideal_speedup(0.5, 1_000_000) < 2.0);
+        assert!(ideal_speedup(0.5, 1_000_000) > 1.99);
+    }
+
+    #[test]
+    fn adjusted_below_ideal_with_overheads() {
+        let est = WorkEstimate::fully_parallel(1e8, 1 << 20);
+        let params = OverheadParams::paper_2022();
+        for p in [2, 4, 8, 16] {
+            let adj = adjusted_speedup(&params, &est, p);
+            let idl = ideal_speedup(1.0, p);
+            assert!(adj < idl, "p={p}: adjusted {adj} !< ideal {idl}");
+            assert!(adj > 0.0);
+        }
+    }
+
+    #[test]
+    fn gap_widens_with_cores() {
+        let est = WorkEstimate::fully_parallel(1e8, 1 << 20);
+        let params = OverheadParams::paper_2022();
+        let rows = sweep(&params, &est, &[2, 4, 8, 16]);
+        let gaps: Vec<f64> = rows.iter().map(|(_, i, a)| i - a).collect();
+        assert!(gaps.windows(2).all(|w| w[1] >= w[0] - 1e-9), "gaps {gaps:?}");
+    }
+
+    #[test]
+    fn small_work_saturates_early() {
+        // 200µs of work with paper overheads: speedup peaks at small p.
+        let est = WorkEstimate::fully_parallel(200_000.0, 4096);
+        let params = OverheadParams::paper_2022();
+        let sat = saturation_point(&params, &est, 64);
+        assert!(sat.is_some(), "tiny region must saturate");
+        assert!(sat.unwrap() <= 8, "saturation at {sat:?}");
+    }
+
+    #[test]
+    fn huge_work_does_not_saturate_within_16() {
+        let est = WorkEstimate::fully_parallel(1e11, 0);
+        let params = OverheadParams::paper_2022();
+        assert_eq!(saturation_point(&params, &est, 16), None);
+    }
+}

@@ -1,0 +1,222 @@
+//! Calibration: fit the overhead model's constants on the host.
+//!
+//! Three micro-benchmarks on the *real* pool produce overhead observations;
+//! a least-squares fit recovers (α, β, γ). δ comes from a memcpy bandwidth
+//! probe. A fourth probe measures the per-element cost of the serial
+//! compute kernels, which converts domain work counts (n³ multiply-adds,
+//! n·log n comparisons) into nanoseconds for `WorkEstimate`s.
+//!
+//! On hosts where the probes are too noisy (e.g. this 1-core container),
+//! [`Calibration::with_fallback`] keeps measured per-element compute costs
+//! but uses `OverheadParams::paper_2022()` for α/β/γ/δ — documented in
+//! DESIGN.md §Substitutions.
+
+use super::model::OverheadParams;
+use crate::pool::ThreadPool;
+use crate::stats;
+use crate::util::timer::Stopwatch;
+
+/// Calibration output.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub params: OverheadParams,
+    /// Cost of one fused multiply-add in the serial matmul inner loop, ns.
+    pub matmul_op_ns: f64,
+    /// Cost of one comparison+swap step in serial quicksort, ns.
+    pub sort_op_ns: f64,
+    /// Whether α/β/γ/δ came from host probes (false ⇒ paper defaults).
+    pub probed: bool,
+}
+
+impl Calibration {
+    /// Quick, deterministic-enough calibration for tests and defaults:
+    /// paper overhead constants + synthetic compute costs.
+    pub fn paper_defaults() -> Self {
+        Calibration {
+            params: OverheadParams::paper_2022(),
+            matmul_op_ns: 1.0,
+            sort_op_ns: 4.0,
+            probed: false,
+        }
+    }
+
+    /// Probe the host. `budget_ms` bounds total probing time.
+    pub fn probe(budget_ms: u64) -> Self {
+        let mut cal = Self::paper_defaults();
+        cal.matmul_op_ns = probe_matmul_op_ns();
+        cal.sort_op_ns = probe_sort_op_ns();
+        if let Some(params) = probe_overheads(budget_ms) {
+            cal.params = params;
+            cal.probed = true;
+        }
+        cal
+    }
+
+    /// Probe, but fall back to paper overhead constants when the host fit
+    /// is degenerate (negative or absurd coefficients — typical on a
+    /// 1-core container where "parallel" probes never truly overlap).
+    pub fn with_fallback(budget_ms: u64) -> Self {
+        let mut cal = Self::probe(budget_ms);
+        let p = cal.params;
+        let sane = p.alpha_spawn_ns > 0.0
+            && p.beta_sync_ns > 0.0
+            && p.gamma_msg_ns >= 0.0
+            && p.delta_byte_ns >= 0.0
+            && p.alpha_spawn_ns < 10_000_000.0;
+        if !sane {
+            cal.params = OverheadParams::paper_2022();
+            cal.probed = false;
+        }
+        cal
+    }
+}
+
+/// Per-element serial matmul cost: time a small ikj kernel.
+fn probe_matmul_op_ns() -> f64 {
+    let n = 96usize;
+    let a = vec![1.000_3f32; n * n];
+    let b = vec![0.999_7f32; n * n];
+    let mut c = vec![0.0f32; n * n];
+    // Warm.
+    serial_matmul_probe(&a, &b, &mut c, n);
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let sw = Stopwatch::start();
+        serial_matmul_probe(&a, &b, &mut c, n);
+        best = best.min(sw.elapsed_ns() as f64);
+    }
+    std::hint::black_box(&c);
+    (best / (n * n * n) as f64).max(0.05)
+}
+
+fn serial_matmul_probe(a: &[f32], b: &[f32], c: &mut [f32], n: usize) {
+    c.fill(0.0);
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a[i * n + k];
+            let (crow, brow) = (&mut c[i * n..(i + 1) * n], &b[k * n..(k + 1) * n]);
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// Per-element serial sort cost: time quicksorting a scrambled buffer,
+/// divide by n·log₂n.
+fn probe_sort_op_ns() -> f64 {
+    let n = 64 * 1024usize;
+    let mut rng = crate::util::Pcg32::new(0xCA11B);
+    let proto: Vec<i64> = (0..n).map(|_| rng.range_i64(-1_000_000, 1_000_000)).collect();
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let mut buf = proto.clone();
+        let sw = Stopwatch::start();
+        buf.sort_unstable();
+        best = best.min(sw.elapsed_ns() as f64);
+        std::hint::black_box(&buf);
+    }
+    (best / (n as f64 * (n as f64).log2())).max(0.1)
+}
+
+/// Fit (α, β, γ) from pool micro-benchmarks. Returns `None` when the
+/// design matrix is degenerate.
+fn probe_overheads(budget_ms: u64) -> Option<OverheadParams> {
+    let pool = ThreadPool::new(4);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_millis(budget_ms);
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut obs: Vec<f64> = Vec::new();
+
+    // Spawn/sync storms at varying task counts: overhead_time(t) ≈
+    // α·t + β·t (+ γ·steals). We record the measured event counts from the
+    // pool metrics, which separates the columns.
+    for &tasks in &[8usize, 32, 128, 512] {
+        if std::time::Instant::now() > deadline {
+            break;
+        }
+        for _rep in 0..5 {
+            let before = pool.metrics();
+            let sw = Stopwatch::start();
+            pool.for_each_index(tasks, |_| {
+                std::hint::black_box(0u64);
+            });
+            let elapsed = sw.elapsed_ns() as f64;
+            let d = pool.metrics().delta_since(&before);
+            rows.push(vec![
+                (d.spawns + d.injected) as f64,
+                d.latch_waits as f64,
+                (d.steals + d.injected) as f64,
+            ]);
+            obs.push(elapsed);
+        }
+    }
+    if rows.len() < 8 {
+        return None;
+    }
+    let x = stats::least_squares(&rows, &obs);
+    let (alpha, beta, gamma) = (x[0], x[1], x[2]);
+    // δ: memcpy bandwidth probe.
+    let delta = probe_copy_byte_ns();
+    Some(OverheadParams {
+        alpha_spawn_ns: alpha,
+        beta_sync_ns: beta,
+        gamma_msg_ns: gamma,
+        delta_byte_ns: delta,
+    })
+}
+
+fn probe_copy_byte_ns() -> f64 {
+    let n = 8 << 20; // 8 MiB
+    let src = vec![0xABu8; n];
+    let mut dst = vec![0u8; n];
+    dst.copy_from_slice(&src); // warm
+    let sw = Stopwatch::start();
+    for _ in 0..4 {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&mut dst);
+    }
+    (sw.elapsed_ns() as f64 / (4 * n) as f64).max(0.001)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_are_sane() {
+        let c = Calibration::paper_defaults();
+        assert!(!c.probed);
+        assert!(c.params.alpha_spawn_ns > 0.0);
+        assert!(c.matmul_op_ns > 0.0 && c.sort_op_ns > 0.0);
+    }
+
+    #[test]
+    fn matmul_probe_positive_and_bounded() {
+        let ns = probe_matmul_op_ns();
+        assert!(ns > 0.01 && ns < 1000.0, "matmul op = {ns}ns");
+    }
+
+    #[test]
+    fn sort_probe_positive_and_bounded() {
+        let ns = probe_sort_op_ns();
+        assert!(ns > 0.01 && ns < 1000.0, "sort op = {ns}ns");
+    }
+
+    #[test]
+    fn copy_probe_positive() {
+        let d = probe_copy_byte_ns();
+        assert!(d > 0.0 && d < 100.0, "delta = {d}ns/B");
+    }
+
+    #[test]
+    fn with_fallback_always_usable() {
+        let c = Calibration::with_fallback(200);
+        assert!(c.params.alpha_spawn_ns > 0.0);
+        assert!(c.params.beta_sync_ns > 0.0);
+        assert!(c.params.delta_byte_ns >= 0.0);
+        // Manager built from it must produce a finite cutoff.
+        let m = crate::overhead::Manager::new(c.params, 4);
+        let cut = m.serial_cutoff_ns(1.0, 1e12);
+        assert!(cut.is_finite() && cut > 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Per-run overhead accounting.
+//!
+//! A [`Ledger`] records how many of each overhead event *actually happened*
+//! during a run — from the pool's metrics (threaded backend) or from the
+//! simulator's schedule (simulated backend). The tested invariant
+//! (DESIGN.md §7): `OverheadParams::charge(ledger)` reconstructs the
+//! simulator's charged overhead exactly, and bounds the threaded backend's
+//! measured overhead from below.
+
+use crate::pool::metrics::MetricsSnapshot;
+
+/// Counts of the paper's four overhead classes, plus bookkeeping.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Ledger {
+    /// Task/thread creations (α events).
+    pub spawns: u64,
+    /// Synchronization events: joins, barriers, latch waits (β events).
+    pub syncs: u64,
+    /// Inter-core messages: steals, migrations, result hand-backs (γ).
+    pub messages: u64,
+    /// Bytes moved across cores (δ).
+    pub bytes: u64,
+    /// Pure compute time, ns (virtual for sim, estimated for threaded).
+    pub compute_ns: u64,
+    /// Core-idle time summed over cores, ns (sim only).
+    pub idle_ns: u64,
+}
+
+impl Ledger {
+    /// Build from a pool metrics delta (threaded backend).
+    ///
+    /// Mapping: every job published for parallel execution is an α event;
+    /// every latch wait is a β event; every successful steal and every
+    /// injector hop is a γ message.
+    pub fn from_metrics(delta: &MetricsSnapshot, bytes_moved: u64) -> Ledger {
+        Ledger {
+            spawns: delta.spawns + delta.injected,
+            syncs: delta.latch_waits,
+            messages: delta.steals + delta.injected,
+            bytes: bytes_moved,
+            compute_ns: 0,
+            idle_ns: 0,
+        }
+    }
+
+    /// Element-wise sum (aggregate over jobs / repetition runs).
+    pub fn merged(&self, other: &Ledger) -> Ledger {
+        Ledger {
+            spawns: self.spawns + other.spawns,
+            syncs: self.syncs + other.syncs,
+            messages: self.messages + other.messages,
+            bytes: self.bytes + other.bytes,
+            compute_ns: self.compute_ns + other.compute_ns,
+            idle_ns: self.idle_ns + other.idle_ns,
+        }
+    }
+
+    /// Total overhead events of all classes (coarse magnitude signal).
+    pub fn total_events(&self) -> u64 {
+        self.spawns + self.syncs + self.messages
+    }
+
+    /// Human-readable one-liner for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "spawns={} syncs={} msgs={} bytes={} compute={}µs idle={}µs",
+            self.spawns,
+            self.syncs,
+            self.messages,
+            self.bytes,
+            self.compute_ns / 1_000,
+            self.idle_ns / 1_000,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_metrics_mapping() {
+        let d = MetricsSnapshot {
+            spawns: 10,
+            executed: 12,
+            steals: 3,
+            failed_steals: 7,
+            injected: 2,
+            latch_waits: 5,
+            joins: 4,
+            overflow_inline: 0,
+        };
+        let l = Ledger::from_metrics(&d, 640);
+        assert_eq!(l.spawns, 12); // 10 deque + 2 injected
+        assert_eq!(l.syncs, 5);
+        assert_eq!(l.messages, 5); // 3 steals + 2 injector hops
+        assert_eq!(l.bytes, 640);
+    }
+
+    #[test]
+    fn merge_adds_fields() {
+        let a = Ledger { spawns: 1, syncs: 2, messages: 3, bytes: 4, compute_ns: 5, idle_ns: 6 };
+        let b = Ledger { spawns: 10, syncs: 20, messages: 30, bytes: 40, compute_ns: 50, idle_ns: 60 };
+        let m = a.merged(&b);
+        assert_eq!(m, Ledger { spawns: 11, syncs: 22, messages: 33, bytes: 44, compute_ns: 55, idle_ns: 66 });
+        assert_eq!(m.total_events(), 66);
+    }
+
+    #[test]
+    fn summary_contains_fields() {
+        let l = Ledger { spawns: 7, ..Default::default() };
+        assert!(l.summary().contains("spawns=7"));
+    }
+}

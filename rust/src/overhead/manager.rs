@@ -1,0 +1,219 @@
+//! The adaptive manager: the paper's overhead *management* policy.
+//!
+//! Given a work estimate for an incoming region, the manager inverts the
+//! overhead model to decide:
+//!
+//! 1. **serial vs parallel** — the fork-join switch ("parallelization if
+//!    not implemented properly will definitely appear as an overhead");
+//! 2. **grain** — how many tasks to split into, balancing load balance
+//!    against α/β/γ charges ("size of problem being solved should be
+//!    comparable to the efforts necessary for dividing the tasks").
+
+use super::model::{self, OverheadParams, WorkEstimate};
+
+/// The manager's verdict for one region.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Decision {
+    /// Run serially: predicted parallel time does not beat serial.
+    Serial { predicted_ns: f64 },
+    /// Run in parallel with `tasks` tasks over `cores` cores.
+    Parallel { tasks: usize, cores: usize, predicted_ns: f64, predicted_serial_ns: f64 },
+}
+
+impl Decision {
+    pub fn is_parallel(&self) -> bool {
+        matches!(self, Decision::Parallel { .. })
+    }
+
+    pub fn predicted_ns(&self) -> f64 {
+        match *self {
+            Decision::Serial { predicted_ns } => predicted_ns,
+            Decision::Parallel { predicted_ns, .. } => predicted_ns,
+        }
+    }
+}
+
+/// Overhead-aware execution planner, parameterized by machine shape.
+#[derive(Debug, Clone)]
+pub struct Manager {
+    pub params: OverheadParams,
+    pub cores: usize,
+    /// Do not split below this many tasks' worth of work per task
+    /// (guards against pathological estimates); default 1.
+    pub min_task_work_ns: f64,
+    /// Hysteresis margin: parallel must beat serial by this factor to be
+    /// chosen (avoids flapping around the crossover); default 1.0 (off).
+    pub margin: f64,
+    /// EWMA correction from observed runs (see [`Manager::observe`]).
+    bias: f64,
+}
+
+impl Manager {
+    pub fn new(params: OverheadParams, cores: usize) -> Self {
+        Manager { params, cores: cores.max(1), min_task_work_ns: 1.0, margin: 1.0, bias: 1.0 }
+    }
+
+    /// Decide how to execute a region with estimate `est`.
+    pub fn decide(&self, est: &WorkEstimate) -> Decision {
+        let serial_ns = model::predict_serial_ns(est);
+        if self.cores == 1 {
+            return Decision::Serial { predicted_ns: serial_ns };
+        }
+        let max_tasks_by_grain =
+            ((est.total_work_ns / self.min_task_work_ns).floor() as usize).max(1);
+        let max_tasks = (64 * self.cores).min(max_tasks_by_grain.max(self.cores));
+        let (tasks, raw_parallel_ns) = model::best_grain(&self.params, est, self.cores, max_tasks);
+        let parallel_ns = raw_parallel_ns * self.bias;
+        if parallel_ns * self.margin < serial_ns {
+            Decision::Parallel {
+                tasks,
+                cores: self.cores,
+                predicted_ns: parallel_ns,
+                predicted_serial_ns: serial_ns,
+            }
+        } else {
+            Decision::Serial { predicted_ns: serial_ns }
+        }
+    }
+
+    /// Online refinement: feed back an observed (predicted, actual)
+    /// parallel-time pair; the manager maintains an EWMA correction bias
+    /// applied to future parallel predictions. This closes the paper's
+    /// loop — overheads are not just modeled *a priori* but re-estimated
+    /// from the ledger of every run (DESIGN.md §6).
+    pub fn observe(&mut self, predicted_ns: f64, actual_ns: f64) {
+        if predicted_ns <= 0.0 || actual_ns <= 0.0 {
+            return;
+        }
+        let ratio = (actual_ns / predicted_ns).clamp(0.25, 4.0);
+        // EWMA with 0.3 gain: a few observations converge, one outlier
+        // does not destabilize the policy.
+        self.bias = 0.7 * self.bias + 0.3 * ratio;
+    }
+
+    /// Current prediction bias (1.0 = model trusted as-is).
+    pub fn bias(&self) -> f64 {
+        self.bias
+    }
+
+    /// The serial cutoff: largest work size (ns) in `[lo, hi]` for which
+    /// the manager still picks serial (bisection; monotone by
+    /// `overheads_make_small_problems_lose`).
+    pub fn serial_cutoff_ns(&self, lo: f64, hi: f64) -> f64 {
+        let mut lo = lo;
+        let mut hi = hi;
+        for _ in 0..64 {
+            let mid = 0.5 * (lo + hi);
+            let d = self.decide(&WorkEstimate::fully_parallel(mid, 0));
+            if d.is_parallel() {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr() -> Manager {
+        Manager::new(OverheadParams::paper_2022(), 4)
+    }
+
+    #[test]
+    fn small_work_goes_serial_large_goes_parallel() {
+        let m = mgr();
+        assert!(!m.decide(&WorkEstimate::fully_parallel(10_000.0, 0)).is_parallel());
+        assert!(m.decide(&WorkEstimate::fully_parallel(1e9, 0)).is_parallel());
+    }
+
+    #[test]
+    fn single_core_always_serial() {
+        let m = Manager::new(OverheadParams::ideal(), 1);
+        assert!(!m.decide(&WorkEstimate::fully_parallel(1e12, 0)).is_parallel());
+    }
+
+    #[test]
+    fn parallel_prediction_beats_serial_when_chosen() {
+        let m = mgr();
+        if let Decision::Parallel { predicted_ns, predicted_serial_ns, tasks, cores } =
+            m.decide(&WorkEstimate::fully_parallel(1e9, 1 << 20))
+        {
+            assert!(predicted_ns < predicted_serial_ns);
+            assert!(tasks >= cores);
+        } else {
+            panic!("expected parallel");
+        }
+    }
+
+    #[test]
+    fn cutoff_is_consistent_with_decide() {
+        let m = mgr();
+        let cut = m.serial_cutoff_ns(1.0, 1e10);
+        assert!(cut > 0.0 && cut < 1e10);
+        assert!(!m.decide(&WorkEstimate::fully_parallel(cut * 0.9, 0)).is_parallel());
+        assert!(m.decide(&WorkEstimate::fully_parallel(cut * 1.2, 0)).is_parallel());
+    }
+
+    #[test]
+    fn margin_raises_cutoff() {
+        let base = mgr();
+        let mut cautious = mgr();
+        cautious.margin = 2.0;
+        let c0 = base.serial_cutoff_ns(1.0, 1e10);
+        let c1 = cautious.serial_cutoff_ns(1.0, 1e10);
+        assert!(c1 >= c0, "margin must delay the switch: {c0} vs {c1}");
+    }
+
+    #[test]
+    fn observe_shifts_bias_and_decisions() {
+        let mut m = mgr();
+        assert!((m.bias() - 1.0).abs() < 1e-12);
+        // Pick a work size near the cutoff where parallel barely wins.
+        let cut = m.serial_cutoff_ns(1.0, 1e10);
+        let est = WorkEstimate::fully_parallel(cut * 1.1, 0);
+        assert!(m.decide(&est).is_parallel());
+        // Report that parallel consistently ran 3x slower than predicted.
+        for _ in 0..10 {
+            let p = m.decide(&est).predicted_ns();
+            m.observe(p, p * 3.0);
+        }
+        assert!(m.bias() > 1.5, "bias {}", m.bias());
+        assert!(!m.decide(&est).is_parallel(), "borderline region should flip to serial");
+        // And accurate feedback pulls it back toward 1.
+        for _ in 0..20 {
+            m.observe(1000.0, 1000.0);
+        }
+        assert!((m.bias() - 1.0).abs() < 0.1, "bias {}", m.bias());
+    }
+
+    #[test]
+    fn observe_ignores_degenerate_inputs_and_clamps() {
+        let mut m = mgr();
+        m.observe(0.0, 100.0);
+        m.observe(100.0, 0.0);
+        assert!((m.bias() - 1.0).abs() < 1e-12);
+        m.observe(1.0, 1e12); // absurd outlier: clamped to 4x
+        assert!(m.bias() <= 0.7 + 0.3 * 4.0 + 1e-12);
+    }
+
+    #[test]
+    fn distribution_bytes_penalize_parallel() {
+        let m = mgr();
+        let light = m.decide(&WorkEstimate::fully_parallel(5e6, 0));
+        let heavy = m.decide(&WorkEstimate::fully_parallel(5e6, 200 << 20));
+        if light.is_parallel() {
+            // With 200 MiB to ship, parallel should be predicted slower
+            // (or rejected outright).
+            match heavy {
+                Decision::Serial { .. } => {}
+                Decision::Parallel { predicted_ns, .. } => {
+                    assert!(predicted_ns > light.predicted_ns());
+                }
+            }
+        }
+    }
+}

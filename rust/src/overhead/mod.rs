@@ -1,0 +1,29 @@
+//! The paper's contribution, made executable: identify the overheads of
+//! parallelism *to the root level* and manage them.
+//!
+//! * [`model`] — analytic overhead model: per-event costs for **thread
+//!   creation (α)**, **synchronization (β)**, **inter-core communication
+//!   (γ per message, δ per byte)**, and a per-element compute cost; predicts
+//!   serial and parallel runtimes and their crossover.
+//! * [`ledger`] — per-run accounting of actual overhead events, filled in
+//!   by the pool's metrics or the simulator's schedule; reconciling ledger
+//!   vs model is a tested invariant.
+//! * [`calibrate`] — fits the model's constants from micro-benchmarks on
+//!   the real pool (spawn storms, barrier storms, copy ping-pong) and from
+//!   serial kernel timings; falls back to `OverheadParams::paper_2022()`.
+//! * [`manager`] — the *management* policy: given a work estimate, decide
+//!   serial vs parallel and pick the grain that minimizes predicted time
+//!   (the paper's fork-join switching + "size of problem must be comparable
+//!   to the efforts necessary for dividing" rule).
+//! * [`amdahl`] — Amdahl's-law analyzer quantifying the paper's criticism:
+//!   ideal speedup vs overhead-adjusted speedup.
+
+pub mod amdahl;
+pub mod calibrate;
+pub mod ledger;
+pub mod manager;
+pub mod model;
+
+pub use ledger::Ledger;
+pub use manager::{Decision, Manager};
+pub use model::{OverheadParams, WorkEstimate};

@@ -1,0 +1,227 @@
+//! Chase–Lev work-stealing deque (fixed capacity, SeqCst orderings).
+//!
+//! The owner pushes/pops at the *bottom* (LIFO — good locality, depth-first
+//! fork-join); thieves steal from the *top* (FIFO — oldest, largest tasks,
+//! which is what makes work-stealing's communication overhead logarithmic:
+//! exactly the property the paper's master-slave distribution approximates
+//! statically).
+//!
+//! Simplifications vs the full algorithm: fixed capacity (callers fall back
+//! to inline execution or the global injector on overflow — see
+//! [`super::ThreadPool`]) and SeqCst everywhere (we measure overheads with
+//! the ledger/simulator, not by shaving fences; correctness first).
+
+use super::job::JobRef;
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicIsize, Ordering::SeqCst};
+use std::cell::UnsafeCell;
+
+/// Fixed-capacity Chase–Lev deque of [`JobRef`]s.
+pub struct Deque {
+    top: CachePadded<AtomicIsize>,
+    bottom: CachePadded<AtomicIsize>,
+    buf: Box<[UnsafeCell<JobRef>]>,
+    mask: isize,
+}
+
+// SAFETY: JobRef slots are only read/written under the Chase-Lev protocol;
+// JobRef itself is Send.
+unsafe impl Send for Deque {}
+unsafe impl Sync for Deque {}
+
+pub enum Steal {
+    Empty,
+    Retry,
+    Success(JobRef),
+}
+
+impl Deque {
+    /// `capacity` must be a power of two.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity.is_power_of_two());
+        let buf: Vec<UnsafeCell<JobRef>> =
+            (0..capacity).map(|_| UnsafeCell::new(JobRef::null())).collect();
+        Deque {
+            top: CachePadded::new(AtomicIsize::new(0)),
+            bottom: CachePadded::new(AtomicIsize::new(0)),
+            buf: buf.into_boxed_slice(),
+            mask: capacity as isize - 1,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, i: isize) -> *mut JobRef {
+        self.buf[(i & self.mask) as usize].get()
+    }
+
+    /// Owner-only: push at the bottom. Returns `false` when full (caller
+    /// must run the job another way; nothing is written).
+    ///
+    /// # Safety
+    /// Must only be called by the owning worker thread.
+    pub unsafe fn push(&self, job: JobRef) -> bool {
+        let b = self.bottom.load(SeqCst);
+        let t = self.top.load(SeqCst);
+        if b - t > self.mask {
+            return false; // full
+        }
+        unsafe { *self.slot(b) = job };
+        self.bottom.store(b + 1, SeqCst);
+        true
+    }
+
+    /// Owner-only: pop from the bottom (most recently pushed).
+    ///
+    /// # Safety
+    /// Must only be called by the owning worker thread.
+    pub unsafe fn pop(&self) -> Option<JobRef> {
+        let b = self.bottom.load(SeqCst) - 1;
+        self.bottom.store(b, SeqCst);
+        let t = self.top.load(SeqCst);
+        if t > b {
+            // Empty: restore.
+            self.bottom.store(b + 1, SeqCst);
+            return None;
+        }
+        let job = unsafe { *self.slot(b) };
+        if t == b {
+            // Last element: race with thieves via CAS on top.
+            let won = self.top.compare_exchange(t, t + 1, SeqCst, SeqCst).is_ok();
+            self.bottom.store(b + 1, SeqCst);
+            return if won { Some(job) } else { None };
+        }
+        Some(job)
+    }
+
+    /// Thief: steal from the top (oldest).
+    pub fn steal(&self) -> Steal {
+        let t = self.top.load(SeqCst);
+        let b = self.bottom.load(SeqCst);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let job = unsafe { *self.slot(t) };
+        if self.top.compare_exchange(t, t + 1, SeqCst, SeqCst).is_ok() {
+            Steal::Success(job)
+        } else {
+            Steal::Retry
+        }
+    }
+
+    /// Approximate occupancy (for metrics/back-pressure heuristics).
+    pub fn len_hint(&self) -> usize {
+        let b = self.bottom.load(SeqCst);
+        let t = self.top.load(SeqCst);
+        (b - t).max(0) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pool::job::tests_support::{counting_job, CountPayload};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn lifo_pop_fifo_steal() {
+        let d = Deque::new(8);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let payloads: Vec<CountPayload> = (0..3).map(|_| CountPayload::new(hits.clone())).collect();
+        unsafe {
+            for p in &payloads {
+                assert!(d.push(counting_job(p)));
+            }
+            // Owner pops newest first.
+            let j = d.pop().unwrap();
+            j.execute();
+            assert_eq!(hits.load(Ordering::SeqCst), 1);
+        }
+        // Thief steals oldest.
+        match d.steal() {
+            Steal::Success(j) => unsafe { j.execute() },
+            _ => panic!("expected steal success"),
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        unsafe {
+            assert!(d.pop().is_some());
+            assert!(d.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn overflow_reports_full() {
+        let d = Deque::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let p1 = CountPayload::new(hits.clone());
+        let p2 = CountPayload::new(hits.clone());
+        let p3 = CountPayload::new(hits.clone());
+        unsafe {
+            assert!(d.push(counting_job(&p1)));
+            assert!(d.push(counting_job(&p2)));
+            assert!(!d.push(counting_job(&p3)), "third push must report full");
+        }
+        assert_eq!(d.len_hint(), 2);
+    }
+
+    #[test]
+    fn concurrent_steal_vs_pop_no_dup_no_loss() {
+        // 2 thieves + owner pops; every job executed exactly once.
+        const N: usize = 2000;
+        let d = Arc::new(Deque::new(4096));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let payloads: Arc<Vec<CountPayload>> =
+            Arc::new((0..N).map(|_| CountPayload::new(hits.clone())).collect());
+
+        std::thread::scope(|s| {
+            let thieves: Vec<_> = (0..2)
+                .map(|_| {
+                    let d = d.clone();
+                    s.spawn(move || {
+                        let mut got = 0usize;
+                        let mut dry = 0;
+                        while dry < 10_000 {
+                            match d.steal() {
+                                Steal::Success(j) => {
+                                    unsafe { j.execute() };
+                                    got += 1;
+                                    dry = 0;
+                                }
+                                Steal::Retry => {}
+                                Steal::Empty => dry += 1,
+                            }
+                            std::hint::spin_loop();
+                        }
+                        got
+                    })
+                })
+                .collect();
+
+            // Owner: push all, interleaving pops.
+            let mut popped = 0usize;
+            unsafe {
+                for p in payloads.iter() {
+                    while !d.push(counting_job(p)) {
+                        if let Some(j) = d.pop() {
+                            j.execute();
+                            popped += 1;
+                        }
+                    }
+                    if popped % 3 == 0 {
+                        if let Some(j) = d.pop() {
+                            j.execute();
+                            popped += 1;
+                        }
+                    }
+                }
+                while let Some(j) = d.pop() {
+                    j.execute();
+                }
+            }
+            let stolen: usize = thieves.into_iter().map(|t| t.join().unwrap()).sum();
+            // Exactly-once execution across owner + thieves:
+            assert_eq!(hits.load(Ordering::SeqCst), N);
+            assert!(stolen <= N);
+        });
+    }
+}

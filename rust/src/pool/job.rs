@@ -1,0 +1,200 @@
+//! Type-erased job pointers (the rayon `JobRef` technique).
+//!
+//! A [`JobRef`] is a raw `(data, execute)` pair. Stack jobs ([`StackJob`])
+//! live in the frame of a blocked `join` caller — safe because the caller
+//! does not return before the job's latch is set. Heap jobs ([`HeapJob`])
+//! carry scope-spawned closures whose lifetime is enforced by the scope's
+//! completion latch (see `pool::scope`).
+
+use super::latch::Latch;
+use std::any::Any;
+use std::cell::UnsafeCell;
+
+/// Erased executable job. `Copy` so it can sit in the deque ring buffer.
+#[derive(Clone, Copy)]
+pub struct JobRef {
+    data: *const (),
+    exec: unsafe fn(*const ()),
+}
+
+unsafe impl Send for JobRef {}
+
+impl JobRef {
+    /// Erase `job`. # Safety: `job` must stay alive (and pinned) until
+    /// `execute` has completed.
+    pub unsafe fn new<T: Job>(job: *const T) -> JobRef {
+        JobRef { data: job as *const (), exec: execute_shim::<T> }
+    }
+
+    pub fn null() -> JobRef {
+        JobRef { data: std::ptr::null(), exec: noop }
+    }
+
+    /// Run the job. # Safety: call exactly once, on a live job.
+    pub unsafe fn execute(self) {
+        unsafe { (self.exec)(self.data) }
+    }
+}
+
+unsafe fn noop(_: *const ()) {}
+
+unsafe fn execute_shim<T: Job>(data: *const ()) {
+    unsafe { T::execute(data as *const T) }
+}
+
+/// Implemented by concrete job representations.
+pub trait Job {
+    /// # Safety: called exactly once; `this` outlives the call.
+    unsafe fn execute(this: *const Self);
+}
+
+/// A job allocated in the frame of a blocked caller (`join`'s `b` branch).
+///
+/// The caller waits on `latch` before reading `result` or returning, which
+/// is what makes the borrowed closure sound.
+pub struct StackJob<F, R> {
+    f: UnsafeCell<Option<F>>,
+    result: UnsafeCell<Option<R>>,
+    /// Panic payload captured from the closure — re-raised (with its
+    /// original message) in `take_result`, so panics propagate across
+    /// the fork transparently.
+    panic_payload: UnsafeCell<Option<Box<dyn Any + Send>>>,
+    pub latch: Latch,
+}
+
+// SAFETY: access to `f`/`result` is ordered by the latch protocol.
+unsafe impl<F: Send, R: Send> Sync for StackJob<F, R> {}
+
+impl<F, R> StackJob<F, R>
+where
+    F: FnOnce() -> R + Send,
+    R: Send,
+{
+    pub fn new(f: F) -> Self {
+        StackJob {
+            f: UnsafeCell::new(Some(f)),
+            result: UnsafeCell::new(None),
+            panic_payload: UnsafeCell::new(None),
+            latch: Latch::new(),
+        }
+    }
+
+    pub fn as_job_ref(&self) -> JobRef {
+        unsafe { JobRef::new(self) }
+    }
+
+    /// # Safety: only after the latch is set.
+    pub unsafe fn take_result(&self) -> R {
+        if let Some(payload) = unsafe { (*self.panic_payload.get()).take() } {
+            std::panic::resume_unwind(payload);
+        }
+        unsafe { (*self.result.get()).take().expect("StackJob executed without result") }
+    }
+}
+
+impl<F, R> Job for StackJob<F, R>
+where
+    F: FnOnce() -> R + Send,
+    R: Send,
+{
+    unsafe fn execute(this: *const Self) {
+        let this = unsafe { &*this };
+        let f = unsafe { (*this.f.get()).take().expect("StackJob executed twice") };
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+            Ok(r) => unsafe { *this.result.get() = Some(r) },
+            Err(payload) => unsafe { *this.panic_payload.get() = Some(payload) },
+        }
+        // Set last: publishes result/panic payload to the waiter.
+        this.latch.set();
+    }
+}
+
+/// A heap-allocated fire-and-forget job (scope spawns).
+pub struct HeapJob {
+    f: Option<Box<dyn FnOnce() + Send>>,
+}
+
+impl HeapJob {
+    /// Box the closure and return an erased, self-freeing JobRef.
+    ///
+    /// # Safety: caller must guarantee the closure's captures outlive
+    /// execution (the Scope lifetime contract).
+    pub unsafe fn into_job_ref(f: Box<dyn FnOnce() + Send>) -> JobRef {
+        let boxed = Box::new(HeapJob { f: Some(f) });
+        unsafe { JobRef::new(Box::into_raw(boxed)) }
+    }
+}
+
+impl Job for HeapJob {
+    unsafe fn execute(this: *const Self) {
+        // Re-box to free after running.
+        let mut boxed = unsafe { Box::from_raw(this as *mut HeapJob) };
+        let f = boxed.f.take().expect("HeapJob executed twice");
+        f();
+    }
+}
+
+#[cfg(any(test, doctest))]
+pub mod tests_support {
+    //! Helpers shared by deque/pool unit tests.
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    /// A pinned payload whose execution bumps a shared counter.
+    pub struct CountPayload {
+        hits: Arc<AtomicUsize>,
+    }
+
+    impl CountPayload {
+        pub fn new(hits: Arc<AtomicUsize>) -> Self {
+            CountPayload { hits }
+        }
+    }
+
+    impl Job for CountPayload {
+        unsafe fn execute(this: *const Self) {
+            unsafe { &*this }.hits.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Erase a counting payload (payload must outlive execution).
+    pub fn counting_job(p: &CountPayload) -> JobRef {
+        unsafe { JobRef::new(p) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_job_roundtrip() {
+        let job = StackJob::new(|| 6 * 7);
+        let jref = job.as_job_ref();
+        unsafe { jref.execute() };
+        assert!(job.latch.probe());
+        assert_eq!(unsafe { job.take_result() }, 42);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner")]
+    fn stack_job_propagates_panic_with_original_message() {
+        let job: StackJob<_, ()> = StackJob::new(|| panic!("inner"));
+        let jref = job.as_job_ref();
+        unsafe { jref.execute() };
+        assert!(job.latch.probe());
+        unsafe { job.take_result() };
+    }
+
+    #[test]
+    fn heap_job_runs_and_frees() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let jref = unsafe { HeapJob::into_job_ref(Box::new(move || { h.fetch_add(1, Ordering::SeqCst); })) };
+        unsafe { jref.execute() };
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! Completion latches: the pool's only blocking synchronization points.
+//!
+//! Every latch wait is exactly one of the paper's **synchronization
+//! overheads** (β events); the pool counts them in
+//! [`super::metrics::Metrics`] so the ledger can reconcile measured time
+//! against the overhead model.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// One-shot latch: starts unset, `set()` once, waiters proceed.
+///
+/// `probe()` is the cheap non-blocking check used by workers that *help*
+/// (steal) while waiting; `wait()` blocks on a condvar (used by external,
+/// non-worker threads that have nothing to steal).
+pub struct Latch {
+    set: AtomicBool,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Default for Latch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Latch {
+    pub fn new() -> Self {
+        Latch { set: AtomicBool::new(false), mu: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    #[inline]
+    pub fn probe(&self) -> bool {
+        self.set.load(Ordering::Acquire)
+    }
+
+    pub fn set(&self) {
+        self.set.store(true, Ordering::Release);
+        let _g = self.mu.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Block until set (condvar; timeout-poll defends against lost wakeups).
+    pub fn wait(&self) {
+        let mut g = self.mu.lock().unwrap();
+        while !self.probe() {
+            let (g2, _) = self.cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+            g = g2;
+        }
+    }
+}
+
+/// Counting latch: `wait()` until the count returns to zero
+/// (scope-completion barrier). Starts at 0; `increment` per spawn.
+pub struct CountLatch {
+    count: AtomicUsize,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Default for CountLatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CountLatch {
+    pub fn new() -> Self {
+        CountLatch { count: AtomicUsize::new(0), mu: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    pub fn increment(&self) {
+        self.count.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn decrement(&self) {
+        let prev = self.count.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev > 0, "CountLatch underflow");
+        if prev == 1 {
+            let _g = self.mu.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+
+    #[inline]
+    pub fn is_done(&self) -> bool {
+        self.count.load(Ordering::SeqCst) == 0
+    }
+
+    pub fn wait(&self) {
+        let mut g = self.mu.lock().unwrap();
+        while !self.is_done() {
+            let (g2, _) = self.cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+            g = g2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn latch_set_unblocks_waiter() {
+        let l = Arc::new(Latch::new());
+        assert!(!l.probe());
+        let l2 = l.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            l2.set();
+        });
+        l.wait();
+        assert!(l.probe());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn count_latch_waits_for_all() {
+        let l = Arc::new(CountLatch::new());
+        for _ in 0..8 {
+            l.increment();
+        }
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let l = l.clone();
+                std::thread::spawn(move || {
+                    std::thread::sleep(Duration::from_millis(2));
+                    l.decrement();
+                })
+            })
+            .collect();
+        l.wait();
+        assert!(l.is_done());
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn count_latch_zero_is_immediately_done() {
+        let l = CountLatch::new();
+        l.wait(); // must not block
+        assert!(l.is_done());
+    }
+}

@@ -1,0 +1,95 @@
+//! Pool instrumentation: every overhead event the paper names, counted.
+//!
+//! These counters feed [`crate::overhead::Ledger`]: spawns → α events,
+//! latch waits → β events, steals/injections → γ events.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotone event counters, shared by all workers of one pool.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs made available for parallel execution (forks + scope spawns).
+    pub spawns: AtomicU64,
+    /// Jobs executed to completion (must equal spawns at quiescence).
+    pub executed: AtomicU64,
+    /// Successful steals (inter-core task migration = γ messages).
+    pub steals: AtomicU64,
+    /// Steal attempts that found nothing (contention signal).
+    pub failed_steals: AtomicU64,
+    /// Jobs routed through the global injector (external submissions).
+    pub injected: AtomicU64,
+    /// Latch waits entered (β synchronization events).
+    pub latch_waits: AtomicU64,
+    /// `join` calls (fork-join regions).
+    pub joins: AtomicU64,
+    /// Jobs executed inline because a deque was full (back-pressure).
+    pub overflow_inline: AtomicU64,
+}
+
+/// A point-in-time copy of [`Metrics`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    pub spawns: u64,
+    pub executed: u64,
+    pub steals: u64,
+    pub failed_steals: u64,
+    pub injected: u64,
+    pub latch_waits: u64,
+    pub joins: u64,
+    pub overflow_inline: u64,
+}
+
+impl Metrics {
+    #[inline]
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            spawns: self.spawns.load(Ordering::Relaxed),
+            executed: self.executed.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            failed_steals: self.failed_steals.load(Ordering::Relaxed),
+            injected: self.injected.load(Ordering::Relaxed),
+            latch_waits: self.latch_waits.load(Ordering::Relaxed),
+            joins: self.joins.load(Ordering::Relaxed),
+            overflow_inline: self.overflow_inline.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// Difference of two snapshots (events inside a measured region).
+    pub fn delta_since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        MetricsSnapshot {
+            spawns: self.spawns - earlier.spawns,
+            executed: self.executed - earlier.executed,
+            steals: self.steals - earlier.steals,
+            failed_steals: self.failed_steals - earlier.failed_steals,
+            injected: self.injected - earlier.injected,
+            latch_waits: self.latch_waits - earlier.latch_waits,
+            joins: self.joins - earlier.joins,
+            overflow_inline: self.overflow_inline - earlier.overflow_inline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_delta() {
+        let m = Metrics::default();
+        Metrics::bump(&m.spawns);
+        let a = m.snapshot();
+        Metrics::bump(&m.spawns);
+        Metrics::bump(&m.steals);
+        let b = m.snapshot();
+        let d = b.delta_since(&a);
+        assert_eq!(d.spawns, 1);
+        assert_eq!(d.steals, 1);
+        assert_eq!(d.executed, 0);
+    }
+}

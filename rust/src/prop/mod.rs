@@ -1,0 +1,215 @@
+//! Minimal property-based testing framework (offline `proptest` substitute).
+//!
+//! Supports deterministic seeded generation, configurable case counts, and
+//! greedy shrinking on failure. Used by the `rust/tests/prop_*.rs` suites
+//! for coordinator, pool, simulator, sorting, and overhead-model invariants.
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries skip the cargo rpath config, so the
+//! # // xla-linked crate cannot resolve libstdc++ at doctest run time.
+//! use ohm::prop::{forall, Gen, Config};
+//! forall(Config::default().cases(64), "reverse twice is identity", |g| {
+//!     let v = g.vec_i64(0..200, -50..50);
+//!     let mut w = v.clone();
+//!     w.reverse();
+//!     w.reverse();
+//!     if w == v { Ok(()) } else { Err(format!("mismatch on {v:?}")) }
+//! });
+//! ```
+
+use crate::util::Pcg32;
+use std::ops::Range;
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum shrink attempts after a failure.
+    pub max_shrinks: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed overridable for replay: OHM_PROP_SEED=123 cargo test
+        Config { cases: 100, seed: crate::util::env_or("OHM_PROP_SEED", 0xC0FFEE), max_shrinks: 200 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Generation context handed to properties. Wraps a deterministic RNG and
+/// records the *recipe seed* so failures can be replayed and shrunk.
+pub struct Gen {
+    rng: Pcg32,
+    /// Size dampener in [0,1]: shrinking re-runs the property with smaller
+    /// sizes by scaling every `usize_in`/`vec_*` upper bound down.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Gen { rng: Pcg32::new(seed), scale }
+    }
+
+    /// Uniform usize in `range`, upper bound scaled down while shrinking.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        let span = (range.end - range.start) as f64;
+        let scaled = ((span * self.scale).ceil() as usize).max(1);
+        range.start + self.rng.below(scaled as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, range: Range<i64>) -> i64 {
+        self.rng.range_i64(range.start, range.end)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// Vec of i64 with length drawn from `len` and values from `vals`.
+    pub fn vec_i64(&mut self, len: Range<usize>, vals: Range<i64>) -> Vec<i64> {
+        let n = if len.start == len.end { len.start } else { self.usize_in(len) };
+        (0..n).map(|_| self.i64_in(vals.clone())).collect()
+    }
+
+    /// A fresh child RNG (for seeding systems under test).
+    pub fn rng(&mut self) -> Pcg32 {
+        self.rng.split()
+    }
+}
+
+/// Run `prop` for `cfg.cases` random cases. On failure, greedily shrink by
+/// re-running the same case-seed with progressively smaller size scales and
+/// report the smallest failure. Panics (test failure) with a replay seed.
+pub fn forall<F>(cfg: Config, name: &str, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut meta = Pcg32::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen::new(case_seed, 1.0);
+        if let Err(first_msg) = prop(&mut g) {
+            // Shrink: lower the scale until the property passes again, keep
+            // the smallest failing scale.
+            let mut best: (f64, String) = (1.0, first_msg);
+            let mut lo = 0.0f64;
+            let mut hi = 1.0f64;
+            for _ in 0..cfg.max_shrinks.min(40) {
+                let mid = (lo + hi) / 2.0;
+                if mid <= 1e-3 {
+                    break;
+                }
+                let mut g = Gen::new(case_seed, mid);
+                match prop(&mut g) {
+                    Err(msg) => {
+                        best = (mid, msg);
+                        hi = mid;
+                    }
+                    Ok(()) => {
+                        lo = mid;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, replay: OHM_PROP_SEED={} scale={:.4}):\n  {}",
+                cfg.seed, best.0, best.1
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        forall(Config::default().cases(17), "count", |g| {
+            let _ = g.u64();
+            **counter.borrow_mut() += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_replay_info() {
+        forall(Config::default().cases(5), "always fails", |g| {
+            let v = g.vec_i64(1..100, 0..10);
+            Err(format!("len={}", v.len()))
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let mut a = Gen::new(42, 1.0);
+        let mut b = Gen::new(42, 1.0);
+        assert_eq!(a.vec_i64(0..50, -5..5), b.vec_i64(0..50, -5..5));
+        assert_eq!(a.usize_in(0..100), b.usize_in(0..100));
+    }
+
+    #[test]
+    fn scale_shrinks_sizes() {
+        let mut big = Gen::new(1, 1.0);
+        let mut small = Gen::new(1, 0.05);
+        let lb: Vec<usize> = (0..32).map(|_| big.usize_in(0..1000)).collect();
+        let ls: Vec<usize> = (0..32).map(|_| small.usize_in(0..1000)).collect();
+        assert!(ls.iter().max() < lb.iter().max());
+        assert!(*ls.iter().max().unwrap() <= 50);
+    }
+
+    #[test]
+    fn ensure_helper() {
+        assert!(ensure(true, || "no".into()).is_ok());
+        assert_eq!(ensure(false, || "boom".into()), Err("boom".into()));
+    }
+
+    #[test]
+    fn choose_covers_all_elements() {
+        let mut g = Gen::new(3, 1.0);
+        let xs = [1, 2, 3, 4];
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[*g.choose(&xs) as usize - 1] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,121 @@
+//! ASCII line charts — the console rendering of the paper's figures
+//! (Fig 2, Fig 5) plus the CSV series behind them.
+
+/// Multi-series scatter/line chart on a character grid.
+#[derive(Debug, Clone)]
+pub struct Chart {
+    title: String,
+    x_label: String,
+    y_label: String,
+    series: Vec<(String, char, Vec<(f64, f64)>)>,
+    width: usize,
+    height: usize,
+}
+
+const MARKS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+
+impl Chart {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Self {
+        Chart {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+            width: 72,
+            height: 20,
+        }
+    }
+
+    pub fn with_size(mut self, width: usize, height: usize) -> Self {
+        self.width = width.max(16);
+        self.height = height.max(6);
+        self
+    }
+
+    /// Add a named series; markers cycle automatically.
+    pub fn series(&mut self, name: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        let mark = MARKS[self.series.len() % MARKS.len()];
+        self.series.push((name.to_string(), mark, points));
+        self
+    }
+
+    /// Render the grid + legend.
+    pub fn render(&self) -> String {
+        let pts: Vec<(f64, f64)> =
+            self.series.iter().flat_map(|(_, _, p)| p.iter().copied()).collect();
+        if pts.is_empty() {
+            return format!("{} (no data)\n", self.title);
+        }
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts {
+            x0 = x0.min(x);
+            x1 = x1.max(x);
+            y0 = y0.min(y);
+            y1 = y1.max(y);
+        }
+        if (x1 - x0).abs() < 1e-12 {
+            x1 = x0 + 1.0;
+        }
+        if (y1 - y0).abs() < 1e-12 {
+            y1 = y0 + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (_, mark, points) in &self.series {
+            for &(x, y) in points {
+                let cx = (((x - x0) / (x1 - x0)) * (self.width - 1) as f64).round() as usize;
+                let cy = (((y - y0) / (y1 - y0)) * (self.height - 1) as f64).round() as usize;
+                let row = self.height - 1 - cy;
+                grid[row][cx] = *mark;
+            }
+        }
+        let mut out = format!("{}\n", self.title);
+        out.push_str(&format!("  {} (top={:.3}, bottom={:.3})\n", self.y_label, y1, y0));
+        for row in &grid {
+            out.push_str("  |");
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str("  +");
+        out.push_str(&"-".repeat(self.width));
+        out.push('\n');
+        out.push_str(&format!("   {} (left={:.0}, right={:.0})\n", self.x_label, x0, x1));
+        out.push_str("  legend:");
+        for (name, mark, _) in &self.series {
+            out.push_str(&format!("  {mark}={name}"));
+        }
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_marks_and_legend() {
+        let mut c = Chart::new("Fig X", "n", "time");
+        c.series("serial", vec![(0.0, 0.0), (10.0, 10.0)]);
+        c.series("parallel", vec![(0.0, 10.0), (10.0, 0.0)]);
+        let s = c.render();
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("*=serial"));
+        assert!(s.contains("o=parallel"));
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn empty_chart_safe() {
+        let s = Chart::new("E", "x", "y").render();
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn degenerate_ranges_safe() {
+        let mut c = Chart::new("D", "x", "y");
+        c.series("s", vec![(5.0, 7.0), (5.0, 7.0)]);
+        let s = c.render();
+        assert!(s.contains('*'));
+    }
+}

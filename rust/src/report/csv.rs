@@ -1,0 +1,48 @@
+//! Tiny CSV writer (reports + EXPERIMENTS.md data series).
+
+use anyhow::{Context, Result};
+use std::io::Write as _;
+use std::path::Path;
+
+/// Quote a cell if it contains separators/quotes.
+fn quote(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Write headers + rows to `path`, creating parent dirs.
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    writeln!(f, "{}", headers.iter().map(|h| quote(h)).collect::<Vec<_>>().join(","))?;
+    for row in rows {
+        assert_eq!(row.len(), headers.len(), "csv row arity");
+        writeln!(f, "{}", row.iter().map(|c| quote(c)).collect::<Vec<_>>().join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let dir = std::env::temp_dir().join("ohm-csv-test");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["plain".into(), "with,comma".into()], vec!["q\"uote".into(), "x".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\nplain,\"with,comma\"\n\"q\"\"uote\",x\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

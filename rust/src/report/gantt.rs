@@ -1,0 +1,70 @@
+//! Gantt renderer for simulator timelines: one row per virtual core,
+//! `█` compute, `α` spawn overhead, `β` sync overhead, `·` idle. Makes the
+//! paper's "overhead surfacing" *visible* per run.
+
+use crate::sim::{SegKind, Segment};
+
+/// Render `timeline` (from `Machine::run(.., trace=true)`) across `cores`.
+pub fn render(timeline: &[Segment], cores: usize, width: usize) -> String {
+    let width = width.max(20);
+    let makespan = timeline.iter().map(|s| s.end_ns).fold(0.0, f64::max);
+    if makespan <= 0.0 || timeline.is_empty() {
+        return "(empty timeline)\n".to_string();
+    }
+    let mut rows = vec![vec!['·'; width]; cores];
+    for seg in timeline {
+        let c0 = ((seg.start_ns / makespan) * (width as f64 - 1.0)).floor() as usize;
+        let c1 = ((seg.end_ns / makespan) * (width as f64 - 1.0)).ceil() as usize;
+        let ch = match seg.kind {
+            SegKind::Work => '█',
+            SegKind::Spawn => 'α',
+            SegKind::Sync => 'β',
+        };
+        let row = &mut rows[seg.core];
+        for cell in row.iter_mut().take(c1.min(width - 1) + 1).skip(c0) {
+            // Overhead marks win over compute on shared cells (visibility).
+            if *cell == '·' || ch != '█' {
+                *cell = ch;
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("virtual makespan: {:.1} µs\n", makespan / 1e3));
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!("core {i:>2} "));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("        █ compute   α spawn   β sync   · idle\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::OverheadParams;
+    use crate::sim::{Machine, Node};
+
+    #[test]
+    fn renders_rows_per_core() {
+        let tree = Node::Par {
+            branches: vec![
+                Node::Leaf { work_ns: 500.0, label: "w" },
+                Node::Leaf { work_ns: 700.0, label: "w" },
+            ],
+            bytes: vec![8, 8],
+        };
+        let rep = Machine::new(2, OverheadParams::paper_2022()).run(&tree, true);
+        let g = render(&rep.timeline, 2, 60);
+        assert!(g.contains("core  0"));
+        assert!(g.contains("core  1"));
+        assert!(g.contains('█'));
+        assert!(g.contains('α'));
+        assert!(g.contains("virtual makespan"));
+    }
+
+    #[test]
+    fn empty_timeline_safe() {
+        assert!(render(&[], 4, 40).contains("empty"));
+    }
+}

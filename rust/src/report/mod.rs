@@ -1,0 +1,11 @@
+//! Report emitters: ASCII tables, CSV files, line charts, Gantt timelines,
+//! and the paper's qualitative tables/figures as generated text.
+
+pub mod chart;
+pub mod csv;
+pub mod gantt;
+pub mod paper;
+pub mod table;
+
+pub use chart::Chart;
+pub use table::AsciiTable;

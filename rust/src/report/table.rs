@@ -1,0 +1,109 @@
+//! Aligned ASCII tables (the console form of every paper table).
+
+/// Column-aligned table builder.
+#[derive(Debug, Clone)]
+pub struct AsciiTable {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl AsciiTable {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        AsciiTable {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let sep = |l: &str, m: &str, r: &str| {
+            let mut s = String::from(l);
+            for (i, w) in widths.iter().enumerate() {
+                s.push_str(&"─".repeat(w + 2));
+                s.push_str(if i + 1 < ncol { m } else { r });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("│");
+            for (c, w) in cells.iter().zip(&widths) {
+                let pad = w - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('│');
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep("┌", "┬", "┐"));
+        out.push_str(&fmt_row(&self.headers));
+        out.push_str(&sep("├", "┼", "┤"));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep("└", "┴", "┘"));
+        out
+    }
+}
+
+/// Format a float with `d` decimals (table-cell convenience).
+pub fn f(v: f64, d: usize) -> String {
+    format!("{v:.d$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = AsciiTable::new("T", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("T\n"));
+        assert!(s.contains("│ name   │ value │"));
+        assert!(s.contains("│ longer │ 22    │"));
+        let widths: Vec<usize> =
+            s.lines().filter(|l| l.starts_with('│')).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "ragged table:\n{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        AsciiTable::new("", &["a", "b"]).row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn float_helper() {
+        assert_eq!(f(1.23456, 3), "1.235");
+        assert_eq!(f(2.0, 0), "2");
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust loader.
+//!
+//! `artifacts/manifest.tsv` has one tab-separated line per artifact:
+//!
+//! ```text
+//! name \t file \t n_inputs \t input_specs \t output_spec
+//! ```
+//!
+//! where a spec is `dtype:d0xd1x...` (`float32:1000x1000`) or
+//! `dtype:scalar`, and input_specs are `;`-joined. Keep in sync with
+//! `aot.py::_fmt_spec`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype + shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `float32:32x16` / `int32:5` / `float32:scalar`.
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (dtype, dims_s) = s.split_once(':').with_context(|| format!("bad spec {s:?}"))?;
+        let dims = if dims_s == "scalar" {
+            Vec::new()
+        } else {
+            dims_s
+                .split('x')
+                .map(|d| d.parse::<usize>().with_context(|| format!("bad dim in {s:?}")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn elem_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.dims.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// One loadable artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The parsed manifest (ordered for stable listings).
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors the per-artifact file paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                bail!("manifest line {}: expected 5 columns, got {}", lineno + 1, cols.len());
+            }
+            let n_inputs: usize = cols[2].parse().context("n_inputs")?;
+            let inputs = cols[3]
+                .split(';')
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            if inputs.len() != n_inputs {
+                bail!("manifest line {}: n_inputs {} != {} specs", lineno + 1, n_inputs, inputs.len());
+            }
+            let spec = ArtifactSpec {
+                name: cols[0].to_string(),
+                path: dir.join(cols[1]),
+                inputs,
+                output: TensorSpec::parse(cols[4])?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parse() {
+        let t = TensorSpec::parse("float32:32x16").unwrap();
+        assert_eq!(t.dtype, "float32");
+        assert_eq!(t.dims, vec![32, 16]);
+        assert_eq!(t.elem_count(), 512);
+        assert_eq!(t.dims_i64(), vec![32i64, 16]);
+        let s = TensorSpec::parse("float32:scalar").unwrap();
+        assert!(s.dims.is_empty());
+        assert_eq!(s.elem_count(), 1);
+        assert!(TensorSpec::parse("junk").is_err());
+        assert!(TensorSpec::parse("f32:axb").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let text = "matmul_64\tmatmul_64.hlo.txt\t2\tfloat32:64x64;float32:64x64\tfloat32:64x64\n\
+                    bitonic_8\tbitonic_8.hlo.txt\t1\tfloat32:8\tfloat32:8\n";
+        let m = Manifest::parse(text, Path::new("/arts")).unwrap();
+        assert_eq!(m.names(), vec!["bitonic_8", "matmul_64"]);
+        let mm = m.get("matmul_64").unwrap();
+        assert_eq!(mm.inputs.len(), 2);
+        assert_eq!(mm.path, Path::new("/arts/matmul_64.hlo.txt"));
+        assert_eq!(mm.output.dims, vec![64, 64]);
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("too\tfew\tcols\n", Path::new(".")).is_err());
+        assert!(
+            Manifest::parse("x\tf\t2\tfloat32:4\tfloat32:4\n", Path::new(".")).is_err(),
+            "n_inputs mismatch must fail"
+        );
+    }
+
+    #[test]
+    fn manifest_skips_blank_and_comment_lines() {
+        let text = "# comment\n\nbitonic_8\tb.hlo.txt\t1\tfloat32:8\tfloat32:8\n";
+        let m = Manifest::parse(text, Path::new(".")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+    }
+
+    #[test]
+    fn real_manifest_loads_when_built() {
+        // Integration-ish: only when `make artifacts` has run.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("matmul_64").is_some());
+            assert!(m.get("bitonic_1000").is_some());
+            for a in m.artifacts.values() {
+                assert!(a.path.exists(), "{} missing", a.path.display());
+            }
+        }
+    }
+}

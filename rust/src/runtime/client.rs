@@ -1,0 +1,133 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU plugin): load HLO
+//! *text* (`HloModuleProto::from_text_file` — the id-safe interchange, see
+//! aot.py), compile once per artifact on the PJRT CPU client, cache the
+//! loaded executable, and execute with `f32` buffers. Python never runs
+//! here; after `make artifacts` the binary is self-contained.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled artifact handle.
+struct LoadedExec {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The runtime: PJRT client + artifact manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, &'static LoadedExec>>,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("dir", &self.dir)
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/` at the repo root).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Conventional artifact directory: `$OHM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("OHM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    ///
+    /// Executables are leaked intentionally: they live as long as the
+    /// process, which matches the serving pattern (compile once, execute
+    /// many) and sidesteps the `xla` crate's non-Sync handles.
+    fn get_exec(&self, name: &str) -> Result<&'static LoadedExec> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e);
+        }
+        let spec = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}; have {:?}", self.manifest.names()))?
+            .clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        let leaked: &'static LoadedExec = Box::leak(Box::new(LoadedExec { exe, spec }));
+        self.cache.lock().unwrap().insert(name.to_string(), leaked);
+        Ok(leaked)
+    }
+
+    /// Pre-compile an artifact (warm the cache); returns its spec.
+    pub fn warm(&self, name: &str) -> Result<&ArtifactSpec> {
+        Ok(&self.get_exec(name)?.spec)
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns the flat f32 output.
+    ///
+    /// Inputs are validated against the manifest specs (count + element
+    /// counts); dtype must be float32 for every artifact in this repo.
+    pub fn exec_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let le = self.get_exec(name)?;
+        if inputs.len() != le.spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", le.spec.inputs.len(), inputs.len());
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (i, (buf, spec)) in inputs.iter().zip(&le.spec.inputs).enumerate() {
+            if spec.dtype != "float32" {
+                bail!("{name}: input {i} dtype {} unsupported by exec_f32", spec.dtype);
+            }
+            if buf.len() != spec.elem_count() {
+                bail!("{name}: input {i} has {} elems, expected {}", buf.len(), spec.elem_count());
+            }
+            let lit = xla::Literal::vec1(buf);
+            let lit = if spec.dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&spec.dims_i64()).context("reshape input")?
+            };
+            lits.push(lit);
+        }
+        let result = le.exe.execute::<xla::Literal>(&lits).context("execute")?;
+        let out_lit = result[0][0].to_literal_sync().context("fetch output")?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = out_lit.to_tuple1().context("untuple output")?;
+        let v = out.to_vec::<f32>().context("output to_vec")?;
+        if v.len() != le.spec.output.elem_count() {
+            bail!("{name}: output has {} elems, expected {}", v.len(), le.spec.output.elem_count());
+        }
+        Ok(v)
+    }
+
+    /// Names of artifacts present (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        self.manifest.names()
+    }
+}
+
+// Note: unit tests for the client live in `rust/tests/integration_runtime.rs`
+// because they need built artifacts; manifest parsing is covered in
+// `artifact.rs`.

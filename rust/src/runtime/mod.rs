@@ -1,0 +1,54 @@
+//! XLA/PJRT runtime: load and execute the AOT-compiled JAX+Pallas
+//! artifacts from the rust hot path (L3 → L2/L1 bridge).
+//!
+//! Build-time: `make artifacts` runs `python -m compile.aot`, lowering the
+//! L2 models (which call the L1 Pallas kernels with `interpret=True`) to
+//! HLO text + `manifest.tsv`. Run-time: [`Runtime`] compiles each artifact
+//! once on the PJRT CPU client and executes it with `f32` buffers —
+//! Python is never on the request path.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::Runtime;
+
+use crate::dla::Matrix;
+use anyhow::{bail, Result};
+
+/// Multiply square matrices through the `matmul_<n>` artifact.
+pub fn matmul_xla(rt: &Runtime, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.rows() != a.cols() || b.rows() != b.cols() || a.rows() != b.rows() {
+        bail!(
+            "matmul_xla handles square equal-order matrices, got {}x{} · {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        );
+    }
+    let n = a.rows();
+    // §Perf: prefer the native-dot artifact when present — on the CPU
+    // PJRT plugin it outperforms the interpret-lowered Pallas tile loop
+    // (on a real TPU the preference would flip to the Mosaic build).
+    let native = format!("matmul_native_{n}");
+    let name = if rt.manifest().get(&native).is_some() { native } else { format!("matmul_{n}") };
+    let out = rt.exec_f32(&name, &[a.data(), b.data()])?;
+    Ok(Matrix::from_vec(n, n, out))
+}
+
+/// Sort f32 values ascending through the `bitonic_<n>` artifact.
+pub fn sort_xla(rt: &Runtime, xs: &[f32]) -> Result<Vec<f32>> {
+    let name = format!("bitonic_{}", xs.len());
+    rt.exec_f32(&name, &[xs])
+}
+
+/// True if an artifact for a square matmul of order `n` exists.
+pub fn has_matmul(rt: &Runtime, n: usize) -> bool {
+    rt.manifest().get(&format!("matmul_{n}")).is_some()
+}
+
+/// True if an artifact for a bitonic sort of length `n` exists.
+pub fn has_sort(rt: &Runtime, n: usize) -> bool {
+    rt.manifest().get(&format!("bitonic_{n}")).is_some()
+}

@@ -1,0 +1,150 @@
+//! Schedule analysis: quantitative overhead breakdown of a simulated run.
+//!
+//! The paper's Fig 1 reasons about overheads qualitatively; this module
+//! measures them per run: how much virtual machine-time went to compute,
+//! spawn overhead (α), synchronization (β), and idle — plus critical-path
+//! utilization. Rendered by `ohm gantt` and usable programmatically.
+
+use super::machine::{SegKind, Segment, SimReport};
+
+/// Machine-time breakdown of one schedule (all in ns · cores).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Breakdown {
+    pub compute_ns: f64,
+    pub spawn_ns: f64,
+    pub sync_ns: f64,
+    pub idle_ns: f64,
+    pub makespan_ns: f64,
+    pub cores: usize,
+}
+
+impl Breakdown {
+    /// Analyze a traced report (needs `trace=true` timelines).
+    pub fn of(report: &SimReport) -> Breakdown {
+        let cores = report.core_busy_ns.len();
+        let mut b = Breakdown {
+            compute_ns: 0.0,
+            spawn_ns: 0.0,
+            sync_ns: 0.0,
+            idle_ns: 0.0,
+            makespan_ns: report.makespan_ns,
+            cores,
+        };
+        for seg in &report.timeline {
+            let d = seg.end_ns - seg.start_ns;
+            match seg.kind {
+                SegKind::Work => b.compute_ns += d,
+                SegKind::Spawn => b.spawn_ns += d,
+                SegKind::Sync => b.sync_ns += d,
+            }
+        }
+        b.idle_ns = (report.makespan_ns * cores as f64
+            - (b.compute_ns + b.spawn_ns + b.sync_ns))
+            .max(0.0);
+        b
+    }
+
+    /// Total machine-time rectangle.
+    pub fn rect_ns(&self) -> f64 {
+        self.makespan_ns * self.cores as f64
+    }
+
+    /// Fraction of machine time spent computing (the paper's "effective
+    /// parallelization" measure).
+    pub fn compute_fraction(&self) -> f64 {
+        if self.rect_ns() == 0.0 {
+            return 0.0;
+        }
+        self.compute_ns / self.rect_ns()
+    }
+
+    /// Fraction lost to explicit overheads (α + β segments).
+    pub fn overhead_fraction(&self) -> f64 {
+        if self.rect_ns() == 0.0 {
+            return 0.0;
+        }
+        (self.spawn_ns + self.sync_ns) / self.rect_ns()
+    }
+
+    /// One-line report.
+    pub fn summary(&self) -> String {
+        format!(
+            "machine-time: compute {:.1}%  spawn(α) {:.1}%  sync(β) {:.1}%  idle {:.1}%  (makespan {:.1} µs × {} cores)",
+            100.0 * self.compute_fraction(),
+            100.0 * self.spawn_ns / self.rect_ns().max(1e-12),
+            100.0 * self.sync_ns / self.rect_ns().max(1e-12),
+            100.0 * self.idle_ns / self.rect_ns().max(1e-12),
+            self.makespan_ns / 1e3,
+            self.cores
+        )
+    }
+}
+
+/// Longest chain of segments linked by (end → start) on the timeline —
+/// an observable lower bound proxy for the schedule's critical path.
+pub fn busiest_core(timeline: &[Segment], cores: usize) -> (usize, f64) {
+    let mut busy = vec![0.0f64; cores];
+    for s in timeline {
+        busy[s.core] += s.end_ns - s.start_ns;
+    }
+    busy
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, &v)| (i, v))
+        .unwrap_or((0, 0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::OverheadParams;
+    use crate::sim::{Machine, Node};
+
+    fn traced(cores: usize) -> SimReport {
+        let tree = Node::Par {
+            branches: vec![
+                Node::Leaf { work_ns: 4000.0, label: "w" },
+                Node::Leaf { work_ns: 6000.0, label: "w" },
+            ],
+            bytes: vec![64, 64],
+        };
+        Machine::new(cores, OverheadParams::paper_2022()).run(&tree, true)
+    }
+
+    #[test]
+    fn breakdown_conserves_machine_time() {
+        let rep = traced(2);
+        let b = Breakdown::of(&rep);
+        let sum = b.compute_ns + b.spawn_ns + b.sync_ns + b.idle_ns;
+        assert!((sum - b.rect_ns()).abs() < 1.0, "{sum} vs {}", b.rect_ns());
+        assert!((b.compute_ns - 10_000.0).abs() < 1e-6);
+        assert!(b.spawn_ns > 0.0 && b.sync_ns > 0.0);
+    }
+
+    #[test]
+    fn fractions_in_unit_range() {
+        let b = Breakdown::of(&traced(4));
+        for f in [b.compute_fraction(), b.overhead_fraction()] {
+            assert!((0.0..=1.0).contains(&f), "{f}");
+        }
+        assert!(b.summary().contains("compute"));
+    }
+
+    #[test]
+    fn busiest_core_identified() {
+        let rep = traced(2);
+        let (core, busy) = busiest_core(&rep.timeline, 2);
+        assert!(core < 2);
+        assert!(busy >= 6000.0, "must include the long branch: {busy}");
+    }
+
+    #[test]
+    fn serial_tree_is_all_compute_no_overhead() {
+        let tree = Node::Leaf { work_ns: 1000.0, label: "w" };
+        let rep = Machine::new(1, OverheadParams::paper_2022()).run(&tree, true);
+        let b = Breakdown::of(&rep);
+        assert!((b.compute_fraction() - 1.0).abs() < 1e-9);
+        assert_eq!(b.overhead_fraction(), 0.0);
+    }
+}

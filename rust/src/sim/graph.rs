@@ -1,0 +1,207 @@
+//! Series-parallel task-graph recording.
+//!
+//! Domain algorithms run **once, single-threaded, for real** (producing
+//! correct results) against a [`SimCtx`]; the context records the fork-join
+//! structure and per-segment work costs as a series-parallel [`Node`] tree.
+//! [`super::machine::Machine`] then schedules that tree on N virtual cores.
+//!
+//! This mirrors how the paper separates *problem scope* (the dependency
+//! structure, Figs 1 and 4) from *execution platform* (the multicore
+//! machine): the tree is the problem scope; the machine is the platform.
+
+/// A series-parallel computation tree.
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// A sequential segment of pure compute.
+    Leaf { work_ns: f64, label: &'static str },
+    /// Sequential composition.
+    Seq(Vec<Node>),
+    /// Parallel region (fork-join): branch `i` receives `bytes[i]` of input
+    /// data (the master-slave distribution cost).
+    Par { branches: Vec<Node>, bytes: Vec<u64> },
+}
+
+impl Node {
+    /// Total compute in the tree (= serial execution time, ns).
+    pub fn total_work_ns(&self) -> f64 {
+        match self {
+            Node::Leaf { work_ns, .. } => *work_ns,
+            Node::Seq(parts) => parts.iter().map(|n| n.total_work_ns()).sum(),
+            Node::Par { branches, .. } => branches.iter().map(|n| n.total_work_ns()).sum(),
+        }
+    }
+
+    /// Critical-path compute (infinite cores, zero overheads), ns.
+    pub fn span_ns(&self) -> f64 {
+        match self {
+            Node::Leaf { work_ns, .. } => *work_ns,
+            Node::Seq(parts) => parts.iter().map(|n| n.span_ns()).sum(),
+            Node::Par { branches, .. } => {
+                branches.iter().map(|n| n.span_ns()).fold(0.0, f64::max)
+            }
+        }
+    }
+
+    /// Number of parallel branches in the whole tree (spawn count).
+    pub fn spawn_count(&self) -> u64 {
+        match self {
+            Node::Leaf { .. } => 0,
+            Node::Seq(parts) => parts.iter().map(|n| n.spawn_count()).sum(),
+            Node::Par { branches, .. } => {
+                branches.len() as u64 + branches.iter().map(|n| n.spawn_count()).sum::<u64>()
+            }
+        }
+    }
+}
+
+/// Recording context passed through a simulated algorithm.
+#[derive(Debug, Default)]
+pub struct SimCtx {
+    parts: Vec<Node>,
+}
+
+impl SimCtx {
+    pub fn new() -> Self {
+        SimCtx { parts: Vec::new() }
+    }
+
+    /// Record `ns` of sequential compute. Adjacent work segments with the
+    /// same label are merged (keeps the task graph small).
+    pub fn work(&mut self, ns: f64, label: &'static str) {
+        debug_assert!(ns >= 0.0);
+        if let Some(Node::Leaf { work_ns, label: l }) = self.parts.last_mut() {
+            if *l == label {
+                *work_ns += ns;
+                return;
+            }
+        }
+        self.parts.push(Node::Leaf { work_ns: ns, label });
+    }
+
+    /// Record a binary fork-join; closures run immediately (real results),
+    /// their structure recorded as parallel branches. `bytes` are the
+    /// distribution payloads for (a, b).
+    pub fn join<RA, RB>(
+        &mut self,
+        bytes: (u64, u64),
+        a: impl FnOnce(&mut SimCtx) -> RA,
+        b: impl FnOnce(&mut SimCtx) -> RB,
+    ) -> (RA, RB) {
+        let mut ca = SimCtx::new();
+        let ra = a(&mut ca);
+        let mut cb = SimCtx::new();
+        let rb = b(&mut cb);
+        self.parts.push(Node::Par {
+            branches: vec![ca.into_node(), cb.into_node()],
+            bytes: vec![bytes.0, bytes.1],
+        });
+        (ra, rb)
+    }
+
+    /// Record an N-way fork-join (master-slave distribution): `f` is called
+    /// once per element of `inputs` with a fresh child context.
+    pub fn fork_each<T, R>(
+        &mut self,
+        inputs: Vec<(T, u64)>, // (input, distribution bytes)
+        mut f: impl FnMut(T, &mut SimCtx) -> R,
+    ) -> Vec<R> {
+        let mut branches = Vec::with_capacity(inputs.len());
+        let mut bytes = Vec::with_capacity(inputs.len());
+        let mut results = Vec::with_capacity(inputs.len());
+        for (input, b) in inputs {
+            let mut c = SimCtx::new();
+            results.push(f(input, &mut c));
+            branches.push(c.into_node());
+            bytes.push(b);
+        }
+        if !branches.is_empty() {
+            self.parts.push(Node::Par { branches, bytes });
+        }
+        results
+    }
+
+    /// Finish recording, yielding the tree.
+    pub fn into_node(mut self) -> Node {
+        match self.parts.len() {
+            0 => Node::Leaf { work_ns: 0.0, label: "empty" },
+            1 => self.parts.pop().unwrap(),
+            _ => Node::Seq(self.parts),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn work_merges_same_label() {
+        let mut c = SimCtx::new();
+        c.work(10.0, "a");
+        c.work(5.0, "a");
+        c.work(1.0, "b");
+        let n = c.into_node();
+        match &n {
+            Node::Seq(parts) => assert_eq!(parts.len(), 2),
+            _ => panic!("expected Seq, got {n:?}"),
+        }
+        assert!((n.total_work_ns() - 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn join_records_par_and_returns_results() {
+        let mut c = SimCtx::new();
+        let (a, b) = c.join(
+            (100, 200),
+            |ca| {
+                ca.work(30.0, "l");
+                1
+            },
+            |cb| {
+                cb.work(50.0, "r");
+                2
+            },
+        );
+        assert_eq!((a, b), (1, 2));
+        let n = c.into_node();
+        assert!((n.total_work_ns() - 80.0).abs() < 1e-12);
+        assert!((n.span_ns() - 50.0).abs() < 1e-12);
+        assert_eq!(n.spawn_count(), 2);
+    }
+
+    #[test]
+    fn nested_join_span() {
+        let mut c = SimCtx::new();
+        c.join(
+            (0, 0),
+            |l| {
+                l.join((0, 0), |x| x.work(10.0, "w"), |y| y.work(20.0, "w"));
+            },
+            |r| r.work(25.0, "w"),
+        );
+        let n = c.into_node();
+        assert!((n.total_work_ns() - 55.0).abs() < 1e-12);
+        assert!((n.span_ns() - 25.0).abs() < 1e-12, "span {}", n.span_ns());
+        assert_eq!(n.spawn_count(), 4);
+    }
+
+    #[test]
+    fn fork_each_collects_results_in_order() {
+        let mut c = SimCtx::new();
+        let rs = c.fork_each(vec![(1, 8), (2, 8), (3, 8)], |x, cc| {
+            cc.work(x as f64, "chunk");
+            x * 10
+        });
+        assert_eq!(rs, vec![10, 20, 30]);
+        let n = c.into_node();
+        assert_eq!(n.spawn_count(), 3);
+        assert!((n.span_ns() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_ctx_is_zero_work() {
+        let n = SimCtx::new().into_node();
+        assert_eq!(n.total_work_ns(), 0.0);
+        assert_eq!(n.spawn_count(), 0);
+    }
+}

@@ -1,0 +1,501 @@
+//! Deterministic discrete-event multicore machine.
+//!
+//! Flattens a series-parallel [`Node`] tree into an atomic-task DAG
+//! (fork/join pseudo-tasks carry the α/β overhead charges; distribution
+//! edges carry γ/δ when they cross cores) and schedules it with a greedy,
+//! locality-aware, earliest-start list scheduler. Everything is integer-id
+//! ordered, so a given (tree, machine) pair always produces the identical
+//! schedule — bit-reproducible experiments.
+
+use super::graph::Node;
+use crate::overhead::{Ledger, OverheadParams};
+
+/// Machine description: core count + calibrated overhead parameters.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub cores: usize,
+    pub params: OverheadParams,
+    /// Relative speed per core (1.0 = nominal). Homogeneous machines use
+    /// an empty vec; heterogeneous ones (the paper's ref [1] "adaptive
+    /// multi-core" setting) give e.g. `[2.0, 1.0, 1.0, 0.5]` — a task of
+    /// `d` nominal ns takes `d / speed[c]` on core `c`.
+    pub core_speeds: Vec<f64>,
+}
+
+/// What a scheduled segment was doing (for Gantt rendering).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    Work,
+    Spawn,
+    Sync,
+}
+
+/// One scheduled interval on one core.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub core: usize,
+    pub start_ns: f64,
+    pub end_ns: f64,
+    pub kind: SegKind,
+    pub label: &'static str,
+}
+
+/// Result of simulating one computation tree.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Virtual wall-clock of the parallel schedule, ns.
+    pub makespan_ns: f64,
+    /// Serial execution time (= total compute), ns.
+    pub serial_ns: f64,
+    /// Overhead event accounting.
+    pub ledger: Ledger,
+    /// Per-core busy time, ns.
+    pub core_busy_ns: Vec<f64>,
+    /// Full schedule (Gantt) — only populated when `trace` was requested.
+    pub timeline: Vec<Segment>,
+}
+
+impl SimReport {
+    pub fn speedup(&self) -> f64 {
+        if self.makespan_ns == 0.0 {
+            1.0
+        } else {
+            self.serial_ns / self.makespan_ns
+        }
+    }
+
+    pub fn time_us(&self) -> f64 {
+        self.makespan_ns / 1e3
+    }
+
+    /// Total idle as a fraction of the machine-time rectangle.
+    pub fn idle_fraction(&self) -> f64 {
+        let rect = self.makespan_ns * self.core_busy_ns.len() as f64;
+        if rect == 0.0 {
+            0.0
+        } else {
+            (rect - self.core_busy_ns.iter().sum::<f64>()) / rect
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DAG flattening
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Task {
+    dur_ns: f64,
+    kind: SegKind,
+    label: &'static str,
+    /// (pred task id, bytes shipped over that edge).
+    preds: Vec<(usize, u64)>,
+    succs: Vec<usize>,
+    indegree: usize,
+}
+
+struct Dag {
+    tasks: Vec<Task>,
+    spawns: u64,
+    syncs: u64,
+}
+
+impl Dag {
+    fn push(&mut self, dur_ns: f64, kind: SegKind, label: &'static str) -> usize {
+        self.tasks.push(Task { dur_ns, kind, label, preds: Vec::new(), succs: Vec::new(), indegree: 0 });
+        self.tasks.len() - 1
+    }
+
+    fn edge(&mut self, from: usize, to: usize, bytes: u64) {
+        self.tasks[to].preds.push((from, bytes));
+        self.tasks[to].indegree += 1;
+        self.tasks[from].succs.push(to);
+    }
+
+    /// Flatten `node` after `entry`; returns the exit task id.
+    fn flatten(&mut self, node: &Node, entry: usize, params: &OverheadParams) -> usize {
+        match node {
+            Node::Leaf { work_ns, label } => {
+                let t = self.push(*work_ns, SegKind::Work, label);
+                self.edge(entry, t, 0);
+                t
+            }
+            Node::Seq(parts) => {
+                let mut cur = entry;
+                for p in parts {
+                    cur = self.flatten(p, cur, params);
+                }
+                cur
+            }
+            Node::Par { branches, bytes } => {
+                let k = branches.len();
+                self.spawns += k as u64;
+                self.syncs += k as u64;
+                // Fork pseudo-task: the master pays α per spawned task.
+                let fork = self.push(params.alpha_spawn_ns * k as f64, SegKind::Spawn, "fork");
+                self.edge(entry, fork, 0);
+                // Join pseudo-task: β per task joining the barrier.
+                let join = self.push(params.beta_sync_ns * k as f64, SegKind::Sync, "join");
+                for (i, b) in branches.iter().enumerate() {
+                    let sink = self.flatten_with_entry_bytes(b, fork, bytes[i], params);
+                    self.edge(sink, join, 0);
+                }
+                join
+            }
+        }
+    }
+
+    /// Like `flatten` but the edge out of `entry` carries `bytes`
+    /// (the master-slave distribution payload for this branch).
+    fn flatten_with_entry_bytes(
+        &mut self,
+        node: &Node,
+        entry: usize,
+        bytes: u64,
+        params: &OverheadParams,
+    ) -> usize {
+        match node {
+            Node::Leaf { work_ns, label } => {
+                let t = self.push(*work_ns, SegKind::Work, label);
+                self.edge(entry, t, bytes);
+                t
+            }
+            Node::Seq(parts) => {
+                let mut iter = parts.iter();
+                let first = iter.next().expect("Seq is never empty");
+                let mut cur = self.flatten_with_entry_bytes(first, entry, bytes, params);
+                for p in iter {
+                    cur = self.flatten(p, cur, params);
+                }
+                cur
+            }
+            Node::Par { .. } => {
+                // A Par directly under a Par: route bytes into its fork task.
+                let stub = self.push(0.0, SegKind::Work, "recv");
+                self.edge(entry, stub, bytes);
+                self.flatten(node, stub, params)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduling
+// ---------------------------------------------------------------------------
+
+impl Machine {
+    pub fn new(cores: usize, params: OverheadParams) -> Self {
+        assert!(cores >= 1);
+        Machine { cores, params, core_speeds: Vec::new() }
+    }
+
+    /// Heterogeneous machine: one entry per core, relative speed > 0.
+    pub fn heterogeneous(speeds: Vec<f64>, params: OverheadParams) -> Self {
+        assert!(!speeds.is_empty() && speeds.iter().all(|&s| s > 0.0));
+        Machine { cores: speeds.len(), params, core_speeds: speeds }
+    }
+
+    #[inline]
+    fn speed(&self, core: usize) -> f64 {
+        self.core_speeds.get(core).copied().unwrap_or(1.0)
+    }
+
+    /// Simulate the tree; `trace` controls whether the full Gantt timeline
+    /// is recorded (costs memory for big graphs).
+    pub fn run(&self, tree: &Node, trace: bool) -> SimReport {
+        let mut dag = Dag { tasks: Vec::new(), spawns: 0, syncs: 0 };
+        let root = dag.push(0.0, SegKind::Work, "start");
+        let _exit = dag.flatten(tree, root, &self.params);
+
+        let n = dag.tasks.len();
+        let mut finish = vec![0.0f64; n];
+        let mut placed_core = vec![usize::MAX; n];
+        let mut core_free = vec![0.0f64; self.cores];
+        let mut core_busy = vec![0.0f64; self.cores];
+        let mut indeg: Vec<usize> = dag.tasks.iter().map(|t| t.indegree).collect();
+        let mut timeline = Vec::new();
+
+        let mut messages = 0u64;
+        let mut bytes_moved = 0u64;
+
+        // Ready pool ordered by (earliest data-ready time, id) — binary heap
+        // keyed on readiness keeps the event-driven order deterministic.
+        use std::cmp::Reverse;
+        use std::collections::BinaryHeap;
+        #[derive(PartialEq)]
+        struct Ready(f64, usize);
+        impl Eq for Ready {}
+        impl PartialOrd for Ready {
+            fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+                Some(self.cmp(o))
+            }
+        }
+        impl Ord for Ready {
+            fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+                self.0.partial_cmp(&o.0).unwrap().then(self.1.cmp(&o.1))
+            }
+        }
+
+        let mut heap: BinaryHeap<Reverse<Ready>> = BinaryHeap::new();
+        heap.push(Reverse(Ready(0.0, root)));
+
+        let mut scheduled = 0usize;
+        while let Some(Reverse(Ready(_, tid))) = heap.pop() {
+            scheduled += 1;
+            // Pick the core minimizing actual start time; prefer the core
+            // of the heaviest-payload predecessor on ties (locality).
+            let task = &dag.tasks[tid];
+            let mut best_core = 0usize;
+            let mut best_start = f64::INFINITY;
+            let mut best_finish = f64::INFINITY;
+            for c in 0..self.cores {
+                let mut data_ready = 0.0f64;
+                for &(p, by) in &task.preds {
+                    let mut t = finish[p];
+                    if placed_core[p] != c && placed_core[p] != usize::MAX {
+                        t += self.params.gamma_msg_ns + self.params.delta_byte_ns * by as f64;
+                    }
+                    data_ready = data_ready.max(t);
+                }
+                // Earliest *finish* time drives the choice on heterogeneous
+                // machines (a slow core can start earlier yet finish later).
+                let start = data_ready.max(core_free[c]);
+                let finish_c = start + task.dur_ns / self.speed(c);
+                if finish_c < best_finish {
+                    best_finish = finish_c;
+                    best_start = start;
+                    best_core = c;
+                }
+            }
+            // Charge communication for the chosen placement.
+            for &(p, by) in &task.preds {
+                if placed_core[p] != best_core && placed_core[p] != usize::MAX {
+                    messages += 1;
+                    bytes_moved += by;
+                }
+            }
+            let scaled_dur = dag.tasks[tid].dur_ns / self.speed(best_core);
+            let end = best_start + scaled_dur;
+            finish[tid] = end;
+            placed_core[tid] = best_core;
+            core_free[best_core] = end;
+            core_busy[best_core] += scaled_dur;
+            if trace && dag.tasks[tid].dur_ns > 0.0 {
+                timeline.push(Segment {
+                    core: best_core,
+                    start_ns: best_start,
+                    end_ns: end,
+                    kind: dag.tasks[tid].kind,
+                    label: dag.tasks[tid].label,
+                });
+            }
+            // Release successors.
+            let succs = dag.tasks[tid].succs.clone();
+            for s in succs {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    // Earliest possible readiness (same-core bound).
+                    let ready = dag.tasks[s]
+                        .preds
+                        .iter()
+                        .map(|&(p, _)| finish[p])
+                        .fold(0.0, f64::max);
+                    heap.push(Reverse(Ready(ready, s)));
+                }
+            }
+        }
+        assert_eq!(scheduled, n, "DAG had unreachable tasks (cycle?)");
+
+        let makespan = finish.iter().copied().fold(0.0, f64::max);
+        let serial = tree.total_work_ns();
+        let compute: f64 = dag
+            .tasks
+            .iter()
+            .filter(|t| t.kind == SegKind::Work)
+            .map(|t| t.dur_ns)
+            .sum();
+        debug_assert!((compute - serial).abs() <= 1e-6 * serial.max(1.0));
+        let idle: f64 = makespan * self.cores as f64 - core_busy.iter().sum::<f64>();
+
+        SimReport {
+            makespan_ns: makespan,
+            serial_ns: serial,
+            ledger: Ledger {
+                spawns: dag.spawns,
+                syncs: dag.syncs,
+                messages,
+                bytes: bytes_moved,
+                compute_ns: compute as u64,
+                idle_ns: idle.max(0.0) as u64,
+            },
+            core_busy_ns: core_busy,
+            timeline,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::graph::SimCtx;
+
+    fn leafy(ns: f64) -> Node {
+        Node::Leaf { work_ns: ns, label: "w" }
+    }
+
+    #[test]
+    fn sequential_tree_is_sum() {
+        let m = Machine::new(4, OverheadParams::ideal());
+        let tree = Node::Seq(vec![leafy(10.0), leafy(20.0), leafy(30.0)]);
+        let r = m.run(&tree, false);
+        assert!((r.makespan_ns - 60.0).abs() < 1e-9);
+        assert!((r.serial_ns - 60.0).abs() < 1e-9);
+        assert!((r.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ideal_parallel_two_branches() {
+        let m = Machine::new(2, OverheadParams::ideal());
+        let tree = Node::Par { branches: vec![leafy(100.0), leafy(100.0)], bytes: vec![0, 0] };
+        let r = m.run(&tree, false);
+        assert!((r.makespan_ns - 100.0).abs() < 1e-9, "makespan {}", r.makespan_ns);
+        assert!((r.speedup() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn one_core_parallel_serializes() {
+        let m = Machine::new(1, OverheadParams::ideal());
+        let tree = Node::Par { branches: vec![leafy(100.0), leafy(100.0)], bytes: vec![0, 0] };
+        let r = m.run(&tree, false);
+        assert!((r.makespan_ns - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overheads_appear_in_makespan_and_ledger() {
+        let params = OverheadParams {
+            alpha_spawn_ns: 10.0,
+            beta_sync_ns: 5.0,
+            gamma_msg_ns: 2.0,
+            delta_byte_ns: 0.5,
+            };
+        let m = Machine::new(2, params);
+        let tree = Node::Par { branches: vec![leafy(100.0), leafy(100.0)], bytes: vec![64, 64] };
+        let r = m.run(&tree, false);
+        // fork 2·α=20, branches in parallel (one migrates: γ+δ·64=34),
+        // join 2·β=10.
+        assert_eq!(r.ledger.spawns, 2);
+        assert_eq!(r.ledger.syncs, 2);
+        assert!(r.ledger.messages >= 1, "at least the migrated branch");
+        assert!(r.makespan_ns > 100.0 + 20.0 + 10.0 - 1e-9);
+        // Charged overhead must reconstruct from the ledger (model↔ledger
+        // consistency — the paper's 'root level' accounting).
+        let charge = params.charge(&r.ledger);
+        assert!(charge > 0.0);
+        assert!(
+            r.makespan_ns <= r.serial_ns + charge + 1e-9,
+            "makespan {} > serial+charge {}",
+            r.makespan_ns,
+            r.serial_ns + charge
+        );
+    }
+
+    #[test]
+    fn more_cores_never_hurt_ideal_machine() {
+        let tree = {
+            let mut c = SimCtx::new();
+            c.fork_each((0..16).map(|i| (i, 0u64)).collect(), |i, cc| {
+                cc.work(10.0 + i as f64, "chunk");
+            });
+            c.into_node()
+        };
+        let mut prev = f64::INFINITY;
+        for p in [1, 2, 4, 8, 16] {
+            let r = Machine::new(p, OverheadParams::ideal()).run(&tree, false);
+            assert!(r.makespan_ns <= prev + 1e-9, "p={p}: {} > {prev}", r.makespan_ns);
+            prev = r.makespan_ns;
+        }
+    }
+
+    #[test]
+    fn busy_plus_idle_equals_rectangle() {
+        let m = Machine::new(3, OverheadParams::paper_2022());
+        let tree = {
+            let mut c = SimCtx::new();
+            c.fork_each((0..7).map(|i| (i, 128u64)).collect(), |i, cc| {
+                cc.work(1000.0 * (i + 1) as f64, "chunk");
+            });
+            c.into_node()
+        };
+        let r = m.run(&tree, false);
+        let rect = r.makespan_ns * 3.0;
+        let busy: f64 = r.core_busy_ns.iter().sum();
+        assert!((busy + r.ledger.idle_ns as f64 - rect).abs() < 1.0, "conservation");
+        assert!(r.idle_fraction() >= 0.0 && r.idle_fraction() < 1.0);
+    }
+
+    #[test]
+    fn deterministic_schedules() {
+        let tree = {
+            let mut c = SimCtx::new();
+            c.join(
+                (64, 64),
+                |l| {
+                    l.fork_each(vec![(1, 8u64), (2, 8)], |x, cc| cc.work(x as f64 * 7.0, "a"));
+                },
+                |rr| rr.work(11.0, "b"),
+            );
+            c.into_node()
+        };
+        let m = Machine::new(4, OverheadParams::paper_2022());
+        let a = m.run(&tree, true);
+        let b = m.run(&tree, true);
+        assert_eq!(a.makespan_ns, b.makespan_ns);
+        assert_eq!(a.ledger, b.ledger);
+        assert_eq!(a.timeline.len(), b.timeline.len());
+    }
+
+    #[test]
+    fn heterogeneous_prefers_fast_cores() {
+        // One fast core (4x) + three slow: independent equal tasks should
+        // finish sooner than on four nominal cores... and the fast core
+        // must take the largest busy share.
+        let tree = {
+            let mut c = SimCtx::new();
+            c.fork_each((0..8).map(|_| ((), 0u64)).collect(), |_, cc| {
+                cc.work(1000.0, "w");
+            });
+            c.into_node()
+        };
+        let hetero = Machine::heterogeneous(vec![4.0, 1.0, 1.0, 1.0], OverheadParams::ideal());
+        let rep = hetero.run(&tree, false);
+        let fast_busy = rep.core_busy_ns[0];
+        let max_slow = rep.core_busy_ns[1..].iter().cloned().fold(0.0, f64::max);
+        assert!(fast_busy >= max_slow, "fast core underused: {:?}", rep.core_busy_ns);
+        // 8 tasks × 1000ns over speeds {4,1,1,1} (total speed 7): lower
+        // bound 8000/7 ≈ 1143ns; homogeneous 4×1 machine needs 2000ns.
+        let homo = Machine::new(4, OverheadParams::ideal()).run(&tree, false);
+        assert!(rep.makespan_ns < homo.makespan_ns, "{} !< {}", rep.makespan_ns, homo.makespan_ns);
+    }
+
+    #[test]
+    fn heterogeneous_slow_core_can_be_skipped() {
+        // A single chain of work must land on the fast core only.
+        let tree = Node::Seq(vec![leafy(100.0), leafy(100.0)]);
+        let m = Machine::heterogeneous(vec![2.0, 0.1], OverheadParams::ideal());
+        let rep = m.run(&tree, false);
+        assert!((rep.makespan_ns - 100.0).abs() < 1e-9, "200ns of work at speed 2");
+        assert_eq!(rep.core_busy_ns[1], 0.0, "slow core must stay idle");
+    }
+
+    #[test]
+    fn trace_timeline_covers_busy_time() {
+        let m = Machine::new(2, OverheadParams::paper_2022());
+        let tree = Node::Par { branches: vec![leafy(50.0), leafy(60.0)], bytes: vec![8, 8] };
+        let r = m.run(&tree, true);
+        let total_seg: f64 = r.timeline.iter().map(|s| s.end_ns - s.start_ns).sum();
+        let busy: f64 = r.core_busy_ns.iter().sum();
+        assert!((total_seg - busy).abs() < 1e-9);
+        assert!(r.timeline.iter().any(|s| s.kind == SegKind::Spawn));
+        assert!(r.timeline.iter().any(|s| s.kind == SegKind::Sync));
+    }
+}

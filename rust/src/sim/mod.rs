@@ -1,0 +1,22 @@
+//! Discrete-event multicore simulator — the evaluation testbed.
+//!
+//! The paper measured on an (unspecified) Windows multicore with OpenMP;
+//! this container exposes one physical core, so wall-clock parallel speedup
+//! is unobservable here. Per DESIGN.md §Substitutions, every numeric
+//! experiment instead runs on this simulator: algorithms execute **for
+//! real** (single-threaded, correct results) while recording their
+//! fork-join structure ([`graph::SimCtx`]), and a [`machine::Machine`] with
+//! calibrated overhead parameters schedules that structure on N virtual
+//! cores, charging the paper's α/β/γ/δ overheads against a virtual clock.
+//!
+//! On a real multicore host the same experiments can run on the
+//! [`crate::pool`] backend and measure wall-clock instead; the two backends
+//! share the exact same domain code paths (see [`crate::exec`]).
+
+pub mod analysis;
+pub mod graph;
+pub mod machine;
+
+pub use analysis::Breakdown;
+pub use graph::{Node, SimCtx};
+pub use machine::{Machine, SegKind, Segment, SimReport};

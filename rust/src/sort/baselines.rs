@@ -1,0 +1,314 @@
+//! Baseline sorters: mergesort, samplesort, and the bitonic network
+//! (the L3 twin of the L1 Pallas kernel — same compare-exchange schedule).
+
+use super::quicksort::OpCounts;
+use crate::pool::ThreadPool;
+use crate::util::Pcg32;
+
+/// Top-down mergesort, instrumented. Stable, worst-case n·log n — the
+/// pivot-insensitive baseline for the adversarial ablation.
+pub fn mergesort(xs: &mut [i64]) -> OpCounts {
+    let mut ops = OpCounts::default();
+    let mut buf = xs.to_vec();
+    msort(xs, &mut buf, &mut ops);
+    ops
+}
+
+fn msort(xs: &mut [i64], buf: &mut [i64], ops: &mut OpCounts) {
+    let n = xs.len();
+    if n <= 1 {
+        return;
+    }
+    let mid = n / 2;
+    {
+        let (bl, br) = buf.split_at_mut(mid);
+        msort(&mut xs[..mid], bl, ops);
+        msort(&mut xs[mid..], br, ops);
+    }
+    // Merge xs[..mid] and xs[mid..] through buf.
+    buf[..n].copy_from_slice(xs);
+    let (mut i, mut j) = (0usize, mid);
+    for out in xs.iter_mut() {
+        let take_left = if i >= mid {
+            false
+        } else if j >= n {
+            true
+        } else {
+            ops.comparisons += 1;
+            buf[i] <= buf[j]
+        };
+        if take_left {
+            *out = buf[i];
+            i += 1;
+        } else {
+            *out = buf[j];
+            j += 1;
+        }
+        ops.swaps += 1; // one element move
+    }
+}
+
+/// Pool-parallel mergesort: halves fork on the pool down to `cutoff`,
+/// merges happen on the joining side (the pivot-insensitive parallel
+/// baseline the paper does not evaluate — included for the adversarial
+/// ablation, where parallel quicksort with left/right pivots collapses).
+pub fn mergesort_parallel(xs: &mut [i64], pool: &ThreadPool, cutoff: usize) -> OpCounts {
+    let mut buf = xs.to_vec();
+    msort_par(xs, &mut buf, pool, cutoff.max(32))
+}
+
+fn msort_par(xs: &mut [i64], buf: &mut [i64], pool: &ThreadPool, cutoff: usize) -> OpCounts {
+    let n = xs.len();
+    if n <= cutoff {
+        let mut ops = OpCounts::default();
+        msort(xs, buf, &mut ops);
+        return ops;
+    }
+    let mid = n / 2;
+    let (xl, xr) = xs.split_at_mut(mid);
+    let mut ops = {
+        let (bl, br) = buf.split_at_mut(mid);
+        let (ol, or) = pool.join(
+            || msort_par(xl, bl, pool, cutoff),
+            || msort_par(xr, br, pool, cutoff),
+        );
+        ol.merged(&or)
+    };
+    // Merge the sorted halves through buf (serial: the join point).
+    buf[..n].copy_from_slice(xs);
+    let (mut i, mut j) = (0usize, mid);
+    for out in xs.iter_mut() {
+        let take_left = if i >= mid {
+            false
+        } else if j >= n {
+            true
+        } else {
+            ops.comparisons += 1;
+            buf[i] <= buf[j]
+        };
+        if take_left {
+            *out = buf[i];
+            i += 1;
+        } else {
+            *out = buf[j];
+            j += 1;
+        }
+        ops.swaps += 1;
+    }
+    ops
+}
+
+/// Samplesort with `buckets` buckets: sample splitters, scatter, sort each
+/// bucket (optionally on the pool — the p-way generalization of the
+/// paper's 2-way master-slave split).
+pub fn samplesort(xs: &mut [i64], buckets: usize, pool: Option<&ThreadPool>, seed: u64) -> OpCounts {
+    let n = xs.len();
+    let buckets = buckets.clamp(1, n.max(1));
+    if n <= 64 || buckets == 1 {
+        let mut ops = OpCounts::default();
+        let mut rng = Pcg32::new(seed);
+        super::quicksort::quicksort_rec(xs, super::PivotStrategy::MedianOf3, &mut rng, &mut ops);
+        return ops;
+    }
+    let mut ops = OpCounts::default();
+    let mut rng = Pcg32::new(seed);
+    // Oversampled splitters.
+    let oversample = 8;
+    let mut sample: Vec<i64> =
+        (0..buckets * oversample).map(|_| xs[rng.below(n as u64) as usize]).collect();
+    sample.sort_unstable();
+    ops.scan_ops += sample.len() as u64;
+    let splitters: Vec<i64> =
+        (1..buckets).map(|i| sample[i * oversample]).collect();
+    // Scatter into buckets.
+    let mut parts: Vec<Vec<i64>> = vec![Vec::with_capacity(n / buckets + 8); buckets];
+    for &v in xs.iter() {
+        let b = splitters.partition_point(|&s| s < v);
+        ops.comparisons += (splitters.len().max(1)).ilog2() as u64 + 1;
+        parts[b].push(v);
+    }
+    // Sort buckets (parallel when a pool is supplied).
+    let bucket_ops: Vec<OpCounts> = match pool {
+        Some(pool) => {
+            let mut slots: Vec<OpCounts> = vec![OpCounts::default(); buckets];
+            {
+                let jobs: Vec<(&mut OpCounts, &mut Vec<i64>)> =
+                    slots.iter_mut().zip(parts.iter_mut()).collect();
+                pool.scope(|s| {
+                    for (bi, (slot, part)) in jobs.into_iter().enumerate() {
+                        s.spawn(move |_| {
+                            let mut o = OpCounts::default();
+                            let mut r = Pcg32::new(seed ^ (bi as u64) << 20);
+                            super::quicksort::quicksort_rec(
+                                part,
+                                super::PivotStrategy::MedianOf3,
+                                &mut r,
+                                &mut o,
+                            );
+                            *slot = o;
+                        });
+                    }
+                });
+            }
+            slots
+        }
+        None => parts
+            .iter_mut()
+            .enumerate()
+            .map(|(bi, part)| {
+                let mut o = OpCounts::default();
+                let mut r = Pcg32::new(seed ^ (bi as u64) << 20);
+                super::quicksort::quicksort_rec(part, super::PivotStrategy::MedianOf3, &mut r, &mut o);
+                o
+            })
+            .collect(),
+    };
+    for o in bucket_ops {
+        ops = ops.merged(&o);
+    }
+    // Gather.
+    let mut i = 0;
+    for part in parts {
+        xs[i..i + part.len()].copy_from_slice(&part);
+        i += part.len();
+    }
+    debug_assert_eq!(i, n);
+    ops
+}
+
+/// In-place bitonic sorting network for power-of-two lengths — identical
+/// (k, j) compare-exchange schedule to `python/compile/kernels/bitonic.py`.
+pub fn bitonic_pow2(xs: &mut [i64]) -> OpCounts {
+    let n = xs.len();
+    assert!(n.is_power_of_two(), "bitonic needs power-of-two length");
+    let mut ops = OpCounts::default();
+    let mut k = 2usize;
+    while k <= n {
+        let mut j = k / 2;
+        while j > 0 {
+            for i in 0..n {
+                let partner = i ^ j;
+                if partner > i {
+                    ops.comparisons += 1;
+                    let ascending = (i & k) == 0;
+                    if (xs[i] > xs[partner]) == ascending {
+                        xs.swap(i, partner);
+                        ops.swaps += 1;
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+    ops
+}
+
+/// Bitonic sort for any length: pad to the next power of two with `MAX`.
+pub fn bitonic(xs: &mut [i64]) -> OpCounts {
+    let n = xs.len();
+    if n <= 1 {
+        return OpCounts::default();
+    }
+    if n.is_power_of_two() {
+        return bitonic_pow2(xs);
+    }
+    let np2 = n.next_power_of_two();
+    let mut padded = Vec::with_capacity(np2);
+    padded.extend_from_slice(xs);
+    padded.resize(np2, i64::MAX);
+    let ops = bitonic_pow2(&mut padded);
+    xs.copy_from_slice(&padded[..n]);
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::{is_permutation, is_sorted};
+    use crate::workload::arrays::{self, Distribution};
+
+    fn check(f: impl Fn(&mut Vec<i64>) -> OpCounts, n: usize, dist: Distribution) {
+        let orig = arrays::generate(n, dist, 77);
+        let mut xs = orig.clone();
+        let ops = f(&mut xs);
+        assert!(is_sorted(&xs), "n={n} {}", dist.name());
+        assert!(is_permutation(&xs, &orig));
+        if n > 1 {
+            assert!(ops.comparisons > 0);
+        }
+    }
+
+    #[test]
+    fn mergesort_sorts_everything() {
+        for n in [0, 1, 2, 100, 1000] {
+            check(|xs| mergesort(xs), n, Distribution::UniformRandom);
+        }
+        check(|xs| mergesort(xs), 500, Distribution::Reverse);
+        check(|xs| mergesort(xs), 500, Distribution::FewUnique { k: 2 });
+    }
+
+    #[test]
+    fn mergesort_comparisons_worst_case_bound() {
+        let n = 1024usize;
+        let orig = arrays::generate(n, Distribution::UniformRandom, 3);
+        let mut xs = orig;
+        let ops = mergesort(&mut xs);
+        // n·log2(n) upper bound for merges.
+        assert!(ops.comparisons <= (n as u64) * 10);
+    }
+
+    #[test]
+    fn mergesort_parallel_matches_serial() {
+        let pool = ThreadPool::new(3);
+        for n in [0usize, 10, 100, 5000] {
+            let orig = arrays::uniform_i64(n, 8);
+            let mut a = orig.clone();
+            let mut b = orig.clone();
+            mergesort(&mut a);
+            mergesort_parallel(&mut b, &pool, 64);
+            assert_eq!(a, b, "n={n}");
+        }
+        check(|xs| mergesort_parallel(xs, &pool, 64), 3000, Distribution::Reverse);
+        check(|xs| mergesort_parallel(xs, &pool, 64), 3000, Distribution::FewUnique { k: 2 });
+    }
+
+    #[test]
+    fn samplesort_serial_and_parallel() {
+        for n in [10, 65, 1000, 5000] {
+            check(|xs| samplesort(xs, 8, None, 5), n, Distribution::UniformRandom);
+        }
+        let pool = ThreadPool::new(3);
+        check(|xs| samplesort(xs, 8, Some(&pool), 5), 5000, Distribution::UniformRandom);
+        check(|xs| samplesort(xs, 8, Some(&pool), 5), 3000, Distribution::FewUnique { k: 4 });
+    }
+
+    #[test]
+    fn bitonic_pow2_and_padded() {
+        for n in [2usize, 8, 1024] {
+            check(|xs| bitonic(xs), n, Distribution::UniformRandom);
+        }
+        for n in [3usize, 1000, 1100] {
+            check(|xs| bitonic(xs), n, Distribution::UniformRandom);
+        }
+        check(|xs| bitonic(xs), 1000, Distribution::Sorted);
+    }
+
+    #[test]
+    fn bitonic_comparator_count_matches_kernel_model() {
+        // Must equal python/compile/kernels/bitonic.py::comparator_count.
+        let n = 8usize;
+        let mut xs = arrays::uniform_i64(n, 1);
+        let ops = bitonic_pow2(&mut xs);
+        assert_eq!(ops.comparisons, 24); // log=3 → 6 substages × n/2
+    }
+
+    #[test]
+    fn bitonic_is_input_insensitive() {
+        // Comparison count is data-independent (the dataflow property that
+        // makes it the TPU mapping of quicksort — DESIGN §Hardware-Adaptation).
+        let mut a = arrays::generate(512, Distribution::Sorted, 0);
+        let mut b = arrays::generate(512, Distribution::Reverse, 0);
+        assert_eq!(bitonic_pow2(&mut a).comparisons, bitonic_pow2(&mut b).comparisons);
+    }
+}

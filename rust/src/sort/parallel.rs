@@ -1,0 +1,301 @@
+//! Parallel quicksort — the paper's Fig 4 workflow on every engine.
+//!
+//! Scheme (paper Table 2): the master selects and places the pivot, then
+//! the two sub-arrays recurse in parallel (fork-join), each core repeating
+//! the same split until segments fall below the **overhead-managed cutoff**
+//! — the grain at which the [`Manager`](crate::overhead::Manager) predicts
+//! further forking would cost more (α/β/γ) than it saves.
+
+use super::pivot::PivotStrategy;
+use super::quicksort::{partition, quicksort_rec, OpCounts};
+use super::SortCostModel;
+use crate::exec::{Engine, ExecCtx, RunReport};
+use crate::overhead::{Ledger, Manager};
+use crate::pool::ThreadPool;
+use crate::sim::SimCtx;
+use crate::util::{Pcg32, Stopwatch};
+
+/// Smallest segment the manager still wants to fork, given the cost model.
+/// Monotone bisection over the work estimate (see `Manager::decide`).
+pub fn managed_cutoff(manager: &Manager, model: &SortCostModel) -> usize {
+    let parallel_at = |n: usize| manager.decide(&super::estimate(n, model)).is_parallel();
+    if !parallel_at(1 << 24) {
+        return usize::MAX; // never fork (e.g. 1 core)
+    }
+    let mut lo = super::quicksort::INSERTION_CUTOFF;
+    if parallel_at(lo) {
+        return lo;
+    }
+    let mut hi = 1usize << 24;
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if parallel_at(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+/// Overhead-managed parallel quicksort with paper-calibrated simulation
+/// costs ([`SortCostModel::paper_2022`]); see [`run_with_model`] for
+/// custom cost models and seeds.
+pub fn parallel_quicksort(xs: &mut [i64], strategy: PivotStrategy, ctx: &ExecCtx) -> RunReport {
+    run_with_model(xs, strategy, ctx, &SortCostModel::paper_2022(), 0)
+}
+
+/// Full-control entry point: sort `xs` under `ctx` with cost model `model`
+/// and pivot-rng `seed`. Deterministic given (input, strategy, seed).
+pub fn run_with_model(
+    xs: &mut [i64],
+    strategy: PivotStrategy,
+    ctx: &ExecCtx,
+    model: &SortCostModel,
+    seed: u64,
+) -> RunReport {
+    let cutoff = managed_cutoff(&ctx.manager, model);
+    let sw = Stopwatch::start();
+    match &ctx.engine {
+        Engine::Serial => {
+            let ops = super::serial_quicksort(xs, strategy, seed);
+            let cost = model.cost_ns(&ops);
+            let mut rep = RunReport::wall_only(sw.elapsed_ns());
+            // Serial runs still report virtual time so Table 3's serial
+            // column is commensurable with the simulated parallel columns.
+            rep.virtual_ns = Some(cost);
+            rep.serial_equiv_ns = Some(cost);
+            rep.ledger.compute_ns = cost as u64;
+            (rep.ledger.bytes, rep.ledger.spawns) = (0, 0);
+            rep
+        }
+        Engine::Threaded(pool) => {
+            let before = pool.metrics();
+            let ops = threaded_rec(pool, xs, strategy, cutoff, seed);
+            let delta = pool.metrics().delta_since(&before);
+            let mut rep = RunReport::wall_only(sw.elapsed_ns());
+            rep.ledger = Ledger::from_metrics(&delta, (xs.len() * 8) as u64);
+            rep.ledger.compute_ns = model.cost_ns(&ops) as u64;
+            rep
+        }
+        Engine::Simulated(machine) => {
+            let mut sc = SimCtx::new();
+            let _ops = sim_rec(&mut sc, xs, strategy, cutoff, seed, model);
+            let sim = machine.run(&sc.into_node(), ctx.trace);
+            RunReport {
+                wall_ns: sw.elapsed_ns(),
+                virtual_ns: Some(sim.makespan_ns),
+                serial_equiv_ns: Some(sim.serial_ns),
+                ledger: sim.ledger,
+                timeline: sim.timeline,
+            }
+        }
+    }
+}
+
+/// Simulate with an explicit fork cutoff (grain-ablation entry point):
+/// bypasses the manager and reports the raw schedule.
+pub fn simulate_with_cutoff(
+    xs: &mut [i64],
+    strategy: PivotStrategy,
+    cutoff: usize,
+    seed: u64,
+    model: &SortCostModel,
+    machine: &crate::sim::Machine,
+) -> crate::sim::SimReport {
+    let mut sc = SimCtx::new();
+    let _ops = sim_rec(&mut sc, xs, strategy, cutoff, seed, model);
+    machine.run(&sc.into_node(), false)
+}
+
+/// Real-threads recursion: master partitions, halves fork on the pool.
+fn threaded_rec(
+    pool: &ThreadPool,
+    xs: &mut [i64],
+    strategy: PivotStrategy,
+    cutoff: usize,
+    seed: u64,
+) -> OpCounts {
+    if xs.len() <= cutoff.max(super::quicksort::INSERTION_CUTOFF) {
+        let mut ops = OpCounts::default();
+        let mut rng = Pcg32::new(seed);
+        quicksort_rec(xs, strategy, &mut rng, &mut ops);
+        return ops;
+    }
+    let mut ops = OpCounts::default();
+    let mut rng = Pcg32::new(seed);
+    let p = strategy.choose(xs, &mut rng, &mut ops);
+    let p = partition(xs, p, &mut ops);
+    let (lo, rest) = xs.split_at_mut(p);
+    let hi = &mut rest[1..];
+    let (o1, o2) = pool.join(
+        || threaded_rec(pool, lo, strategy, cutoff, seed.wrapping_mul(2).wrapping_add(1)),
+        || threaded_rec(pool, hi, strategy, cutoff, seed.wrapping_mul(2).wrapping_add(2)),
+    );
+    ops.merged(&o1).merged(&o2)
+}
+
+/// Virtual-time twin: identical partition sequence (same seeds ⇒ same
+/// pivots ⇒ same op counts), fork-join structure recorded on the SimCtx.
+fn sim_rec(
+    ctx: &mut SimCtx,
+    xs: &mut [i64],
+    strategy: PivotStrategy,
+    cutoff: usize,
+    seed: u64,
+    model: &SortCostModel,
+) -> OpCounts {
+    if xs.len() <= cutoff.max(super::quicksort::INSERTION_CUTOFF) {
+        let mut ops = OpCounts::default();
+        let mut rng = Pcg32::new(seed);
+        quicksort_rec(xs, strategy, &mut rng, &mut ops);
+        ctx.work(model.cost_ns(&ops), "sort-leaf");
+        return ops;
+    }
+    let mut ops = OpCounts::default();
+    let mut rng = Pcg32::new(seed);
+    let p = strategy.choose(xs, &mut rng, &mut ops);
+    let p = partition(xs, p, &mut ops);
+    ctx.work(model.cost_ns(&ops), "partition");
+    let (lo, rest) = xs.split_at_mut(p);
+    let hi = &mut rest[1..];
+    let bytes = (lo.len() as u64 * 8, hi.len() as u64 * 8);
+    let (o1, o2) = ctx.join(
+        bytes,
+        |ca| sim_rec(ca, lo, strategy, cutoff, seed.wrapping_mul(2).wrapping_add(1), model),
+        |cb| sim_rec(cb, hi, strategy, cutoff, seed.wrapping_mul(2).wrapping_add(2), model),
+    );
+    ops.merged(&o1).merged(&o2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overhead::OverheadParams;
+    use crate::sort::{is_permutation, is_sorted};
+    use crate::workload::arrays;
+
+    fn sorted_ok(xs: &[i64], orig: &[i64]) {
+        assert!(is_sorted(xs));
+        assert!(is_permutation(xs, orig));
+    }
+
+    #[test]
+    fn threaded_sorts_all_strategies() {
+        let ctx = ExecCtx::threaded(3);
+        for s in PivotStrategy::PAPER_SET {
+            let orig = arrays::uniform_i64(5000, 11);
+            let mut xs = orig.clone();
+            let rep = parallel_quicksort(&mut xs, s, &ctx);
+            sorted_ok(&xs, &orig);
+            assert!(rep.wall_ns > 0);
+        }
+    }
+
+    #[test]
+    fn simulated_sorts_and_reports_virtual_time() {
+        let ctx = ExecCtx::simulated(4, OverheadParams::paper_2022());
+        let orig = arrays::uniform_i64(2000, 13);
+        let mut xs = orig.clone();
+        let rep = parallel_quicksort(&mut xs, PivotStrategy::Mean, &ctx);
+        sorted_ok(&xs, &orig);
+        assert!(rep.virtual_ns.unwrap() > 0.0);
+        assert!(rep.ledger.spawns > 0, "must have forked: {:?}", rep.ledger);
+    }
+
+    #[test]
+    fn table3_shape_parallel_beats_serial_at_1000_plus() {
+        let model = SortCostModel::paper_2022();
+        for n in [1000usize, 2000] {
+            let orig = arrays::uniform_i64(n, 42);
+            let mut a = orig.clone();
+            let ser = run_with_model(
+                &mut a,
+                PivotStrategy::Left,
+                &ExecCtx::serial(),
+                &model,
+                1,
+            );
+            let mut b = orig.clone();
+            let par = run_with_model(
+                &mut b,
+                PivotStrategy::Left,
+                &ExecCtx::simulated(4, OverheadParams::paper_2022()),
+                &model,
+                1,
+            );
+            assert!(
+                par.virtual_ns.unwrap() < ser.virtual_ns.unwrap(),
+                "n={n}: parallel {} !< serial {}",
+                par.virtual_ns.unwrap(),
+                ser.virtual_ns.unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn table3_shape_random_is_slowest_parallel() {
+        let n = 1000;
+        let orig = arrays::uniform_i64(n, 42);
+        let model = SortCostModel::paper_2022();
+        let time = |s: PivotStrategy| {
+            let mut xs = orig.clone();
+            let ctx = ExecCtx::simulated(4, OverheadParams::paper_2022());
+            run_with_model(&mut xs, s, &ctx, &model, 1).virtual_ns.unwrap()
+        };
+        let (l, m, r, rnd) = (
+            time(PivotStrategy::Left),
+            time(PivotStrategy::Mean),
+            time(PivotStrategy::Right),
+            time(PivotStrategy::Random),
+        );
+        assert!(rnd > l && rnd > m && rnd > r, "random {rnd} vs l={l} m={m} r={r}");
+    }
+
+    #[test]
+    fn managed_cutoff_monotone_in_overhead() {
+        let model = SortCostModel::paper_2022();
+        let cheap = Manager::new(
+            OverheadParams { alpha_spawn_ns: 100.0, ..OverheadParams::paper_2022() },
+            4,
+        );
+        let costly = Manager::new(OverheadParams::paper_2022(), 4);
+        let c_cheap = managed_cutoff(&cheap, &model);
+        let c_costly = managed_cutoff(&costly, &model);
+        assert!(c_cheap <= c_costly, "{c_cheap} vs {c_costly}");
+        assert!(c_costly < usize::MAX);
+    }
+
+    #[test]
+    fn single_core_manager_never_forks() {
+        let ctx = ExecCtx::simulated(1, OverheadParams::paper_2022());
+        let orig = arrays::uniform_i64(3000, 5);
+        let mut xs = orig.clone();
+        let rep = parallel_quicksort(&mut xs, PivotStrategy::Mean, &ctx);
+        sorted_ok(&xs, &orig);
+        assert_eq!(rep.ledger.spawns, 0);
+    }
+
+    #[test]
+    fn sim_and_threaded_same_op_counts() {
+        // Same seeds ⇒ identical pivot sequence ⇒ identical sorted output;
+        // the sim twin is faithful to the threaded execution.
+        let orig = arrays::uniform_i64(4000, 21);
+        let cutoff = 256;
+        let pool = ThreadPool::new(2);
+        let mut a = orig.clone();
+        let ot = threaded_rec(&pool, &mut a, PivotStrategy::Random, cutoff, 99);
+        let mut b = orig.clone();
+        let mut sc = SimCtx::new();
+        let os = sim_rec(
+            &mut sc,
+            &mut b,
+            PivotStrategy::Random,
+            cutoff,
+            99,
+            &SortCostModel::paper_2022(),
+        );
+        assert_eq!(a, b);
+        assert_eq!(ot, os, "instrumentation must agree across engines");
+    }
+}

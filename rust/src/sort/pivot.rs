@@ -1,0 +1,163 @@
+//! Pivot-selection strategies (paper Table 2: "Random, mean, leftmost
+//! element, rightmost element"), plus median-of-three as an extension.
+//!
+//! Every strategy returns a pivot *index* so the partition kernel can
+//! guarantee progress (the pivot element lands at its final position and
+//! is excluded from recursion). The instrumented cost of selection —
+//! scan operations for `Mean`, rng calls for `Random` — is charged to the
+//! caller's [`OpCounts`](super::OpCounts); that cost asymmetry is exactly
+//! what Table 3 measures.
+
+use super::quicksort::OpCounts;
+use crate::util::Pcg32;
+
+/// Pivot-selection strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PivotStrategy {
+    /// Leftmost element (Fig 3's `x := A[q]`).
+    Left,
+    /// Element closest to the arithmetic mean (O(n) scan per partition).
+    Mean,
+    /// Rightmost element.
+    Right,
+    /// Uniform random element (pays the locked-`rand()` cost, see
+    /// [`SortCostModel`](super::SortCostModel)).
+    Random,
+    /// Median of first/middle/last (extension; classic engineering fix).
+    MedianOf3,
+}
+
+impl PivotStrategy {
+    pub const PAPER_SET: [PivotStrategy; 4] =
+        [PivotStrategy::Left, PivotStrategy::Mean, PivotStrategy::Right, PivotStrategy::Random];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PivotStrategy::Left => "left",
+            PivotStrategy::Mean => "mean",
+            PivotStrategy::Right => "right",
+            PivotStrategy::Random => "random",
+            PivotStrategy::MedianOf3 => "median3",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PivotStrategy> {
+        Some(match s {
+            "left" => PivotStrategy::Left,
+            "mean" => PivotStrategy::Mean,
+            "right" => PivotStrategy::Right,
+            "random" => PivotStrategy::Random,
+            "median3" => PivotStrategy::MedianOf3,
+            _ => return None,
+        })
+    }
+
+    /// Choose the pivot index in `xs` (non-empty), charging selection costs.
+    pub fn choose(&self, xs: &[i64], rng: &mut Pcg32, ops: &mut OpCounts) -> usize {
+        debug_assert!(!xs.is_empty());
+        match self {
+            PivotStrategy::Left => 0,
+            PivotStrategy::Right => xs.len() - 1,
+            PivotStrategy::Random => {
+                ops.rng_calls += 1;
+                rng.below(xs.len() as u64) as usize
+            }
+            PivotStrategy::Mean => {
+                // Pass 1: mean; pass 2: closest element. 2n scan ops.
+                ops.scan_ops += 2 * xs.len() as u64;
+                let sum: i128 = xs.iter().map(|&v| v as i128).sum();
+                let mean = sum / xs.len() as i128;
+                let mut best = 0usize;
+                let mut best_d = i128::MAX;
+                for (i, &v) in xs.iter().enumerate() {
+                    let d = (v as i128 - mean).abs();
+                    if d < best_d {
+                        best_d = d;
+                        best = i;
+                    }
+                }
+                best
+            }
+            PivotStrategy::MedianOf3 => {
+                ops.comparisons += 3;
+                let (a, b, c) = (0, xs.len() / 2, xs.len() - 1);
+                let (va, vb, vc) = (xs[a], xs[b], xs[c]);
+                if (va <= vb) == (vb <= vc) {
+                    b
+                } else if (vb <= va) == (va <= vc) {
+                    a
+                } else {
+                    c
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ops() -> OpCounts {
+        OpCounts::default()
+    }
+
+    #[test]
+    fn left_right_endpoints() {
+        let xs = [5i64, 1, 9, 3];
+        let mut rng = Pcg32::new(0);
+        let mut o = ops();
+        assert_eq!(PivotStrategy::Left.choose(&xs, &mut rng, &mut o), 0);
+        assert_eq!(PivotStrategy::Right.choose(&xs, &mut rng, &mut o), 3);
+        assert_eq!(o.rng_calls + o.scan_ops, 0, "no selection cost for endpoints");
+    }
+
+    #[test]
+    fn mean_picks_closest_and_charges_scan() {
+        let xs = [0i64, 10, 100, 6]; // mean = 29 → closest is 10 (idx 1)
+        let mut rng = Pcg32::new(0);
+        let mut o = ops();
+        let i = PivotStrategy::Mean.choose(&xs, &mut rng, &mut o);
+        assert_eq!(i, 1);
+        assert_eq!(o.scan_ops, 8);
+    }
+
+    #[test]
+    fn random_in_bounds_and_charged() {
+        let xs: Vec<i64> = (0..50).collect();
+        let mut rng = Pcg32::new(7);
+        let mut o = ops();
+        for _ in 0..100 {
+            let i = PivotStrategy::Random.choose(&xs, &mut rng, &mut o);
+            assert!(i < xs.len());
+        }
+        assert_eq!(o.rng_calls, 100);
+    }
+
+    #[test]
+    fn median3_is_the_median() {
+        let mut rng = Pcg32::new(1);
+        let mut o = ops();
+        // first=9, mid=4, last=6 → median is 6 (last).
+        let xs = [9i64, 0, 4, 0, 6];
+        let i = PivotStrategy::MedianOf3.choose(&xs, &mut rng, &mut o);
+        assert_eq!(xs[i], 6);
+        // first=1, mid=5, last=9 → median is 5 (mid).
+        let xs = [1i64, 0, 5, 0, 9];
+        assert_eq!(xs[PivotStrategy::MedianOf3.choose(&xs, &mut rng, &mut o)], 5);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for s in [
+            PivotStrategy::Left,
+            PivotStrategy::Mean,
+            PivotStrategy::Right,
+            PivotStrategy::Random,
+            PivotStrategy::MedianOf3,
+        ] {
+            assert_eq!(PivotStrategy::from_name(s.name()), Some(s));
+        }
+        assert_eq!(PivotStrategy::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,219 @@
+//! Instrumented serial quicksort (paper Fig 3, generalized over pivot
+//! strategies), with a small-segment insertion-sort cutoff.
+//!
+//! Every comparison, swap, pivot-scan element and rng call is counted in
+//! [`OpCounts`]; the counts are deterministic for a given (input, strategy,
+//! seed), which is what lets the simulator's virtual clock and the paper's
+//! Table 3 share one source of truth.
+
+use super::pivot::PivotStrategy;
+use crate::util::Pcg32;
+
+/// Operation counters (the sort domain's "root level" accounting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub comparisons: u64,
+    pub swaps: u64,
+    /// Elements visited by mean-pivot scans.
+    pub scan_ops: u64,
+    /// Random-pivot selections.
+    pub rng_calls: u64,
+}
+
+impl OpCounts {
+    pub fn merged(&self, o: &OpCounts) -> OpCounts {
+        OpCounts {
+            comparisons: self.comparisons + o.comparisons,
+            swaps: self.swaps + o.swaps,
+            scan_ops: self.scan_ops + o.scan_ops,
+            rng_calls: self.rng_calls + o.rng_calls,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.comparisons + self.swaps + self.scan_ops + self.rng_calls
+    }
+}
+
+/// Below this length, insertion sort (standard engineering cutoff; also
+/// the floor for parallel grain decisions).
+pub const INSERTION_CUTOFF: usize = 16;
+
+/// Lomuto partition around the pivot *element* at `pivot_idx`; returns the
+/// pivot's final index. Both sides exclude the pivot ⇒ guaranteed progress
+/// for every strategy (including adversarial inputs).
+pub fn partition(xs: &mut [i64], pivot_idx: usize, ops: &mut OpCounts) -> usize {
+    let n = xs.len();
+    debug_assert!(pivot_idx < n);
+    xs.swap(pivot_idx, n - 1);
+    ops.swaps += 1;
+    let pivot = xs[n - 1];
+    let mut store = 0usize;
+    for i in 0..n - 1 {
+        ops.comparisons += 1;
+        if xs[i] <= pivot {
+            if i != store {
+                xs.swap(i, store);
+                ops.swaps += 1;
+            }
+            store += 1;
+        }
+    }
+    xs.swap(store, n - 1);
+    ops.swaps += 1;
+    store
+}
+
+fn insertion_sort(xs: &mut [i64], ops: &mut OpCounts) {
+    for i in 1..xs.len() {
+        let mut j = i;
+        while j > 0 {
+            ops.comparisons += 1;
+            if xs[j - 1] <= xs[j] {
+                break;
+            }
+            xs.swap(j - 1, j);
+            ops.swaps += 1;
+            j -= 1;
+        }
+    }
+}
+
+/// Serial quicksort with the given pivot strategy (Fig 3 when `Left`).
+/// Returns the operation counts.
+pub fn serial_quicksort(xs: &mut [i64], strategy: PivotStrategy, seed: u64) -> OpCounts {
+    let mut ops = OpCounts::default();
+    let mut rng = Pcg32::new(seed);
+    quicksort_rec(xs, strategy, &mut rng, &mut ops);
+    ops
+}
+
+pub(crate) fn quicksort_rec(
+    xs: &mut [i64],
+    strategy: PivotStrategy,
+    rng: &mut Pcg32,
+    ops: &mut OpCounts,
+) {
+    // Iterative on the larger side to bound stack depth on adversarial
+    // inputs (left pivot on sorted data is O(n) deep otherwise).
+    let mut xs = xs;
+    loop {
+        if xs.len() <= INSERTION_CUTOFF {
+            insertion_sort(xs, ops);
+            return;
+        }
+        let p = strategy.choose(xs, rng, ops);
+        let p = partition(xs, p, ops);
+        let (lo, rest) = xs.split_at_mut(p);
+        let hi = &mut rest[1..];
+        if lo.len() < hi.len() {
+            quicksort_rec(lo, strategy, rng, ops);
+            xs = hi;
+        } else {
+            quicksort_rec(hi, strategy, rng, ops);
+            xs = lo;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::{is_permutation, is_sorted};
+    use crate::workload::arrays::{self, Distribution};
+
+    fn check_sorts(dist: Distribution, n: usize) {
+        for strategy in [
+            PivotStrategy::Left,
+            PivotStrategy::Mean,
+            PivotStrategy::Right,
+            PivotStrategy::Random,
+            PivotStrategy::MedianOf3,
+        ] {
+            let orig = arrays::generate(n, dist, 42);
+            let mut xs = orig.clone();
+            let ops = serial_quicksort(&mut xs, strategy, 7);
+            assert!(is_sorted(&xs), "{strategy:?} on {}", dist.name());
+            assert!(is_permutation(&xs, &orig), "{strategy:?} permutes");
+            if n > 1 {
+                assert!(ops.comparisons > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn sorts_uniform() {
+        check_sorts(Distribution::UniformRandom, 500);
+    }
+
+    #[test]
+    fn sorts_adversarial() {
+        check_sorts(Distribution::Sorted, 300);
+        check_sorts(Distribution::Reverse, 300);
+        check_sorts(Distribution::FewUnique { k: 3 }, 300);
+    }
+
+    #[test]
+    fn sorts_tiny_and_empty() {
+        for n in [0usize, 1, 2, 15, 16, 17] {
+            check_sorts(Distribution::UniformRandom, n);
+        }
+    }
+
+    #[test]
+    fn partition_places_pivot_correctly() {
+        let mut xs = vec![5i64, 9, 1, 7, 3];
+        let mut ops = OpCounts::default();
+        let p = partition(&mut xs, 0, &mut ops); // pivot value 5
+        assert_eq!(xs[p], 5);
+        assert!(xs[..p].iter().all(|&v| v <= 5));
+        assert!(xs[p + 1..].iter().all(|&v| v >= 5));
+    }
+
+    #[test]
+    fn left_pivot_on_sorted_is_quadratic_median3_is_not() {
+        let n = 2000;
+        let sorted = arrays::generate(n, Distribution::Sorted, 0);
+        let mut a = sorted.clone();
+        let left = serial_quicksort(&mut a, PivotStrategy::Left, 0);
+        let mut b = sorted.clone();
+        let med = serial_quicksort(&mut b, PivotStrategy::MedianOf3, 0);
+        // Left degenerates to ~n²/2; median-of-3 stays ~n·log n.
+        assert!(
+            left.comparisons > 10 * med.comparisons,
+            "left {} vs median3 {}",
+            left.comparisons,
+            med.comparisons
+        );
+    }
+
+    #[test]
+    fn op_counts_deterministic_per_seed() {
+        let orig = arrays::uniform_i64(1000, 3);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        let oa = serial_quicksort(&mut a, PivotStrategy::Random, 9);
+        let ob = serial_quicksort(&mut b, PivotStrategy::Random, 9);
+        assert_eq!(oa, ob);
+        let mut c = orig.clone();
+        let oc = serial_quicksort(&mut c, PivotStrategy::Random, 10);
+        assert_ne!(oa, oc, "different seed, different pivots");
+    }
+
+    #[test]
+    fn uniform_comparisons_near_n_log_n() {
+        let n = 4096usize;
+        let mut xs = arrays::uniform_i64(n, 5);
+        let ops = serial_quicksort(&mut xs, PivotStrategy::Random, 5);
+        let nlogn = n as f64 * (n as f64).log2();
+        let ratio = ops.comparisons as f64 / nlogn;
+        assert!(ratio > 0.8 && ratio < 2.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn merged_counts_add() {
+        let a = OpCounts { comparisons: 1, swaps: 2, scan_ops: 3, rng_calls: 4 };
+        let b = a.merged(&a);
+        assert_eq!(b.total(), 20);
+    }
+}

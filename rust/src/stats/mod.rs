@@ -1,0 +1,227 @@
+//! Robust summary statistics and a small least-squares fitter.
+//!
+//! Used by the bench harness (sample summaries), the overhead calibrator
+//! (fitting α/β/γ/δ from micro-benchmarks), and the report layer.
+
+/// Summary of a sample of observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p10: f64,
+    pub p90: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` for an empty sample.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median: percentile_sorted(&sorted, 50.0),
+            p10: percentile_sorted(&sorted, 10.0),
+            p90: percentile_sorted(&sorted, 90.0),
+        })
+    }
+
+    /// Relative standard deviation (coefficient of variation).
+    pub fn rsd(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.std / self.mean.abs()
+        }
+    }
+
+    /// Half-width of an approximate 95% confidence interval on the mean.
+    pub fn ci95_half(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.std / (self.n as f64).sqrt()
+    }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted slice, `p` in [0,100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Ordinary least squares `y = slope·x + intercept`; returns
+/// `(slope, intercept, r²)`. Panics if fewer than 2 points or zero x-variance.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need >= 2 points to fit a line");
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    assert!(sxx > 0.0, "x has zero variance");
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let syy: f64 = ys.iter().map(|y| (y - my).powi(2)).sum();
+    let r2 = if syy == 0.0 { 1.0 } else { (sxy * sxy) / (sxx * syy) };
+    (slope, intercept, r2)
+}
+
+/// Multi-variate OLS without intercept: solve `min ||A·x - b||²` for small
+/// column counts via normal equations + Gaussian elimination.
+///
+/// Used by the calibrator: each micro-benchmark run contributes a row
+/// `(spawns, syncs, messages, bytes) → observed overhead ns`, and the
+/// solution is the per-event costs `(α, β, γ, δ)`.
+pub fn least_squares(rows: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    assert_eq!(rows.len(), b.len());
+    assert!(!rows.is_empty());
+    let k = rows[0].len();
+    assert!(rows.iter().all(|r| r.len() == k));
+    // Normal equations: (AᵀA) x = Aᵀb
+    let mut ata = vec![vec![0.0f64; k]; k];
+    let mut atb = vec![0.0f64; k];
+    for (row, &bv) in rows.iter().zip(b) {
+        for i in 0..k {
+            atb[i] += row[i] * bv;
+            for j in 0..k {
+                ata[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // Ridge epsilon for numerical safety on near-collinear designs.
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += 1e-9;
+        let _ = i;
+    }
+    gaussian_solve(ata, atb)
+}
+
+fn gaussian_solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // Partial pivot.
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-30, "singular system");
+        for row in col + 1..n {
+            let f = a[row][col] / d;
+            for c in col..n {
+                a[row][c] -= f * a[col][c];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for c in row + 1..n {
+            acc -= a[row][c] * x[c];
+        }
+        x[row] = acc / a[row][row];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_and_singleton() {
+        assert!(Summary::of(&[]).is_none());
+        let s = Summary::of(&[7.0]).unwrap();
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci95_half(), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile_sorted(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&v, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0]; // y = 2x + 1
+        let (m, c, r2) = linear_fit(&xs, &ys);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((c - 1.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn least_squares_recovers_coeffs() {
+        // b = 3*x0 + 5*x1 exactly.
+        let rows = vec![
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![2.0, 3.0],
+        ];
+        let b: Vec<f64> = rows.iter().map(|r| 3.0 * r[0] + 5.0 * r[1]).collect();
+        let x = least_squares(&rows, &b);
+        assert!((x[0] - 3.0).abs() < 1e-6, "{x:?}");
+        assert!((x[1] - 5.0).abs() < 1e-6, "{x:?}");
+    }
+
+    #[test]
+    fn least_squares_overdetermined_noisy() {
+        let rows: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![i as f64, (i * i % 17) as f64])
+            .collect();
+        let b: Vec<f64> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| 2.0 * r[0] + 7.0 * r[1] + if i % 2 == 0 { 0.01 } else { -0.01 })
+            .collect();
+        let x = least_squares(&rows, &b);
+        assert!((x[0] - 2.0).abs() < 1e-2, "{x:?}");
+        assert!((x[1] - 7.0).abs() < 1e-2, "{x:?}");
+    }
+}

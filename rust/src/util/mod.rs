@@ -1,0 +1,56 @@
+//! Small shared utilities: deterministic PRNG, wall-clock timing, env knobs.
+
+pub mod rng;
+pub mod timer;
+
+pub use rng::Pcg32;
+pub use timer::Stopwatch;
+
+/// Read an environment override (`OHM_*` knobs), falling back to `default`.
+///
+/// Used by the CLI and benches so experiments can be re-parameterized
+/// without recompiling (e.g. `OHM_CORES=8 cargo bench`).
+pub fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Round `v` up to the next multiple of `m` (m > 0).
+pub fn round_up(v: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    v.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 4), 0);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(4, 4), 4);
+        assert_eq!(round_up(1000, 128), 1024);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(6, 3), 2);
+        assert_eq!(ceil_div(7, 3), 3);
+    }
+
+    #[test]
+    fn env_or_falls_back() {
+        assert_eq!(env_or::<usize>("OHM_DEFINITELY_UNSET_KNOB", 7), 7);
+    }
+}

@@ -1,0 +1,106 @@
+//! Integer-array workloads for the sorting domain (Table 3, Fig 5).
+
+use crate::util::Pcg32;
+
+/// Input distribution for sorting workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Distribution {
+    /// i.i.d. uniform over a wide range — the paper's (implicit) default.
+    UniformRandom,
+    /// Already ascending — adversarial for left-pivot quicksort.
+    Sorted,
+    /// Strictly descending — adversarial for right-pivot quicksort.
+    Reverse,
+    /// Only `k` distinct values — stresses partition balance.
+    FewUnique { k: usize },
+    /// Rounded Gaussian — clustered values.
+    Gaussian,
+    /// Piecewise ascending runs (nearly-sorted real-world shape).
+    Sawtooth { run: usize },
+}
+
+impl Distribution {
+    pub fn name(&self) -> String {
+        match self {
+            Distribution::UniformRandom => "uniform".into(),
+            Distribution::Sorted => "sorted".into(),
+            Distribution::Reverse => "reverse".into(),
+            Distribution::FewUnique { k } => format!("few-unique-{k}"),
+            Distribution::Gaussian => "gaussian".into(),
+            Distribution::Sawtooth { run } => format!("sawtooth-{run}"),
+        }
+    }
+}
+
+/// Generate `n` i64 values with the given distribution and seed.
+pub fn generate(n: usize, dist: Distribution, seed: u64) -> Vec<i64> {
+    let mut rng = Pcg32::new(seed);
+    match dist {
+        Distribution::UniformRandom => (0..n).map(|_| rng.range_i64(-1_000_000, 1_000_000)).collect(),
+        Distribution::Sorted => (0..n as i64).collect(),
+        Distribution::Reverse => (0..n as i64).rev().collect(),
+        Distribution::FewUnique { k } => {
+            let k = k.max(1);
+            (0..n).map(|_| rng.below(k as u64) as i64).collect()
+        }
+        Distribution::Gaussian => (0..n).map(|_| (rng.normal() * 1e5) as i64).collect(),
+        Distribution::Sawtooth { run } => {
+            let run = run.max(1);
+            (0..n).map(|i| (i % run) as i64).collect()
+        }
+    }
+}
+
+/// Shorthand for the paper's default workload.
+pub fn uniform_i64(n: usize, seed: u64) -> Vec<i64> {
+    generate(n, Distribution::UniformRandom, seed)
+}
+
+/// f32 variant for XLA-backed sorting (bitonic artifacts take f32).
+pub fn uniform_f32(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed);
+    (0..n).map(|_| rng.f32_range(-1000.0, 1000.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(uniform_i64(100, 5), uniform_i64(100, 5));
+        assert_ne!(uniform_i64(100, 5), uniform_i64(100, 6));
+    }
+
+    #[test]
+    fn sorted_reverse_shapes() {
+        let s = generate(10, Distribution::Sorted, 0);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+        let r = generate(10, Distribution::Reverse, 0);
+        assert!(r.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn few_unique_cardinality() {
+        let v = generate(1000, Distribution::FewUnique { k: 4 }, 1);
+        let mut u = v.clone();
+        u.sort_unstable();
+        u.dedup();
+        assert!(u.len() <= 4);
+    }
+
+    #[test]
+    fn sizes_respected() {
+        for n in [0, 1, 2, 1000] {
+            assert_eq!(generate(n, Distribution::Gaussian, 2).len(), n);
+            assert_eq!(uniform_f32(n, 2).len(), n);
+        }
+    }
+
+    #[test]
+    fn sawtooth_runs_ascend() {
+        let v = generate(20, Distribution::Sawtooth { run: 5 }, 0);
+        assert_eq!(&v[0..5], &[0, 1, 2, 3, 4]);
+        assert_eq!(v[5], 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Matrix workloads for the DLA domain (Table 1, Fig 1, Fig 2).
+
+use crate::dla::Matrix;
+use crate::util::Pcg32;
+
+/// Uniform random matrix in [-1, 1) — the Fig 2 workload.
+pub fn uniform(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.f32_range(-1.0, 1.0))
+}
+
+/// Identity matrix (exactness checks: A·I = A).
+pub fn identity(n: usize) -> Matrix {
+    Matrix::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+}
+
+/// Diagonally dominant well-conditioned matrix (stability tests).
+pub fn diag_dominant(n: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::new(seed);
+    Matrix::from_fn(n, n, |r, c| {
+        if r == c {
+            n as f32 + rng.f32_range(0.0, 1.0)
+        } else {
+            rng.f32_range(-0.5, 0.5)
+        }
+    })
+}
+
+/// Low-precision-friendly integer-valued matrix: products are exactly
+/// representable in f32, so serial/parallel/XLA results must be
+/// *bit-identical* (used by cross-backend equivalence tests).
+pub fn small_int(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::new(seed);
+    Matrix::from_fn(rows, cols, |_, _| rng.range_i64(-8, 9) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_deterministic_and_in_range() {
+        let a = uniform(20, 30, 3);
+        let b = uniform(20, 30, 3);
+        assert_eq!(a.data(), b.data());
+        assert!(a.data().iter().all(|v| (-1.0..1.0).contains(v)));
+        assert_eq!((a.rows(), a.cols()), (20, 30));
+    }
+
+    #[test]
+    fn identity_multiplies_exactly() {
+        let a = small_int(16, 16, 4);
+        let i = identity(16);
+        let prod = crate::dla::matmul::serial(&a, &i);
+        assert_eq!(prod.data(), a.data());
+    }
+
+    #[test]
+    fn diag_dominant_dominates() {
+        let m = diag_dominant(8, 5);
+        for r in 0..8 {
+            let diag = m.get(r, r).abs();
+            let off: f32 = (0..8).filter(|&c| c != r).map(|c| m.get(r, c).abs()).sum();
+            assert!(diag > off);
+        }
+    }
+}

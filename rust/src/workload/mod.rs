@@ -1,0 +1,11 @@
+//! Workload generators for the paper's experiments.
+//!
+//! The paper only specifies "order of matrix" and "number of elements";
+//! distributions here fill in the standard assumptions (uniform random)
+//! plus the adversarial shapes used by the pivot ablation
+//! (sorted / reverse / few-unique — the inputs that make left/right pivots
+//! quadratic and motivate random pivots in the first place).
+
+pub mod arrays;
+pub mod matrices;
+pub mod traces;

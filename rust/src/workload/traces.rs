@@ -1,0 +1,130 @@
+//! Job traces for the coordinator: Poisson arrivals over a mixed op set.
+//!
+//! The paper's applications section motivates "scientific and mathematical
+//! domains where parallelization of mathematical concepts is demanded";
+//! a trace models such a client: a stream of matmul and sort requests of
+//! varying sizes arriving over time.
+
+use crate::util::Pcg32;
+
+/// One request in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceJob {
+    /// Arrival offset from trace start, in microseconds.
+    pub arrival_us: u64,
+    pub kind: TraceKind,
+    /// Workload seed (distinct per job).
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Square matmul of the given order.
+    Matmul { n: usize },
+    /// Quicksort of `n` elements.
+    Sort { n: usize },
+}
+
+impl TraceKind {
+    /// Approximate serial work, in "element operations" — used by the
+    /// coordinator's policy to pick a backend before running.
+    pub fn work_estimate(&self) -> f64 {
+        match self {
+            TraceKind::Matmul { n } => (*n as f64).powi(3),
+            TraceKind::Sort { n } => {
+                let n = *n as f64;
+                n * n.log2().max(1.0)
+            }
+        }
+    }
+}
+
+/// Trace generator parameters.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Number of jobs.
+    pub jobs: usize,
+    /// Mean arrival rate (jobs per second).
+    pub rate_per_s: f64,
+    /// Candidate matmul orders.
+    pub matmul_orders: Vec<usize>,
+    /// Candidate sort sizes.
+    pub sort_sizes: Vec<usize>,
+    /// Fraction of jobs that are matmuls (rest are sorts), in [0, 1].
+    pub matmul_fraction: f64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            jobs: 100,
+            rate_per_s: 200.0,
+            // Paper sweep sizes (Fig 2 / Table 3).
+            matmul_orders: vec![64, 128, 256, 512],
+            sort_sizes: vec![1000, 1100, 1500, 2000],
+            matmul_fraction: 0.5,
+        }
+    }
+}
+
+/// Generate a deterministic Poisson trace.
+pub fn generate(spec: &TraceSpec, seed: u64) -> Vec<TraceJob> {
+    assert!(!spec.matmul_orders.is_empty() && !spec.sort_sizes.is_empty());
+    let mut rng = Pcg32::new(seed);
+    let mut t_us = 0.0f64;
+    (0..spec.jobs)
+        .map(|i| {
+            t_us += rng.exp(spec.rate_per_s) * 1e6;
+            let kind = if rng.f64() < spec.matmul_fraction {
+                let n = spec.matmul_orders[rng.below(spec.matmul_orders.len() as u64) as usize];
+                TraceKind::Matmul { n }
+            } else {
+                let n = spec.sort_sizes[rng.below(spec.sort_sizes.len() as u64) as usize];
+                TraceKind::Sort { n }
+            };
+            TraceJob { arrival_us: t_us as u64, kind, seed: seed ^ (i as u64) << 17 }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_ordered() {
+        let spec = TraceSpec::default();
+        let a = generate(&spec, 9);
+        let b = generate(&spec, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), spec.jobs);
+        assert!(a.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+    }
+
+    #[test]
+    fn mix_fraction_respected() {
+        let spec = TraceSpec { jobs: 2000, matmul_fraction: 0.25, ..Default::default() };
+        let t = generate(&spec, 1);
+        let mm = t.iter().filter(|j| matches!(j.kind, TraceKind::Matmul { .. })).count();
+        let frac = mm as f64 / t.len() as f64;
+        assert!((frac - 0.25).abs() < 0.05, "frac={frac}");
+    }
+
+    #[test]
+    fn arrival_rate_approximates_spec() {
+        let spec = TraceSpec { jobs: 5000, rate_per_s: 1000.0, ..Default::default() };
+        let t = generate(&spec, 2);
+        let span_s = t.last().unwrap().arrival_us as f64 / 1e6;
+        let rate = t.len() as f64 / span_s;
+        assert!((rate - 1000.0).abs() < 100.0, "rate={rate}");
+    }
+
+    #[test]
+    fn work_estimates_ordered() {
+        assert!(
+            TraceKind::Matmul { n: 512 }.work_estimate()
+                > TraceKind::Matmul { n: 64 }.work_estimate()
+        );
+        assert!(TraceKind::Sort { n: 2000 }.work_estimate() > TraceKind::Sort { n: 1000 }.work_estimate());
+    }
+}

@@ -1,0 +1,97 @@
+//! Integration: coordinator end-to-end, with and without the XLA runtime.
+
+use ohm::coordinator::{Coordinator, CoordinatorCfg, RoutedEngine};
+use ohm::runtime::Runtime;
+use ohm::workload::traces::{self, TraceKind, TraceSpec};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn xla_runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+    } else {
+        eprintln!("skipping xla-coordinator integration: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn cpu_only_trace_all_jobs_ok() {
+    let mut c = Coordinator::new(CoordinatorCfg { threads: 2, ..Default::default() }, None);
+    let spec = TraceSpec {
+        jobs: 30,
+        matmul_orders: vec![16, 32, 64],
+        sort_sizes: vec![200, 500, 1000],
+        ..Default::default()
+    };
+    let results = c.run_trace(&traces::generate(&spec, 3));
+    assert_eq!(results.len(), 30);
+    assert!(results.iter().all(|r| r.ok));
+    assert_eq!(c.telemetry.completed, 30);
+    assert_eq!(c.telemetry.engine_count(RoutedEngine::Xla), 0, "no runtime ⇒ no xla routing");
+}
+
+#[test]
+fn xla_routing_used_for_known_shapes() {
+    let Some(rt) = xla_runtime() else { return };
+    let mut c = Coordinator::new(CoordinatorCfg { threads: 2, ..Default::default() }, Some(rt));
+    assert_eq!(c.route(&TraceKind::Matmul { n: 64 }), RoutedEngine::Xla);
+    assert_eq!(c.route(&TraceKind::Sort { n: 1000 }), RoutedEngine::Xla);
+    // Shapes without artifacts fall back to CPU.
+    assert_ne!(c.route(&TraceKind::Matmul { n: 48 }), RoutedEngine::Xla);
+    assert_ne!(c.route(&TraceKind::Sort { n: 999 }), RoutedEngine::Xla);
+    let r = c.submit(TraceKind::Matmul { n: 64 }, 5);
+    assert!(r.ok);
+    assert_eq!(r.engine, RoutedEngine::Xla);
+    assert!(r.checksum > 0.0);
+}
+
+#[test]
+fn xla_and_cpu_checksums_agree() {
+    let Some(rt) = xla_runtime() else { return };
+    // Same seed → same workload; frobenius checksum must agree between
+    // XLA (L1 pallas kernel) and the CPU engines to ~f32 rounding.
+    let mut with_xla = Coordinator::new(CoordinatorCfg::default(), Some(rt));
+    let mut cpu_only = Coordinator::new(CoordinatorCfg::default(), None);
+    let a = with_xla.submit(TraceKind::Matmul { n: 128 }, 77);
+    let b = cpu_only.submit(TraceKind::Matmul { n: 128 }, 77);
+    assert_eq!(a.engine, RoutedEngine::Xla);
+    assert_ne!(b.engine, RoutedEngine::Xla);
+    let rel = (a.checksum - b.checksum).abs() / b.checksum.abs().max(1.0);
+    assert!(rel < 1e-5, "checksum divergence {rel}: {a:?} vs {b:?}");
+}
+
+#[test]
+fn mixed_trace_with_runtime_routes_both_ways() {
+    let Some(rt) = xla_runtime() else { return };
+    let mut c = Coordinator::new(CoordinatorCfg { threads: 2, ..Default::default() }, Some(rt));
+    let spec = TraceSpec {
+        jobs: 40,
+        matmul_orders: vec![48, 64],     // 48 has no artifact, 64 does
+        sort_sizes: vec![999, 1000],     // likewise
+        ..Default::default()
+    };
+    let results = c.run_trace(&traces::generate(&spec, 11));
+    assert!(results.iter().all(|r| r.ok));
+    let xla = results.iter().filter(|r| r.engine == RoutedEngine::Xla).count();
+    assert!(xla > 0, "some jobs must hit XLA");
+    assert!(xla < results.len(), "some jobs must stay on CPU");
+    let telemetry = c.telemetry.render();
+    assert!(telemetry.contains("engine:xla"), "{telemetry}");
+}
+
+#[test]
+fn telemetry_batches_count_shape_groups() {
+    let mut c = Coordinator::new(CoordinatorCfg { threads: 1, ..Default::default() }, None);
+    let jobs: Vec<_> = [100usize, 100, 300, 300, 300, 100]
+        .iter()
+        .map(|&n| ohm::workload::traces::TraceJob { arrival_us: 0, kind: TraceKind::Sort { n }, seed: 1 })
+        .collect();
+    c.run_trace(&jobs);
+    assert_eq!(c.telemetry.batches, 3);
+    assert_eq!(c.telemetry.batched_jobs, 6);
+}

@@ -1,0 +1,108 @@
+//! Integration: the full experiment suite runs, writes well-formed
+//! outputs, and the headline paper shapes hold end to end.
+
+use ohm::config::ExperimentConfig;
+use ohm::experiments;
+
+fn small_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        matmul_orders: vec![32, 64, 128, 512, 1000],
+        sort_sizes: vec![1000, 2000],
+        reps: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_experiments_run_and_save() {
+    let cfg = small_cfg();
+    let dir = std::env::temp_dir().join("ohm-int-exp");
+    let _ = std::fs::remove_dir_all(&dir);
+    let outs = experiments::run_all(&cfg).unwrap();
+    assert_eq!(outs.len(), experiments::ALL.len());
+    for out in &outs {
+        let paths = experiments::save(out, &dir).unwrap();
+        assert!(!out.text.is_empty(), "{} empty", out.id);
+        for p in &paths {
+            assert!(p.exists());
+            let meta = std::fs::metadata(p).unwrap();
+            assert!(meta.len() > 0, "{} empty file", p.display());
+        }
+    }
+    // CSVs parse as rectangular tables.
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.extension().is_some_and(|e| e == "csv") {
+            let text = std::fs::read_to_string(&p).unwrap();
+            let mut lines = text.lines();
+            let header_cols = lines.next().unwrap().split(',').count();
+            for l in lines {
+                assert!(
+                    l.split(',').count() >= header_cols,
+                    "ragged csv {} line {l:?}",
+                    p.display()
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig2_shape_crossovers_ordered() {
+    let out = experiments::run("fig2", &small_cfg()).unwrap();
+    // Naive crossover exists at order ≈1000 (paper), managed well before.
+    assert!(out.text.contains("naive at order 1000"), "{}", out.text);
+    assert!(!out.text.contains("managed at order none"), "{}", out.text);
+}
+
+#[test]
+fn table3_reproduces_paper_ordering_at_2000() {
+    let cfg = ExperimentConfig { sort_sizes: vec![2000], reps: 2, ..Default::default() };
+    let g = experiments::table3::grid(&cfg);
+    let (_, c) = &g[0];
+    // Paper row n=2000: serial 3.838 > random 3.136 > left/right > mean.
+    assert!(c[0] > c[4], "serial must be slowest overall at n=2000: {c:?}");
+    assert!(c[4] > c[2], "random slower than mean: {c:?}");
+}
+
+#[test]
+fn ablation_grain_minimum_not_at_extremes() {
+    // The interesting claim: the best grain is interior (not 1 task, and
+    // not the absurd maximum) for a 512 matmul on 4 cores.
+    let cfg = small_cfg();
+    let out = experiments::run("abl-grain", &cfg).unwrap();
+    let rows: Vec<(usize, f64)> = out.csv[0]
+        .2
+        .iter()
+        .filter(|r| r[0] == "matmul")
+        .map(|r| (r[1].parse().unwrap(), r[2].parse().unwrap()))
+        .collect();
+    let best = rows.iter().min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap();
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    assert!(best.1 < first.1, "1 task must not be optimal");
+    assert!(best.1 <= last.1, "max tasks must not beat the optimum");
+}
+
+#[test]
+fn cli_experiment_all_smoke() {
+    let dir = std::env::temp_dir().join("ohm-cli-all");
+    let _ = std::fs::remove_dir_all(&dir);
+    let argv: Vec<String> = [
+        "experiment",
+        "all",
+        "--out-dir",
+        dir.to_str().unwrap(),
+        "--reps",
+        "1",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    let out = ohm::cli::run(&argv).unwrap();
+    assert!(out.contains("table3"));
+    assert!(dir.join("fig2.txt").exists());
+    assert!(dir.join("table3_quicksort.csv").exists());
+    std::fs::remove_dir_all(&dir).ok();
+}

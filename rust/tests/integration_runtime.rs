@@ -1,0 +1,148 @@
+//! Integration: PJRT runtime vs rust reference engines, over the real
+//! AOT artifacts (requires `make artifacts`; all tests no-op politely if
+//! the bundle is missing so `cargo test` before the first build still
+//! passes — `make test` always builds artifacts first).
+
+use ohm::dla::matmul;
+use ohm::runtime::{self, Runtime};
+use ohm::workload::{arrays, matrices};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The xla crate's handles are Rc-based (not Send/Sync), so each test
+/// loads its own Runtime on its own thread.
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+    } else {
+        eprintln!("skipping runtime integration: run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn matmul_xla_matches_serial_all_sizes() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    for n in [64usize, 128, 256] {
+        let a = matrices::uniform(n, n, n as u64);
+        let b = matrices::uniform(n, n, n as u64 + 1);
+        let got = runtime::matmul_xla(rt, &a, &b).unwrap();
+        let want = matmul::serial(&a, &b);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-3, "n={n}: max |Δ| = {diff}");
+    }
+}
+
+#[test]
+fn matmul_xla_order_1000_padded_kernel() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    // The paper's crossover order exercises the ragged-tiling pad path.
+    let n = 1000;
+    let a = matrices::uniform(n, n, 5);
+    let b = matrices::uniform(n, n, 6);
+    let got = runtime::matmul_xla(rt, &a, &b).unwrap();
+    let want = matmul::serial(&a, &b);
+    assert!(got.max_abs_diff(&want) < 5e-3);
+}
+
+#[test]
+fn bitonic_xla_sorts_paper_sizes() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    for n in [1000usize, 1100, 1500, 2000] {
+        let xs = arrays::uniform_f32(n, n as u64);
+        let got = runtime::sort_xla(rt, &xs).unwrap();
+        assert!(got.windows(2).all(|w| w[0] <= w[1]), "n={n} not sorted");
+        let mut want = xs.clone();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, want, "n={n}: not the same multiset");
+    }
+}
+
+#[test]
+fn rect_matmul_artifact() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let a = matrices::uniform(96, 160, 1);
+    let b = matrices::uniform(160, 224, 2);
+    let out = rt.exec_f32("matmul_rect_96x160x224", &[a.data(), b.data()]).unwrap();
+    let want = matmul::serial(&a, &b);
+    let got = ohm::dla::Matrix::from_vec(96, 224, out);
+    assert!(got.max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn chain_artifact_matches_two_step() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let n = 256;
+    let a = matrices::uniform(n, n, 7);
+    let b = matrices::uniform(n, n, 8);
+    let c = matrices::uniform(n, n, 9);
+    let out = rt.exec_f32("matmul_chain_256", &[a.data(), b.data(), c.data()]).unwrap();
+    let want = matmul::serial(&matmul::serial(&a, &b), &c);
+    let got = ohm::dla::Matrix::from_vec(n, n, out);
+    // Two chained f32 matmuls accumulate more rounding; scale-aware bound.
+    assert!(got.approx_eq(&want, 1e-3), "max |Δ| = {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn topk_artifact_returns_smallest() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let xs = arrays::uniform_f32(2048, 3);
+    let got = rt.exec_f32("topk_2048_16", &[&xs]).unwrap();
+    let mut want = xs.clone();
+    want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(got, &want[..16]);
+}
+
+#[test]
+fn executable_cache_reuses_compilation() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let a = matrices::uniform(64, 64, 1);
+    let b = matrices::uniform(64, 64, 2);
+    // First call compiles.
+    let t0 = std::time::Instant::now();
+    let _ = runtime::matmul_xla(rt, &a, &b).unwrap();
+    let cold = t0.elapsed();
+    // Warm calls must skip compilation (same executable object).
+    let t1 = std::time::Instant::now();
+    for _ in 0..3 {
+        let _ = runtime::matmul_xla(rt, &a, &b).unwrap();
+    }
+    let warm_avg = t1.elapsed() / 3;
+    assert!(
+        warm_avg < cold,
+        "warm {warm_avg:?} should be below cold (compile-inclusive) {cold:?}"
+    );
+}
+
+#[test]
+fn input_validation_errors() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    let too_few = rt.exec_f32("matmul_64", &[&[0.0f32; 64 * 64]]);
+    assert!(too_few.is_err(), "missing input must fail");
+    let wrong_len = rt.exec_f32("matmul_64", &[&[0.0f32; 10], &[0.0f32; 64 * 64]]);
+    assert!(wrong_len.is_err(), "wrong element count must fail");
+    let unknown = rt.exec_f32("matmul_9999", &[]);
+    assert!(unknown.is_err(), "unknown artifact must fail");
+}
+
+#[test]
+fn has_helpers_reflect_manifest() {
+    let Some(rt) = runtime() else { return };
+    let rt = &rt;
+    assert!(runtime::has_matmul(rt, 64));
+    assert!(!runtime::has_matmul(rt, 65));
+    assert!(runtime::has_sort(rt, 1000));
+    assert!(!runtime::has_sort(rt, 1001));
+}

@@ -1,0 +1,135 @@
+//! Property tests: overhead model, manager policy, and Amdahl analyzer.
+
+use ohm::overhead::{amdahl, model, Manager, OverheadParams, WorkEstimate};
+use ohm::prop::{ensure, forall, Config, Gen};
+
+fn random_params(g: &mut Gen) -> OverheadParams {
+    OverheadParams {
+        alpha_spawn_ns: 1.0 + (g.u64() % 100_000) as f64,
+        beta_sync_ns: 1.0 + (g.u64() % 50_000) as f64,
+        gamma_msg_ns: (g.u64() % 10_000) as f64,
+        delta_byte_ns: g.f64_unit(),
+    }
+}
+
+fn random_est(g: &mut Gen) -> WorkEstimate {
+    WorkEstimate {
+        total_work_ns: 1_000.0 + (g.u64() % 10_000_000_000) as f64,
+        parallel_fraction: 0.5 + 0.5 * g.f64_unit(),
+        dist_bytes: g.u64() % (64 << 20),
+    }
+}
+
+#[test]
+fn prop_predictions_bounded_below_by_critical_path() {
+    forall(Config::default().cases(150), "T_par ≥ serial_part + par/tasks-wave", |g| {
+        let params = random_params(g);
+        let est = random_est(g);
+        let p = 1 + g.usize_in(1..32);
+        let tasks = 1 + g.usize_in(1..256);
+        let t = model::predict_parallel_ns(&params, &est, p, tasks);
+        let floor = est.total_work_ns * (1.0 - est.parallel_fraction)
+            + est.total_work_ns * est.parallel_fraction / p.min(tasks) as f64;
+        ensure(t + 1e-6 >= floor, || format!("t {t} < floor {floor}"))
+    });
+}
+
+#[test]
+fn prop_best_grain_is_argmin_over_sweep() {
+    forall(Config::default().cases(80), "best_grain ≤ every swept candidate", |g| {
+        let params = random_params(g);
+        let est = random_est(g);
+        let p = 1 + g.usize_in(1..16);
+        let (_, best) = model::best_grain(&params, &est, p, 64 * p);
+        let mut t = p;
+        while t <= 64 * p {
+            let cand = model::predict_parallel_ns(&params, &est, p, t);
+            ensure(best <= cand + 1e-9, || format!("best {best} > candidate {cand} at t={t}"))?;
+            t *= 2;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_manager_parallel_only_when_prediction_wins() {
+    forall(Config::default().cases(120), "decision consistent with model", |g| {
+        let params = random_params(g);
+        let cores = 1 + g.usize_in(1..16);
+        let mgr = Manager::new(params, cores);
+        let est = random_est(g);
+        match mgr.decide(&est) {
+            ohm::overhead::Decision::Parallel { predicted_ns, predicted_serial_ns, .. } => {
+                ensure(predicted_ns < predicted_serial_ns, || "parallel chosen but predicted slower".into())
+            }
+            ohm::overhead::Decision::Serial { predicted_ns } => {
+                ensure((predicted_ns - est.total_work_ns).abs() < 1e-6, || "serial prediction wrong".into())
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_cutoff_separates_decisions() {
+    forall(Config::default().cases(30), "cutoff is a separator", |g| {
+        let params = random_params(g);
+        let cores = 2 + g.usize_in(0..14);
+        let mgr = Manager::new(params, cores);
+        let cut = mgr.serial_cutoff_ns(1.0, 1e13);
+        if cut >= 1e13 * 0.99 {
+            return Ok(()); // machine never profits from parallelism here
+        }
+        let below = mgr.decide(&WorkEstimate::fully_parallel(cut * 0.5, 0));
+        let above = mgr.decide(&WorkEstimate::fully_parallel(cut * 4.0, 0));
+        ensure(!below.is_parallel(), || format!("below cutoff {cut} went parallel"))?;
+        ensure(above.is_parallel(), || format!("above cutoff {cut} stayed serial"))
+    });
+}
+
+#[test]
+fn prop_amdahl_ideal_is_upper_bound() {
+    forall(Config::default().cases(120), "adjusted ≤ ideal", |g| {
+        let params = random_params(g);
+        let est = random_est(g);
+        let p = 1 + g.usize_in(1..32);
+        let ideal = amdahl::ideal_speedup(est.parallel_fraction, p);
+        let adj = amdahl::adjusted_speedup(&params, &est, p);
+        ensure(adj <= ideal + 1e-9, || format!("adjusted {adj} > ideal {ideal}"))?;
+        ensure(adj > 0.0, || "non-positive speedup".into())
+    });
+}
+
+#[test]
+fn prop_charge_additive_over_merged_ledgers() {
+    forall(Config::default().cases(100), "charge(a ⊕ b) = charge(a)+charge(b)", |g| {
+        let params = random_params(g);
+        let mk = |g: &mut Gen| ohm::overhead::Ledger {
+            spawns: g.u64() % 1000,
+            syncs: g.u64() % 1000,
+            messages: g.u64() % 1000,
+            bytes: g.u64() % 1_000_000,
+            compute_ns: 0,
+            idle_ns: 0,
+        };
+        let a = mk(g);
+        let b = mk(g);
+        let lhs = params.charge(&a.merged(&b));
+        let rhs = params.charge(&a) + params.charge(&b);
+        ensure((lhs - rhs).abs() < 1e-6 * rhs.max(1.0), || format!("{lhs} vs {rhs}"))
+    });
+}
+
+#[test]
+fn prop_ideal_params_give_zero_charge() {
+    forall(Config::default().cases(50), "ideal machine charges nothing", |g| {
+        let l = ohm::overhead::Ledger {
+            spawns: g.u64() % 1000,
+            syncs: g.u64() % 1000,
+            messages: g.u64() % 1000,
+            bytes: g.u64() % 1_000_000,
+            compute_ns: 0,
+            idle_ns: 0,
+        };
+        ensure(OverheadParams::ideal().charge(&l) == 0.0, || "nonzero charge".into())
+    });
+}

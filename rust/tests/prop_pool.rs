@@ -1,0 +1,123 @@
+//! Property tests: the work-stealing pool computes exactly what serial
+//! execution computes, under arbitrary fork trees and spawn patterns.
+
+use ohm::pool::ThreadPool;
+use ohm::prop::{ensure, forall, Config};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Deterministic "work" function.
+fn mix(x: u64) -> u64 {
+    x.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(31)
+}
+
+/// Recursive fork-join reduction over a slice via join.
+fn pool_reduce(pool: &ThreadPool, xs: &[u64], grain: usize) -> u64 {
+    if xs.len() <= grain {
+        return xs.iter().copied().map(mix).fold(0u64, u64::wrapping_add);
+    }
+    let (l, r) = xs.split_at(xs.len() / 2);
+    let (a, b) = pool.join(|| pool_reduce(pool, l, grain), || pool_reduce(pool, r, grain));
+    a.wrapping_add(b)
+}
+
+#[test]
+fn prop_join_reduction_matches_serial() {
+    let pools: Vec<ThreadPool> = [1, 2, 4].iter().map(|&t| ThreadPool::new(t)).collect();
+    forall(Config::default().cases(40), "join reduction == serial", |g| {
+        let n = g.usize_in(0..20_000);
+        let xs: Vec<u64> = (0..n).map(|i| g.u64() ^ i as u64).collect();
+        let want = xs.iter().copied().map(mix).fold(0u64, u64::wrapping_add);
+        let grain = 1 + g.usize_in(1..512);
+        let pool = g.choose(&pools);
+        let got = pool_reduce(pool, &xs, grain);
+        ensure(got == want, || format!("n={n} grain={grain} threads={}", pool.threads()))
+    });
+}
+
+#[test]
+fn prop_scope_runs_every_task_exactly_once() {
+    let pool = ThreadPool::new(4);
+    forall(Config::default().cases(40), "scope exactly-once", |g| {
+        let n = g.usize_in(0..300);
+        let counters: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.scope(|s| {
+            for c in &counters {
+                s.spawn(move |_| {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        });
+        for (i, c) in counters.iter().enumerate() {
+            ensure(c.load(Ordering::SeqCst) == 1, || format!("task {i} ran {} times", c.load(Ordering::SeqCst)))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scope_disjoint_chunk_writes() {
+    let pool = ThreadPool::new(3);
+    forall(Config::default().cases(30), "disjoint chunk writes", |g| {
+        let n = 1 + g.usize_in(1..5000);
+        let chunk = 1 + g.usize_in(1..200);
+        let mut data = vec![0u64; n];
+        {
+            let chunks: Vec<(usize, &mut [u64])> = data.chunks_mut(chunk).enumerate().collect();
+            pool.scope(|s| {
+                for (ci, slice) in chunks {
+                    s.spawn(move |_| {
+                        for (i, v) in slice.iter_mut().enumerate() {
+                            *v = mix((ci * 1_000_000 + i) as u64);
+                        }
+                    });
+                }
+            });
+        }
+        for (idx, v) in data.iter().enumerate() {
+            let (ci, i) = (idx / chunk, idx % chunk);
+            ensure(*v == mix((ci * 1_000_000 + i) as u64), || format!("cell {idx} corrupted"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_metrics_conserved_at_quiescence() {
+    forall(Config::default().cases(15), "spawned+injected == executed", |g| {
+        let pool = ThreadPool::new(1 + g.usize_in(1..4));
+        let tasks = g.usize_in(0..500);
+        pool.for_each_index(tasks, |_| {
+            std::hint::black_box(0);
+        });
+        let m = pool.metrics();
+        ensure(m.spawns + m.injected == m.executed, || format!("{m:?}"))
+    });
+}
+
+#[test]
+fn prop_nested_scopes_and_joins_compose() {
+    let pool = ThreadPool::new(4);
+    forall(Config::default().cases(20), "nested structured parallelism", |g| {
+        let width = 1 + g.usize_in(1..8);
+        let depth_budget = 1 + g.usize_in(1..64);
+        let total = AtomicU64::new(0);
+        let pool_ref = &pool;
+        pool.scope(|s| {
+            for _ in 0..width {
+                let total = &total;
+                s.spawn(move |_| {
+                    // join nested inside a scope task, on the same pool.
+                    let xs: Vec<u64> = (0..depth_budget as u64).collect();
+                    let v = pool_reduce(pool_ref, &xs, 8);
+                    total.fetch_add(v, Ordering::SeqCst);
+                });
+            }
+        });
+        let want: u64 = {
+            let xs: Vec<u64> = (0..depth_budget as u64).collect();
+            let one = xs.iter().copied().map(mix).fold(0u64, u64::wrapping_add);
+            (0..width).fold(0u64, |acc, _| acc.wrapping_add(one))
+        };
+        ensure(total.load(Ordering::SeqCst) == want, || "nested mismatch".into())
+    });
+}

@@ -1,0 +1,133 @@
+//! Property tests: simulator invariants (virtual time, conservation,
+//! determinism) over random series-parallel trees.
+
+use ohm::overhead::OverheadParams;
+use ohm::prop::{ensure, forall, Config, Gen};
+use ohm::sim::{Machine, Node, SimCtx};
+
+/// Generate a random series-parallel tree via the recorder.
+fn random_tree(g: &mut Gen, depth: usize) -> Node {
+    fn build(g: &mut Gen, ctx: &mut SimCtx, depth: usize) {
+        let parts = 1 + g.usize_in(1..4);
+        for _ in 0..parts {
+            if depth > 0 && g.bool() {
+                let k = 2 + g.usize_in(0..3);
+                let inputs: Vec<((), u64)> =
+                    (0..k).map(|_| ((), g.u64() % 4096)).collect();
+                ctx.fork_each(inputs, |_, cc| build(g, cc, depth - 1));
+            } else {
+                ctx.work(1.0 + (g.u64() % 100_000) as f64, "w");
+            }
+        }
+    }
+    let mut ctx = SimCtx::new();
+    build(g, &mut ctx, depth);
+    ctx.into_node()
+}
+
+#[test]
+fn prop_makespan_bounds() {
+    forall(Config::default().cases(80), "span ≤ makespan ≤ serial + charge", |g| {
+        let tree = random_tree(g, 3);
+        let cores = 1 + g.usize_in(1..16);
+        let params = OverheadParams::paper_2022();
+        let m = Machine::new(cores, params);
+        let rep = m.run(&tree, false);
+        let span = tree.span_ns();
+        let serial = tree.total_work_ns();
+        let charge = params.charge(&rep.ledger);
+        ensure(rep.makespan_ns + 1e-6 >= span, || format!("makespan {} < span {span}", rep.makespan_ns))?;
+        ensure(rep.makespan_ns + 1e-6 >= serial / cores as f64, || "beat perfect speedup".into())?;
+        ensure(
+            rep.makespan_ns <= serial + charge + 1e-6,
+            || format!("makespan {} > serial {serial} + charge {charge}", rep.makespan_ns),
+        )
+    });
+}
+
+#[test]
+fn prop_conservation_busy_plus_idle() {
+    forall(Config::default().cases(60), "busy + idle = cores × makespan", |g| {
+        let tree = random_tree(g, 2);
+        let cores = 1 + g.usize_in(1..8);
+        let rep = Machine::new(cores, OverheadParams::paper_2022()).run(&tree, false);
+        let rect = rep.makespan_ns * cores as f64;
+        let busy: f64 = rep.core_busy_ns.iter().sum();
+        let lhs = busy + rep.ledger.idle_ns as f64;
+        ensure((lhs - rect).abs() <= rect.max(1.0) * 1e-6 + 2.0, || format!("{lhs} vs {rect}"))
+    });
+}
+
+#[test]
+fn prop_deterministic_replay() {
+    forall(Config::default().cases(40), "identical runs", |g| {
+        let tree = random_tree(g, 3);
+        let cores = 1 + g.usize_in(1..8);
+        let m = Machine::new(cores, OverheadParams::paper_2022());
+        let a = m.run(&tree, true);
+        let b = m.run(&tree, true);
+        ensure(a.makespan_ns == b.makespan_ns, || "makespan differs".into())?;
+        ensure(a.ledger == b.ledger, || "ledger differs".into())?;
+        ensure(a.core_busy_ns == b.core_busy_ns, || "busy differs".into())
+    });
+}
+
+#[test]
+fn prop_serial_run_on_one_ideal_core_equals_work() {
+    forall(Config::default().cases(50), "1 ideal core = total work", |g| {
+        let tree = random_tree(g, 2);
+        let rep = Machine::new(1, OverheadParams::ideal()).run(&tree, false);
+        let serial = tree.total_work_ns();
+        ensure(
+            (rep.makespan_ns - serial).abs() <= serial.max(1.0) * 1e-9,
+            || format!("{} vs {serial}", rep.makespan_ns),
+        )
+    });
+}
+
+#[test]
+fn prop_ideal_machine_cores_monotone() {
+    forall(Config::default().cases(30), "ideal cores monotone", |g| {
+        let tree = random_tree(g, 3);
+        let mut prev = f64::INFINITY;
+        for cores in [1usize, 2, 4, 8, 16] {
+            let rep = Machine::new(cores, OverheadParams::ideal()).run(&tree, false);
+            ensure(rep.makespan_ns <= prev + 1e-6, || format!("p={cores} worse: {} > {prev}", rep.makespan_ns))?;
+            prev = rep.makespan_ns;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spawn_counts_match_tree() {
+    forall(Config::default().cases(50), "ledger spawns == tree spawns", |g| {
+        let tree = random_tree(g, 3);
+        let rep = Machine::new(4, OverheadParams::paper_2022()).run(&tree, false);
+        ensure(rep.ledger.spawns == tree.spawn_count(), || {
+            format!("ledger {} vs tree {}", rep.ledger.spawns, tree.spawn_count())
+        })?;
+        ensure(rep.ledger.syncs == tree.spawn_count(), || "β per joining task".into())
+    });
+}
+
+#[test]
+fn prop_overhead_params_scale_makespan() {
+    // Doubling every overhead constant can only increase the makespan.
+    forall(Config::default().cases(40), "params monotone", |g| {
+        let tree = random_tree(g, 3);
+        let cores = 2 + g.usize_in(0..6);
+        let p1 = OverheadParams::paper_2022();
+        let p2 = OverheadParams {
+            alpha_spawn_ns: p1.alpha_spawn_ns * 2.0,
+            beta_sync_ns: p1.beta_sync_ns * 2.0,
+            gamma_msg_ns: p1.gamma_msg_ns * 2.0,
+            delta_byte_ns: p1.delta_byte_ns * 2.0,
+        };
+        let a = Machine::new(cores, p1).run(&tree, false);
+        let b = Machine::new(cores, p2).run(&tree, false);
+        ensure(b.makespan_ns + 1e-6 >= a.makespan_ns, || {
+            format!("double overheads got faster: {} < {}", b.makespan_ns, a.makespan_ns)
+        })
+    });
+}

@@ -1,0 +1,140 @@
+//! Property tests: sorting invariants across strategies, engines and
+//! baselines (in-repo `prop` framework; see DESIGN.md §7).
+
+use ohm::exec::ExecCtx;
+use ohm::overhead::OverheadParams;
+use ohm::prop::{ensure, forall, Config};
+use ohm::sort::{
+    baselines, is_permutation, is_sorted, parallel::run_with_model, parallel_quicksort,
+    serial_quicksort, PivotStrategy, SortCostModel,
+};
+
+const STRATEGIES: [PivotStrategy; 5] = [
+    PivotStrategy::Left,
+    PivotStrategy::Mean,
+    PivotStrategy::Right,
+    PivotStrategy::Random,
+    PivotStrategy::MedianOf3,
+];
+
+#[test]
+fn prop_serial_quicksort_sorts_any_input() {
+    forall(Config::default().cases(120), "serial quicksort sorts", |g| {
+        let orig = g.vec_i64(0..400, -1000..1000);
+        let strategy = *g.choose(&STRATEGIES);
+        let seed = g.u64();
+        let mut xs = orig.clone();
+        serial_quicksort(&mut xs, strategy, seed);
+        ensure(is_sorted(&xs), || format!("{strategy:?} unsorted on {orig:?}"))?;
+        ensure(is_permutation(&xs, &orig), || format!("{strategy:?} lost elements"))
+    });
+}
+
+#[test]
+fn prop_threaded_equals_serial_result() {
+    let ctx = ExecCtx::threaded(3);
+    forall(Config::default().cases(40), "threaded sort == serial sort", |g| {
+        let orig = g.vec_i64(0..3000, -500..500);
+        let strategy = *g.choose(&STRATEGIES);
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        serial_quicksort(&mut a, strategy, 1);
+        parallel_quicksort(&mut b, strategy, &ctx);
+        ensure(a == b, || format!("diverged on len {}", orig.len()))
+    });
+}
+
+#[test]
+fn prop_simulated_sorts_and_ledger_consistent() {
+    forall(Config::default().cases(40), "sim sort invariants", |g| {
+        let orig = g.vec_i64(2..4000, -10_000..10_000);
+        let strategy = *g.choose(&STRATEGIES);
+        let cores = 1 + g.usize_in(1..8);
+        let ctx = ExecCtx::simulated(cores, OverheadParams::paper_2022());
+        let model = SortCostModel::paper_2022();
+        let mut xs = orig.clone();
+        let rep = run_with_model(&mut xs, strategy, &ctx, &model, g.u64());
+        ensure(is_sorted(&xs), || "unsorted".into())?;
+        let v = rep.virtual_ns.unwrap();
+        let s = rep.serial_equiv_ns.unwrap();
+        // Makespan bounded below by serial/cores and above by
+        // serial + total charged overhead.
+        let charge = OverheadParams::paper_2022().charge(&rep.ledger);
+        ensure(v >= s / cores as f64 - 1e-6, || format!("v {v} < s/p {}", s / cores as f64))?;
+        ensure(v <= s + charge + 1e-6, || format!("v {v} > s+charge {}", s + charge))?;
+        // Spawn accounting: binary forks come in pairs.
+        ensure(rep.ledger.spawns % 2 == 0, || format!("odd spawns {}", rep.ledger.spawns))
+    });
+}
+
+#[test]
+fn prop_mergesort_samplesort_bitonic_agree_with_std() {
+    forall(Config::default().cases(60), "baseline sorters agree", |g| {
+        let orig = g.vec_i64(0..1500, -300..300);
+        let mut want = orig.clone();
+        want.sort_unstable();
+        let mut m = orig.clone();
+        baselines::mergesort(&mut m);
+        ensure(m == want, || "mergesort diverged".into())?;
+        let mut s = orig.clone();
+        baselines::samplesort(&mut s, 1 + g.usize_in(1..16), None, g.u64());
+        ensure(s == want, || "samplesort diverged".into())?;
+        let mut bt = orig.clone();
+        baselines::bitonic(&mut bt);
+        ensure(bt == want, || "bitonic diverged".into())
+    });
+}
+
+#[test]
+fn prop_more_cores_never_slower_without_comm_costs() {
+    // With γ = δ = 0 (no communication), the greedy schedule is
+    // work-conserving: more cores never lose more than a scheduling
+    // anomaly's worth (Graham's bound allows small non-monotonicity for
+    // list scheduling with dependencies — we allow 10%), and every
+    // parallel schedule beats the 1-core schedule of the same tree.
+    let params = OverheadParams {
+        gamma_msg_ns: 0.0,
+        delta_byte_ns: 0.0,
+        ..OverheadParams::paper_2022()
+    };
+    forall(Config::default().cases(25), "cores near-monotone (no comm)", |g| {
+        let orig = g.vec_i64(64..2000, -500..500);
+        let seed = g.u64();
+        // Fix the fork tree (explicit cutoff) so only the machine varies;
+        // letting the manager re-plan per core count would legitimately
+        // produce deeper trees with more α/β — the paper's very point.
+        let cutoff = 64 + g.usize_in(0..256);
+        let model = SortCostModel::paper_2022();
+        let run = |cores: usize| {
+            let machine = ohm::sim::Machine::new(cores, params);
+            let mut xs = orig.clone();
+            ohm::sort::parallel::simulate_with_cutoff(&mut xs, PivotStrategy::Mean, cutoff, seed, &model, &machine)
+                .makespan_ns
+        };
+        let one_core = run(1);
+        let mut prev = f64::INFINITY;
+        for cores in [2usize, 4, 8] {
+            let v = run(cores);
+            ensure(v <= one_core * 1.001, || format!("cores={cores}: {v} > serial {one_core}"))?;
+            ensure(v <= prev * 1.10, || format!("cores={cores}: {v} ≫ {prev} (beyond anomaly bound)"))?;
+            prev = v;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_monotone_in_ops() {
+    forall(Config::default().cases(80), "cost monotone", |g| {
+        let model = SortCostModel::paper_2022();
+        let base = ohm::sort::OpCounts {
+            comparisons: g.u64() % 10_000,
+            swaps: g.u64() % 10_000,
+            scan_ops: g.u64() % 10_000,
+            rng_calls: g.u64() % 100,
+        };
+        let mut bigger = base;
+        bigger.comparisons += 1 + g.u64() % 100;
+        ensure(model.cost_ns(&bigger) > model.cost_ns(&base), || "not monotone".into())
+    });
+}
