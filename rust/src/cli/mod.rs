@@ -6,7 +6,10 @@
 //!            [--algo strassen [--cutoff C]]
 //! ohm sort --n N [--pivot left|mean|right|random|median3] [--engine ...]
 //! ohm serve [--jobs N] [--threads N] [--no-xla] [--seed S]
-//!           [--listen ADDR [--conns N]]   # TCP line-protocol front end
+//!           [--listen ADDR [--conns N] [--serve-threads N] [--queue-depth N]
+//!            [--batch-max N] [--batch-linger-us U] [--config F]]
+//!           # TCP front end: concurrent readers, bounded admission queue
+//!           # (overflow → ERR BUSY), cross-connection shape batching
 //! ohm calibrate [--budget-ms N]
 //! ohm gantt (--matmul N | --sort N) [--cores N]
 //! ohm artifacts [--dir D]
@@ -38,7 +41,11 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|calibrate|gantt|ar
   matmul --n N          run one overhead-managed matmul
   sort --n N            run one overhead-managed quicksort
   serve                 run a job trace through the coordinator
-                        (--listen ADDR for the TCP front end)
+                        (--listen ADDR for the concurrent TCP front end;
+                         --serve-threads N reader threads, --queue-depth N
+                         admission bound → ERR BUSY past it, --batch-max /
+                         --batch-linger-us shape-batch formation,
+                         --config F reads a [serving] section)
   calibrate             probe host overhead constants
   gantt                 render a simulated schedule
   artifacts             list AOT artifacts\n";
@@ -188,12 +195,37 @@ fn cmd_sort(args: &Args) -> Result<String> {
 
 fn cmd_serve(args: &Args) -> Result<String> {
     if let Some(addr) = args.get("listen") {
-        // TCP serving mode: line protocol (see coordinator::server).
+        // TCP serving mode: line protocol behind the admission-controlled
+        // serving layer (see coordinator::server for the threading model).
+        let mut serving = match args.get("config") {
+            Some(path) => crate::config::ServingConfig::load(Path::new(path))?,
+            None => crate::config::ServingConfig::default(),
+        };
+        if let Some(v) = args.get_parsed::<usize>("serve-threads")? {
+            serving.serve_threads = v.max(1);
+        }
+        if let Some(v) = args.get_parsed::<usize>("queue-depth")? {
+            serving.queue_depth = v.max(1);
+        }
+        if let Some(v) = args.get_parsed::<usize>("batch-max")? {
+            serving.batch_max = v.max(1);
+        }
+        if let Some(v) = args.get_parsed::<u64>("batch-linger-us")? {
+            serving.batch_linger_us = v;
+        }
         let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
         let conns = args.get_parsed::<usize>("conns")?;
+        let mut cfg = CoordinatorCfg { threads, ..Default::default() };
+        serving.apply(&mut cfg);
         let server = crate::coordinator::server::Server::bind(addr)?;
-        eprintln!("ohm serving on {}", server.local_addr());
-        server.serve(CoordinatorCfg { threads, ..Default::default() }, conns)?;
+        eprintln!(
+            "ohm serving on {} ({} reader threads, queue depth {}, batch ≤{})",
+            server.local_addr(),
+            cfg.serve_threads,
+            cfg.queue_depth,
+            cfg.batch_max,
+        );
+        server.serve(cfg, conns)?;
         return Ok(format!("server on {} finished\n", server.local_addr()));
     }
     let jobs = args.get_parsed::<usize>("jobs")?.unwrap_or(50);
@@ -324,6 +356,12 @@ mod tests {
     fn calibrate_fast_budget() {
         let out = call(&["calibrate", "--budget-ms", "50"]).unwrap();
         assert!(out.contains("α spawn"));
+    }
+
+    #[test]
+    fn serve_listen_rejects_malformed_flags_before_binding() {
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--queue-depth", "abc"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--serve-threads", "x"]).is_err());
     }
 
     #[test]

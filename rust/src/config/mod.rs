@@ -211,6 +211,72 @@ impl ExperimentConfig {
     }
 }
 
+/// Serving-layer configuration (`[serving]` section): the admission queue
+/// and reader pool behind `ohm serve --listen`. Defaults mirror
+/// [`CoordinatorCfg::default`](crate::coordinator::CoordinatorCfg).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    /// Connection reader threads.
+    pub serve_threads: usize,
+    /// Admission-queue depth; requests past it answer `ERR BUSY`.
+    pub queue_depth: usize,
+    /// Maximum cross-connection shape-batch width.
+    pub batch_max: usize,
+    /// Batch-formation window after the first job of a batch, µs.
+    pub batch_linger_us: u64,
+}
+
+impl Default for ServingConfig {
+    /// Derived from [`CoordinatorCfg::default`](crate::coordinator::CoordinatorCfg)
+    /// so the serving defaults live in exactly one place.
+    fn default() -> Self {
+        let c = crate::coordinator::CoordinatorCfg::default();
+        ServingConfig {
+            serve_threads: c.serve_threads,
+            queue_depth: c.queue_depth,
+            batch_max: c.batch_max,
+            batch_linger_us: c.batch_linger_us,
+        }
+    }
+}
+
+impl ServingConfig {
+    /// Load from a TOML-subset file ([serving] section); missing keys
+    /// keep their defaults.
+    pub fn load(path: &Path) -> Result<ServingConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_table(&parse(&text)?)
+    }
+
+    pub fn from_table(t: &Table) -> Result<ServingConfig> {
+        let mut cfg = ServingConfig::default();
+        if let Some(sec) = t.get("serving") {
+            if let Some(v) = sec.get("serve_threads") {
+                cfg.serve_threads = v.as_usize().context("serve_threads")?.max(1);
+            }
+            if let Some(v) = sec.get("queue_depth") {
+                cfg.queue_depth = v.as_usize().context("queue_depth")?.max(1);
+            }
+            if let Some(v) = sec.get("batch_max") {
+                cfg.batch_max = v.as_usize().context("batch_max")?.max(1);
+            }
+            if let Some(v) = sec.get("batch_linger_us") {
+                cfg.batch_linger_us = v.as_usize().context("batch_linger_us")? as u64;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Copy the serving fields onto a coordinator configuration.
+    pub fn apply(&self, cfg: &mut crate::coordinator::CoordinatorCfg) {
+        cfg.serve_threads = self.serve_threads;
+        cfg.queue_depth = self.queue_depth;
+        cfg.batch_max = self.batch_max;
+        cfg.batch_linger_us = self.batch_linger_us;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -258,6 +324,33 @@ flag = true
         assert_eq!(c.cores, 16);
         assert_eq!(c.sort_sizes, vec![100, 200]);
         assert_eq!(c.matmul_orders, d.matmul_orders, "unset keys keep defaults");
+    }
+
+    #[test]
+    fn serving_defaults_and_overrides() {
+        let d = ServingConfig::default();
+        assert_eq!((d.serve_threads, d.queue_depth, d.batch_max, d.batch_linger_us), (4, 64, 16, 0));
+        let t = parse("[serving]\nserve_threads = 8\nqueue_depth = 2\nbatch_linger_us = 500\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.serve_threads, 8);
+        assert_eq!(c.queue_depth, 2);
+        assert_eq!(c.batch_max, d.batch_max, "unset keys keep defaults");
+        assert_eq!(c.batch_linger_us, 500);
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert_eq!(coord.serve_threads, 8);
+        assert_eq!(coord.queue_depth, 2);
+        assert_eq!(coord.batch_linger_us, 500);
+    }
+
+    #[test]
+    fn serving_defaults_match_coordinator_cfg() {
+        let s = ServingConfig::default();
+        let c = crate::coordinator::CoordinatorCfg::default();
+        assert_eq!(
+            (s.serve_threads, s.queue_depth, s.batch_max, s.batch_linger_us),
+            (c.serve_threads, c.queue_depth, c.batch_max, c.batch_linger_us),
+        );
     }
 
     #[test]

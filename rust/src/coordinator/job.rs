@@ -53,6 +53,9 @@ pub struct JobResult {
     pub engine: RoutedEngine,
     /// Wall-clock service time, µs.
     pub service_us: f64,
+    /// Time spent waiting in the serving admission queue, µs (0 for
+    /// direct submissions that never queue).
+    pub queue_us: f64,
     /// Checksum of the output (cross-engine sanity).
     pub checksum: f64,
     pub ok: bool,

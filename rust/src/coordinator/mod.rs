@@ -13,12 +13,21 @@
 //! amortizing executable lookup and decision-making (and, on a warm
 //! cache, skipping recompilation entirely) — the coordinator-level
 //! analogue of the paper's "don't pay setup costs per work item".
+//!
+//! The TCP front end ([`server`]) puts a concurrent, admission-controlled
+//! serving layer in front of this: reader threads feed a bounded
+//! [`queue::BoundedQueue`] (overflow ⇒ `ERR BUSY`) drained by a dispatcher
+//! that extends shape-batching **across connections**. Queue wait, batch
+//! width, and rejections are tracked as first-class overhead categories in
+//! [`Telemetry`] and the serving [`Ledger`](crate::overhead::Ledger).
 
 pub mod job;
+pub mod queue;
 pub mod server;
 pub mod telemetry;
 
 pub use job::{Job, JobResult, RoutedEngine};
+pub use queue::BoundedQueue;
 pub use telemetry::Telemetry;
 
 use crate::dla::matmul;
@@ -30,7 +39,7 @@ use crate::util::Stopwatch;
 use crate::workload::traces::{TraceJob, TraceKind};
 use crate::workload::{arrays, matrices};
 
-/// Coordinator configuration.
+/// Coordinator configuration (execution policy + serving layer).
 #[derive(Debug, Clone)]
 pub struct CoordinatorCfg {
     /// Worker threads for the CPU-parallel engine.
@@ -39,11 +48,29 @@ pub struct CoordinatorCfg {
     pub xla_sort: bool,
     /// Pivot strategy for CPU sorts.
     pub pivot: PivotStrategy,
+    /// Serving layer: connection reader threads (`--serve-threads`).
+    pub serve_threads: usize,
+    /// Serving layer: admission-queue depth; pushes beyond this answer
+    /// `ERR BUSY` (`--queue-depth`).
+    pub queue_depth: usize,
+    /// Serving layer: maximum cross-connection shape-batch width.
+    pub batch_max: usize,
+    /// Serving layer: batch-formation window after the first job of a
+    /// batch is popped, in µs (0 = dispatch immediately).
+    pub batch_linger_us: u64,
 }
 
 impl Default for CoordinatorCfg {
     fn default() -> Self {
-        CoordinatorCfg { threads: 4, xla_sort: true, pivot: PivotStrategy::Mean }
+        CoordinatorCfg {
+            threads: 4,
+            xla_sort: true,
+            pivot: PivotStrategy::Mean,
+            serve_threads: 4,
+            queue_depth: 64,
+            batch_max: 16,
+            batch_linger_us: 0,
+        }
     }
 }
 
@@ -88,7 +115,7 @@ impl Coordinator {
     pub fn submit(&mut self, kind: TraceKind, seed: u64) -> JobResult {
         let job = Job { id: self.next_id, kind, seed, arrival_us: 0 };
         self.next_id += 1;
-        let r = self.execute(&job);
+        let r = self.execute_job(&job);
         self.telemetry.record(&r);
         r
     }
@@ -108,7 +135,7 @@ impl Coordinator {
             for t in &trace[i..j] {
                 let job = Job::from_trace(self.next_id, t);
                 self.next_id += 1;
-                let r = self.execute(&job);
+                let r = self.execute_job(&job);
                 self.telemetry.record(&r);
                 results.push(r);
             }
@@ -117,7 +144,10 @@ impl Coordinator {
         results
     }
 
-    fn execute(&self, job: &Job) -> JobResult {
+    /// Route and execute one job (no telemetry side effects). Takes
+    /// `&self`: the serving dispatcher calls this for every queued job
+    /// and records telemetry itself (with queue wait filled in).
+    pub fn execute_job(&self, job: &Job) -> JobResult {
         let engine = self.route(&job.kind);
         let sw = Stopwatch::start();
         let (checksum, ok) = match (&job.kind, engine) {
@@ -157,6 +187,7 @@ impl Coordinator {
             shape_key: job.shape_key(),
             engine,
             service_us: sw.elapsed_ns() as f64 / 1e3,
+            queue_us: 0.0,
             checksum,
             ok,
         }

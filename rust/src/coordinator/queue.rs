@@ -1,0 +1,276 @@
+//! Bounded MPMC job queue with admission control — the serving layer's
+//! backpressure substrate.
+//!
+//! The paper's thesis applied to serving: the handoff between connection
+//! readers and the dispatcher is a synchronization point, and if it is
+//! unbounded the queueing overhead it hides "later surfaces at execution
+//! time" as unbounded latency. So admission is explicit: [`try_push`] is
+//! non-blocking and **rejects** once the configured depth is reached (the
+//! server answers `ERR BUSY`), keeping queue wait — a first-class overhead
+//! category in [`super::Telemetry`] — bounded by design.
+//!
+//! Implementation: `Mutex<VecDeque>` + condvar. Multiple producers
+//! (connection reader threads) and multiple consumers are supported;
+//! [`pop_batch`] additionally drains a consecutive same-key run from the
+//! queue head so the dispatcher can extend shape-batching *across*
+//! connections while preserving global FIFO order.
+//!
+//! [`try_push`]: BoundedQueue::try_push
+//! [`pop_batch`]: BoundedQueue::pop_batch
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// A bounded multi-producer multi-consumer FIFO queue.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    depth: usize,
+    closed: bool,
+    /// High-water mark of occupancy (telemetry; never exceeds `depth`).
+    max_len: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue admitting at most `depth` queued items (min 1).
+    pub fn new(depth: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                depth: depth.max(1),
+                closed: false,
+                max_len: 0,
+            }),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Configured admission bound.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().depth
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// High-water mark of occupancy observed so far.
+    pub fn max_len(&self) -> usize {
+        self.inner.lock().unwrap().max_len
+    }
+
+    /// True once [`close`](BoundedQueue::close) has been called. Lets the
+    /// server distinguish "full" (back off and retry: `ERR BUSY`) from
+    /// "shutting down / dispatcher gone" when a push is refused.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Admission control: non-blocking push. Returns the item back when
+    /// the queue is at depth (or closed) — the caller turns that into
+    /// backpressure (`ERR BUSY`) instead of queueing unboundedly.
+    /// Rejection *counting* is the caller's concern (the server records it
+    /// in `Telemetry`), so there is exactly one authoritative counter.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.items.len() >= g.depth {
+            return Err(item);
+        }
+        g.items.push_back(item);
+        if g.items.len() > g.max_len {
+            g.max_len = g.items.len();
+        }
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: waits for an item; returns `None` once the queue is
+    /// closed *and* drained (close is graceful — queued work completes).
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop a shape batch: block for the first item, optionally linger up
+    /// to `linger` to let a batch form, then drain up to `max - 1` further
+    /// items from the head while `same(first, item)` holds. Draining stops
+    /// at the first key mismatch, so global FIFO order is preserved and a
+    /// batch is always a consecutive same-key run. Returns an empty vec
+    /// only when the queue is closed and drained.
+    ///
+    /// The linger is interruptible: it ends early as soon as the batch
+    /// cannot grow further — the head run reaches `max`, a different-key
+    /// item blocks the head (FIFO means later same-key arrivals queue
+    /// behind it), the queue is full (admission control rejects anything
+    /// that could have joined), or the queue closes.
+    pub fn pop_batch(
+        &self,
+        max: usize,
+        linger: Duration,
+        same: impl Fn(&T, &T) -> bool,
+    ) -> Vec<T> {
+        let first = match self.pop() {
+            Some(item) => item,
+            None => return Vec::new(),
+        };
+        let max = max.max(1);
+        let mut batch = vec![first];
+        let mut g = self.inner.lock().unwrap();
+        if !linger.is_zero() {
+            let deadline = Instant::now() + linger;
+            loop {
+                let head_run =
+                    g.items.iter().take_while(|item| same(&batch[0], *item)).count();
+                let batch_full = head_run + 1 >= max;
+                let blocked = head_run < g.items.len(); // mismatched key at/behind head
+                let queue_full = g.items.len() >= g.depth; // nothing new can be admitted
+                if g.closed || batch_full || blocked || queue_full {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                g = self.not_empty.wait_timeout(g, deadline - now).unwrap().0;
+            }
+        }
+        while batch.len() < max {
+            let take = match g.items.front() {
+                Some(item) => same(&batch[0], item),
+                None => false,
+            };
+            if !take {
+                break;
+            }
+            batch.push(g.items.pop_front().expect("front was Some"));
+        }
+        batch
+    }
+
+    /// Close the queue: wakes all blocked consumers; further pushes are
+    /// rejected; already-queued items still drain.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_and_admission_bound() {
+        let q = BoundedQueue::new(2);
+        assert_eq!(q.try_push(1), Ok(()));
+        assert_eq!(q.try_push(2), Ok(()));
+        assert_eq!(q.try_push(3), Err(3), "third push exceeds depth 2");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_push(4), Ok(()));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.max_len(), 2);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer_and_drains() {
+        let q = Arc::new(BoundedQueue::<u32>::new(4));
+        let q2 = Arc::clone(&q);
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = q2.pop() {
+                got.push(v);
+            }
+            got
+        });
+        q.try_push(7).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!q.is_closed());
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(consumer.join().unwrap(), vec![7]);
+        assert_eq!(q.try_push(8), Err(8), "closed queue rejects pushes");
+    }
+
+    #[test]
+    fn pop_batch_drains_consecutive_same_key_run() {
+        let q = BoundedQueue::new(8);
+        for item in [(1u8, 'a'), (1, 'b'), (1, 'c'), (2, 'd'), (1, 'e')] {
+            q.try_push(item).unwrap();
+        }
+        q.close();
+        let b1 = q.pop_batch(2, Duration::ZERO, |x, y| x.0 == y.0);
+        assert_eq!(b1, vec![(1, 'a'), (1, 'b')], "capped at max width");
+        let b2 = q.pop_batch(8, Duration::ZERO, |x, y| x.0 == y.0);
+        assert_eq!(b2, vec![(1, 'c')], "stops at the shape boundary");
+        let b3 = q.pop_batch(8, Duration::ZERO, |x, y| x.0 == y.0);
+        assert_eq!(b3, vec![(2, 'd')]);
+        let b4 = q.pop_batch(8, Duration::ZERO, |x, y| x.0 == y.0);
+        assert_eq!(b4, vec![(1, 'e')]);
+        assert!(q.pop_batch(8, Duration::ZERO, |x, y| x.0 == y.0).is_empty());
+    }
+
+    #[test]
+    fn linger_ends_early_when_queue_fills() {
+        // depth 2: pop_batch takes 'a' (len 1), then a producer fills the
+        // queue back to depth at ~40ms — admission control now rejects
+        // anything that could join, so the linger must end well before its
+        // 2s window instead of stalling on a batch that cannot grow.
+        let q = Arc::new(BoundedQueue::new(2));
+        q.try_push((1u8, 'a')).unwrap();
+        q.try_push((1u8, 'b')).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            q2.try_push((1u8, 'c')).unwrap();
+        });
+        let start = std::time::Instant::now();
+        let batch = q.pop_batch(8, Duration::from_millis(2_000), |x, y| x.0 == y.0);
+        producer.join().unwrap();
+        assert_eq!(batch, vec![(1, 'a'), (1, 'b'), (1, 'c')]);
+        assert!(
+            start.elapsed() < Duration::from_millis(1_500),
+            "full queue must cut the linger short, took {:?}",
+            start.elapsed()
+        );
+    }
+
+    #[test]
+    fn linger_lets_a_cross_producer_batch_form() {
+        let q = Arc::new(BoundedQueue::new(8));
+        q.try_push((1u8, 0u32)).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.try_push((1u8, 1u32)).unwrap();
+            q2.try_push((1u8, 2u32)).unwrap();
+        });
+        let batch = q.pop_batch(8, Duration::from_millis(200), |x, y| x.0 == y.0);
+        producer.join().unwrap();
+        assert_eq!(batch.len(), 3, "items arriving during the linger join the batch");
+    }
+}

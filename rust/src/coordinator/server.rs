@@ -1,27 +1,76 @@
 //! Line-protocol TCP front end for the coordinator — the serving shape
-//! of the framework (requests in, routed execution, latency out).
+//! of the framework (requests in, admission-controlled routed execution,
+//! latency out).
 //!
 //! Protocol (one request per line, ASCII):
 //!
 //! ```text
-//! MATMUL <n> [seed]      → OK MATMUL n=<n> engine=<e> us=<t> checksum=<c>
-//! SORT <n> [seed]        → OK SORT n=<n> engine=<e> us=<t> checksum=<c>
+//! MATMUL <n> [seed]      → OK MATMUL n=<n> engine=<e> us=<t> queue_us=<q> checksum=<c>
+//! SORT <n> [seed]        → OK SORT n=<n> engine=<e> us=<t> queue_us=<q> checksum=<c>
 //! STATS                  → multi-line telemetry table, terminated by "."
 //! PING                   → PONG
 //! QUIT                   → BYE (closes the connection)
 //! ```
 //!
 //! Unknown/malformed input answers `ERR <reason>` and keeps the
-//! connection open. One worker thread serves connections sequentially
-//! (the CPU pool underneath is already parallel); this is deliberately a
-//! *thin* request loop per DESIGN.md — the paper's contribution lives in
-//! the manager/policy, not in connection juggling.
+//! connection open; a request that arrives while the admission queue is
+//! at depth answers `ERR BUSY ...` (backpressure, not queueing).
+//!
+//! ## Threading model
+//!
+//! The serving layer manages its own overhead per the paper's thesis —
+//! every handoff is explicit, bounded, and measured:
+//!
+//! * the **accept loop** (caller thread) hands each connection to a pool
+//!   of `serve_threads` **reader threads**; a reader owns one connection
+//!   at a time and processes its lines in order;
+//! * `MATMUL`/`SORT` requests become [`Job`]s pushed onto a bounded
+//!   [`BoundedQueue`] (depth `queue_depth`). A full queue **rejects**
+//!   with `ERR BUSY` instead of absorbing unbounded latency;
+//! * a single **dispatcher thread** owns the [`Coordinator`] (and the XLA
+//!   runtime) and drains the queue in **shape batches** — consecutive
+//!   same-shape jobs, *across connections*, up to `batch_max` wide, with
+//!   an optional `batch_linger_us` formation window — amortizing routing
+//!   and executable lookup exactly like trace-mode batching;
+//! * each reader blocks on its job's reply channel, so per-connection
+//!   response order is preserved while cross-connection execution batches.
+//!
+//! Queue wait, batch width, and rejections land in the shared
+//! [`Telemetry`] (rendered by `STATS`) alongside per-engine service times.
+//!
+//! Capacity interplay: each reader holds at most one job in flight, so
+//! queue occupancy is bounded by the reader count — `ERR BUSY` fires
+//! when `queue_depth` is set *below* the number of concurrently pushing
+//! readers (load-shedding mode). Beyond readers + handoff buffer,
+//! overload parks in the OS accept backlog (the accept loop blocks on a
+//! bounded channel), so no in-process queue is ever unbounded. Request
+//! pipelining that decouples occupancy from reader count is a ROADMAP
+//! follow-up.
 
-use super::{Coordinator, CoordinatorCfg};
+use super::queue::BoundedQueue;
+use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
 use crate::workload::traces::TraceKind;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued request: the job, its admission timestamp (queue-wait
+/// clock), and the reply rendezvous back to the owning reader.
+struct Envelope {
+    job: Job,
+    enqueued: Instant,
+    reply: mpsc::Sender<JobResult>,
+}
+
+/// State shared by readers and the dispatcher.
+struct Shared {
+    queue: BoundedQueue<Envelope>,
+    telemetry: Mutex<Telemetry>,
+    next_id: AtomicU64,
+}
 
 /// A running server bound to a local port.
 pub struct Server {
@@ -38,24 +87,158 @@ impl Server {
         self.listener.local_addr().expect("bound socket has an address")
     }
 
-    /// Serve until `max_conns` connections have completed (None = forever).
+    /// Serve until `max_conns` connections have been accepted (None =
+    /// forever), then drain: readers finish their connections, the queue
+    /// closes, and the dispatcher completes queued work before return.
     pub fn serve(&self, cfg: CoordinatorCfg, max_conns: Option<usize>) -> Result<()> {
-        let runtime = crate::runtime::Runtime::load(&crate::runtime::Runtime::default_dir()).ok();
-        let mut coord = Coordinator::new(cfg, runtime);
-        let mut served = 0usize;
+        let shared = Arc::new(Shared {
+            queue: BoundedQueue::new(cfg.queue_depth),
+            telemetry: Mutex::new(Telemetry::default()),
+            next_id: AtomicU64::new(1),
+        });
+
+        // Dispatcher: the single consumer; owns the Coordinator (and the
+        // XLA runtime when artifacts are present).
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || dispatch_loop(&shared, &cfg))
+        };
+
+        // Reader pool: serve_threads workers, one connection each at a time.
+        // The handoff buffer is bounded (2× the pool) so overload parks in
+        // the OS accept backlog instead of an unbounded in-process channel —
+        // the accept loop blocks once readers and buffer are saturated.
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.serve_threads.max(1) * 2);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let readers: Vec<_> = (0..cfg.serve_threads.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                let conn_rx = Arc::clone(&conn_rx);
+                std::thread::spawn(move || loop {
+                    let next = conn_rx.lock().unwrap().recv();
+                    match next {
+                        // Per-connection IO errors end that connection only.
+                        Ok(stream) => {
+                            let _ = handle_conn(stream, &shared);
+                        }
+                        Err(_) => break, // accept loop done
+                    }
+                })
+            })
+            .collect();
+
+        // Accept loop. An accept error must still run the drain below —
+        // otherwise the dispatcher (and its thread pool) leaks, blocked in
+        // pop() forever — so capture the outcome instead of returning early.
+        let mut accepted = 0usize;
+        let mut accept_result: Result<()> = Ok(());
         for stream in self.listener.incoming() {
-            handle_conn(stream?, &mut coord)?;
-            served += 1;
-            if max_conns.is_some_and(|m| served >= m) {
-                break;
+            match stream {
+                Ok(stream) => {
+                    conn_tx.send(stream).expect("reader pool outlives the accept loop");
+                    accepted += 1;
+                    if max_conns.is_some_and(|m| accepted >= m) {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    accept_result = Err(e.into());
+                    break;
+                }
             }
         }
-        Ok(())
+        drop(conn_tx);
+        for r in readers {
+            let _ = r.join();
+        }
+        shared.queue.close();
+        let _ = dispatcher.join();
+        accept_result
     }
 }
 
-fn handle_conn(stream: TcpStream, coord: &mut Coordinator) -> Result<()> {
-    let peer = stream.peer_addr()?;
+/// Lock the shared telemetry, tolerating poison: telemetry is advisory
+/// stats, and a panicking writer must not cascade panics into readers.
+fn telemetry_lock(shared: &Shared) -> std::sync::MutexGuard<'_, Telemetry> {
+    shared.telemetry.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Dispatcher entry: run the batch loop, and if it dies for any reason,
+/// reject-drain the queue so every queued envelope's reply sender drops —
+/// blocked readers then see a disconnect ("ERR internal dispatcher
+/// unavailable") instead of waiting forever.
+fn dispatch_loop(shared: &Shared, cfg: &CoordinatorCfg) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        dispatch_batches(shared, cfg);
+    }));
+    if outcome.is_err() {
+        eprintln!(
+            "ohm: serving dispatcher died (panic); rejecting queued and future jobs"
+        );
+        shared.queue.close();
+        while shared.queue.pop().is_some() {}
+    }
+}
+
+/// Drain the queue in cross-connection shape batches until closed.
+fn dispatch_batches(shared: &Shared, cfg: &CoordinatorCfg) {
+    let runtime = crate::runtime::Runtime::load(&crate::runtime::Runtime::default_dir()).ok();
+    let coord = Coordinator::new(cfg.clone(), runtime);
+    let linger = Duration::from_micros(cfg.batch_linger_us);
+    loop {
+        // Compare kinds directly: shape_key() is a bijection of kind but
+        // allocates a String per call — too hot for the batch scan.
+        let batch = shared.queue.pop_batch(cfg.batch_max, linger, |a, b| a.job.kind == b.job.kind);
+        if batch.is_empty() {
+            break; // closed and drained
+        }
+        telemetry_lock(shared).record_batch(batch.len());
+        for env in batch {
+            let queue_us = env.enqueued.elapsed().as_nanos() as f64 / 1e3;
+            // Contain engine panics: a poisoned job must answer ERR to its
+            // own reader, not wedge every later reader on a dead dispatcher.
+            let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                coord.execute_job(&env.job)
+            }))
+            .ok();
+            let panicked = executed.is_none();
+            let mut r = executed.unwrap_or_else(|| {
+                // Re-route only on the (rare) panic path, to label the
+                // fallback with the engine that would have run.
+                let routed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    coord.route(&env.job.kind)
+                }))
+                .unwrap_or(RoutedEngine::CpuSerial);
+                JobResult {
+                    id: env.job.id,
+                    shape_key: env.job.shape_key(),
+                    engine: routed,
+                    service_us: 0.0,
+                    queue_us: 0.0,
+                    checksum: 0.0,
+                    ok: false,
+                }
+            });
+            r.queue_us = queue_us;
+            {
+                let mut t = telemetry_lock(shared);
+                if panicked {
+                    // Count the failure, but don't push a fabricated 0µs
+                    // sample into an engine's service-time series.
+                    t.failed += 1;
+                } else {
+                    t.record(&r);
+                }
+                t.record_served(queue_us);
+            }
+            // A reader that hung up mid-flight just drops the result.
+            let _ = env.reply.send(r);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -64,7 +247,7 @@ fn handle_conn(stream: TcpStream, coord: &mut Coordinator) -> Result<()> {
         if reader.read_line(&mut line)? == 0 {
             break; // client hung up
         }
-        match respond(coord, line.trim()) {
+        match respond(shared, line.trim()) {
             Response::Line(s) => writeln!(out, "{s}")?,
             Response::Block(s) => {
                 for l in s.lines() {
@@ -79,7 +262,6 @@ fn handle_conn(stream: TcpStream, coord: &mut Coordinator) -> Result<()> {
         }
         out.flush()?;
     }
-    let _ = peer;
     Ok(())
 }
 
@@ -89,12 +271,26 @@ enum Response {
     Bye,
 }
 
-fn respond(coord: &mut Coordinator, line: &str) -> Response {
+fn respond(shared: &Shared, line: &str) -> Response {
     let mut toks = line.split_whitespace();
     match toks.next().map(|s| s.to_ascii_uppercase()).as_deref() {
         Some("PING") => Response::Line("PONG".into()),
         Some("QUIT") => Response::Bye,
-        Some("STATS") => Response::Block(coord.telemetry.render()),
+        Some("STATS") => {
+            // Snapshot under the lock, render (sorts + formatting) outside
+            // it. The clone is still O(samples) under the lock — bounded by
+            // SAMPLE_CAP/SHAPE_CAP, and STATS is an operator command, so we
+            // accept it; streaming aggregates are a ROADMAP follow-up.
+            let snapshot = telemetry_lock(shared).clone();
+            let mut block = snapshot.render();
+            block.push_str(&format!(
+                "queue: len={} max={} depth={}\n",
+                shared.queue.len(),
+                shared.queue.max_len(),
+                shared.queue.depth(),
+            ));
+            Response::Block(block)
+        }
         Some(cmd @ ("MATMUL" | "SORT")) => {
             let n: usize = match toks.next().and_then(|t| t.parse().ok()) {
                 Some(n) if n > 0 && n <= 4096 => n,
@@ -102,16 +298,38 @@ fn respond(coord: &mut Coordinator, line: &str) -> Response {
             };
             let seed: u64 = toks.next().and_then(|t| t.parse().ok()).unwrap_or(42);
             let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
-            let r = coord.submit(kind, seed);
-            if r.ok {
-                Response::Line(format!(
-                    "OK {cmd} n={n} engine={} us={:.1} checksum={:.4}",
+            let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+            let (reply_tx, reply_rx) = mpsc::channel();
+            let envelope = Envelope {
+                job: Job { id, kind, seed, arrival_us: 0 },
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            };
+            if shared.queue.try_push(envelope).is_err() {
+                // Closed ⇒ the dispatcher is gone (or we're draining):
+                // that's an internal condition, not backpressure — clients
+                // retrying on BUSY must not spin against a dead server.
+                if shared.queue.is_closed() {
+                    return Response::Line("ERR internal dispatcher unavailable".into());
+                }
+                telemetry_lock(shared).record_rejected();
+                return Response::Line(format!(
+                    "ERR BUSY queue full (depth {})",
+                    shared.queue.depth()
+                ));
+            }
+            match reply_rx.recv() {
+                Ok(r) if r.ok => Response::Line(format!(
+                    "OK {cmd} n={n} engine={} us={:.1} queue_us={:.1} checksum={:.4}",
                     r.engine.name(),
                     r.service_us,
+                    r.queue_us,
                     r.checksum
-                ))
-            } else {
-                Response::Line(format!("ERR {cmd} n={n} failed on engine {}", r.engine.name()))
+                )),
+                Ok(r) => {
+                    Response::Line(format!("ERR {cmd} n={n} failed on engine {}", r.engine.name()))
+                }
+                Err(_) => Response::Line("ERR internal dispatcher unavailable".into()),
             }
         }
         Some(other) => Response::Line(format!("ERR unknown command {other:?}")),
@@ -156,6 +374,7 @@ mod tests {
         let out = roundtrip(&["MATMUL 32 7", "SORT 500"]);
         assert!(out[0].starts_with("OK MATMUL n=32"), "{out:?}");
         assert!(out[0].contains("checksum="));
+        assert!(out[0].contains("queue_us="));
         assert!(out[1].starts_with("OK SORT n=500"), "{out:?}");
     }
 
@@ -164,7 +383,18 @@ mod tests {
         let out = roundtrip(&["SORT 100", "STATS", "FROB", "MATMUL 0", "MATMUL abc"]);
         assert!(out.iter().any(|l| l.contains("coordinator telemetry")));
         assert!(out.iter().any(|l| l == "."), "stats block terminator");
+        assert!(out.iter().any(|l| l.starts_with("queue: len=")), "queue line in stats");
         assert!(out.iter().any(|l| l.starts_with("ERR unknown command")));
         assert_eq!(out.iter().filter(|l| l.starts_with("ERR MATMUL needs n")).count(), 2);
+    }
+
+    #[test]
+    fn requests_on_one_connection_answer_in_order() {
+        let out = roundtrip(&["SORT 200 1", "SORT 300 2", "SORT 200 3", "PING"]);
+        assert!(out[0].starts_with("OK SORT n=200"), "{out:?}");
+        assert!(out[1].starts_with("OK SORT n=300"), "{out:?}");
+        assert!(out[2].starts_with("OK SORT n=200"), "{out:?}");
+        assert_eq!(out[3], "PONG");
+        assert_eq!(out[4], "BYE");
     }
 }

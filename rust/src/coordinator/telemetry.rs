@@ -1,20 +1,58 @@
-//! Coordinator telemetry: per-engine service-time accounting.
+//! Coordinator telemetry: per-engine service-time accounting plus the
+//! serving layer's own overhead categories.
+//!
+//! The paper tracks α/β/γ/δ inside a run; the serving layer adds the
+//! categories that surface *in front of* execution — **queue wait**,
+//! **shape-batch width**, and **admission rejections** — and folds queue
+//! wait into a serving [`Ledger`] so the front end is reported with the
+//! same vocabulary as the engines underneath it.
 
 use super::job::{JobResult, RoutedEngine};
+use crate::overhead::Ledger;
 use crate::report::{table::f, AsciiTable};
 use crate::stats::Summary;
 use std::collections::BTreeMap;
 
-/// Aggregates job results for reporting.
-#[derive(Debug, Default)]
+/// Caps: a forever-running server must not grow telemetry without bound.
+/// `SAMPLE_CAP` bounds samples per series — at the cap a series is
+/// decimated (every other sample dropped), keeping a representative
+/// spread at half rate. `SHAPE_CAP` bounds the number of per-shape
+/// series — a client cycling every legal `n` must not mint unbounded
+/// map entries; overflow shapes aggregate under `shape:other`.
+const SAMPLE_CAP: usize = 16_384;
+const SHAPE_CAP: usize = 512;
+
+fn push_sample(series: &mut Vec<f64>, sample: f64) {
+    if series.len() >= SAMPLE_CAP {
+        let mut keep = false;
+        series.retain(|_| {
+            keep = !keep;
+            keep
+        });
+    }
+    series.push(sample);
+}
+
+/// Aggregates job results for reporting. `Clone` so readers can snapshot
+/// it under a lock and render outside.
+#[derive(Debug, Default, Clone)]
 pub struct Telemetry {
     per_engine: BTreeMap<&'static str, Vec<f64>>,
     per_shape: BTreeMap<String, Vec<f64>>,
     pub completed: u64,
     pub failed: u64,
-    /// Shape-batch statistics: consecutive same-shape groups dispatched.
+    /// Shape-batch statistics: same-shape groups dispatched.
     pub batches: u64,
     pub batched_jobs: u64,
+    /// Widest batch dispatched so far.
+    pub max_batch_width: u64,
+    /// Requests rejected by admission control (`ERR BUSY`).
+    pub rejected: u64,
+    /// Serving-layer overhead ledger: queue wait (ns) plus the handoff
+    /// events (enqueue + reply message, reply rendezvous) per served job.
+    pub serving_ledger: Ledger,
+    queue_wait_us: Vec<f64>,
+    batch_widths: Vec<f64>,
 }
 
 impl Telemetry {
@@ -24,17 +62,50 @@ impl Telemetry {
         } else {
             self.failed += 1;
         }
-        self.per_engine.entry(r.engine.name()).or_default().push(r.service_us);
-        self.per_shape.entry(r.shape_key.clone()).or_default().push(r.service_us);
+        push_sample(self.per_engine.entry(r.engine.name()).or_default(), r.service_us);
+        let shape = if self.per_shape.contains_key(&r.shape_key) || self.per_shape.len() < SHAPE_CAP
+        {
+            r.shape_key.clone()
+        } else {
+            "other".to_string()
+        };
+        push_sample(self.per_shape.entry(shape).or_default(), r.service_us);
     }
 
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         self.batched_jobs += size as u64;
+        self.max_batch_width = self.max_batch_width.max(size as u64);
+        push_sample(&mut self.batch_widths, size as f64);
+    }
+
+    /// Record the serving-layer overhead of one dispatched job: its queue
+    /// wait plus the handoff events (enqueue message, reply message,
+    /// reply rendezvous) charged to the serving ledger.
+    pub fn record_served(&mut self, queue_wait_us: f64) {
+        push_sample(&mut self.queue_wait_us, queue_wait_us);
+        self.serving_ledger.queue_ns += (queue_wait_us * 1e3) as u64;
+        self.serving_ledger.messages += 2;
+        self.serving_ledger.syncs += 1;
+    }
+
+    /// Record one admission rejection (`ERR BUSY`).
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
     }
 
     pub fn engine_count(&self, e: RoutedEngine) -> usize {
         self.per_engine.get(e.name()).map_or(0, |v| v.len())
+    }
+
+    /// Queue-wait summary over served jobs, if any were queued.
+    pub fn queue_wait(&self) -> Option<Summary> {
+        Summary::of(&self.queue_wait_us)
+    }
+
+    /// Batch-width summary over dispatched batches.
+    pub fn batch_width(&self) -> Option<Summary> {
+        Summary::of(&self.batch_widths)
     }
 
     /// Render the service-time summary table.
@@ -58,13 +129,50 @@ impl Telemetry {
             }
         }
         let mut out = t.render();
+        // The serving table only renders when the serving layer actually
+        // ran (queue waits or rejections): trace-mode batching alone is
+        // coordinator batching, not serving overhead.
+        if self.queue_wait().is_some() || self.rejected > 0 {
+            let mut serving = AsciiTable::new(
+                "serving overhead",
+                &["category", "n", "mean", "median", "p90", "max"],
+            );
+            if let Some(s) = self.queue_wait() {
+                serving.row(vec![
+                    "queue-wait (µs)".to_string(),
+                    s.n.to_string(),
+                    f(s.mean, 1),
+                    f(s.median, 1),
+                    f(s.p90, 1),
+                    f(s.max, 1),
+                ]);
+            }
+            if let Some(s) = self.batch_width() {
+                serving.row(vec![
+                    "batch-width (jobs)".to_string(),
+                    s.n.to_string(),
+                    f(s.mean, 2),
+                    f(s.median, 1),
+                    f(s.p90, 1),
+                    f(s.max, 0),
+                ]);
+            }
+            if !serving.is_empty() {
+                out.push_str(&serving.render());
+            }
+        }
         out.push_str(&format!(
-            "completed={} failed={} batches={} (avg batch {:.1})\n",
+            "completed={} failed={} rejected={} batches={} (avg batch {:.1}, max width {})\n",
             self.completed,
             self.failed,
+            self.rejected,
             self.batches,
             if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 },
+            self.max_batch_width,
         ));
+        if self.serving_ledger.total_events() > 0 || self.serving_ledger.queue_ns > 0 {
+            out.push_str(&format!("serving ledger: {}\n", self.serving_ledger.summary()));
+        }
         out
     }
 }
@@ -74,7 +182,15 @@ mod tests {
     use super::*;
 
     fn res(engine: RoutedEngine, us: f64, ok: bool) -> JobResult {
-        JobResult { id: 0, shape_key: "matmul/64".into(), engine, service_us: us, checksum: 0.0, ok }
+        JobResult {
+            id: 0,
+            shape_key: "matmul/64".into(),
+            engine,
+            service_us: us,
+            queue_us: 0.0,
+            checksum: 0.0,
+            ok,
+        }
     }
 
     #[test]
@@ -91,5 +207,57 @@ mod tests {
         assert!(s.contains("engine:xla"));
         assert!(s.contains("shape:matmul/64"));
         assert!(s.contains("batches=1"));
+    }
+
+    #[test]
+    fn serving_categories_flow_into_render_and_ledger() {
+        let mut t = Telemetry::default();
+        t.record(&res(RoutedEngine::CpuSerial, 80.0, true));
+        t.record_batch(3);
+        t.record_served(1500.0);
+        t.record_served(500.0);
+        t.record_rejected();
+        assert_eq!(t.rejected, 1);
+        assert_eq!(t.max_batch_width, 3);
+        assert_eq!(t.serving_ledger.queue_ns, 2_000_000, "1500µs + 500µs in ns");
+        assert_eq!(t.serving_ledger.messages, 4);
+        assert_eq!(t.serving_ledger.syncs, 2);
+        let s = t.render();
+        assert!(s.contains("queue-wait"), "{s}");
+        assert!(s.contains("batch-width"), "{s}");
+        assert!(s.contains("rejected=1"), "{s}");
+        assert!(s.contains("max width 3"), "{s}");
+        assert!(s.contains("serving ledger:"), "{s}");
+    }
+
+    #[test]
+    fn shape_series_count_stays_bounded() {
+        let mut t = Telemetry::default();
+        for n in 0..(super::SHAPE_CAP + 50) {
+            let mut r = res(RoutedEngine::CpuSerial, 10.0, true);
+            r.shape_key = format!("sort/{n}");
+            t.record(&r);
+        }
+        assert!(t.per_shape.len() <= super::SHAPE_CAP + 1, "grew to {}", t.per_shape.len());
+        assert!(t.per_shape.contains_key("other"), "overflow shapes aggregate under 'other'");
+    }
+
+    #[test]
+    fn sample_series_stay_bounded() {
+        let mut series = Vec::new();
+        for i in 0..(super::SAMPLE_CAP * 2 + 10) {
+            super::push_sample(&mut series, i as f64);
+        }
+        assert!(series.len() <= super::SAMPLE_CAP, "series grew to {}", series.len());
+        assert!(series.len() > super::SAMPLE_CAP / 4, "decimation dropped too much");
+    }
+
+    #[test]
+    fn empty_serving_stats_stay_out_of_render() {
+        let mut t = Telemetry::default();
+        t.record(&res(RoutedEngine::CpuSerial, 10.0, true));
+        let s = t.render();
+        assert!(!s.contains("serving overhead"), "{s}");
+        assert!(!s.contains("serving ledger"), "{s}");
     }
 }

@@ -15,6 +15,13 @@
 //! The [`crate::overhead::Manager`] is consulted by domain code to pick
 //! serial-vs-parallel and grain, making the paper's management policy a
 //! cross-cutting concern rather than per-algorithm ad-hoc tuning.
+//!
+//! Serving-layer overhead (admission-queue wait in front of an engine) is
+//! deliberately *not* an engine concern: it is measured by the
+//! coordinator's dispatcher and recorded in the serving
+//! [`Telemetry`](crate::coordinator::Telemetry) / `Ledger::queue_ns`,
+//! so engine `RunReport`s stay comparable with and without the TCP front
+//! end in the path.
 
 use crate::overhead::{calibrate::Calibration, Ledger, Manager, OverheadParams};
 use crate::pool::ThreadPool;

@@ -20,6 +20,10 @@ pub struct Ledger {
     pub messages: u64,
     /// Bytes moved across cores (δ).
     pub bytes: u64,
+    /// Time spent waiting in a serving admission queue, ns. Measured (not
+    /// modeled), so — like `compute_ns`/`idle_ns` — it is bookkeeping that
+    /// `OverheadParams::charge` does not re-price.
+    pub queue_ns: u64,
     /// Pure compute time, ns (virtual for sim, estimated for threaded).
     pub compute_ns: u64,
     /// Core-idle time summed over cores, ns (sim only).
@@ -38,6 +42,7 @@ impl Ledger {
             syncs: delta.latch_waits,
             messages: delta.steals + delta.injected,
             bytes: bytes_moved,
+            queue_ns: 0,
             compute_ns: 0,
             idle_ns: 0,
         }
@@ -50,6 +55,7 @@ impl Ledger {
             syncs: self.syncs + other.syncs,
             messages: self.messages + other.messages,
             bytes: self.bytes + other.bytes,
+            queue_ns: self.queue_ns + other.queue_ns,
             compute_ns: self.compute_ns + other.compute_ns,
             idle_ns: self.idle_ns + other.idle_ns,
         }
@@ -63,11 +69,12 @@ impl Ledger {
     /// Human-readable one-liner for reports.
     pub fn summary(&self) -> String {
         format!(
-            "spawns={} syncs={} msgs={} bytes={} compute={}µs idle={}µs",
+            "spawns={} syncs={} msgs={} bytes={} queue={}µs compute={}µs idle={}µs",
             self.spawns,
             self.syncs,
             self.messages,
             self.bytes,
+            self.queue_ns / 1_000,
             self.compute_ns / 1_000,
             self.idle_ns / 1_000,
         )
@@ -99,16 +106,20 @@ mod tests {
 
     #[test]
     fn merge_adds_fields() {
-        let a = Ledger { spawns: 1, syncs: 2, messages: 3, bytes: 4, compute_ns: 5, idle_ns: 6 };
-        let b = Ledger { spawns: 10, syncs: 20, messages: 30, bytes: 40, compute_ns: 50, idle_ns: 60 };
+        let a = Ledger { spawns: 1, syncs: 2, messages: 3, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
+        let b = Ledger { spawns: 10, syncs: 20, messages: 30, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
         let m = a.merged(&b);
-        assert_eq!(m, Ledger { spawns: 11, syncs: 22, messages: 33, bytes: 44, compute_ns: 55, idle_ns: 66 });
+        assert_eq!(
+            m,
+            Ledger { spawns: 11, syncs: 22, messages: 33, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
+        );
         assert_eq!(m.total_events(), 66);
     }
 
     #[test]
     fn summary_contains_fields() {
-        let l = Ledger { spawns: 7, ..Default::default() };
+        let l = Ledger { spawns: 7, queue_ns: 9_000, ..Default::default() };
         assert!(l.summary().contains("spawns=7"));
+        assert!(l.summary().contains("queue=9µs"));
     }
 }

@@ -1,5 +1,9 @@
 //! Report emitters: ASCII tables, CSV files, line charts, Gantt timelines,
 //! and the paper's qualitative tables/figures as generated text.
+//!
+//! The serving layer reuses [`AsciiTable`] for its `STATS` telemetry
+//! (service-time, queue-wait, and batch-width summaries) so server-side
+//! output renders in the same shape as the experiment reports.
 
 pub mod chart;
 pub mod csv;

@@ -325,6 +325,7 @@ impl Machine {
                 syncs: dag.syncs,
                 messages,
                 bytes: bytes_moved,
+                queue_ns: 0,
                 compute_ns: compute as u64,
                 idle_ns: idle.max(0.0) as u64,
             },

@@ -1,0 +1,44 @@
+//! Shared helpers for the integration test suites.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Fetch the STATS block over a fresh connection: returns the block's
+/// lines (without the `.` terminator), then QUITs cleanly.
+pub fn fetch_stats(addr: SocketAddr) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut out = stream;
+    writeln!(out, "STATS").unwrap();
+    out.flush().unwrap();
+    let mut block = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "server closed mid-STATS:\n{block}");
+        if line.trim() == "." {
+            break;
+        }
+        block.push_str(&line);
+    }
+    writeln!(out, "QUIT").unwrap();
+    out.flush().unwrap();
+    let mut bye = String::new();
+    reader.read_line(&mut bye).unwrap();
+    assert_eq!(bye.trim(), "BYE");
+    block
+}
+
+/// Extract the unsigned integer immediately following `key` in rendered
+/// STATS/telemetry text — e.g. `stat_u64(stats, "completed=")` or
+/// `stat_u64(stats, "max width ")`. Panics with the full text on a
+/// missing key or non-numeric suffix so failures stay diagnosable.
+pub fn stat_u64(stats: &str, key: &str) -> u64 {
+    let at = stats.find(key).unwrap_or_else(|| panic!("{key:?} missing in:\n{stats}"));
+    stats[at + key.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("no number after {key:?} in:\n{stats}"))
+}

@@ -1,8 +1,13 @@
-//! Integration: coordinator end-to-end, with and without the XLA runtime.
+//! Integration: coordinator end-to-end, with and without the XLA runtime,
+//! plus the serving layer's cross-connection shape batching.
 
+mod common;
+
+use ohm::coordinator::server::Server;
 use ohm::coordinator::{Coordinator, CoordinatorCfg, RoutedEngine};
 use ohm::runtime::Runtime;
 use ohm::workload::traces::{self, TraceKind, TraceSpec};
+use std::io::{BufRead, BufReader, Write};
 use std::path::PathBuf;
 
 fn artifacts_dir() -> PathBuf {
@@ -82,6 +87,59 @@ fn mixed_trace_with_runtime_routes_both_ways() {
     assert!(xla < results.len(), "some jobs must stay on CPU");
     let telemetry = c.telemetry.render();
     assert!(telemetry.contains("engine:xla"), "{telemetry}");
+}
+
+/// Shape batching must extend *across connections*: three clients send
+/// the same shape concurrently, the dispatcher lingers long enough for
+/// the batch to form, and telemetry reports a batch width > 1.
+#[test]
+fn server_batches_same_shape_across_connections() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg {
+        threads: 1,
+        serve_threads: 4,
+        queue_depth: 16,
+        batch_linger_us: 500_000, // generous batch-formation window
+        ..Default::default()
+    };
+    let h = std::thread::spawn(move || server.serve(cfg, Some(4)).unwrap());
+
+    // Connect all clients before any sends (barrier), so connect jitter
+    // cannot push a request outside the batch-formation window.
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(3));
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            let barrier = std::sync::Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let stream = std::net::TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut out = stream;
+                barrier.wait();
+                writeln!(out, "SORT 400 {c}").unwrap();
+                out.flush().unwrap();
+                let mut reply = String::new();
+                reader.read_line(&mut reply).unwrap();
+                assert!(reply.starts_with("OK SORT n=400"), "{reply}");
+                writeln!(out, "QUIT").unwrap();
+                out.flush().unwrap();
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // Read STATS over a fourth connection and parse the max batch width.
+    let stats = common::fetch_stats(addr);
+    h.join().unwrap();
+
+    assert!(stats.contains("batch-width"), "batch-width stats missing:\n{stats}");
+    let width = common::stat_u64(&stats, "max width ");
+    assert!(
+        width >= 2,
+        "expected a cross-connection batch of width ≥ 2, stats:\n{stats}"
+    );
 }
 
 #[test]

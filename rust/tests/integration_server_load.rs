@@ -1,0 +1,153 @@
+//! Deterministic load tests for the concurrent serving layer: M client
+//! threads × K requests against a live server. Every request must answer
+//! `OK` or `ERR BUSY` (nothing lost, nothing duplicated), `OK` checksums
+//! must match the serial engine, and STATS totals must equal accepted
+//! requests. A second scenario pins `queue_depth = 1` and observes
+//! admission-control backpressure directly.
+
+mod common;
+
+use common::{fetch_stats, stat_u64};
+use ohm::coordinator::server::Server;
+use ohm::coordinator::{Coordinator, CoordinatorCfg};
+use ohm::workload::traces::TraceKind;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 6;
+
+/// Send one line, read one reply line.
+fn request(out: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    writeln!(out, "{line}").unwrap();
+    out.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+fn quit(mut out: TcpStream, mut reader: BufReader<TcpStream>) {
+    let bye = request(&mut out, &mut reader, "QUIT");
+    assert_eq!(bye, "BYE");
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+#[test]
+fn concurrent_clients_all_answered_checksums_serial_and_stats_consistent() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg {
+        threads: 2,
+        serve_threads: CLIENTS,
+        queue_depth: 256, // deep enough that nothing is rejected here
+        ..Default::default()
+    };
+    let h = thread::spawn(move || server.serve(cfg, Some(CLIENTS + 1)).unwrap());
+
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            thread::spawn(move || {
+                let (mut out, mut reader) = connect(addr);
+                let mut replies = Vec::new();
+                for k in 0..REQS_PER_CLIENT {
+                    // Shapes deliberately without AOT artifacts, so routing
+                    // stays on the CPU engines on every checkout.
+                    let (cmd, n): (&str, usize) =
+                        if (c + k) % 2 == 0 { ("SORT", 300) } else { ("MATMUL", 24) };
+                    let seed = (c * 100 + k) as u64;
+                    let reply = request(&mut out, &mut reader, &format!("{cmd} {n} {seed}"));
+                    replies.push((cmd, n, seed, reply));
+                }
+                quit(out, reader);
+                replies
+            })
+        })
+        .collect();
+    let all: Vec<_> = clients.into_iter().flat_map(|h| h.join().unwrap()).collect();
+
+    // Exactly one response per request, each OK or ERR BUSY.
+    assert_eq!(all.len(), CLIENTS * REQS_PER_CLIENT);
+    for (_, _, _, reply) in &all {
+        assert!(
+            reply.starts_with("OK ") || reply.starts_with("ERR BUSY"),
+            "unexpected reply: {reply}"
+        );
+    }
+    let oks: Vec<_> = all.iter().filter(|(_, _, _, r)| r.starts_with("OK ")).collect();
+    assert_eq!(oks.len(), all.len(), "depth 256 must not reject this load");
+
+    // Checksums agree with the serial reference engine, same seed.
+    let mut reference = Coordinator::new(CoordinatorCfg { threads: 1, ..Default::default() }, None);
+    for (cmd, n, seed, reply) in &oks {
+        let kind =
+            if *cmd == "SORT" { TraceKind::Sort { n: *n } } else { TraceKind::Matmul { n: *n } };
+        let expect = reference.submit(kind, *seed);
+        let want = format!("checksum={:.4}", expect.checksum);
+        assert!(reply.contains(&want), "{cmd} {n} seed={seed}: got {reply:?}, want {want:?}");
+        assert!(reply.contains("queue_us="), "queue wait missing from {reply:?}");
+    }
+
+    // STATS totals equal accepted requests; serving categories present.
+    let stats = fetch_stats(addr);
+    h.join().unwrap();
+    assert_eq!(stat_u64(&stats, "completed="), oks.len() as u64, "stats:\n{stats}");
+    assert_eq!(stat_u64(&stats, "failed="), 0, "stats:\n{stats}");
+    assert_eq!(stat_u64(&stats, "rejected="), 0, "stats:\n{stats}");
+    assert!(stats.contains("queue-wait"), "queue-wait stats missing:\n{stats}");
+    assert!(stats.contains("batch-width"), "batch-width stats missing:\n{stats}");
+    assert!(stats.contains("serving ledger:"), "serving ledger missing:\n{stats}");
+}
+
+#[test]
+fn queue_depth_one_applies_backpressure() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg {
+        threads: 1,
+        serve_threads: 4,
+        queue_depth: 1,
+        ..Default::default()
+    };
+    let h = thread::spawn(move || server.serve(cfg, Some(4)).unwrap());
+
+    // All three clients connect first, then fire together (barrier). Each
+    // sends a matmul large enough that its execution (hundreds of ms even
+    // on fast hardware, ≥ tens of ms in any case) vastly outlasts the
+    // microseconds between the three pushes — so while the first job
+    // executes, the depth-1 queue holds one request and the remaining one
+    // must be rejected. Deterministic without any timing stagger.
+    let barrier = std::sync::Arc::new(std::sync::Barrier::new(3));
+    let clients: Vec<_> = (0..3)
+        .map(|c| {
+            let barrier = std::sync::Arc::clone(&barrier);
+            thread::spawn(move || {
+                let (mut out, mut reader) = connect(addr);
+                barrier.wait();
+                let reply = request(&mut out, &mut reader, &format!("MATMUL 600 {c}"));
+                quit(out, reader);
+                reply
+            })
+        })
+        .collect();
+    let replies: Vec<String> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let ok = replies.iter().filter(|r| r.starts_with("OK MATMUL")).count();
+    let busy = replies.iter().filter(|r| r.starts_with("ERR BUSY")).count();
+    assert_eq!(ok + busy, replies.len(), "only OK or ERR BUSY allowed: {replies:?}");
+    assert!(ok >= 1, "at least the first request must be served: {replies:?}");
+    assert!(busy >= 1, "depth-1 queue under 3 clients must reject at least once: {replies:?}");
+
+    let stats = fetch_stats(addr);
+    h.join().unwrap();
+    assert_eq!(stat_u64(&stats, "completed="), ok as u64, "stats:\n{stats}");
+    assert_eq!(stat_u64(&stats, "rejected="), busy as u64, "stats:\n{stats}");
+    // The admission bound itself must never have been exceeded.
+    let max_occupancy = stat_u64(&stats, "max=");
+    assert!(max_occupancy <= 1, "queue occupancy exceeded depth 1:\n{stats}");
+}

@@ -1,0 +1,186 @@
+//! Property tests for the serving layer's bounded admission queue
+//! (`coordinator::queue::BoundedQueue`): no job lost or duplicated, FIFO
+//! preserved within shape batches, and the depth bound holds under
+//! concurrent producers.
+
+use ohm::coordinator::queue::BoundedQueue;
+use ohm::prop::{ensure, forall, Config};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Exactly-once delivery under concurrent producers and consumers: every
+/// accepted item is popped exactly once, and occupancy never exceeds the
+/// configured depth.
+#[test]
+fn prop_no_item_lost_or_duplicated_under_concurrency() {
+    forall(Config::default().cases(20), "accepted items are delivered exactly once", |g| {
+        let producers = g.usize_in(1..5);
+        let per_producer = g.usize_in(1..30);
+        let depth = g.usize_in(1..8);
+        let consumers = g.usize_in(1..4);
+        let q = Arc::new(BoundedQueue::<u64>::new(depth));
+
+        let delivered = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let consumer_handles: Vec<_> = (0..consumers)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                let delivered = Arc::clone(&delivered);
+                thread::spawn(move || {
+                    while let Some(v) = q.pop() {
+                        delivered.lock().unwrap().push(v);
+                    }
+                })
+            })
+            .collect();
+
+        // Producers retry on backpressure until accepted, so every item
+        // is admitted exactly once.
+        let producer_handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    for i in 0..per_producer {
+                        let mut v = (p as u64) * 1_000_000 + i as u64;
+                        loop {
+                            match q.try_push(v) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    v = back;
+                                    thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        for h in producer_handles {
+            h.join().unwrap();
+        }
+        q.close();
+        for h in consumer_handles {
+            h.join().unwrap();
+        }
+
+        let mut got = Arc::try_unwrap(delivered).unwrap().into_inner().unwrap();
+        got.sort_unstable();
+        let mut want: Vec<u64> = (0..producers)
+            .flat_map(|p| (0..per_producer).map(move |i| (p as u64) * 1_000_000 + i as u64))
+            .collect();
+        want.sort_unstable();
+        ensure(got == want, || {
+            format!("delivered {} items, expected {} (loss or duplication)", got.len(), want.len())
+        })?;
+        ensure(q.max_len() <= depth, || {
+            format!("occupancy high-water {} exceeded depth {depth}", q.max_len())
+        })
+    });
+}
+
+/// Admission control without retries: exactly the first `depth` pushes are
+/// accepted, rejected pushes hand the item back, and the accepted prefix
+/// drains in FIFO order.
+#[test]
+fn prop_rejections_hand_items_back_and_fifo_drains() {
+    forall(Config::default().cases(50), "overflow rejects; accepted prefix is FIFO", |g| {
+        let depth = g.usize_in(1..10);
+        let total = g.usize_in(1..40);
+        let q = BoundedQueue::<usize>::new(depth);
+        let mut accepted = Vec::new();
+        for i in 0..total {
+            match q.try_push(i) {
+                Ok(()) => accepted.push(i),
+                Err(back) => {
+                    ensure(back == i, || format!("rejected push returned {back}, pushed {i}"))?;
+                }
+            }
+        }
+        let expect_accepted: Vec<usize> = (0..total.min(depth)).collect();
+        ensure(accepted == expect_accepted, || {
+            format!("accepted {accepted:?}, expected the first {} pushes", total.min(depth))
+        })?;
+        q.close();
+        let mut drained = Vec::new();
+        while let Some(v) = q.pop() {
+            drained.push(v);
+        }
+        ensure(drained == expect_accepted, || format!("drain order {drained:?} not FIFO"))
+    });
+}
+
+/// Shape batching: batches are consecutive same-shape runs capped at the
+/// max width, and the concatenation of all batches is the original FIFO
+/// order — exactly the trace-mode batching semantics, lifted to the queue.
+#[test]
+fn prop_pop_batch_is_fifo_and_shape_pure() {
+    forall(Config::default().cases(60), "batches = capped same-shape runs in FIFO order", |g| {
+        let total = g.usize_in(1..50);
+        let shapes = g.usize_in(1..4);
+        let max_width = g.usize_in(1..6);
+        let items: Vec<(usize, usize)> =
+            (0..total).map(|i| (g.usize_in(0..shapes), i)).collect();
+        let q = BoundedQueue::new(total);
+        for &item in &items {
+            q.try_push(item).map_err(|_| "push rejected below depth".to_string())?;
+        }
+        q.close();
+
+        let mut batches = Vec::new();
+        loop {
+            let b = q.pop_batch(max_width, Duration::ZERO, |a, b| a.0 == b.0);
+            if b.is_empty() {
+                break;
+            }
+            batches.push(b);
+        }
+
+        let flat: Vec<(usize, usize)> = batches.iter().flatten().copied().collect();
+        ensure(flat == items, || "concatenated batches lost FIFO order".to_string())?;
+        for b in &batches {
+            ensure(b.len() <= max_width, || format!("batch width {} > max {max_width}", b.len()))?;
+            ensure(b.iter().all(|x| x.0 == b[0].0), || format!("mixed-shape batch {b:?}"))?;
+        }
+        // Batch boundaries only at a shape change or the width cap.
+        for w in batches.windows(2) {
+            let (prev, next) = (&w[0], &w[1]);
+            ensure(prev.len() == max_width || prev[0].0 != next[0].0, || {
+                format!("batch ended early: {prev:?} then {next:?}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// The depth bound holds with producers racing and no consumer draining.
+#[test]
+fn prop_depth_never_exceeded_without_consumer() {
+    forall(Config::default().cases(20), "depth bound holds under racing producers", |g| {
+        let depth = g.usize_in(1..6);
+        let producers = g.usize_in(2..6);
+        let per_producer = g.usize_in(1..20);
+        let q = Arc::new(BoundedQueue::<u64>::new(depth));
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut rejected = 0u64;
+                    for i in 0..per_producer {
+                        if q.try_push((p * 100 + i) as u64).is_err() {
+                            rejected += 1;
+                        }
+                    }
+                    rejected
+                })
+            })
+            .collect();
+        let rejected: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        ensure(q.len() <= depth, || format!("len {} > depth {depth}", q.len()))?;
+        ensure(q.max_len() <= depth, || format!("max_len {} > depth {depth}", q.max_len()))?;
+        let expected_total = (producers * per_producer) as u64;
+        ensure(q.len() as u64 + rejected == expected_total, || {
+            format!("{} queued + {rejected} rejected != {expected_total} pushed", q.len())
+        })
+    });
+}

@@ -1,0 +1,63 @@
+//! Offline stand-in for the `crossbeam-utils` crate — only the
+//! [`CachePadded`] wrapper OHM's work-stealing deque uses.
+//!
+//! Pads and aligns a value to 128 bytes so hot atomics on different
+//! cores do not false-share a cache line (128 covers the spatial
+//! prefetcher pairing on x86_64 and the line size on apple-silicon).
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns `T` to the length of a cache line.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Pad `value` to a cache line.
+    pub const fn new(value: T) -> CachePadded<T> {
+        CachePadded { value }
+    }
+
+    /// Unwrap the padded value.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> CachePadded<T> {
+        CachePadded::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligns_and_derefs() {
+        let p = CachePadded::new(42u64);
+        assert_eq!(std::mem::align_of_val(&p), 128);
+        assert_eq!(*p, 42);
+        assert_eq!(p.into_inner(), 42);
+        let mut q = CachePadded::new(1u32);
+        *q += 1;
+        assert_eq!(*q, 2);
+    }
+}

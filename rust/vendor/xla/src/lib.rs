@@ -1,0 +1,123 @@
+//! Offline stub of the [`xla`](https://crates.io/crates/xla) crate
+//! (xla_extension 0.5.1 PJRT bindings).
+//!
+//! The native XLA/PJRT plugin is not present in this container, so this
+//! stub mirrors exactly the API surface `ohm::runtime` uses and returns
+//! [`Error::Unavailable`] from every fallible entry point.
+//! `Runtime::load` therefore fails cleanly, the coordinator routes every
+//! job to the CPU engines, and the XLA integration tests skip — the gating
+//! already built into the callers. Swap this path dependency for the real
+//! `xla` crate (plus `libxla_extension`) to light the PJRT path back up.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: the native library is absent.
+#[derive(Debug)]
+pub struct Error {
+    what: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: xla_extension unavailable (offline stub; see rust/vendor/xla)", self.what)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error { what: what.to_string() })
+}
+
+/// PJRT client handle (stub: cannot be constructed).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module (stub: text files cannot be parsed).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        unavailable(&format!("HloModuleProto::from_text_file({})", path.as_ref().display()))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle (stub: cannot be constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal value.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not hand out a client");
+        assert!(err.to_string().contains("offline stub"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(Literal.to_vec::<f32>().is_err());
+        assert!(Literal.to_tuple1().is_err());
+    }
+}
