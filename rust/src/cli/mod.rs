@@ -7,9 +7,17 @@
 //! ohm sort --n N [--pivot left|mean|right|random|median3] [--engine ...]
 //! ohm serve [--jobs N] [--threads N] [--no-xla] [--seed S]
 //!           [--listen ADDR [--conns N] [--serve-threads N] [--queue-depth N]
-//!            [--batch-max N] [--batch-linger-us U] [--config F]]
-//!           # TCP front end: concurrent readers, bounded admission queue
-//!           # (overflow → ERR BUSY), cross-connection shape batching
+//!            [--batch-max N] [--batch-linger-us U] [--lanes N]
+//!            [--steal true|false | --no-steal] [--config F]]
+//!           # TCP front end: concurrent readers, per-shape-class dispatch
+//!           # lanes with work stealing, bounded per-lane admission queues
+//!           # (overflow → ERR BUSY), cross-connection shape batching,
+//!           # DRAIN protocol for rolling restarts
+//! ohm loadgen --addr HOST:PORT [--clients N] [--reqs N] [--seed S]
+//!             [--drain [--out FILE]]
+//!           # drive a running server: N concurrent clients × mixed
+//!           # matmul/sort shapes, verify checksums against the serial
+//!           # engine, optionally DRAIN and save the final STATS
 //! ohm calibrate [--budget-ms N]
 //! ohm gantt (--matmul N | --sort N) [--cores N]
 //! ohm artifacts [--dir D]
@@ -29,23 +37,30 @@ use crate::overhead::OverheadParams;
 use crate::report::gantt;
 use crate::runtime::Runtime;
 use crate::sort::{parallel_quicksort, PivotStrategy};
-use crate::workload::traces::{self, TraceSpec};
+use crate::workload::traces::{self, TraceKind, TraceSpec};
 use crate::workload::{arrays, matrices};
 use anyhow::{bail, Context, Result};
 use parser::Args;
 use std::fmt::Write as _;
 use std::path::Path;
 
-const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|calibrate|gantt|artifacts> [flags]
+const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|calibrate|gantt|artifacts> [flags]
   experiment <id|all>   regenerate paper tables/figures (see DESIGN.md §5)
   matmul --n N          run one overhead-managed matmul
   sort --n N            run one overhead-managed quicksort
   serve                 run a job trace through the coordinator
                         (--listen ADDR for the concurrent TCP front end;
                          --serve-threads N reader threads, --queue-depth N
-                         admission bound → ERR BUSY past it, --batch-max /
-                         --batch-linger-us shape-batch formation,
-                         --config F reads a [serving] section)
+                         per-lane admission bound → ERR BUSY past it,
+                         --lanes N shape-class dispatch lanes, --steal
+                         true|false (or --no-steal) idle-lane work stealing,
+                         --batch-max / --batch-linger-us shape-batch
+                         formation, DRAIN protocol command for rolling
+                         restarts, --config F reads [serving] + [lanes])
+  loadgen               drive a running --listen server with concurrent
+                        clients and checksum verification (--addr HOST:PORT,
+                        --clients N, --reqs N per client, --drain to finish
+                        with a DRAIN, --out FILE to save the final STATS)
   calibrate             probe host overhead constants
   gantt                 render a simulated schedule
   artifacts             list AOT artifacts\n";
@@ -59,6 +74,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         Some("matmul") => cmd_matmul(&args),
         Some("sort") => cmd_sort(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("gantt") => cmd_gantt(&args),
         Some("artifacts") => cmd_artifacts(&args),
@@ -213,15 +229,33 @@ fn cmd_serve(args: &Args) -> Result<String> {
         if let Some(v) = args.get_parsed::<u64>("batch-linger-us")? {
             serving.batch_linger_us = v;
         }
+        if let Some(v) = args.get_parsed::<usize>("lanes")? {
+            serving.lanes = v.max(1);
+        }
+        if args.has("steal") {
+            serving.steal = match args.get("steal") {
+                // Bare `--steal` (no value) switches it on.
+                Some("") | None => true,
+                Some(v) => match v.parse::<bool>() {
+                    Ok(b) => b,
+                    Err(_) => bail!("flag --steal: cannot parse {v:?} (true|false)"),
+                },
+            };
+        }
+        if args.has("no-steal") {
+            serving.steal = false;
+        }
         let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
         let conns = args.get_parsed::<usize>("conns")?;
         let mut cfg = CoordinatorCfg { threads, ..Default::default() };
         serving.apply(&mut cfg);
         let server = crate::coordinator::server::Server::bind(addr)?;
         eprintln!(
-            "ohm serving on {} ({} reader threads, queue depth {}, batch ≤{})",
+            "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{})",
             server.local_addr(),
             cfg.serve_threads,
+            cfg.lanes,
+            cfg.steal,
             cfg.queue_depth,
             cfg.batch_max,
         );
@@ -248,6 +282,142 @@ fn cmd_serve(args: &Args) -> Result<String> {
     let mut out = format!("{rt_desc}\nran {} jobs: {ok} ok, {} failed\n", results.len(), results.len() - ok);
     out.push_str(&coord.telemetry.render());
     Ok(out)
+}
+
+/// Mixed shapes with no AOT artifacts, so routing stays on the CPU
+/// engines and checksums are reproducible against the serial reference
+/// on every checkout (mirrors the integration load suite).
+const LOADGEN_SHAPES: &[(&str, usize)] =
+    &[("MATMUL", 24), ("SORT", 300), ("MATMUL", 48), ("SORT", 999)];
+
+/// Drive a running `serve --listen` server: N concurrent clients send
+/// mixed matmul/sort shapes, every `OK` reply's checksum is verified
+/// against the serial engine, and `--drain` finishes with the `DRAIN`
+/// protocol (asserting post-drain admission answers `ERR DRAINING`),
+/// optionally saving the final STATS block to `--out`. Errors (checksum
+/// mismatch, truncated reply, unclean drain) exit nonzero — this is the
+/// CI serving-smoke entry point.
+fn cmd_loadgen(args: &Args) -> Result<String> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args
+        .get("addr")
+        .context("--addr required (host:port of a running `ohm serve --listen`)")?
+        .to_string();
+    let clients = args.get_parsed::<usize>("clients")?.unwrap_or(8).max(1);
+    let reqs = args.get_parsed::<usize>("reqs")?.unwrap_or(6).max(1);
+    let seed0 = args.get_parsed::<u64>("seed")?.unwrap_or(1);
+    let drain = args.has("drain");
+    let out_path = args.get("out").map(|s| s.to_string());
+
+    // Serial reference checksums, computed up front (one shared
+    // reference coordinator; the clients only compare strings).
+    let mut reference = Coordinator::new(CoordinatorCfg { threads: 1, ..Default::default() }, None);
+    let mut expected: Vec<Vec<String>> = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let mut per = Vec::with_capacity(reqs);
+        for k in 0..reqs {
+            let (cmd, n) = LOADGEN_SHAPES[(c + k) % LOADGEN_SHAPES.len()];
+            let seed = seed0 + (c * 1000 + k) as u64;
+            let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
+            let r = reference.submit(kind, seed);
+            per.push(format!("checksum={:.4}", r.checksum));
+        }
+        expected.push(per);
+    }
+
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> std::io::Result<Vec<String>> {
+                let stream = std::net::TcpStream::connect(addr.as_str())?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                let mut out = stream;
+                let mut replies = Vec::with_capacity(reqs);
+                for k in 0..reqs {
+                    let (cmd, n) = LOADGEN_SHAPES[(c + k) % LOADGEN_SHAPES.len()];
+                    let seed = seed0 + (c * 1000 + k) as u64;
+                    writeln!(out, "{cmd} {n} {seed}")?;
+                    out.flush()?;
+                    let mut line = String::new();
+                    reader.read_line(&mut line)?;
+                    replies.push(line.trim().to_string());
+                }
+                writeln!(out, "QUIT")?;
+                out.flush()?;
+                Ok(replies)
+            })
+        })
+        .collect();
+
+    let mut ok = 0usize;
+    let mut busy = 0usize;
+    let mut problems: Vec<String> = Vec::new();
+    for (c, h) in handles.into_iter().enumerate() {
+        let replies = match h.join() {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => bail!("loadgen client {c}: io error: {e}"),
+            Err(_) => bail!("loadgen client {c} panicked"),
+        };
+        for (k, reply) in replies.iter().enumerate() {
+            if reply.starts_with("OK ") {
+                ok += 1;
+                let want = &expected[c][k];
+                if !reply.contains(want.as_str()) {
+                    problems.push(format!("client {c} req {k}: got {reply:?}, want {want}"));
+                }
+            } else if reply.starts_with("ERR BUSY") {
+                busy += 1;
+            } else {
+                problems.push(format!("client {c} req {k}: unexpected reply {reply:?}"));
+            }
+        }
+    }
+    if !problems.is_empty() {
+        bail!("loadgen: {} checksum/protocol failures:\n{}", problems.len(), problems.join("\n"));
+    }
+
+    let mut text = format!(
+        "loadgen: {clients} clients x {reqs} reqs -> {ok} ok, {busy} busy, 0 mismatches\n"
+    );
+    if drain {
+        let stream = std::net::TcpStream::connect(addr.as_str())?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut conn = stream;
+        writeln!(conn, "DRAIN")?;
+        conn.flush()?;
+        let mut block = String::new();
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                bail!("loadgen: server closed mid-DRAIN:\n{block}");
+            }
+            if line.trim() == "." {
+                break;
+            }
+            block.push_str(&line);
+        }
+        if !block.starts_with("DRAINED") {
+            bail!("loadgen: unexpected DRAIN response:\n{block}");
+        }
+        // Post-drain admission must answer ERR DRAINING, not BUSY/OK.
+        writeln!(conn, "SORT 100 1")?;
+        conn.flush()?;
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        if !line.starts_with("ERR DRAINING") {
+            bail!("loadgen: post-drain request answered {:?}, want ERR DRAINING", line.trim());
+        }
+        writeln!(conn, "QUIT")?;
+        conn.flush()?;
+        if let Some(path) = &out_path {
+            std::fs::write(path, &block)
+                .with_context(|| format!("writing STATS to {path}"))?;
+            text.push_str(&format!("drain: clean (final STATS written to {path})\n"));
+        } else {
+            text.push_str("drain: clean\n");
+        }
+    }
+    Ok(text)
 }
 
 fn cmd_calibrate(args: &Args) -> Result<String> {
@@ -362,6 +532,47 @@ mod tests {
     fn serve_listen_rejects_malformed_flags_before_binding() {
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--queue-depth", "abc"]).is_err());
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--serve-threads", "x"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--lanes", "x"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--steal", "maybe"]).is_err());
+    }
+
+    #[test]
+    fn loadgen_requires_addr() {
+        assert!(call(&["loadgen"]).is_err());
+    }
+
+    #[test]
+    fn loadgen_drives_live_server_and_drains_it() {
+        let server = crate::coordinator::server::Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        // No max_conns: only the DRAIN protocol can end this serve call,
+        // so a clean join proves the rolling-restart exit path.
+        let h = std::thread::spawn(move || {
+            server
+                .serve(CoordinatorCfg { threads: 1, ..Default::default() }, None)
+                .unwrap();
+        });
+        let stats_path = std::env::temp_dir().join("ohm-cli-loadgen-stats.txt");
+        let out = call(&[
+            "loadgen",
+            "--addr",
+            &addr,
+            "--clients",
+            "3",
+            "--reqs",
+            "2",
+            "--drain",
+            "--out",
+            stats_path.to_str().unwrap(),
+        ])
+        .unwrap();
+        h.join().unwrap();
+        assert!(out.contains("6 ok, 0 busy, 0 mismatches"), "{out}");
+        assert!(out.contains("drain: clean"), "{out}");
+        let stats = std::fs::read_to_string(&stats_path).unwrap();
+        assert!(stats.starts_with("DRAINED"), "{stats}");
+        assert!(stats.contains("dispatch lanes"), "per-lane table in final STATS:\n{stats}");
+        std::fs::remove_file(&stats_path).ok();
     }
 
     #[test]

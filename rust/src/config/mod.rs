@@ -211,19 +211,25 @@ impl ExperimentConfig {
     }
 }
 
-/// Serving-layer configuration (`[serving]` section): the admission queue
-/// and reader pool behind `ohm serve --listen`. Defaults mirror
+/// Serving-layer configuration (`[serving]` + `[lanes]` sections): the
+/// admission queues, reader pool, and dispatch-lane sharding behind
+/// `ohm serve --listen`. Defaults mirror
 /// [`CoordinatorCfg::default`](crate::coordinator::CoordinatorCfg).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
     /// Connection reader threads.
     pub serve_threads: usize,
-    /// Admission-queue depth; requests past it answer `ERR BUSY`.
+    /// Per-lane admission-queue depth; requests past it answer `ERR BUSY`.
     pub queue_depth: usize,
     /// Maximum cross-connection shape-batch width.
     pub batch_max: usize,
     /// Batch-formation window after the first job of a batch, µs.
     pub batch_linger_us: u64,
+    /// Dispatch lanes (`[lanes] lanes = N`): shape kinds partition the
+    /// pool, size buckets hash within a kind's share.
+    pub lanes: usize,
+    /// Work-stealing fallback for idle lanes (`[lanes] steal = bool`).
+    pub steal: bool,
 }
 
 impl Default for ServingConfig {
@@ -236,13 +242,15 @@ impl Default for ServingConfig {
             queue_depth: c.queue_depth,
             batch_max: c.batch_max,
             batch_linger_us: c.batch_linger_us,
+            lanes: c.lanes,
+            steal: c.steal,
         }
     }
 }
 
 impl ServingConfig {
-    /// Load from a TOML-subset file ([serving] section); missing keys
-    /// keep their defaults.
+    /// Load from a TOML-subset file ([serving] + [lanes] sections);
+    /// missing keys keep their defaults.
     pub fn load(path: &Path) -> Result<ServingConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -265,6 +273,14 @@ impl ServingConfig {
                 cfg.batch_linger_us = v.as_usize().context("batch_linger_us")? as u64;
             }
         }
+        if let Some(sec) = t.get("lanes") {
+            if let Some(v) = sec.get("lanes") {
+                cfg.lanes = v.as_usize().context("lanes")?.max(1);
+            }
+            if let Some(v) = sec.get("steal") {
+                cfg.steal = v.as_bool().context("steal")?;
+            }
+        }
         Ok(cfg)
     }
 
@@ -274,6 +290,8 @@ impl ServingConfig {
         cfg.queue_depth = self.queue_depth;
         cfg.batch_max = self.batch_max;
         cfg.batch_linger_us = self.batch_linger_us;
+        cfg.lanes = self.lanes;
+        cfg.steal = self.steal;
     }
 }
 
@@ -330,12 +348,14 @@ flag = true
     fn serving_defaults_and_overrides() {
         let d = ServingConfig::default();
         assert_eq!((d.serve_threads, d.queue_depth, d.batch_max, d.batch_linger_us), (4, 64, 16, 0));
+        assert_eq!((d.lanes, d.steal), (2, true));
         let t = parse("[serving]\nserve_threads = 8\nqueue_depth = 2\nbatch_linger_us = 500\n").unwrap();
         let c = ServingConfig::from_table(&t).unwrap();
         assert_eq!(c.serve_threads, 8);
         assert_eq!(c.queue_depth, 2);
         assert_eq!(c.batch_max, d.batch_max, "unset keys keep defaults");
         assert_eq!(c.batch_linger_us, 500);
+        assert_eq!((c.lanes, c.steal), (d.lanes, d.steal), "unset [lanes] keeps defaults");
         let mut coord = crate::coordinator::CoordinatorCfg::default();
         c.apply(&mut coord);
         assert_eq!(coord.serve_threads, 8);
@@ -344,12 +364,30 @@ flag = true
     }
 
     #[test]
+    fn lanes_section_overrides_and_applies() {
+        let t = parse("[lanes]\nlanes = 4\nsteal = false\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.lanes, 4);
+        assert!(!c.steal);
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert_eq!(coord.lanes, 4);
+        assert!(!coord.steal);
+        // lanes = 0 clamps to the single-dispatcher degenerate case.
+        let t = parse("[lanes]\nlanes = 0\n").unwrap();
+        assert_eq!(ServingConfig::from_table(&t).unwrap().lanes, 1);
+        // non-bool steal is a config error, not a silent default.
+        let t = parse("[lanes]\nsteal = 3\n").unwrap();
+        assert!(ServingConfig::from_table(&t).is_err());
+    }
+
+    #[test]
     fn serving_defaults_match_coordinator_cfg() {
         let s = ServingConfig::default();
         let c = crate::coordinator::CoordinatorCfg::default();
         assert_eq!(
-            (s.serve_threads, s.queue_depth, s.batch_max, s.batch_linger_us),
-            (c.serve_threads, c.queue_depth, c.batch_max, c.batch_linger_us),
+            (s.serve_threads, s.queue_depth, s.batch_max, s.batch_linger_us, s.lanes, s.steal),
+            (c.serve_threads, c.queue_depth, c.batch_max, c.batch_linger_us, c.lanes, c.steal),
         );
     }
 

@@ -1,0 +1,358 @@
+//! Sharded dispatch lanes: per-shape-class queues with work stealing —
+//! the serving layer's answer to head-of-line blocking.
+//!
+//! PR 1's single dispatcher was an unmanaged synchronization root: one
+//! slow matmul batch head-of-line-blocked every queued sort, and the
+//! whole cost surfaced as `queue_ns` in the serving ledger. The paper's
+//! thesis says such overheads must be managed "to the root level", so the
+//! lane pool removes the root cause structurally instead of measuring it
+//! away:
+//!
+//! * every job maps to a [`ShapeClass`] — its kind (matmul vs. sort)
+//!   plus a power-of-two size bucket;
+//! * **kinds partition the lane pool** (matmul classes own the first
+//!   half, rounded up; sort classes the rest), so with ≥ 2 lanes a slow
+//!   matmul can never queue ahead of a sort, *by construction*;
+//! * size buckets hash (FNV-1a) onto the lanes within their kind's
+//!   partition, so hot shapes spread across a wider pool;
+//! * an idle lane **steals** a shape-pure run from a sibling's queue
+//!   head ([`BoundedQueue::try_pop_run`] moves the run under one lock,
+//!   keeping delivery exactly-once), so sharding never strands work.
+//!
+//! Batches stay shape-pure in every path: a lane's own batch is a
+//! same-kind run from its queue head, and a stolen batch is a same-kind
+//! run from the victim's head. The server spawns one dispatcher thread
+//! per lane; each owns its own `Coordinator` (and CPU thread pool), so a
+//! saturated lane cannot stall its siblings' execution either.
+
+use super::queue::{BoundedQueue, PopTimeout};
+use super::{Job, JobResult};
+use crate::workload::traces::TraceKind;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// How long a lane blocks on its own queue before re-checking for
+/// stealable work elsewhere (and how long it naps once its queue is
+/// closed but siblings are still draining).
+pub const STEAL_TICK: Duration = Duration::from_millis(1);
+
+/// One queued request: the job, its admission timestamp (queue-wait
+/// clock), and the reply rendezvous back to the owning reader.
+#[derive(Debug)]
+pub struct Envelope {
+    pub job: Job,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<JobResult>,
+}
+
+/// A dispatched unit of work: a shape-pure envelope run plus whether it
+/// was stolen from a sibling lane.
+#[derive(Debug)]
+pub struct LaneBatch {
+    pub envelopes: Vec<Envelope>,
+    pub stolen: bool,
+}
+
+/// The unit of lane affinity: job kind plus power-of-two size bucket.
+/// Jobs in one class share execution character (engine choice, service
+/// time magnitude), so giving each class a stable lane keeps slow and
+/// fast traffic out of each other's queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    /// 0 = matmul, 1 = sort.
+    kind: u8,
+    /// `floor(log2(n))` of the job size.
+    bucket: u8,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ShapeClass {
+    pub fn of(kind: &TraceKind) -> ShapeClass {
+        let (k, n) = match kind {
+            TraceKind::Matmul { n } => (0u8, *n),
+            TraceKind::Sort { n } => (1u8, *n),
+        };
+        let bucket = (usize::BITS - 1 - n.max(1).leading_zeros()) as u8;
+        ShapeClass { kind: k, bucket }
+    }
+
+    /// Stable lane assignment. With one lane everything shares it; with
+    /// more, matmul classes own lanes `[0, ceil(lanes/2))` and sort
+    /// classes own the rest, and the size bucket hashes within the
+    /// kind's span. The kind partition is the head-of-line guarantee:
+    /// for `lanes >= 2`, no matmul ever queues on a sort lane.
+    pub fn lane(&self, lanes: usize) -> usize {
+        let lanes = lanes.max(1);
+        if lanes == 1 {
+            return 0;
+        }
+        let sort_span = lanes / 2;
+        let (base, span) =
+            if self.kind == 0 { (0, lanes - sort_span) } else { (lanes - sort_span, sort_span) };
+        base + (fnv1a(&[self.kind, self.bucket]) % span as u64) as usize
+    }
+
+    /// Human-readable class label, e.g. `matmul/2^6`.
+    pub fn name(&self) -> String {
+        let kind = if self.kind == 0 { "matmul" } else { "sort" };
+        format!("{kind}/2^{}", self.bucket)
+    }
+}
+
+fn same_shape(a: &Envelope, b: &Envelope) -> bool {
+    a.job.kind == b.job.kind
+}
+
+/// The sharded admission layer: one bounded queue per lane, shape-class
+/// routing on push, work stealing on pop.
+pub struct LanePool {
+    queues: Vec<BoundedQueue<Envelope>>,
+    steal: bool,
+}
+
+impl LanePool {
+    /// `lanes` queues (min 1) of `depth` each; `steal` enables the idle
+    /// lane fallback.
+    pub fn new(lanes: usize, depth: usize, steal: bool) -> LanePool {
+        LanePool { queues: (0..lanes.max(1)).map(|_| BoundedQueue::new(depth)).collect(), steal }
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Stealing is meaningful only with siblings to steal from.
+    pub fn steal_enabled(&self) -> bool {
+        self.steal && self.queues.len() > 1
+    }
+
+    /// The lane a job of this kind routes to.
+    pub fn route(&self, kind: &TraceKind) -> usize {
+        ShapeClass::of(kind).lane(self.queues.len())
+    }
+
+    /// A lane's queue (panics on an out-of-range lane index).
+    pub fn queue(&self, lane: usize) -> &BoundedQueue<Envelope> {
+        &self.queues[lane]
+    }
+
+    /// Admission: push the envelope onto its routed lane. `Ok(lane)` on
+    /// success; `Err(envelope)` when that lane is at depth or closed —
+    /// the caller turns that into `ERR BUSY` / `ERR DRAINING`.
+    pub fn admit(&self, env: Envelope) -> Result<usize, Envelope> {
+        let lane = self.route(&env.job.kind);
+        self.queues[lane].try_push(env).map(|()| lane)
+    }
+
+    /// Non-blocking steal: scan the sibling lanes round-robin starting
+    /// after `thief` and take one shape-pure run (≤ `max`) from the
+    /// first non-empty queue head. Exactly-once holds because the run
+    /// moves out under the victim queue's lock.
+    pub fn steal(&self, thief: usize, max: usize) -> Option<(usize, Vec<Envelope>)> {
+        let n = self.queues.len();
+        for off in 1..n {
+            let victim = (thief + off) % n;
+            let run = self.queues[victim].try_pop_run(max, same_shape);
+            if !run.is_empty() {
+                return Some((victim, run));
+            }
+        }
+        None
+    }
+
+    /// Close every lane queue (graceful: queued work still drains).
+    pub fn close_all(&self) {
+        for q in &self.queues {
+            q.close();
+        }
+    }
+
+    /// Items currently queued across all lanes.
+    pub fn total_len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Largest per-lane occupancy high-water mark.
+    pub fn max_occupancy(&self) -> usize {
+        self.queues.iter().map(|q| q.max_len()).max().unwrap_or(0)
+    }
+
+    /// True once every lane queue is closed and empty.
+    pub fn drained(&self) -> bool {
+        self.queues.iter().all(|q| q.is_closed() && q.is_empty())
+    }
+
+    /// Next unit of work for `lane`'s dispatcher: the local queue first
+    /// (with shape-batch formation up to `max` wide over `linger`), then
+    /// a steal from a sibling when the local queue stays empty for a
+    /// [`STEAL_TICK`]. Returns `None` only when every lane is closed and
+    /// drained — the dispatcher's exit condition.
+    pub fn next_batch(&self, lane: usize, max: usize, linger: Duration) -> Option<LaneBatch> {
+        let own = &self.queues[lane];
+        loop {
+            match own.pop_timeout(STEAL_TICK) {
+                PopTimeout::Item(first) => {
+                    let mut batch = vec![first];
+                    let extra = own.drain_run(&batch[0], max.max(1) - 1, linger, same_shape);
+                    batch.extend(extra);
+                    return Some(LaneBatch { envelopes: batch, stolen: false });
+                }
+                PopTimeout::Closed => {
+                    // Local work is done. Help drain the siblings, or
+                    // exit once the whole pool is dry.
+                    if !self.steal_enabled() {
+                        return None;
+                    }
+                    match self.steal(lane, max) {
+                        Some((_victim, run)) => {
+                            return Some(LaneBatch { envelopes: run, stolen: true })
+                        }
+                        None => {
+                            if self.drained() {
+                                return None;
+                            }
+                            std::thread::sleep(STEAL_TICK);
+                        }
+                    }
+                }
+                PopTimeout::TimedOut => {
+                    if self.steal_enabled() {
+                        if let Some((_victim, run)) = self.steal(lane, max) {
+                            return Some(LaneBatch { envelopes: run, stolen: true });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(id: u64, kind: TraceKind) -> (Envelope, mpsc::Receiver<JobResult>) {
+        let (tx, rx) = mpsc::channel();
+        let e = Envelope {
+            job: Job { id, kind, seed: 0, arrival_us: 0 },
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        (e, rx)
+    }
+
+    #[test]
+    fn shape_class_buckets_by_log2() {
+        let a = ShapeClass::of(&TraceKind::Matmul { n: 64 });
+        let b = ShapeClass::of(&TraceKind::Matmul { n: 100 });
+        let c = ShapeClass::of(&TraceKind::Matmul { n: 128 });
+        assert_eq!(a.name(), "matmul/2^6");
+        assert_eq!(b.name(), "matmul/2^6", "64..127 share a bucket");
+        assert_eq!(c.name(), "matmul/2^7");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(ShapeClass::of(&TraceKind::Sort { n: 1000 }).name(), "sort/2^9");
+    }
+
+    #[test]
+    fn kinds_partition_the_lane_pool() {
+        for lanes in 2..6 {
+            for n in [1usize, 24, 300, 600, 1024, 4096] {
+                let m = ShapeClass::of(&TraceKind::Matmul { n }).lane(lanes);
+                let s = ShapeClass::of(&TraceKind::Sort { n }).lane(lanes);
+                let matmul_span = lanes - lanes / 2;
+                assert!(m < matmul_span, "matmul/{n} on lane {m} of {lanes}");
+                assert!(s >= matmul_span && s < lanes, "sort/{n} on lane {s} of {lanes}");
+            }
+        }
+        // Degenerate single lane: everything shares it.
+        assert_eq!(ShapeClass::of(&TraceKind::Matmul { n: 64 }).lane(1), 0);
+        assert_eq!(ShapeClass::of(&TraceKind::Sort { n: 64 }).lane(1), 0);
+    }
+
+    #[test]
+    fn admit_routes_to_the_shape_class_lane() {
+        let pool = LanePool::new(2, 8, false);
+        let (m, _mrx) = env(1, TraceKind::Matmul { n: 600 });
+        let (s, _srx) = env(2, TraceKind::Sort { n: 300 });
+        assert_eq!(pool.admit(m).unwrap(), 0, "matmul owns lane 0");
+        assert_eq!(pool.admit(s).unwrap(), 1, "sort owns lane 1");
+        assert_eq!(pool.queue(0).len(), 1);
+        assert_eq!(pool.queue(1).len(), 1);
+        assert_eq!(pool.total_len(), 2);
+    }
+
+    #[test]
+    fn admit_rejects_at_lane_depth() {
+        let pool = LanePool::new(2, 1, false);
+        let (a, _arx) = env(1, TraceKind::Sort { n: 100 });
+        let (b, _brx) = env(2, TraceKind::Sort { n: 100 });
+        assert!(pool.admit(a).is_ok());
+        let back = pool.admit(b).expect_err("lane at depth rejects");
+        assert_eq!(back.job.id, 2, "rejected envelope handed back");
+        assert!(pool.queue(0).is_empty(), "matmul lane unused by sorts");
+    }
+
+    #[test]
+    fn steal_takes_a_shape_pure_run_from_a_sibling() {
+        let pool = LanePool::new(2, 8, true);
+        let mut rxs = Vec::new();
+        for (id, kind) in [
+            (1, TraceKind::Sort { n: 100 }),
+            (2, TraceKind::Sort { n: 200 }),
+            (3, TraceKind::Matmul { n: 16 }),
+        ] {
+            // Push everything onto the sort lane directly to stage a
+            // mixed backlog (admit would route the matmul elsewhere).
+            let (e, rx) = env(id, kind);
+            pool.queue(1).try_push(e).map_err(|_| "push").unwrap();
+            rxs.push(rx);
+        }
+        let (victim, run) = pool.steal(0, 8).expect("backlog to steal");
+        assert_eq!(victim, 1);
+        let ids: Vec<u64> = run.iter().map(|e| e.job.id).collect();
+        assert_eq!(ids, vec![1, 2], "same-kind head run only, FIFO preserved");
+        assert_eq!(pool.queue(1).len(), 1, "the mismatched matmul stays queued");
+    }
+
+    #[test]
+    fn next_batch_drains_own_then_steals_then_exits() {
+        let pool = LanePool::new(2, 8, true);
+        let (a, _arx) = env(1, TraceKind::Matmul { n: 32 });
+        let (b, _brx) = env(2, TraceKind::Sort { n: 100 });
+        pool.admit(a).unwrap();
+        pool.admit(b).unwrap();
+        pool.close_all();
+        // Lane 0 takes its own matmul first...
+        let own = pool.next_batch(0, 8, Duration::ZERO).expect("own work first");
+        assert!(!own.stolen);
+        assert_eq!(own.envelopes[0].job.id, 1);
+        // ...then steals the sort stranded on lane 1...
+        let stolen = pool.next_batch(0, 8, Duration::ZERO).expect("steals the leftover");
+        assert!(stolen.stolen);
+        assert_eq!(stolen.envelopes[0].job.id, 2);
+        // ...and exits once the pool is dry.
+        assert!(pool.next_batch(0, 8, Duration::ZERO).is_none());
+        assert!(pool.drained());
+    }
+
+    #[test]
+    fn next_batch_without_steal_exits_on_own_close() {
+        let pool = LanePool::new(2, 8, false);
+        let (b, _brx) = env(2, TraceKind::Sort { n: 100 });
+        pool.admit(b).unwrap();
+        pool.close_all();
+        // Lane 0 (matmul lane) has nothing and may not steal: exits even
+        // though lane 1 still holds work for its own dispatcher.
+        assert!(pool.next_batch(0, 8, Duration::ZERO).is_none());
+        assert!(pool.next_batch(1, 8, Duration::ZERO).is_some());
+    }
+}

@@ -15,18 +15,25 @@
 //! analogue of the paper's "don't pay setup costs per work item".
 //!
 //! The TCP front end ([`server`]) puts a concurrent, admission-controlled
-//! serving layer in front of this: reader threads feed a bounded
-//! [`queue::BoundedQueue`] (overflow ⇒ `ERR BUSY`) drained by a dispatcher
-//! that extends shape-batching **across connections**. Queue wait, batch
-//! width, and rejections are tracked as first-class overhead categories in
+//! serving layer in front of this: reader threads route each request to a
+//! sharded [`lanes::LanePool`] — one bounded [`queue::BoundedQueue`] per
+//! shape-class lane (overflow ⇒ `ERR BUSY`), one dispatcher thread per
+//! lane extending shape-batching **across connections**, with
+//! work-stealing between lanes so sharding never strands work. A `DRAIN`
+//! protocol command stops admission, completes every admitted job, and
+//! reports a final `STATS` snapshot (the rolling-restart primitive).
+//! Queue wait, batch width, rejections, and per-lane steal/imbalance
+//! counters are tracked as first-class overhead categories in
 //! [`Telemetry`] and the serving [`Ledger`](crate::overhead::Ledger).
 
 pub mod job;
+pub mod lanes;
 pub mod queue;
 pub mod server;
 pub mod telemetry;
 
 pub use job::{Job, JobResult, RoutedEngine};
+pub use lanes::{LanePool, ShapeClass};
 pub use queue::BoundedQueue;
 pub use telemetry::Telemetry;
 
@@ -58,6 +65,14 @@ pub struct CoordinatorCfg {
     /// Serving layer: batch-formation window after the first job of a
     /// batch is popped, in µs (0 = dispatch immediately).
     pub batch_linger_us: u64,
+    /// Serving layer: dispatch lanes (`--lanes`). Shape kinds partition
+    /// the pool, size buckets hash within a kind's share; `queue_depth`
+    /// applies per lane. 1 restores the single-dispatcher behaviour.
+    pub lanes: usize,
+    /// Serving layer: let an idle lane steal a shape-pure run from a
+    /// sibling's queue head (`--steal`). Work conservation at the cost
+    /// of occasionally thinner batches on the victim lane.
+    pub steal: bool,
 }
 
 impl Default for CoordinatorCfg {
@@ -70,6 +85,8 @@ impl Default for CoordinatorCfg {
             queue_depth: 64,
             batch_max: 16,
             batch_linger_us: 0,
+            lanes: 2,
+            steal: true,
         }
     }
 }

@@ -12,15 +12,35 @@
 //! Implementation: `Mutex<VecDeque>` + condvar. Multiple producers
 //! (connection reader threads) and multiple consumers are supported;
 //! [`pop_batch`] additionally drains a consecutive same-key run from the
-//! queue head so the dispatcher can extend shape-batching *across*
-//! connections while preserving global FIFO order.
+//! queue head so a dispatcher can extend shape-batching *across*
+//! connections while preserving global FIFO order. The sharded lane
+//! dispatchers ([`super::lanes`]) compose the finer-grained primitives
+//! directly: [`pop_timeout`] (bounded wait on the local queue),
+//! [`drain_run`] (batch formation behind a popped head), and
+//! [`try_pop_run`] (the exactly-once unit of cross-lane work stealing).
 //!
 //! [`try_push`]: BoundedQueue::try_push
 //! [`pop_batch`]: BoundedQueue::pop_batch
+//! [`pop_timeout`]: BoundedQueue::pop_timeout
+//! [`drain_run`]: BoundedQueue::drain_run
+//! [`try_pop_run`]: BoundedQueue::try_pop_run
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Outcome of [`pop_timeout`](BoundedQueue::pop_timeout): distinguishes
+/// "nothing yet" from "nothing ever again" so a dispatch lane can decide
+/// between stealing and exiting.
+#[derive(Debug)]
+pub enum PopTimeout<T> {
+    /// An item arrived within the window.
+    Item(T),
+    /// The window elapsed with the queue still open but empty.
+    TimedOut,
+    /// The queue is closed and fully drained.
+    Closed,
+}
 
 /// A bounded multi-producer multi-consumer FIFO queue.
 pub struct BoundedQueue<T> {
@@ -34,6 +54,27 @@ struct Inner<T> {
     closed: bool,
     /// High-water mark of occupancy (telemetry; never exceeds `depth`).
     max_len: usize,
+}
+
+impl<T> Inner<T> {
+    /// Pop up to `max_extra` consecutive items matching `key` from the
+    /// head — the one batch-formation loop shared by every drain path
+    /// (own-queue batches and stolen runs), so the FIFO/shape-pure
+    /// semantics cannot drift between them.
+    fn drain_matching(&mut self, key: &T, max_extra: usize, same: impl Fn(&T, &T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        while out.len() < max_extra {
+            let take = match self.items.front() {
+                Some(item) => same(key, item),
+                None => false,
+            };
+            if !take {
+                break;
+            }
+            out.push(self.items.pop_front().expect("front was Some"));
+        }
+        out
+    }
 }
 
 impl<T> BoundedQueue<T> {
@@ -110,37 +151,69 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Pop a shape batch: block for the first item, optionally linger up
-    /// to `linger` to let a batch form, then drain up to `max - 1` further
-    /// items from the head while `same(first, item)` holds. Draining stops
-    /// at the first key mismatch, so global FIFO order is preserved and a
-    /// batch is always a consecutive same-key run. Returns an empty vec
-    /// only when the queue is closed and drained.
-    ///
-    /// The linger is interruptible: it ends early as soon as the batch
-    /// cannot grow further — the head run reaches `max`, a different-key
-    /// item blocks the head (FIFO means later same-key arrivals queue
-    /// behind it), the queue is full (admission control rejects anything
-    /// that could have joined), or the queue closes.
-    pub fn pop_batch(
-        &self,
-        max: usize,
-        linger: Duration,
-        same: impl Fn(&T, &T) -> bool,
-    ) -> Vec<T> {
-        let first = match self.pop() {
+    /// Blocking pop with a deadline: waits up to `timeout` for an item.
+    /// Unlike [`pop`](BoundedQueue::pop), the caller learns *why* nothing
+    /// came back — a dispatch lane reacts to [`PopTimeout::TimedOut`] by
+    /// attempting a steal and to [`PopTimeout::Closed`] by winding down.
+    pub fn pop_timeout(&self, timeout: Duration) -> PopTimeout<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return PopTimeout::Item(item);
+            }
+            if g.closed {
+                return PopTimeout::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopTimeout::TimedOut;
+            }
+            g = self.not_empty.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Non-blocking batch pop: take the head item plus the consecutive
+    /// same-key run behind it (up to `max` total), or an empty vec when
+    /// the queue is empty. The run moves out under one lock acquisition,
+    /// which is what makes cross-lane work stealing exactly-once: an item
+    /// is either still queued or owned by exactly one thief.
+    pub fn try_pop_run(&self, max: usize, same: impl Fn(&T, &T) -> bool) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let first = match g.items.pop_front() {
             Some(item) => item,
             None => return Vec::new(),
         };
-        let max = max.max(1);
         let mut batch = vec![first];
+        let extra = g.drain_matching(&batch[0], max.max(1) - 1, same);
+        batch.extend(extra);
+        batch
+    }
+
+    /// Drain up to `max_extra` further items matching `key` from the
+    /// queue head, optionally lingering up to `linger` for the run to
+    /// grow. Draining stops at the first key mismatch, so global FIFO
+    /// order is preserved and a batch is always a consecutive same-key
+    /// run.
+    ///
+    /// The linger is interruptible: it ends early as soon as the batch
+    /// cannot grow further — the head run reaches `max_extra`, a
+    /// different-key item blocks the head (FIFO means later same-key
+    /// arrivals queue behind it), the queue is full (admission control
+    /// rejects anything that could have joined), or the queue closes.
+    pub fn drain_run(
+        &self,
+        key: &T,
+        max_extra: usize,
+        linger: Duration,
+        same: impl Fn(&T, &T) -> bool,
+    ) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
         if !linger.is_zero() {
             let deadline = Instant::now() + linger;
             loop {
-                let head_run =
-                    g.items.iter().take_while(|item| same(&batch[0], *item)).count();
-                let batch_full = head_run + 1 >= max;
+                let head_run = g.items.iter().take_while(|item| same(key, *item)).count();
+                let batch_full = head_run >= max_extra;
                 let blocked = head_run < g.items.len(); // mismatched key at/behind head
                 let queue_full = g.items.len() >= g.depth; // nothing new can be admitted
                 if g.closed || batch_full || blocked || queue_full {
@@ -153,16 +226,27 @@ impl<T> BoundedQueue<T> {
                 g = self.not_empty.wait_timeout(g, deadline - now).unwrap().0;
             }
         }
-        while batch.len() < max {
-            let take = match g.items.front() {
-                Some(item) => same(&batch[0], item),
-                None => false,
-            };
-            if !take {
-                break;
-            }
-            batch.push(g.items.pop_front().expect("front was Some"));
-        }
+        g.drain_matching(key, max_extra, same)
+    }
+
+    /// Pop a shape batch: block for the first item, then
+    /// [`drain_run`](BoundedQueue::drain_run) the consecutive same-key
+    /// run behind it (up to `max - 1` extras, lingering up to `linger`).
+    /// Returns an empty vec only when the queue is closed and drained.
+    pub fn pop_batch(
+        &self,
+        max: usize,
+        linger: Duration,
+        same: impl Fn(&T, &T) -> bool,
+    ) -> Vec<T> {
+        let first = match self.pop() {
+            Some(item) => item,
+            None => return Vec::new(),
+        };
+        let max = max.max(1);
+        let mut batch = vec![first];
+        let extra = self.drain_run(&batch[0], max - 1, linger, &same);
+        batch.extend(extra);
         batch
     }
 
@@ -257,6 +341,34 @@ mod tests {
             "full queue must cut the linger short, took {:?}",
             start.elapsed()
         );
+    }
+
+    #[test]
+    fn pop_timeout_distinguishes_empty_from_closed() {
+        let q = BoundedQueue::<u32>::new(4);
+        q.try_push(9).unwrap();
+        match q.pop_timeout(Duration::from_millis(5)) {
+            PopTimeout::Item(v) => assert_eq!(v, 9),
+            other => panic!("expected an item, got {other:?}"),
+        }
+        let start = std::time::Instant::now();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), PopTimeout::TimedOut));
+        assert!(start.elapsed() >= Duration::from_millis(10), "must wait the window out");
+        q.close();
+        assert!(matches!(q.pop_timeout(Duration::from_millis(10)), PopTimeout::Closed));
+    }
+
+    #[test]
+    fn try_pop_run_takes_head_run_without_blocking() {
+        let q = BoundedQueue::new(8);
+        for item in [(1u8, 'a'), (1, 'b'), (2, 'c')] {
+            q.try_push(item).unwrap();
+        }
+        let run = q.try_pop_run(8, |x, y| x.0 == y.0);
+        assert_eq!(run, vec![(1, 'a'), (1, 'b')], "head run only");
+        let run = q.try_pop_run(1, |x, y| x.0 == y.0);
+        assert_eq!(run, vec![(2, 'c')]);
+        assert!(q.try_pop_run(8, |x: &(u8, char), y| x.0 == y.0).is_empty(), "empty queue");
     }
 
     #[test]

@@ -8,13 +8,17 @@
 //! MATMUL <n> [seed]      → OK MATMUL n=<n> engine=<e> us=<t> queue_us=<q> checksum=<c>
 //! SORT <n> [seed]        → OK SORT n=<n> engine=<e> us=<t> queue_us=<q> checksum=<c>
 //! STATS                  → multi-line telemetry table, terminated by "."
+//! DRAIN                  → stops admission, completes every admitted job,
+//!                          answers "DRAINED" + final STATS ("." terminated),
+//!                          then the server exits (rolling-restart primitive)
 //! PING                   → PONG
 //! QUIT                   → BYE (closes the connection)
 //! ```
 //!
 //! Unknown/malformed input answers `ERR <reason>` and keeps the
-//! connection open; a request that arrives while the admission queue is
-//! at depth answers `ERR BUSY ...` (backpressure, not queueing).
+//! connection open; a request whose lane queue is at depth answers
+//! `ERR BUSY ...` (backpressure, not queueing); a request arriving after
+//! `DRAIN` answers `ERR DRAINING` (terminal, not retryable-soon).
 //!
 //! ## Threading model
 //!
@@ -24,52 +28,59 @@
 //! * the **accept loop** (caller thread) hands each connection to a pool
 //!   of `serve_threads` **reader threads**; a reader owns one connection
 //!   at a time and processes its lines in order;
-//! * `MATMUL`/`SORT` requests become [`Job`]s pushed onto a bounded
-//!   [`BoundedQueue`] (depth `queue_depth`). A full queue **rejects**
-//!   with `ERR BUSY` instead of absorbing unbounded latency;
-//! * a single **dispatcher thread** owns the [`Coordinator`] (and the XLA
-//!   runtime) and drains the queue in **shape batches** — consecutive
-//!   same-shape jobs, *across connections*, up to `batch_max` wide, with
-//!   an optional `batch_linger_us` formation window — amortizing routing
-//!   and executable lookup exactly like trace-mode batching;
+//! * `MATMUL`/`SORT` requests become [`Job`]s routed by shape class onto
+//!   a sharded [`LanePool`] — one bounded queue per **dispatch lane**
+//!   (depth `queue_depth` each). A full lane **rejects** with `ERR BUSY`
+//!   instead of absorbing unbounded latency;
+//! * one **dispatcher thread per lane** owns its own [`Coordinator`]
+//!   (and CPU pool) and drains its queue in **shape batches** —
+//!   consecutive same-shape jobs, *across connections*, up to
+//!   `batch_max` wide with an optional `batch_linger_us` formation
+//!   window. Kinds partition the lanes, so a slow matmul batch can never
+//!   head-of-line-block queued sorts; an idle lane **steals** a
+//!   shape-pure run from a sibling so sharding never strands work;
 //! * each reader blocks on its job's reply channel, so per-connection
 //!   response order is preserved while cross-connection execution batches.
 //!
-//! Queue wait, batch width, and rejections land in the shared
-//! [`Telemetry`] (rendered by `STATS`) alongside per-engine service times.
+//! Queue wait, batch width, rejections, and per-lane steal/imbalance
+//! counters land in the shared [`Telemetry`] (rendered by `STATS`)
+//! alongside per-engine service times.
 //!
 //! Capacity interplay: each reader holds at most one job in flight, so
-//! queue occupancy is bounded by the reader count — `ERR BUSY` fires
-//! when `queue_depth` is set *below* the number of concurrently pushing
-//! readers (load-shedding mode). Beyond readers + handoff buffer,
-//! overload parks in the OS accept backlog (the accept loop blocks on a
-//! bounded channel), so no in-process queue is ever unbounded. Request
-//! pipelining that decouples occupancy from reader count is a ROADMAP
-//! follow-up.
+//! total queue occupancy is bounded by the reader count — `ERR BUSY`
+//! fires when a lane's `queue_depth` is set *below* the number of readers
+//! concurrently pushing that lane (load-shedding mode). Beyond readers +
+//! handoff buffer, overload parks in the OS accept backlog (the accept
+//! loop blocks on a bounded channel), so no in-process queue is ever
+//! unbounded.
 
-use super::queue::BoundedQueue;
+use super::lanes::{Envelope, LanePool};
 use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
 use crate::workload::traces::TraceKind;
 use anyhow::Result;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// One queued request: the job, its admission timestamp (queue-wait
-/// clock), and the reply rendezvous back to the owning reader.
-struct Envelope {
-    job: Job,
-    enqueued: Instant,
-    reply: mpsc::Sender<JobResult>,
-}
-
-/// State shared by readers and the dispatcher.
+/// State shared by readers and the lane dispatchers.
 struct Shared {
-    queue: BoundedQueue<Envelope>,
+    lanes: LanePool,
     telemetry: Mutex<Telemetry>,
     next_id: AtomicU64,
+    /// Set by `DRAIN`: admission answers `ERR DRAINING` from then on.
+    draining: AtomicBool,
+    /// Set once the drain completed: the accept loop exits.
+    shutdown: AtomicBool,
+    /// Jobs admitted to a lane queue. Incremented *before* the push (and
+    /// rolled back on rejection) so the drain wait can never observe a
+    /// queued-but-uncounted job.
+    admitted: AtomicU64,
+    /// Jobs finished by a dispatcher (after telemetry, before the reply).
+    finished: AtomicU64,
+    /// Listener address, used to wake the accept loop at shutdown.
+    local_addr: SocketAddr,
 }
 
 /// A running server bound to a local port.
@@ -88,22 +99,34 @@ impl Server {
     }
 
     /// Serve until `max_conns` connections have been accepted (None =
-    /// forever), then drain: readers finish their connections, the queue
-    /// closes, and the dispatcher completes queued work before return.
+    /// forever) or a `DRAIN` completes, then wind down: readers finish
+    /// their connections, the lane queues close, and every dispatcher
+    /// completes queued work before return.
     pub fn serve(&self, cfg: CoordinatorCfg, max_conns: Option<usize>) -> Result<()> {
+        let lane_count = cfg.lanes.max(1);
+        let mut telemetry = Telemetry::default();
+        telemetry.init_lanes(lane_count);
         let shared = Arc::new(Shared {
-            queue: BoundedQueue::new(cfg.queue_depth),
-            telemetry: Mutex::new(Telemetry::default()),
+            lanes: LanePool::new(lane_count, cfg.queue_depth, cfg.steal),
+            telemetry: Mutex::new(telemetry),
             next_id: AtomicU64::new(1),
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            admitted: AtomicU64::new(0),
+            finished: AtomicU64::new(0),
+            local_addr: self.local_addr(),
         });
 
-        // Dispatcher: the single consumer; owns the Coordinator (and the
-        // XLA runtime when artifacts are present).
-        let dispatcher = {
-            let shared = Arc::clone(&shared);
-            let cfg = cfg.clone();
-            std::thread::spawn(move || dispatch_loop(&shared, &cfg))
-        };
+        // One dispatcher per lane, each owning its own Coordinator (and
+        // CPU thread pool), so a saturated lane cannot stall a sibling's
+        // execution any more than its queue.
+        let dispatchers: Vec<_> = (0..lane_count)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                let cfg = cfg.clone();
+                std::thread::spawn(move || lane_loop(lane, &shared, &cfg))
+            })
+            .collect();
 
         // Reader pool: serve_threads workers, one connection each at a time.
         // The handoff buffer is bounded (2× the pool) so overload parks in
@@ -129,11 +152,16 @@ impl Server {
             .collect();
 
         // Accept loop. An accept error must still run the drain below —
-        // otherwise the dispatcher (and its thread pool) leaks, blocked in
-        // pop() forever — so capture the outcome instead of returning early.
+        // otherwise the dispatchers (and their thread pools) leak, blocked
+        // forever — so capture the outcome instead of returning early.
         let mut accepted = 0usize;
         let mut accept_result: Result<()> = Ok(());
         for stream in self.listener.incoming() {
+            // A completed DRAIN wakes this loop with a loopback
+            // connection; drop it and exit (rolling-restart path).
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
             match stream {
                 Ok(stream) => {
                     conn_tx.send(stream).expect("reader pool outlives the accept loop");
@@ -152,8 +180,10 @@ impl Server {
         for r in readers {
             let _ = r.join();
         }
-        shared.queue.close();
-        let _ = dispatcher.join();
+        shared.lanes.close_all();
+        for d in dispatchers {
+            let _ = d.join();
+        }
         accept_result
     }
 }
@@ -164,104 +194,137 @@ fn telemetry_lock(shared: &Shared) -> std::sync::MutexGuard<'_, Telemetry> {
     shared.telemetry.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-/// Dispatcher entry: run the batch loop, and if it dies for any reason,
-/// reject-drain the queue so every queued envelope's reply sender drops —
-/// blocked readers then see a disconnect ("ERR internal dispatcher
-/// unavailable") instead of waiting forever.
-fn dispatch_loop(shared: &Shared, cfg: &CoordinatorCfg) {
+/// Lane dispatcher entry: run the batch loop, and if it dies for any
+/// reason, reject-drain this lane's queue so every queued envelope's
+/// reply sender drops — blocked readers then see a disconnect ("ERR
+/// internal dispatcher unavailable") instead of waiting forever. The
+/// drops still count as finished so a concurrent DRAIN cannot hang.
+fn lane_loop(lane: usize, shared: &Shared, cfg: &CoordinatorCfg) {
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        dispatch_batches(shared, cfg);
+        lane_dispatch(lane, shared, cfg);
     }));
     if outcome.is_err() {
-        eprintln!(
-            "ohm: serving dispatcher died (panic); rejecting queued and future jobs"
-        );
-        shared.queue.close();
-        while shared.queue.pop().is_some() {}
+        eprintln!("ohm: dispatch lane {lane} died (panic); rejecting its queued jobs");
+        let q = shared.lanes.queue(lane);
+        q.close();
+        while q.pop().is_some() {
+            shared.finished.fetch_add(1, Ordering::SeqCst);
+        }
     }
 }
 
-/// Drain the queue in cross-connection shape batches until closed.
-fn dispatch_batches(shared: &Shared, cfg: &CoordinatorCfg) {
+/// Drain this lane's queue in cross-connection shape batches (stealing
+/// from siblings when idle) until the whole pool is closed and dry.
+fn lane_dispatch(lane: usize, shared: &Shared, cfg: &CoordinatorCfg) {
     let runtime = crate::runtime::Runtime::load(&crate::runtime::Runtime::default_dir()).ok();
     let coord = Coordinator::new(cfg.clone(), runtime);
     let linger = Duration::from_micros(cfg.batch_linger_us);
-    loop {
-        // Compare kinds directly: shape_key() is a bijection of kind but
-        // allocates a String per call — too hot for the batch scan.
-        let batch = shared.queue.pop_batch(cfg.batch_max, linger, |a, b| a.job.kind == b.job.kind);
-        if batch.is_empty() {
-            break; // closed and drained
-        }
-        telemetry_lock(shared).record_batch(batch.len());
-        for env in batch {
-            let queue_us = env.enqueued.elapsed().as_nanos() as f64 / 1e3;
-            // Contain engine panics: a poisoned job must answer ERR to its
-            // own reader, not wedge every later reader on a dead dispatcher.
-            let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                coord.execute_job(&env.job)
-            }))
-            .ok();
-            let panicked = executed.is_none();
-            let mut r = executed.unwrap_or_else(|| {
-                // Re-route only on the (rare) panic path, to label the
-                // fallback with the engine that would have run.
-                let routed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    coord.route(&env.job.kind)
-                }))
-                .unwrap_or(RoutedEngine::CpuSerial);
-                JobResult {
-                    id: env.job.id,
-                    shape_key: env.job.shape_key(),
-                    engine: routed,
-                    service_us: 0.0,
-                    queue_us: 0.0,
-                    checksum: 0.0,
-                    ok: false,
-                }
-            });
-            r.queue_us = queue_us;
-            {
-                let mut t = telemetry_lock(shared);
-                if panicked {
-                    // Count the failure, but don't push a fabricated 0µs
-                    // sample into an engine's service-time series.
-                    t.failed += 1;
-                } else {
-                    t.record(&r);
-                }
-                t.record_served(queue_us);
-            }
-            // A reader that hung up mid-flight just drops the result.
-            let _ = env.reply.send(r);
+    while let Some(batch) = shared.lanes.next_batch(lane, cfg.batch_max, linger) {
+        telemetry_lock(shared).record_lane_batch(lane, batch.envelopes.len(), batch.stolen);
+        for env in batch.envelopes {
+            execute_one(lane, &coord, shared, env);
         }
     }
 }
 
+/// Execute one envelope on this lane: contain engine panics (a poisoned
+/// job must answer ERR to its own reader, not wedge the lane), record
+/// telemetry with the queue wait filled in, then reply.
+fn execute_one(lane: usize, coord: &Coordinator, shared: &Shared, env: Envelope) {
+    let queue_us = env.enqueued.elapsed().as_nanos() as f64 / 1e3;
+    let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        coord.execute_job(&env.job)
+    }))
+    .ok();
+    let panicked = executed.is_none();
+    let mut r = executed.unwrap_or_else(|| {
+        // Re-route only on the (rare) panic path, to label the fallback
+        // with the engine that would have run.
+        let routed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            coord.route(&env.job.kind)
+        }))
+        .unwrap_or(RoutedEngine::CpuSerial);
+        JobResult {
+            id: env.job.id,
+            shape_key: env.job.shape_key(),
+            engine: routed,
+            service_us: 0.0,
+            queue_us: 0.0,
+            checksum: 0.0,
+            ok: false,
+        }
+    });
+    r.queue_us = queue_us;
+    {
+        let mut t = telemetry_lock(shared);
+        if panicked {
+            // Count the failure, but don't push a fabricated 0µs sample
+            // into an engine's service-time series.
+            t.failed += 1;
+        } else {
+            t.record(&r);
+        }
+        t.record_lane_served(lane, queue_us);
+    }
+    shared.finished.fetch_add(1, Ordering::SeqCst);
+    // A reader that hung up mid-flight just drops the result.
+    let _ = env.reply.send(r);
+}
+
+/// Idle-connection poll tick: a reader blocks in `read_line` at most
+/// this long, so a completed DRAIN reclaims connections whose clients
+/// never hang up (bounded-grace rolling restart) instead of wedging
+/// `serve()` on the reader join forever.
+const READ_TICK: Duration = Duration::from_millis(500);
+
 fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
+    stream.set_read_timeout(Some(READ_TICK))?;
     let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
+    let mut out = BufWriter::new(stream.try_clone()?);
+    // `line` accumulates across timeout ticks: a partial line that
+    // arrived before a tick must not be dropped on retry.
     let mut line = String::new();
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            break; // client hung up
-        }
-        match respond(shared, line.trim()) {
-            Response::Line(s) => writeln!(out, "{s}")?,
-            Response::Block(s) => {
-                for l in s.lines() {
-                    writeln!(out, "{l}")?;
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client hung up
+            Ok(_) => {
+                let response = respond(shared, line.trim());
+                line.clear();
+                match response {
+                    Response::Line(s) => writeln!(out, "{s}")?,
+                    Response::Block(s) => {
+                        for l in s.lines() {
+                            writeln!(out, "{l}")?;
+                        }
+                        writeln!(out, ".")?;
+                    }
+                    Response::Bye => {
+                        writeln!(out, "BYE")?;
+                        out.flush()?;
+                        break;
+                    }
                 }
-                writeln!(out, ".")?;
+                out.flush()?;
             }
-            Response::Bye => {
-                writeln!(out, "BYE")?;
-                break;
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle tick: keep waiting, unless a completed DRAIN is
+                // reclaiming idle connections for the server exit.
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
             }
+            Err(e) => return Err(e.into()),
         }
-        out.flush()?;
     }
+    // Flush-and-close before this reader moves on: reject lines (`ERR
+    // BUSY`, `ERR DRAINING`) and BYE must reach the wire complete, with
+    // the FIN strictly after them — a client may never observe EOF in
+    // place of a truncated error line.
+    out.flush()?;
+    let _ = stream.shutdown(Shutdown::Write);
     Ok(())
 }
 
@@ -283,12 +346,45 @@ fn respond(shared: &Shared, line: &str) -> Response {
             // accept it; streaming aggregates are a ROADMAP follow-up.
             let snapshot = telemetry_lock(shared).clone();
             let mut block = snapshot.render();
+            block.push_str(&queue_line(shared));
+            Response::Block(block)
+        }
+        Some("DRAIN") => {
+            // Stop admission atomically: requests racing past the flag
+            // either land in a still-open lane queue (and are completed
+            // below) or see the closed queue and answer ERR DRAINING.
+            shared.draining.store(true, Ordering::SeqCst);
+            shared.lanes.close_all();
+            // Every admitted job completes: lane queues close gracefully,
+            // work stealing keeps helping, and `finished` counts each
+            // envelope exactly once (including panic-path rejects).
+            while shared.admitted.load(Ordering::SeqCst) != shared.finished.load(Ordering::SeqCst)
+            {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let snapshot = telemetry_lock(shared).clone();
+            let mut block = String::from("DRAINED\n");
+            block.push_str(&snapshot.render());
+            block.push_str(&queue_line(shared));
             block.push_str(&format!(
-                "queue: len={} max={} depth={}\n",
-                shared.queue.len(),
-                shared.queue.max_len(),
-                shared.queue.depth(),
+                "drained: admitted={} finished={}\n",
+                shared.admitted.load(Ordering::SeqCst),
+                shared.finished.load(Ordering::SeqCst),
             ));
+            // Rolling-restart exit: stop the accept loop (wake it with a
+            // connection it drops on arrival). A wildcard bind address is
+            // not connectable on every platform, so wake via loopback on
+            // the bound port in that case.
+            shared.shutdown.store(true, Ordering::SeqCst);
+            let mut wake = shared.local_addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(if wake.is_ipv4() {
+                    std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                } else {
+                    std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                });
+            }
+            let _ = TcpStream::connect(wake);
             Response::Block(block)
         }
         Some(cmd @ ("MATMUL" | "SORT")) => {
@@ -297,6 +393,9 @@ fn respond(shared: &Shared, line: &str) -> Response {
                 _ => return Response::Line(format!("ERR {cmd} needs n in 1..=4096")),
             };
             let seed: u64 = toks.next().and_then(|t| t.parse().ok()).unwrap_or(42);
+            if shared.draining.load(Ordering::SeqCst) {
+                return Response::Line(format!("ERR DRAINING {cmd} rejected: server is draining"));
+            }
             let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
             let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
             let (reply_tx, reply_rx) = mpsc::channel();
@@ -305,17 +404,27 @@ fn respond(shared: &Shared, line: &str) -> Response {
                 enqueued: Instant::now(),
                 reply: reply_tx,
             };
-            if shared.queue.try_push(envelope).is_err() {
-                // Closed ⇒ the dispatcher is gone (or we're draining):
-                // that's an internal condition, not backpressure — clients
-                // retrying on BUSY must not spin against a dead server.
-                if shared.queue.is_closed() {
+            // Count before the push (rolled back on rejection): the DRAIN
+            // wait must never see a queued job missing from `admitted`.
+            shared.admitted.fetch_add(1, Ordering::SeqCst);
+            if shared.lanes.admit(envelope).is_err() {
+                shared.admitted.fetch_sub(1, Ordering::SeqCst);
+                if shared.draining.load(Ordering::SeqCst) {
+                    return Response::Line(format!(
+                        "ERR DRAINING {cmd} rejected: server is draining"
+                    ));
+                }
+                let lane = shared.lanes.route(&kind);
+                // Closed without draining ⇒ that lane's dispatcher is
+                // gone: an internal condition, not backpressure — clients
+                // retrying on BUSY must not spin against a dead lane.
+                if shared.lanes.queue(lane).is_closed() {
                     return Response::Line("ERR internal dispatcher unavailable".into());
                 }
                 telemetry_lock(shared).record_rejected();
                 return Response::Line(format!(
-                    "ERR BUSY queue full (depth {})",
-                    shared.queue.depth()
+                    "ERR BUSY lane {lane} full (depth {})",
+                    shared.lanes.queue(lane).depth()
                 ));
             }
             match reply_rx.recv() {
@@ -335,6 +444,18 @@ fn respond(shared: &Shared, line: &str) -> Response {
         Some(other) => Response::Line(format!("ERR unknown command {other:?}")),
         None => Response::Line("ERR empty request".into()),
     }
+}
+
+/// The occupancy line appended to STATS/DRAIN blocks.
+fn queue_line(shared: &Shared) -> String {
+    format!(
+        "queue: len={} max={} depth={} lanes={} steal={}\n",
+        shared.lanes.total_len(),
+        shared.lanes.max_occupancy(),
+        shared.lanes.queue(0).depth(),
+        shared.lanes.lane_count(),
+        shared.lanes.steal_enabled(),
+    )
 }
 
 #[cfg(test)]
@@ -384,6 +505,7 @@ mod tests {
         assert!(out.iter().any(|l| l.contains("coordinator telemetry")));
         assert!(out.iter().any(|l| l == "."), "stats block terminator");
         assert!(out.iter().any(|l| l.starts_with("queue: len=")), "queue line in stats");
+        assert!(out.iter().any(|l| l.contains("lanes=2")), "lane count in stats: {out:?}");
         assert!(out.iter().any(|l| l.starts_with("ERR unknown command")));
         assert_eq!(out.iter().filter(|l| l.starts_with("ERR MATMUL needs n")).count(), 2);
     }
@@ -396,5 +518,22 @@ mod tests {
         assert!(out[2].starts_with("OK SORT n=200"), "{out:?}");
         assert_eq!(out[3], "PONG");
         assert_eq!(out[4], "BYE");
+    }
+
+    #[test]
+    fn drain_reports_then_rejects_later_jobs() {
+        let out = roundtrip(&["SORT 200 1", "DRAIN", "SORT 200 2"]);
+        assert!(out[0].starts_with("OK SORT n=200"), "{out:?}");
+        assert!(out.iter().any(|l| l == "DRAINED"), "{out:?}");
+        assert!(
+            out.iter().any(|l| l.starts_with("drained: admitted=1 finished=1")),
+            "{out:?}"
+        );
+        assert!(out.iter().any(|l| l == "."), "drain block terminator: {out:?}");
+        assert!(
+            out.iter().any(|l| l.starts_with("ERR DRAINING SORT rejected")),
+            "post-drain admission must answer ERR DRAINING: {out:?}"
+        );
+        assert_eq!(out.last().map(|s| s.as_str()), Some("BYE"));
     }
 }

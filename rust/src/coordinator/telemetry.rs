@@ -33,6 +33,35 @@ fn push_sample(series: &mut Vec<f64>, sample: f64) {
     series.push(sample);
 }
 
+/// Per-lane serving counters: lane imbalance (skewed queue waits, steal
+/// traffic, thin batches) is a first-class overhead, reported per lane so
+/// a hot shape class is visible instead of averaged away.
+#[derive(Debug, Default, Clone)]
+pub struct LaneStats {
+    /// Jobs executed by this lane's dispatcher (own + stolen).
+    pub dispatched: u64,
+    /// Batches this lane dispatched.
+    pub batches: u64,
+    /// Batches this lane stole from a sibling's queue.
+    pub steals: u64,
+    /// Jobs inside those stolen batches.
+    pub stolen_jobs: u64,
+    queue_wait_us: Vec<f64>,
+    batch_widths: Vec<f64>,
+}
+
+impl LaneStats {
+    /// Queue-wait summary over this lane's served jobs, if any.
+    pub fn queue_wait(&self) -> Option<Summary> {
+        Summary::of(&self.queue_wait_us)
+    }
+
+    /// Batch-width summary over this lane's batches, if any.
+    pub fn batch_width(&self) -> Option<Summary> {
+        Summary::of(&self.batch_widths)
+    }
+}
+
 /// Aggregates job results for reporting. `Clone` so readers can snapshot
 /// it under a lock and render outside.
 #[derive(Debug, Default, Clone)]
@@ -49,8 +78,11 @@ pub struct Telemetry {
     /// Requests rejected by admission control (`ERR BUSY`).
     pub rejected: u64,
     /// Serving-layer overhead ledger: queue wait (ns) plus the handoff
-    /// events (enqueue + reply message, reply rendezvous) per served job.
+    /// events (enqueue + reply message, reply rendezvous) per served job,
+    /// and cross-lane steal migrations.
     pub serving_ledger: Ledger,
+    /// Per-dispatch-lane counters (empty outside serving mode).
+    pub lanes: Vec<LaneStats>,
     queue_wait_us: Vec<f64>,
     batch_widths: Vec<f64>,
 }
@@ -92,6 +124,45 @@ impl Telemetry {
     /// Record one admission rejection (`ERR BUSY`).
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Size the per-lane counters (called once at server start).
+    pub fn init_lanes(&mut self, n: usize) {
+        self.lanes = vec![LaneStats::default(); n];
+    }
+
+    /// Record one dispatched batch against its lane. A stolen batch is a
+    /// cross-lane migration: one γ message in the serving ledger, broken
+    /// out in its `steals` counter.
+    pub fn record_lane_batch(&mut self, lane: usize, width: usize, stolen: bool) {
+        self.record_batch(width);
+        if stolen {
+            self.serving_ledger.steals += 1;
+            self.serving_ledger.messages += 1;
+        }
+        if let Some(l) = self.lanes.get_mut(lane) {
+            l.batches += 1;
+            l.dispatched += width as u64;
+            if stolen {
+                l.steals += 1;
+                l.stolen_jobs += width as u64;
+            }
+            push_sample(&mut l.batch_widths, width as f64);
+        }
+    }
+
+    /// Record one served job against its lane (plus the global serving
+    /// categories via [`record_served`](Telemetry::record_served)).
+    pub fn record_lane_served(&mut self, lane: usize, queue_wait_us: f64) {
+        self.record_served(queue_wait_us);
+        if let Some(l) = self.lanes.get_mut(lane) {
+            push_sample(&mut l.queue_wait_us, queue_wait_us);
+        }
+    }
+
+    /// Total stolen batches across all lanes.
+    pub fn total_steals(&self) -> u64 {
+        self.lanes.iter().map(|l| l.steals).sum()
     }
 
     pub fn engine_count(&self, e: RoutedEngine) -> usize {
@@ -161,11 +232,47 @@ impl Telemetry {
                 out.push_str(&serving.render());
             }
         }
+        // Per-lane breakdown, once any lane has dispatched: imbalance
+        // (skewed waits, steal traffic) must be visible per lane.
+        if self.lanes.iter().any(|l| l.batches > 0) {
+            let mut lt = AsciiTable::new(
+                "dispatch lanes",
+                &[
+                    "lane",
+                    "jobs",
+                    "batches",
+                    "mean width",
+                    "steals",
+                    "stolen jobs",
+                    "wait mean (µs)",
+                    "wait p90 (µs)",
+                ],
+            );
+            for (i, l) in self.lanes.iter().enumerate() {
+                let width = l.batch_width().map_or("-".to_string(), |s| f(s.mean, 2));
+                let (wait_mean, wait_p90) = match l.queue_wait() {
+                    Some(s) => (f(s.mean, 1), f(s.p90, 1)),
+                    None => ("-".to_string(), "-".to_string()),
+                };
+                lt.row(vec![
+                    i.to_string(),
+                    l.dispatched.to_string(),
+                    l.batches.to_string(),
+                    width,
+                    l.steals.to_string(),
+                    l.stolen_jobs.to_string(),
+                    wait_mean,
+                    wait_p90,
+                ]);
+            }
+            out.push_str(&lt.render());
+        }
         out.push_str(&format!(
-            "completed={} failed={} rejected={} batches={} (avg batch {:.1}, max width {})\n",
+            "completed={} failed={} rejected={} steals={} batches={} (avg batch {:.1}, max width {})\n",
             self.completed,
             self.failed,
             self.rejected,
+            self.total_steals(),
             self.batches,
             if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 },
             self.max_batch_width,
@@ -228,6 +335,30 @@ mod tests {
         assert!(s.contains("rejected=1"), "{s}");
         assert!(s.contains("max width 3"), "{s}");
         assert!(s.contains("serving ledger:"), "{s}");
+    }
+
+    #[test]
+    fn lane_stats_track_steals_and_render() {
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        t.record_lane_batch(0, 3, false);
+        t.record_lane_batch(1, 2, true);
+        t.record_lane_served(0, 100.0);
+        t.record_lane_served(0, 300.0);
+        t.record_lane_served(1, 50.0);
+        assert_eq!(t.lanes[0].batches, 1);
+        assert_eq!(t.lanes[0].dispatched, 3);
+        assert_eq!(t.lanes[0].steals, 0);
+        assert_eq!(t.lanes[1].steals, 1);
+        assert_eq!(t.lanes[1].stolen_jobs, 2);
+        assert_eq!(t.total_steals(), 1);
+        assert_eq!(t.batches, 2, "lane batches roll up into the global counter");
+        assert_eq!(t.serving_ledger.steals, 1);
+        assert_eq!(t.serving_ledger.messages, 7, "2 per served job + 1 per steal");
+        assert_eq!(t.lanes[0].queue_wait().unwrap().n, 2);
+        let s = t.render();
+        assert!(s.contains("dispatch lanes"), "{s}");
+        assert!(s.contains("steals=1"), "{s}");
     }
 
     #[test]

@@ -18,6 +18,11 @@ pub struct Ledger {
     pub syncs: u64,
     /// Inter-core messages: steals, migrations, result hand-backs (γ).
     pub messages: u64,
+    /// Work-steal migrations specifically (pool deque steals, or serving
+    /// batches moved between dispatch lanes). A subset of `messages` —
+    /// already priced there by `OverheadParams::charge` — broken out so
+    /// lane/core imbalance is visible as its own overhead signal.
+    pub steals: u64,
     /// Bytes moved across cores (δ).
     pub bytes: u64,
     /// Time spent waiting in a serving admission queue, ns. Measured (not
@@ -41,6 +46,7 @@ impl Ledger {
             spawns: delta.spawns + delta.injected,
             syncs: delta.latch_waits,
             messages: delta.steals + delta.injected,
+            steals: delta.steals,
             bytes: bytes_moved,
             queue_ns: 0,
             compute_ns: 0,
@@ -54,6 +60,7 @@ impl Ledger {
             spawns: self.spawns + other.spawns,
             syncs: self.syncs + other.syncs,
             messages: self.messages + other.messages,
+            steals: self.steals + other.steals,
             bytes: self.bytes + other.bytes,
             queue_ns: self.queue_ns + other.queue_ns,
             compute_ns: self.compute_ns + other.compute_ns,
@@ -62,6 +69,7 @@ impl Ledger {
     }
 
     /// Total overhead events of all classes (coarse magnitude signal).
+    /// `steals` is excluded: each steal is already one of `messages`.
     pub fn total_events(&self) -> u64 {
         self.spawns + self.syncs + self.messages
     }
@@ -69,10 +77,11 @@ impl Ledger {
     /// Human-readable one-liner for reports.
     pub fn summary(&self) -> String {
         format!(
-            "spawns={} syncs={} msgs={} bytes={} queue={}µs compute={}µs idle={}µs",
+            "spawns={} syncs={} msgs={} steals={} bytes={} queue={}µs compute={}µs idle={}µs",
             self.spawns,
             self.syncs,
             self.messages,
+            self.steals,
             self.bytes,
             self.queue_ns / 1_000,
             self.compute_ns / 1_000,
@@ -101,25 +110,27 @@ mod tests {
         assert_eq!(l.spawns, 12); // 10 deque + 2 injected
         assert_eq!(l.syncs, 5);
         assert_eq!(l.messages, 5); // 3 steals + 2 injector hops
+        assert_eq!(l.steals, 3, "steals broken out of the γ messages");
         assert_eq!(l.bytes, 640);
     }
 
     #[test]
     fn merge_adds_fields() {
-        let a = Ledger { spawns: 1, syncs: 2, messages: 3, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
-        let b = Ledger { spawns: 10, syncs: 20, messages: 30, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
+        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
+        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
         let m = a.merged(&b);
         assert_eq!(
             m,
-            Ledger { spawns: 11, syncs: 22, messages: 33, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
+            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
         );
-        assert_eq!(m.total_events(), 66);
+        assert_eq!(m.total_events(), 66, "steals are not double-counted");
     }
 
     #[test]
     fn summary_contains_fields() {
-        let l = Ledger { spawns: 7, queue_ns: 9_000, ..Default::default() };
+        let l = Ledger { spawns: 7, steals: 2, queue_ns: 9_000, ..Default::default() };
         assert!(l.summary().contains("spawns=7"));
+        assert!(l.summary().contains("steals=2"));
         assert!(l.summary().contains("queue=9µs"));
     }
 }

@@ -2,8 +2,10 @@
 //! and the paper's qualitative tables/figures as generated text.
 //!
 //! The serving layer reuses [`AsciiTable`] for its `STATS` telemetry
-//! (service-time, queue-wait, and batch-width summaries) so server-side
-//! output renders in the same shape as the experiment reports.
+//! (service-time, queue-wait, batch-width, and per-dispatch-lane
+//! summaries — the same block a `DRAIN` reports as its final snapshot)
+//! so server-side output renders in the same shape as the experiment
+//! reports.
 
 pub mod chart;
 pub mod csv;

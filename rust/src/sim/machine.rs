@@ -324,6 +324,7 @@ impl Machine {
                 spawns: dag.spawns,
                 syncs: dag.syncs,
                 messages,
+                steals: 0,
                 bytes: bytes_moved,
                 queue_ns: 0,
                 compute_ns: compute as u64,

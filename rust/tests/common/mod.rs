@@ -1,5 +1,9 @@
 //! Shared helpers for the integration test suites.
 
+// Each test binary compiles this module independently and uses a
+// different subset of the helpers.
+#![allow(dead_code)]
+
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
 

@@ -101,6 +101,9 @@ fn server_batches_same_shape_across_connections() {
         serve_threads: 4,
         queue_depth: 16,
         batch_linger_us: 500_000, // generous batch-formation window
+        // Stealing off: an idle sibling lane would poach queued sorts out
+        // of the forming batch and the width assertion would be flaky.
+        steal: false,
         ..Default::default()
     };
     let h = std::thread::spawn(move || server.serve(cfg, Some(4)).unwrap());

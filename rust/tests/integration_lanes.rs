@@ -1,0 +1,186 @@
+//! Integration tests for the sharded serving layer: lane isolation (a
+//! slow matmul batch cannot head-of-line-block a concurrently queued
+//! sort) and the DRAIN protocol (admission stops, every admitted job
+//! completes, the final STATS snapshot is reported, and the server
+//! exits cleanly — the rolling-restart primitive).
+
+mod common;
+
+use common::stat_u64;
+use ohm::coordinator::server::Server;
+use ohm::coordinator::CoordinatorCfg;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+/// Send one line, read one reply line.
+fn request(out: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    writeln!(out, "{line}").unwrap();
+    out.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+fn quit(mut out: TcpStream, mut reader: BufReader<TcpStream>) {
+    let bye = request(&mut out, &mut reader, "QUIT");
+    assert_eq!(bye, "BYE");
+}
+
+/// With 2+ lanes, matmul and sort own separate lanes (kinds partition
+/// the pool), so a sort queued while a long matmul occupies its lane
+/// completes immediately — its latency is independent of the matmul
+/// lane's occupancy. Stealing is disabled so the sort lane cannot be
+/// busy helping the matmul lane when the sort arrives.
+#[test]
+fn slow_matmul_lane_does_not_delay_queued_sort() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg {
+        threads: 1,
+        serve_threads: 4,
+        queue_depth: 16,
+        lanes: 2,
+        steal: false,
+        ..Default::default()
+    };
+    let h = thread::spawn(move || server.serve(cfg, Some(2)).unwrap());
+
+    // Client M: one long matmul (n=1024 is ~1e9 multiply-adds on one
+    // thread — hundreds of ms at minimum on any host).
+    let matmul = thread::spawn(move || {
+        let (mut out, mut reader) = connect(addr);
+        let start = Instant::now();
+        let reply = request(&mut out, &mut reader, "MATMUL 1024 7");
+        let elapsed = start.elapsed();
+        let done = Instant::now();
+        quit(out, reader);
+        (reply, elapsed, done)
+    });
+
+    // Client S: a sort sent once the matmul is almost surely in flight.
+    thread::sleep(Duration::from_millis(50));
+    let (mut out, mut reader) = connect(addr);
+    let start = Instant::now();
+    let sort_reply = request(&mut out, &mut reader, "SORT 300 9");
+    let sort_elapsed = start.elapsed();
+    let sort_done = Instant::now();
+    quit(out, reader);
+
+    let (matmul_reply, matmul_elapsed, matmul_done) = matmul.join().unwrap();
+    h.join().unwrap();
+
+    assert!(matmul_reply.starts_with("OK MATMUL n=1024"), "{matmul_reply}");
+    assert!(sort_reply.starts_with("OK SORT n=300"), "{sort_reply}");
+    // The head-of-line assertions: the sort must complete quickly, while
+    // the matmul still runs, and far faster than the matmul itself.
+    assert!(
+        sort_elapsed < Duration::from_millis(250),
+        "sort took {sort_elapsed:?} — head-of-line-blocked behind the matmul lane?"
+    );
+    assert!(
+        sort_done < matmul_done,
+        "sort must complete while the slow matmul is still in flight \
+         (sort {sort_elapsed:?}, matmul {matmul_elapsed:?})"
+    );
+    assert!(
+        sort_elapsed * 4 < matmul_elapsed,
+        "sort latency ({sort_elapsed:?}) must be independent of matmul lane \
+         occupancy ({matmul_elapsed:?})"
+    );
+}
+
+/// DRAIN under load: every job admitted before the drain completes and
+/// answers OK; every request after it answers ERR DRAINING (never ERR
+/// BUSY); the drain response carries the final STATS snapshot whose
+/// completed count equals the OK replies; and the server exits cleanly
+/// with no `max_conns` bound — only the drain ends it.
+#[test]
+fn drain_completes_admitted_work_and_exits_cleanly() {
+    const CLIENTS: usize = 3;
+    const REQS: usize = 4;
+
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg {
+        threads: 2,
+        serve_threads: CLIENTS + 2,
+        queue_depth: 64,
+        lanes: 2,
+        steal: true,
+        ..Default::default()
+    };
+    let h = thread::spawn(move || server.serve(cfg, None).unwrap());
+
+    let barrier = Arc::new(Barrier::new(CLIENTS + 1));
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let barrier = Arc::clone(&barrier);
+            thread::spawn(move || {
+                let (mut out, mut reader) = connect(addr);
+                barrier.wait();
+                let mut replies = Vec::new();
+                for k in 0..REQS {
+                    let (cmd, n) = if (c + k) % 2 == 0 { ("SORT", 1000) } else { ("MATMUL", 96) };
+                    replies.push(request(&mut out, &mut reader, &format!("{cmd} {n} {k}")));
+                }
+                quit(out, reader);
+                replies
+            })
+        })
+        .collect();
+
+    // Controller: drain mid-stream, then verify post-drain admission.
+    let (mut out, mut reader) = connect(addr);
+    barrier.wait();
+    thread::sleep(Duration::from_millis(15));
+    writeln!(out, "DRAIN").unwrap();
+    out.flush().unwrap();
+    let mut block = String::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "server closed mid-DRAIN:\n{block}");
+        if line.trim() == "." {
+            break;
+        }
+        block.push_str(&line);
+    }
+    let post = request(&mut out, &mut reader, "SORT 100 1");
+    assert!(post.starts_with("ERR DRAINING"), "post-drain admission answered {post:?}");
+    quit(out, reader);
+
+    let all: Vec<String> = clients.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    // The serve loop had no max_conns: joining proves the DRAIN exit.
+    h.join().unwrap();
+
+    assert!(block.starts_with("DRAINED"), "{block}");
+    let mut oks = 0u64;
+    for reply in &all {
+        assert!(
+            reply.starts_with("OK ") || reply.starts_with("ERR DRAINING"),
+            "only OK or ERR DRAINING allowed once a drain is in play: {reply}"
+        );
+        assert!(!reply.starts_with("ERR BUSY"), "no BUSY after drain begins: {reply}");
+        if reply.starts_with("OK ") {
+            oks += 1;
+        }
+    }
+    assert!(oks >= 1, "some work must have been admitted before the drain: {all:?}");
+    // Every admitted job finished before the snapshot: the final STATS
+    // completed count equals the OK replies observed by clients.
+    assert_eq!(stat_u64(&block, "completed="), oks, "drain snapshot:\n{block}");
+    assert_eq!(stat_u64(&block, "failed="), 0, "{block}");
+    let admitted = stat_u64(&block, "admitted=");
+    let finished = stat_u64(&block, "finished=");
+    assert_eq!(admitted, finished, "{block}");
+    assert_eq!(finished, oks, "{block}");
+}

@@ -112,6 +112,9 @@ fn queue_depth_one_applies_backpressure() {
         threads: 1,
         serve_threads: 4,
         queue_depth: 1,
+        // Stealing off: an idle sibling lane draining the depth-1 queue
+        // would race the third push and make the rejection count flaky.
+        steal: false,
         ..Default::default()
     };
     let h = thread::spawn(move || server.serve(cfg, Some(4)).unwrap());

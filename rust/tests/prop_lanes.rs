@@ -1,0 +1,206 @@
+//! Property tests for the sharded dispatch lanes
+//! (`coordinator::lanes::LanePool`): every job routes to exactly one
+//! lane (and kinds partition the pool), batches never mix shape classes
+//! in any path (own-queue or stolen), and work stealing preserves
+//! exactly-once delivery under racing producers and consumers.
+
+use ohm::coordinator::lanes::{Envelope, LanePool, ShapeClass};
+use ohm::coordinator::{Job, JobResult};
+use ohm::prop::{ensure, forall, Config, Gen};
+use ohm::workload::traces::TraceKind;
+use std::collections::BTreeSet;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+fn mk_env(id: u64, kind: TraceKind) -> (Envelope, mpsc::Receiver<JobResult>) {
+    let (tx, rx) = mpsc::channel();
+    let env = Envelope {
+        job: Job { id, kind, seed: 0, arrival_us: 0 },
+        enqueued: Instant::now(),
+        reply: tx,
+    };
+    (env, rx)
+}
+
+fn rand_kind(g: &mut Gen) -> TraceKind {
+    let n = g.usize_in(1..4096);
+    if g.bool() {
+        TraceKind::Matmul { n }
+    } else {
+        TraceKind::Sort { n }
+    }
+}
+
+/// Routing is a function: every job maps to exactly one in-range lane,
+/// admission places it on that lane and nowhere else, and with ≥ 2 lanes
+/// matmul and sort traffic never share a lane.
+#[test]
+fn prop_every_job_lands_on_exactly_one_lane() {
+    forall(Config::default().cases(40), "one in-range lane per job, kinds disjoint", |g| {
+        let lanes = g.usize_in(1..6);
+        let jobs = g.usize_in(1..40);
+        let pool = LanePool::new(lanes, jobs.max(1), false);
+        let mut rxs = Vec::new();
+        let mut routed: Vec<(u64, usize)> = Vec::new();
+        let mut matmul_lanes = BTreeSet::new();
+        let mut sort_lanes = BTreeSet::new();
+        for id in 0..jobs as u64 {
+            let kind = rand_kind(g);
+            let lane = pool.route(&kind);
+            ensure(lane < pool.lane_count(), || format!("lane {lane} out of range"))?;
+            ensure(lane == ShapeClass::of(&kind).lane(pool.lane_count()), || {
+                "route disagrees with ShapeClass::lane".to_string()
+            })?;
+            match kind {
+                TraceKind::Matmul { .. } => matmul_lanes.insert(lane),
+                TraceKind::Sort { .. } => sort_lanes.insert(lane),
+            };
+            let (env, rx) = mk_env(id, kind);
+            let got = pool.admit(env).map_err(|_| "admit rejected below depth".to_string())?;
+            ensure(got == lane, || format!("admit placed job on lane {got}, routed {lane}"))?;
+            routed.push((id, lane));
+            rxs.push(rx);
+        }
+        if pool.lane_count() >= 2 {
+            ensure(matmul_lanes.is_disjoint(&sort_lanes), || {
+                format!("kinds share lanes: matmul {matmul_lanes:?} sort {sort_lanes:?}")
+            })?;
+        }
+        // Drain every queue directly: each id appears exactly once, on
+        // exactly the lane it was routed to.
+        let mut seen: Vec<(u64, usize)> = Vec::new();
+        for lane in 0..pool.lane_count() {
+            while let Some(env) = {
+                let q = pool.queue(lane);
+                q.try_pop_run(1, |_, _| false).into_iter().next()
+            } {
+                seen.push((env.job.id, lane));
+            }
+        }
+        seen.sort_unstable();
+        routed.sort_unstable();
+        ensure(seen == routed, || {
+            format!("queued jobs {seen:?} differ from admitted {routed:?}")
+        })
+    });
+}
+
+/// Batches are shape-pure in every path: whatever mix of kinds and sizes
+/// is queued, no batch returned by `next_batch` (own-queue or stolen)
+/// ever mixes job kinds.
+#[test]
+fn prop_batches_never_mix_shape_classes() {
+    forall(Config::default().cases(30), "own and stolen batches are shape-pure", |g| {
+        let lanes = g.usize_in(1..5);
+        let jobs = g.usize_in(1..40);
+        let max_width = g.usize_in(1..8);
+        let pool = LanePool::new(lanes, jobs.max(1), true);
+        let mut rxs = Vec::new();
+        for id in 0..jobs as u64 {
+            let (env, rx) = mk_env(id, rand_kind(g));
+            pool.admit(env).map_err(|_| "admit rejected below depth".to_string())?;
+            rxs.push(rx);
+        }
+        pool.close_all();
+        let mut delivered = 0usize;
+        for lane in 0..pool.lane_count() {
+            while let Some(batch) = pool.next_batch(lane, max_width, Duration::ZERO) {
+                ensure(!batch.envelopes.is_empty(), || "empty batch".to_string())?;
+                ensure(batch.envelopes.len() <= max_width.max(1), || {
+                    format!("batch width {} > max {max_width}", batch.envelopes.len())
+                })?;
+                let first = batch.envelopes[0].job.kind;
+                ensure(batch.envelopes.iter().all(|e| e.job.kind == first), || {
+                    format!("mixed-shape batch on lane {lane}")
+                })?;
+                delivered += batch.envelopes.len();
+            }
+        }
+        ensure(delivered == jobs, || format!("delivered {delivered} of {jobs} jobs"))
+    });
+}
+
+/// Exactly-once delivery with stealing enabled: racing producers admit
+/// (retrying on backpressure) while one consumer thread per lane drains
+/// with `next_batch` — every job is delivered exactly once, across
+/// whichever lane ends up executing it.
+#[test]
+fn prop_work_stealing_preserves_exactly_once_delivery() {
+    forall(Config::default().cases(10), "stealing keeps delivery exactly-once", |g| {
+        let lanes = g.usize_in(2..5);
+        let producers = g.usize_in(1..4);
+        let per_producer = g.usize_in(1..25);
+        let depth = g.usize_in(1..6);
+        let max_width = g.usize_in(1..6);
+        let pool = Arc::new(LanePool::new(lanes, depth, true));
+
+        let delivered = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let consumers: Vec<_> = (0..pool.lane_count())
+            .map(|lane| {
+                let pool = Arc::clone(&pool);
+                let delivered = Arc::clone(&delivered);
+                thread::spawn(move || {
+                    while let Some(batch) = pool.next_batch(lane, max_width, Duration::ZERO) {
+                        let mut d = delivered.lock().unwrap();
+                        for env in &batch.envelopes {
+                            d.push(env.job.id);
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        // Pre-generate jobs on the main thread (Gen is not Sync), then
+        // race the producers; each retries on backpressure until its
+        // job is admitted exactly once.
+        let mut plans: Vec<Vec<(u64, TraceKind)>> = Vec::new();
+        for p in 0..producers {
+            let mut plan = Vec::new();
+            for i in 0..per_producer {
+                plan.push(((p * 1_000_000 + i) as u64, rand_kind(g)));
+            }
+            plans.push(plan);
+        }
+        let producer_handles: Vec<_> = plans
+            .into_iter()
+            .map(|plan| {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || {
+                    let mut rxs = Vec::new();
+                    for (id, kind) in plan {
+                        let (mut env, rx) = mk_env(id, kind);
+                        loop {
+                            match pool.admit(env) {
+                                Ok(_) => break,
+                                Err(back) => {
+                                    env = back;
+                                    thread::yield_now();
+                                }
+                            }
+                        }
+                        rxs.push(rx);
+                    }
+                    rxs
+                })
+            })
+            .collect();
+        for h in producer_handles {
+            h.join().unwrap();
+        }
+        pool.close_all();
+        for c in consumers {
+            c.join().unwrap();
+        }
+
+        let mut got = Arc::try_unwrap(delivered).unwrap().into_inner().unwrap();
+        got.sort_unstable();
+        let mut want: Vec<u64> = (0..producers)
+            .flat_map(|p| (0..per_producer).map(move |i| (p * 1_000_000 + i) as u64))
+            .collect();
+        want.sort_unstable();
+        ensure(got == want, || {
+            format!("delivered {} jobs, expected {} (loss or duplication)", got.len(), want.len())
+        })
+    });
+}

@@ -107,6 +107,7 @@ fn prop_charge_additive_over_merged_ledgers() {
             spawns: g.u64() % 1000,
             syncs: g.u64() % 1000,
             messages: g.u64() % 1000,
+            steals: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
@@ -127,6 +128,7 @@ fn prop_ideal_params_give_zero_charge() {
             spawns: g.u64() % 1000,
             syncs: g.u64() % 1000,
             messages: g.u64() % 1000,
+            steals: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
