@@ -8,16 +8,22 @@
 //! ohm serve [--jobs N] [--threads N] [--no-xla] [--seed S]
 //!           [--listen ADDR [--conns N] [--serve-threads N] [--queue-depth N]
 //!            [--batch-max N] [--batch-linger-us U] [--lanes N]
-//!            [--steal true|false | --no-steal] [--config F]]
+//!            [--steal true|false | --no-steal]
+//!            [--admission fixed|adaptive] [--slo-p90-us N]
+//!            [--admission-window-ms N] [--config F]]
 //!           # TCP front end: concurrent readers, per-shape-class dispatch
 //!           # lanes with work stealing, bounded per-lane admission queues
-//!           # (overflow → ERR BUSY), cross-connection shape batching,
-//!           # DRAIN protocol for rolling restarts
+//!           # (overflow → ERR BUSY), SLO-driven adaptive admission
+//!           # (rolling p90 queue wait past the SLO → ERR OVERLOADED),
+//!           # cross-connection shape batching, DRAIN protocol for
+//!           # rolling restarts — see docs/PROTOCOL.md
 //! ohm loadgen --addr HOST:PORT [--clients N] [--reqs N] [--seed S]
 //!             [--drain [--out FILE]]
 //!           # drive a running server: N concurrent clients × mixed
 //!           # matmul/sort shapes, verify checksums against the serial
-//!           # engine, optionally DRAIN and save the final STATS
+//!           # engine, report client-observed latency p50/p90/p99 and
+//!           # BUSY/OVERLOADED reject counts, optionally DRAIN and save
+//!           # the final STATS
 //! ohm calibrate [--budget-ms N]
 //! ohm gantt (--matmul N | --sort N) [--cores N]
 //! ohm artifacts [--dir D]
@@ -52,15 +58,19 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|calibrate|
                         (--listen ADDR for the concurrent TCP front end;
                          --serve-threads N reader threads, --queue-depth N
                          per-lane admission bound → ERR BUSY past it,
+                         --admission fixed|adaptive + --slo-p90-us N soft
+                         admission → ERR OVERLOADED past the queue-wait SLO,
                          --lanes N shape-class dispatch lanes, --steal
                          true|false (or --no-steal) idle-lane work stealing,
                          --batch-max / --batch-linger-us shape-batch
                          formation, DRAIN protocol command for rolling
-                         restarts, --config F reads [serving] + [lanes])
+                         restarts, --config F reads [serving] + [lanes] +
+                         [admission]; protocol reference: docs/PROTOCOL.md)
   loadgen               drive a running --listen server with concurrent
                         clients and checksum verification (--addr HOST:PORT,
                         --clients N, --reqs N per client, --drain to finish
-                        with a DRAIN, --out FILE to save the final STATS)
+                        with a DRAIN, --out FILE to save the final STATS;
+                        prints client-side p50/p90/p99 and shed counts)
   calibrate             probe host overhead constants
   gantt                 render a simulated schedule
   artifacts             list AOT artifacts\n";
@@ -245,19 +255,37 @@ fn cmd_serve(args: &Args) -> Result<String> {
         if args.has("no-steal") {
             serving.steal = false;
         }
+        if let Some(v) = args.get("admission") {
+            serving.admission = crate::coordinator::AdmissionMode::from_name(v)
+                .with_context(|| format!("flag --admission: unknown mode {v:?} (fixed|adaptive)"))?;
+        }
+        if let Some(v) = args.get_parsed::<f64>("slo-p90-us")? {
+            // Reject rather than clamp: a negative (or NaN) SLO clamped
+            // to 0 would shed every request after the first — a total
+            // outage from a sign typo.
+            if !v.is_finite() || v < 0.0 {
+                bail!("flag --slo-p90-us: must be a finite value ≥ 0, got {v:?}");
+            }
+            serving.slo_p90_us = v;
+        }
+        if let Some(v) = args.get_parsed::<u64>("admission-window-ms")? {
+            serving.admission_window_ms = v.max(1);
+        }
         let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
         let conns = args.get_parsed::<usize>("conns")?;
         let mut cfg = CoordinatorCfg { threads, ..Default::default() };
         serving.apply(&mut cfg);
         let server = crate::coordinator::server::Server::bind(addr)?;
         eprintln!(
-            "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{})",
+            "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs))",
             server.local_addr(),
             cfg.serve_threads,
             cfg.lanes,
             cfg.steal,
             cfg.queue_depth,
             cfg.batch_max,
+            cfg.admission.name(),
+            cfg.slo_p90_us,
         );
         server.serve(cfg, conns)?;
         return Ok(format!("server on {} finished\n", server.local_addr()));
@@ -292,11 +320,14 @@ const LOADGEN_SHAPES: &[(&str, usize)] =
 
 /// Drive a running `serve --listen` server: N concurrent clients send
 /// mixed matmul/sort shapes, every `OK` reply's checksum is verified
-/// against the serial engine, and `--drain` finishes with the `DRAIN`
-/// protocol (asserting post-drain admission answers `ERR DRAINING`),
-/// optionally saving the final STATS block to `--out`. Errors (checksum
-/// mismatch, truncated reply, unclean drain) exit nonzero — this is the
-/// CI serving-smoke entry point.
+/// against the serial engine, client-observed request latency is
+/// reported as exact p50/p90/p99 (alongside `ERR BUSY` and
+/// `ERR OVERLOADED` reject counts, so adaptive-admission sheds are
+/// visible from the client side), and `--drain` finishes with the
+/// `DRAIN` protocol (asserting post-drain admission answers
+/// `ERR DRAINING`), optionally saving the final STATS block to `--out`.
+/// Errors (checksum mismatch, truncated reply, unclean drain) exit
+/// nonzero — this is the CI serving-smoke entry point.
 fn cmd_loadgen(args: &Args) -> Result<String> {
     use std::io::{BufRead, BufReader, Write};
     let addr = args
@@ -328,7 +359,7 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let addr = addr.clone();
-            std::thread::spawn(move || -> std::io::Result<Vec<String>> {
+            std::thread::spawn(move || -> std::io::Result<Vec<(String, f64)>> {
                 let stream = std::net::TcpStream::connect(addr.as_str())?;
                 let mut reader = BufReader::new(stream.try_clone()?);
                 let mut out = stream;
@@ -336,11 +367,15 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
                 for k in 0..reqs {
                     let (cmd, n) = LOADGEN_SHAPES[(c + k) % LOADGEN_SHAPES.len()];
                     let seed = seed0 + (c * 1000 + k) as u64;
+                    let sw = std::time::Instant::now();
                     writeln!(out, "{cmd} {n} {seed}")?;
                     out.flush()?;
                     let mut line = String::new();
                     reader.read_line(&mut line)?;
-                    replies.push(line.trim().to_string());
+                    // Client-observed latency: request write → reply read,
+                    // so it includes queue wait, service, and the wire.
+                    let latency_us = sw.elapsed().as_nanos() as f64 / 1e3;
+                    replies.push((line.trim().to_string(), latency_us));
                 }
                 writeln!(out, "QUIT")?;
                 out.flush()?;
@@ -351,6 +386,8 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
 
     let mut ok = 0usize;
     let mut busy = 0usize;
+    let mut shed = 0usize;
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(clients * reqs);
     let mut problems: Vec<String> = Vec::new();
     for (c, h) in handles.into_iter().enumerate() {
         let replies = match h.join() {
@@ -358,15 +395,22 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
             Ok(Err(e)) => bail!("loadgen client {c}: io error: {e}"),
             Err(_) => bail!("loadgen client {c} panicked"),
         };
-        for (k, reply) in replies.iter().enumerate() {
+        for (k, (reply, latency_us)) in replies.iter().enumerate() {
             if reply.starts_with("OK ") {
                 ok += 1;
+                // Served requests only: a reject returns in µs and would
+                // drag the percentiles below what any served request saw.
+                latencies_us.push(*latency_us);
                 let want = &expected[c][k];
                 if !reply.contains(want.as_str()) {
                     problems.push(format!("client {c} req {k}: got {reply:?}, want {want}"));
                 }
             } else if reply.starts_with("ERR BUSY") {
                 busy += 1;
+            } else if reply.starts_with("ERR OVERLOADED") {
+                // Adaptive-admission shed: expected under overload, never
+                // a protocol failure.
+                shed += 1;
             } else {
                 problems.push(format!("client {c} req {k}: unexpected reply {reply:?}"));
             }
@@ -377,8 +421,24 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     }
 
     let mut text = format!(
-        "loadgen: {clients} clients x {reqs} reqs -> {ok} ok, {busy} busy, 0 mismatches\n"
+        "loadgen: {clients} clients x {reqs} reqs -> {ok} ok, {busy} busy, {shed} shed, 0 mismatches\n"
     );
+    // Exact percentiles of *client-observed* latency (request write →
+    // reply read: queue wait + service + wire) over served (OK) requests.
+    // Not the same quantity as the server's STATS queue-wait digests —
+    // those isolate the wait component — but an upper envelope on them,
+    // and exact: loadgen keeps every sample.
+    latencies_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    if !latencies_us.is_empty() {
+        text.push_str(&format!(
+            "client latency, served reqs (µs): p50={:.1} p90={:.1} p99={:.1} max={:.1} (n={})\n",
+            crate::stats::percentile_sorted(&latencies_us, 50.0),
+            crate::stats::percentile_sorted(&latencies_us, 90.0),
+            crate::stats::percentile_sorted(&latencies_us, 99.0),
+            latencies_us[latencies_us.len() - 1],
+            latencies_us.len(),
+        ));
+    }
     if drain {
         let stream = std::net::TcpStream::connect(addr.as_str())?;
         let mut reader = BufReader::new(stream.try_clone()?);
@@ -534,6 +594,11 @@ mod tests {
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--serve-threads", "x"]).is_err());
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--lanes", "x"]).is_err());
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--steal", "maybe"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--admission", "turbo"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo-p90-us", "x"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo-p90-us", "-5"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo-p90-us", "NaN"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--admission-window-ms", "x"]).is_err());
     }
 
     #[test]
@@ -567,7 +632,9 @@ mod tests {
         ])
         .unwrap();
         h.join().unwrap();
-        assert!(out.contains("6 ok, 0 busy, 0 mismatches"), "{out}");
+        assert!(out.contains("6 ok, 0 busy, 0 shed, 0 mismatches"), "{out}");
+        assert!(out.contains("client latency, served reqs (µs): p50="), "{out}");
+        assert!(out.contains("p99="), "{out}");
         assert!(out.contains("drain: clean"), "{out}");
         let stats = std::fs::read_to_string(&stats_path).unwrap();
         assert!(stats.starts_with("DRAINED"), "{stats}");

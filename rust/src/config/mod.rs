@@ -5,6 +5,7 @@
 //! floats, booleans, quoted strings, and flat arrays of those; `#`
 //! comments. That subset covers every config this repo ships.
 
+use crate::coordinator::AdmissionMode;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -211,9 +212,9 @@ impl ExperimentConfig {
     }
 }
 
-/// Serving-layer configuration (`[serving]` + `[lanes]` sections): the
-/// admission queues, reader pool, and dispatch-lane sharding behind
-/// `ohm serve --listen`. Defaults mirror
+/// Serving-layer configuration (`[serving]` + `[lanes]` + `[admission]`
+/// sections): the admission queues, reader pool, dispatch-lane sharding,
+/// and SLO governor behind `ohm serve --listen`. Defaults mirror
 /// [`CoordinatorCfg::default`](crate::coordinator::CoordinatorCfg).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -230,6 +231,15 @@ pub struct ServingConfig {
     pub lanes: usize,
     /// Work-stealing fallback for idle lanes (`[lanes] steal = bool`).
     pub steal: bool,
+    /// Admission mode (`[admission] mode = "fixed"|"adaptive"`): depth
+    /// bound only, or the SLO governor on top of it.
+    pub admission: AdmissionMode,
+    /// p90 queue-wait SLO the adaptive governor defends, µs
+    /// (`[admission] slo_p90_us = N`).
+    pub slo_p90_us: f64,
+    /// Rolling half-window for the governor's queue-wait digests, ms
+    /// (`[admission] window_ms = N`).
+    pub admission_window_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -244,6 +254,9 @@ impl Default for ServingConfig {
             batch_linger_us: c.batch_linger_us,
             lanes: c.lanes,
             steal: c.steal,
+            admission: c.admission,
+            slo_p90_us: c.slo_p90_us,
+            admission_window_ms: c.admission_window_ms,
         }
     }
 }
@@ -281,6 +294,25 @@ impl ServingConfig {
                 cfg.steal = v.as_bool().context("steal")?;
             }
         }
+        if let Some(sec) = t.get("admission") {
+            if let Some(v) = sec.get("mode") {
+                let name = v.as_str().context("mode")?;
+                cfg.admission = AdmissionMode::from_name(name)
+                    .with_context(|| format!("unknown admission mode {name:?} (fixed|adaptive)"))?;
+            }
+            if let Some(v) = sec.get("slo_p90_us") {
+                let slo = v.as_f64().context("slo_p90_us")?;
+                // Reject rather than clamp: a negative/NaN SLO forced to
+                // 0 means "shed everything" — fail fast instead.
+                if !slo.is_finite() || slo < 0.0 {
+                    bail!("slo_p90_us must be a finite value ≥ 0, got {slo:?}");
+                }
+                cfg.slo_p90_us = slo;
+            }
+            if let Some(v) = sec.get("window_ms") {
+                cfg.admission_window_ms = v.as_usize().context("window_ms")?.max(1) as u64;
+            }
+        }
         Ok(cfg)
     }
 
@@ -292,6 +324,9 @@ impl ServingConfig {
         cfg.batch_linger_us = self.batch_linger_us;
         cfg.lanes = self.lanes;
         cfg.steal = self.steal;
+        cfg.admission = self.admission;
+        cfg.slo_p90_us = self.slo_p90_us;
+        cfg.admission_window_ms = self.admission_window_ms;
     }
 }
 
@@ -389,6 +424,38 @@ flag = true
             (s.serve_threads, s.queue_depth, s.batch_max, s.batch_linger_us, s.lanes, s.steal),
             (c.serve_threads, c.queue_depth, c.batch_max, c.batch_linger_us, c.lanes, c.steal),
         );
+        assert_eq!(
+            (s.admission, s.slo_p90_us, s.admission_window_ms),
+            (c.admission, c.slo_p90_us, c.admission_window_ms),
+        );
+    }
+
+    #[test]
+    fn admission_section_overrides_and_applies() {
+        let d = ServingConfig::default();
+        assert_eq!(d.admission, AdmissionMode::Fixed, "fixed is the compatible default");
+        let t = parse("[admission]\nmode = \"adaptive\"\nslo_p90_us = 2500\nwindow_ms = 100\n")
+            .unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.admission, AdmissionMode::Adaptive);
+        assert_eq!(c.slo_p90_us, 2500.0);
+        assert_eq!(c.admission_window_ms, 100);
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert_eq!(coord.admission, AdmissionMode::Adaptive);
+        assert_eq!(coord.slo_p90_us, 2500.0);
+        assert_eq!(coord.admission_window_ms, 100);
+        // Unset [admission] keys keep their defaults.
+        let t = parse("[admission]\nmode = \"adaptive\"\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.slo_p90_us, d.slo_p90_us);
+        assert_eq!(c.admission_window_ms, d.admission_window_ms);
+        // An unknown mode is a config error, not a silent default.
+        let t = parse("[admission]\nmode = \"turbo\"\n").unwrap();
+        assert!(ServingConfig::from_table(&t).is_err());
+        // A negative SLO is rejected, not clamped to shed-everything 0.
+        let t = parse("[admission]\nslo_p90_us = -5\n").unwrap();
+        assert!(ServingConfig::from_table(&t).is_err());
     }
 
     #[test]

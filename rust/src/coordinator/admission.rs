@@ -1,0 +1,332 @@
+//! SLO-driven adaptive admission: the governor that turns observed
+//! queue-wait percentiles back into admission decisions.
+//!
+//! PR 1 bounded queue wait *indirectly* with a fixed per-lane depth: the
+//! operator guesses how many queued jobs correspond to an acceptable
+//! wait. The paper's framing says scheduling overhead must be managed at
+//! the root, and the root quantity here is the wait itself — so the
+//! adaptive mode closes the loop:
+//!
+//! * every dispatched job's measured queue wait is folded into a
+//!   **rolling window** of fixed-memory [`Digest`]s on the lane it was
+//!   *admitted* to (two half-windows, rotated by time, so the estimate
+//!   tracks the recent past and forgets idle history);
+//! * admission consults the rolling p90: above the configured SLO the
+//!   lane starts **shedding** — requests answer `ERR OVERLOADED
+//!   p90=<µs> slo=<µs>` (a soft reject, distinct from the hard `ERR
+//!   BUSY` depth bound, which stays as the structural backstop);
+//! * shedding ends with **hysteresis**: the lane re-admits once the
+//!   rolling p90 falls to [`RECOVERY_FRACTION`] of the SLO, or the
+//!   window drains with the lane queue empty (a truly idle lane is
+//!   never stuck shedding, while a *stalled* lane — empty window but
+//!   work still queued — keeps shedding on its last evidence), so the
+//!   controller cannot flap around the threshold.
+//!
+//! [`AdmissionMode::Fixed`] keeps the PR 1 behaviour bit-for-bit: the
+//! governor admits unconditionally and records nothing.
+
+use crate::stats::Digest;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Hysteresis: a shedding lane re-admits once its rolling p90 falls to
+/// this fraction of the SLO (not merely below the SLO itself).
+pub const RECOVERY_FRACTION: f64 = 0.8;
+
+/// How requests are admitted to a lane queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Depth-bound only (`ERR BUSY` past `queue_depth`); the governor is
+    /// inert. The PR 1 contract.
+    Fixed,
+    /// Depth bound plus the SLO feedback loop: shed (`ERR OVERLOADED`)
+    /// while a lane's rolling p90 queue wait exceeds the SLO.
+    Adaptive,
+}
+
+impl AdmissionMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionMode::Fixed => "fixed",
+            AdmissionMode::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AdmissionMode> {
+        match s {
+            "fixed" => Some(AdmissionMode::Fixed),
+            "adaptive" => Some(AdmissionMode::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// Why a request was shed: the observed rolling p90 and the SLO it
+/// exceeded, both in µs (the server renders these into the
+/// `ERR OVERLOADED` reply).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Overload {
+    pub p90_us: f64,
+    pub slo_us: f64,
+}
+
+/// Per-lane rolling-window state. Two half-windows: quantiles are read
+/// over `previous ∪ current`, so every estimate covers between one and
+/// two window lengths of history and old samples age out in at most two
+/// rotations.
+#[derive(Debug)]
+struct LaneWindow {
+    current: Digest,
+    previous: Digest,
+    started: Instant,
+    shedding: bool,
+    /// Last rolling p90 computed from a non-empty window: the shed
+    /// evidence reported while a *stalled* lane (empty window, jobs
+    /// still queued) waits for fresh completions.
+    last_p90_us: f64,
+}
+
+impl LaneWindow {
+    fn new() -> LaneWindow {
+        LaneWindow {
+            current: Digest::new(),
+            previous: Digest::new(),
+            started: Instant::now(),
+            shedding: false,
+            last_p90_us: 0.0,
+        }
+    }
+
+    /// Advance the window clock: after one window length the current
+    /// half becomes the previous half; after two, both are stale and the
+    /// estimate starts empty (idle lanes forget their history).
+    fn rotate(&mut self, window: Duration) {
+        let elapsed = self.started.elapsed();
+        if elapsed >= window * 2 {
+            self.current = Digest::new();
+            self.previous = Digest::new();
+            self.started = Instant::now();
+        } else if elapsed >= window {
+            self.previous = std::mem::take(&mut self.current);
+            self.started = Instant::now();
+        }
+    }
+
+    /// Rolling p90 over both half-windows (`None` when no recent waits).
+    /// A zipped union walk — no digest copy on the admission hot path.
+    fn rolling_p90(&self) -> Option<f64> {
+        Digest::quantile_union(&self.current, &self.previous, 0.9)
+    }
+}
+
+/// The admission governor: one rolling window per lane, shared between
+/// the reader threads (admission checks) and the lane dispatchers
+/// (queue-wait observations). All state is behind per-lane mutexes, so
+/// admission on lane A never contends with dispatch on lane B.
+pub struct Governor {
+    mode: AdmissionMode,
+    slo_p90_us: f64,
+    window: Duration,
+    lanes: Vec<Mutex<LaneWindow>>,
+}
+
+impl Governor {
+    /// `window_ms` is the rolling half-window length (clamped ≥ 1 ms).
+    pub fn new(mode: AdmissionMode, slo_p90_us: f64, window_ms: u64, lanes: usize) -> Governor {
+        Governor {
+            mode,
+            slo_p90_us,
+            window: Duration::from_millis(window_ms.max(1)),
+            lanes: (0..lanes.max(1)).map(|_| Mutex::new(LaneWindow::new())).collect(),
+        }
+    }
+
+    pub fn mode(&self) -> AdmissionMode {
+        self.mode
+    }
+
+    pub fn slo_p90_us(&self) -> f64 {
+        self.slo_p90_us
+    }
+
+    /// Lock one lane's window, tolerating poison (advisory state only).
+    fn lane(&self, lane: usize) -> std::sync::MutexGuard<'_, LaneWindow> {
+        self.lanes[lane].lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Record one dispatched job's measured queue wait against the lane
+    /// it was admitted to. No-op in [`AdmissionMode::Fixed`].
+    pub fn observe(&self, lane: usize, queue_wait_us: f64) {
+        if self.mode == AdmissionMode::Fixed {
+            return;
+        }
+        let mut w = self.lane(lane);
+        w.rotate(self.window);
+        w.current.record(queue_wait_us);
+    }
+
+    /// Admission check for a request routed to `lane`. `Ok` admits;
+    /// `Err` is a shed with the evidence for the `ERR OVERLOADED` reply.
+    ///
+    /// `queued` reports the lane's current queue length; it
+    /// distinguishes *idle* from *stalled* when the rolling window is
+    /// empty: a window can drain because the lane is quiet (recover) or
+    /// because a long batch has dispatched nothing for two windows while
+    /// work piles up behind it (keep shedding — waits are not observed
+    /// to be low, they are simply not observed). Lazy because reading it
+    /// takes the lane queue's mutex, and the common non-empty-window
+    /// path must not pay that on every admission.
+    pub fn admit(&self, lane: usize, queued: impl FnOnce() -> usize) -> Result<(), Overload> {
+        if self.mode == AdmissionMode::Fixed {
+            return Ok(());
+        }
+        let mut w = self.lane(lane);
+        w.rotate(self.window);
+        let Some(p90) = w.rolling_p90() else {
+            if w.shedding && queued() > 0 {
+                // Stalled, not idle: nothing completed for two windows
+                // but the queue is still backed up. Hold the shed on the
+                // last evidence we had.
+                return Err(Overload { p90_us: w.last_p90_us, slo_us: self.slo_p90_us });
+            }
+            // Truly idle (or never loaded): nothing to defend.
+            w.shedding = false;
+            return Ok(());
+        };
+        w.last_p90_us = p90;
+        if w.shedding {
+            if p90 <= self.slo_p90_us * RECOVERY_FRACTION {
+                w.shedding = false;
+                Ok(())
+            } else {
+                Err(Overload { p90_us: p90, slo_us: self.slo_p90_us })
+            }
+        } else if p90 > self.slo_p90_us {
+            w.shedding = true;
+            Err(Overload { p90_us: p90, slo_us: self.slo_p90_us })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Whether a lane is currently shedding (test/observability hook).
+    pub fn shedding(&self, lane: usize) -> bool {
+        self.lane(lane).shedding
+    }
+
+    /// The lane's current rolling p90 estimate, if any recent waits.
+    pub fn rolling_p90(&self, lane: usize) -> Option<f64> {
+        let mut w = self.lane(lane);
+        w.rotate(self.window);
+        w.rolling_p90()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_round_trip() {
+        for mode in [AdmissionMode::Fixed, AdmissionMode::Adaptive] {
+            assert_eq!(AdmissionMode::from_name(mode.name()), Some(mode));
+        }
+        assert_eq!(AdmissionMode::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn fixed_mode_always_admits_and_records_nothing() {
+        let g = Governor::new(AdmissionMode::Fixed, 1.0, 1_000, 2);
+        for _ in 0..10 {
+            g.observe(0, 1e9);
+            assert!(g.admit(0, || 0).is_ok());
+        }
+        assert!(g.rolling_p90(0).is_none(), "fixed mode keeps no window");
+        assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn adaptive_sheds_past_slo_and_reports_evidence() {
+        // Window long enough that nothing rotates mid-test.
+        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 60_000, 2);
+        assert!(g.admit(0, || 0).is_ok(), "no samples yet: admit");
+        for _ in 0..10 {
+            g.observe(0, 5_000.0);
+        }
+        let over = g.admit(0, || 0).expect_err("p90 ≈ 5000 > slo 1000 must shed");
+        assert_eq!(over.slo_us, 1_000.0);
+        assert!(over.p90_us > 1_000.0, "reported p90 {} must exceed the SLO", over.p90_us);
+        assert!(g.shedding(0));
+        assert!(g.admit(1, || 0).is_ok(), "sibling lane is independent");
+        assert!(g.admit(0, || 0).is_err(), "still shedding without recovery evidence");
+    }
+
+    #[test]
+    fn adaptive_admits_under_slo() {
+        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 60_000, 1);
+        for _ in 0..10 {
+            g.observe(0, 100.0);
+        }
+        assert!(g.admit(0, || 0).is_ok());
+        assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn recovery_needs_hysteresis_fraction() {
+        // One half-window of high waits trips shedding; after rotations
+        // replace it with waits just *below* the SLO but *above* the
+        // recovery fraction, the lane must keep shedding; only clearly
+        // lower waits (or an empty window) reopen it.
+        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 100, 1);
+        for _ in 0..10 {
+            g.observe(0, 5_000.0);
+        }
+        assert!(g.admit(0, || 0).is_err());
+        // Age the 5000µs samples fully out (≥ 2 windows), then observe
+        // waits at 90% of the SLO — under the SLO, over the 80% recovery
+        // threshold.
+        std::thread::sleep(Duration::from_millis(250));
+        for _ in 0..10 {
+            g.observe(0, 900.0);
+        }
+        assert!(g.admit(0, || 0).is_err(), "900 > 0.8·1000: hysteresis holds the shed");
+        // Now age those out and observe clearly-recovered waits.
+        std::thread::sleep(Duration::from_millis(250));
+        for _ in 0..10 {
+            g.observe(0, 100.0);
+        }
+        assert!(g.admit(0, || 0).is_ok(), "100 ≤ 0.8·1000: recovered");
+        assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn idle_window_recovers_a_shedding_lane() {
+        let g = Governor::new(AdmissionMode::Adaptive, 0.0, 50, 1);
+        g.observe(0, 50.0);
+        assert!(g.admit(0, || 0).is_err(), "any positive wait exceeds slo 0");
+        // No further traffic and an empty queue: after two window
+        // lengths the rolling estimate is empty and the lane reopens.
+        std::thread::sleep(Duration::from_millis(150));
+        assert!(g.admit(0, || 0).is_ok(), "idle lane recovers by window expiry");
+        assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn stalled_lane_with_queued_work_does_not_idle_recover() {
+        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 200, 1);
+        for _ in 0..5 {
+            g.observe(0, 5_000.0);
+        }
+        assert!(g.admit(0, || 3).is_err(), "over SLO: shed");
+        // Both half-windows age out with zero completions — but jobs are
+        // still queued, so this is a stall, not idleness: the shed must
+        // hold, reporting the last known p90 as evidence.
+        std::thread::sleep(Duration::from_millis(500));
+        let over = g.admit(0, || 3).expect_err("stalled lane must keep shedding");
+        assert!(over.p90_us > 1_000.0, "stale evidence reported: {}", over.p90_us);
+        assert!(g.shedding(0));
+        // Same moment, queue drained ⇒ genuinely idle ⇒ recover.
+        assert!(g.admit(0, || 0).is_ok(), "empty queue turns the stall into idle recovery");
+        assert!(!g.shedding(0));
+    }
+}

@@ -24,6 +24,11 @@
 //! run from the victim's head. The server spawns one dispatcher thread
 //! per lane; each owns its own `Coordinator` (and CPU thread pool), so a
 //! saturated lane cannot stall its siblings' execution either.
+//!
+//! The lane is also the unit of **admission feedback**: the governor
+//! ([`super::admission`]) keeps one rolling queue-wait window per lane,
+//! keyed by this module's routing — so a matmul lane blowing its SLO
+//! sheds matmuls while the sort lanes keep admitting.
 
 use super::queue::{BoundedQueue, PopTimeout};
 use super::{Job, JobResult};
@@ -36,11 +41,17 @@ use std::time::{Duration, Instant};
 /// closed but siblings are still draining).
 pub const STEAL_TICK: Duration = Duration::from_millis(1);
 
-/// One queued request: the job, its admission timestamp (queue-wait
-/// clock), and the reply rendezvous back to the owning reader.
+/// One queued request: the job, the lane it was admitted to, its
+/// admission timestamp (queue-wait clock), and the reply rendezvous
+/// back to the owning reader.
 #[derive(Debug)]
 pub struct Envelope {
     pub job: Job,
+    /// The lane this envelope was admitted to — set authoritatively by
+    /// [`LanePool::admit`]. Queue-wait attribution (admission governor,
+    /// per-lane telemetry) keys on this, not on whichever dispatcher
+    /// ends up executing the job after a steal.
+    pub lane: usize,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<JobResult>,
 }
@@ -144,11 +155,14 @@ impl LanePool {
         &self.queues[lane]
     }
 
-    /// Admission: push the envelope onto its routed lane. `Ok(lane)` on
-    /// success; `Err(envelope)` when that lane is at depth or closed —
-    /// the caller turns that into `ERR BUSY` / `ERR DRAINING`.
-    pub fn admit(&self, env: Envelope) -> Result<usize, Envelope> {
+    /// Admission: push the envelope onto its routed lane, stamping
+    /// [`Envelope::lane`] so downstream attribution cannot diverge from
+    /// the queue actually used. `Ok(lane)` on success; `Err(envelope)`
+    /// when that lane is at depth or closed — the caller turns that
+    /// into `ERR BUSY` / `ERR DRAINING`.
+    pub fn admit(&self, mut env: Envelope) -> Result<usize, Envelope> {
         let lane = self.route(&env.job.kind);
+        env.lane = lane;
         self.queues[lane].try_push(env).map(|()| lane)
     }
 
@@ -243,6 +257,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let e = Envelope {
             job: Job { id, kind, seed: 0, arrival_us: 0 },
+            lane: 0, // stamped by admit(); raw-push tests leave it unused
             enqueued: Instant::now(),
             reply: tx,
         };
@@ -288,6 +303,8 @@ mod tests {
         assert_eq!(pool.queue(0).len(), 1);
         assert_eq!(pool.queue(1).len(), 1);
         assert_eq!(pool.total_len(), 2);
+        assert_eq!(pool.queue(0).pop().unwrap().lane, 0, "admit stamps the admitted lane");
+        assert_eq!(pool.queue(1).pop().unwrap().lane, 1, "admit stamps the admitted lane");
     }
 
     #[test]

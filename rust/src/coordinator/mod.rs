@@ -25,13 +25,24 @@
 //! Queue wait, batch width, rejections, and per-lane steal/imbalance
 //! counters are tracked as first-class overhead categories in
 //! [`Telemetry`] and the serving [`Ledger`](crate::overhead::Ledger).
+//!
+//! Admission itself comes in two modes ([`admission`]): the **fixed**
+//! depth bound alone, or the **adaptive** governor that feeds each
+//! lane's measured queue-wait percentiles (streaming
+//! [`Digest`](crate::stats::Digest)s, fixed memory) back into the
+//! admission decision — shedding with `ERR OVERLOADED` while a lane's
+//! rolling p90 wait exceeds the configured SLO and re-admitting with
+//! hysteresis once it recovers. The wire protocol is specified in
+//! `docs/PROTOCOL.md` and the data flow in `docs/ARCHITECTURE.md`.
 
+pub mod admission;
 pub mod job;
 pub mod lanes;
 pub mod queue;
 pub mod server;
 pub mod telemetry;
 
+pub use admission::{AdmissionMode, Governor};
 pub use job::{Job, JobResult, RoutedEngine};
 pub use lanes::{LanePool, ShapeClass};
 pub use queue::BoundedQueue;
@@ -73,6 +84,18 @@ pub struct CoordinatorCfg {
     /// sibling's queue head (`--steal`). Work conservation at the cost
     /// of occasionally thinner batches on the victim lane.
     pub steal: bool,
+    /// Serving layer: admission mode (`--admission fixed|adaptive`).
+    /// `Fixed` keeps only the depth bound; `Adaptive` adds the SLO
+    /// governor (soft `ERR OVERLOADED` rejects driven by each lane's
+    /// rolling p90 queue wait).
+    pub admission: admission::AdmissionMode,
+    /// Serving layer: the p90 queue-wait SLO the adaptive governor
+    /// defends, in µs (`--slo-p90-us`). Ignored in `Fixed` mode.
+    pub slo_p90_us: f64,
+    /// Serving layer: rolling half-window length for the governor's
+    /// queue-wait digests, ms (`--admission-window-ms`). Estimates cover
+    /// one to two windows of recent history.
+    pub admission_window_ms: u64,
 }
 
 impl Default for CoordinatorCfg {
@@ -87,6 +110,9 @@ impl Default for CoordinatorCfg {
             batch_linger_us: 0,
             lanes: 2,
             steal: true,
+            admission: admission::AdmissionMode::Fixed,
+            slo_p90_us: 10_000.0,
+            admission_window_ms: 500,
         }
     }
 }

@@ -7,7 +7,10 @@
 //! time" as unbounded latency. So admission is explicit: [`try_push`] is
 //! non-blocking and **rejects** once the configured depth is reached (the
 //! server answers `ERR BUSY`), keeping queue wait — a first-class overhead
-//! category in [`super::Telemetry`] — bounded by design.
+//! category in [`super::Telemetry`] — bounded by design. The depth bound
+//! is the *hard* admission layer; the SLO-driven governor
+//! ([`super::admission`]) sits in front of it as the *soft* layer,
+//! shedding on observed wait rather than on occupancy.
 //!
 //! Implementation: `Mutex<VecDeque>` + condvar. Multiple producers
 //! (connection reader threads) and multiple consumers are supported;

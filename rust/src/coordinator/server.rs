@@ -17,8 +17,13 @@
 //!
 //! Unknown/malformed input answers `ERR <reason>` and keeps the
 //! connection open; a request whose lane queue is at depth answers
-//! `ERR BUSY ...` (backpressure, not queueing); a request arriving after
-//! `DRAIN` answers `ERR DRAINING` (terminal, not retryable-soon).
+//! `ERR BUSY ...` (backpressure, not queueing); under `--admission
+//! adaptive`, a request routed to a lane whose rolling p90 queue wait
+//! exceeds the SLO answers `ERR OVERLOADED p90=<µs> slo=<µs>` (a soft
+//! shed — retryable after backoff, unlike the hard depth bound); a
+//! request arriving after `DRAIN` answers `ERR DRAINING` (terminal, not
+//! retryable-soon). The complete wire grammar, with a worked session
+//! transcript, is documented in `docs/PROTOCOL.md`.
 //!
 //! ## Threading model
 //!
@@ -30,8 +35,10 @@
 //!   at a time and processes its lines in order;
 //! * `MATMUL`/`SORT` requests become [`Job`]s routed by shape class onto
 //!   a sharded [`LanePool`] — one bounded queue per **dispatch lane**
-//!   (depth `queue_depth` each). A full lane **rejects** with `ERR BUSY`
-//!   instead of absorbing unbounded latency;
+//!   (depth `queue_depth` each). The [`Governor`] checks the lane's
+//!   rolling queue-wait p90 against the SLO first (**shed** with `ERR
+//!   OVERLOADED` in adaptive mode); a full lane then **rejects** with
+//!   `ERR BUSY` instead of absorbing unbounded latency;
 //! * one **dispatcher thread per lane** owns its own [`Coordinator`]
 //!   (and CPU pool) and drains its queue in **shape batches** —
 //!   consecutive same-shape jobs, *across connections*, up to
@@ -54,6 +61,7 @@
 //! loop blocks on a bounded channel), so no in-process queue is ever
 //! unbounded.
 
+use super::admission::Governor;
 use super::lanes::{Envelope, LanePool};
 use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
 use crate::workload::traces::TraceKind;
@@ -67,6 +75,9 @@ use std::time::{Duration, Instant};
 /// State shared by readers and the lane dispatchers.
 struct Shared {
     lanes: LanePool,
+    /// Adaptive-admission state: readers consult it before pushing, lane
+    /// dispatchers feed it measured queue waits (inert in fixed mode).
+    governor: Governor,
     telemetry: Mutex<Telemetry>,
     next_id: AtomicU64,
     /// Set by `DRAIN`: admission answers `ERR DRAINING` from then on.
@@ -106,8 +117,15 @@ impl Server {
         let lane_count = cfg.lanes.max(1);
         let mut telemetry = Telemetry::default();
         telemetry.init_lanes(lane_count);
+        telemetry.init_admission(cfg.admission.name(), cfg.slo_p90_us);
         let shared = Arc::new(Shared {
             lanes: LanePool::new(lane_count, cfg.queue_depth, cfg.steal),
+            governor: Governor::new(
+                cfg.admission,
+                cfg.slo_p90_us,
+                cfg.admission_window_ms,
+                lane_count,
+            ),
             telemetry: Mutex::new(telemetry),
             next_id: AtomicU64::new(1),
             draining: AtomicBool::new(false),
@@ -222,16 +240,26 @@ fn lane_dispatch(lane: usize, shared: &Shared, cfg: &CoordinatorCfg) {
     while let Some(batch) = shared.lanes.next_batch(lane, cfg.batch_max, linger) {
         telemetry_lock(shared).record_lane_batch(lane, batch.envelopes.len(), batch.stolen);
         for env in batch.envelopes {
-            execute_one(lane, &coord, shared, env);
+            execute_one(&coord, shared, env);
         }
     }
 }
 
-/// Execute one envelope on this lane: contain engine panics (a poisoned
-/// job must answer ERR to its own reader, not wedge the lane), record
-/// telemetry with the queue wait filled in, then reply.
-fn execute_one(lane: usize, coord: &Coordinator, shared: &Shared, env: Envelope) {
+/// Execute one envelope: contain engine panics (a poisoned job must
+/// answer ERR to its own reader, not wedge the lane), record telemetry
+/// with the queue wait filled in, then reply. Per-lane accounting keys
+/// on the envelope's *admitted* lane, not on whichever dispatcher runs
+/// it, so the executing lane is not a parameter.
+fn execute_one(coord: &Coordinator, shared: &Shared, env: Envelope) {
     let queue_us = env.enqueued.elapsed().as_nanos() as f64 / 1e3;
+    // Queue wait is attributed to the lane the job was *admitted* to (a
+    // stolen job's wait indicts the victim's queue, not the thief's) —
+    // both in the governor and in the per-lane telemetry below, so the
+    // STATS admission table shows exactly the waits the governor acts
+    // on. Observed before the reply is sent, so a client that has seen
+    // its own OK can rely on the sample being in the rolling window.
+    let admit_lane = env.lane;
+    shared.governor.observe(admit_lane, queue_us);
     let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         coord.execute_job(&env.job)
     }))
@@ -264,7 +292,7 @@ fn execute_one(lane: usize, coord: &Coordinator, shared: &Shared, env: Envelope)
         } else {
             t.record(&r);
         }
-        t.record_lane_served(lane, queue_us);
+        t.record_lane_served(admit_lane, queue_us);
     }
     shared.finished.fetch_add(1, Ordering::SeqCst);
     // A reader that hung up mid-flight just drops the result.
@@ -341,9 +369,10 @@ fn respond(shared: &Shared, line: &str) -> Response {
         Some("QUIT") => Response::Bye,
         Some("STATS") => {
             // Snapshot under the lock, render (sorts + formatting) outside
-            // it. The clone is still O(samples) under the lock — bounded by
-            // SAMPLE_CAP/SHAPE_CAP, and STATS is an operator command, so we
-            // accept it; streaming aggregates are a ROADMAP follow-up.
+            // it. Queue-wait and batch-width series are fixed-memory
+            // digests, so the clone cost no longer scales with the sample
+            // count; only the capped per-engine/per-shape service-time
+            // vectors (≤ SAMPLE_CAP each) are copied.
             let snapshot = telemetry_lock(shared).clone();
             let mut block = snapshot.render();
             block.push_str(&queue_line(shared));
@@ -397,10 +426,26 @@ fn respond(shared: &Shared, line: &str) -> Response {
                 return Response::Line(format!("ERR DRAINING {cmd} rejected: server is draining"));
             }
             let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
+            // Soft admission first: the governor sheds when this lane's
+            // rolling p90 queue wait exceeds the SLO (adaptive mode only;
+            // in fixed mode admit() returns before taking any lock, and
+            // the lazy `queued` closure keeps the queue mutex untouched
+            // outside the rare empty-window path). Distinct from ERR
+            // BUSY — the queue may well have room; it is the *wait*, not
+            // the depth, that is out of budget.
+            let lane = shared.lanes.route(&kind);
+            if let Err(over) = shared.governor.admit(lane, || shared.lanes.queue(lane).len()) {
+                telemetry_lock(shared).record_shed(lane);
+                return Response::Line(format!(
+                    "ERR OVERLOADED p90={:.0} slo={:.0}",
+                    over.p90_us, over.slo_us
+                ));
+            }
             let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
             let (reply_tx, reply_rx) = mpsc::channel();
             let envelope = Envelope {
                 job: Job { id, kind, seed, arrival_us: 0 },
+                lane, // provisional; admit() re-stamps authoritatively
                 enqueued: Instant::now(),
                 reply: reply_tx,
             };
@@ -414,7 +459,6 @@ fn respond(shared: &Shared, line: &str) -> Response {
                         "ERR DRAINING {cmd} rejected: server is draining"
                     ));
                 }
-                let lane = shared.lanes.route(&kind);
                 // Closed without draining ⇒ that lane's dispatcher is
                 // gone: an internal condition, not backpressure — clients
                 // retrying on BUSY must not spin against a dead lane.

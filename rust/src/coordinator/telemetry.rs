@@ -3,22 +3,33 @@
 //!
 //! The paper tracks α/β/γ/δ inside a run; the serving layer adds the
 //! categories that surface *in front of* execution — **queue wait**,
-//! **shape-batch width**, and **admission rejections** — and folds queue
-//! wait into a serving [`Ledger`] so the front end is reported with the
-//! same vocabulary as the engines underneath it.
+//! **shape-batch width**, **admission rejections** (`ERR BUSY`), and
+//! **admission sheds** (`ERR OVERLOADED`) — and folds queue wait into a
+//! serving [`Ledger`] so the front end is reported with the same
+//! vocabulary as the engines underneath it.
+//!
+//! Queue-wait and batch-width series are **streaming digests**
+//! ([`Digest`]): fixed memory per series regardless of uptime, O(1)
+//! `Clone`, and percentile queries with a bounded relative error. That
+//! is what lets `STATS` snapshot telemetry under the dispatcher-shared
+//! lock without an `O(samples)` buffer copy, and what feeds the adaptive
+//! admission governor its per-lane percentiles
+//! ([`super::admission::Governor`]).
 
 use super::job::{JobResult, RoutedEngine};
 use crate::overhead::Ledger;
 use crate::report::{table::f, AsciiTable};
-use crate::stats::Summary;
+use crate::stats::{Digest, DigestSummary, Summary};
 use std::collections::BTreeMap;
 
 /// Caps: a forever-running server must not grow telemetry without bound.
-/// `SAMPLE_CAP` bounds samples per series — at the cap a series is
-/// decimated (every other sample dropped), keeping a representative
-/// spread at half rate. `SHAPE_CAP` bounds the number of per-shape
-/// series — a client cycling every legal `n` must not mint unbounded
-/// map entries; overflow shapes aggregate under `shape:other`.
+/// `SAMPLE_CAP` bounds samples per service-time series — at the cap a
+/// series is decimated (every other sample dropped), keeping a
+/// representative spread at half rate. `SHAPE_CAP` bounds the number of
+/// per-shape series — a client cycling every legal `n` must not mint
+/// unbounded map entries; overflow shapes aggregate under `shape:other`.
+/// (Queue-wait and batch-width series need no cap: they are fixed-memory
+/// [`Digest`]s by construction.)
 const SAMPLE_CAP: usize = 16_384;
 const SHAPE_CAP: usize = 512;
 
@@ -34,8 +45,9 @@ fn push_sample(series: &mut Vec<f64>, sample: f64) {
 }
 
 /// Per-lane serving counters: lane imbalance (skewed queue waits, steal
-/// traffic, thin batches) is a first-class overhead, reported per lane so
-/// a hot shape class is visible instead of averaged away.
+/// traffic, thin batches, shed hotspots) is a first-class overhead,
+/// reported per lane so a hot shape class is visible instead of averaged
+/// away.
 #[derive(Debug, Default, Clone)]
 pub struct LaneStats {
     /// Jobs executed by this lane's dispatcher (own + stolen).
@@ -46,24 +58,38 @@ pub struct LaneStats {
     pub steals: u64,
     /// Jobs inside those stolen batches.
     pub stolen_jobs: u64,
-    queue_wait_us: Vec<f64>,
-    batch_widths: Vec<f64>,
+    /// Requests routed to this lane that the admission governor shed
+    /// (`ERR OVERLOADED`).
+    pub sheds: u64,
+    queue_wait_us: Digest,
+    batch_widths: Digest,
 }
 
 impl LaneStats {
-    /// Queue-wait summary over this lane's served jobs, if any.
-    pub fn queue_wait(&self) -> Option<Summary> {
-        Summary::of(&self.queue_wait_us)
+    /// Queue-wait percentile snapshot over jobs *admitted* to this lane
+    /// (stolen jobs still count against the victim's queue — same
+    /// attribution as the admission governor).
+    pub fn queue_wait(&self) -> Option<DigestSummary> {
+        self.queue_wait_us.summary()
     }
 
-    /// Batch-width summary over this lane's batches, if any.
-    pub fn batch_width(&self) -> Option<Summary> {
-        Summary::of(&self.batch_widths)
+    /// Batch-width percentile snapshot over this lane's batches.
+    pub fn batch_width(&self) -> Option<DigestSummary> {
+        self.batch_widths.summary()
     }
 }
 
+/// Admission-governor identity for the STATS "admission" table: which
+/// mode the server runs and the SLO it defends.
+#[derive(Debug, Clone)]
+pub struct AdmissionInfo {
+    pub mode: &'static str,
+    pub slo_p90_us: f64,
+}
+
 /// Aggregates job results for reporting. `Clone` so readers can snapshot
-/// it under a lock and render outside.
+/// it under a lock and render outside; the serving-layer series are
+/// digests, so the clone cost is independent of how many jobs ran.
 #[derive(Debug, Default, Clone)]
 pub struct Telemetry {
     per_engine: BTreeMap<&'static str, Vec<f64>>,
@@ -75,16 +101,21 @@ pub struct Telemetry {
     pub batched_jobs: u64,
     /// Widest batch dispatched so far.
     pub max_batch_width: u64,
-    /// Requests rejected by admission control (`ERR BUSY`).
+    /// Requests rejected by the hard depth bound (`ERR BUSY`).
     pub rejected: u64,
+    /// Requests shed by the adaptive admission governor
+    /// (`ERR OVERLOADED`) — the soft-reject path.
+    pub shed: u64,
     /// Serving-layer overhead ledger: queue wait (ns) plus the handoff
     /// events (enqueue + reply message, reply rendezvous) per served job,
-    /// and cross-lane steal migrations.
+    /// cross-lane steal migrations, and governor sheds.
     pub serving_ledger: Ledger,
     /// Per-dispatch-lane counters (empty outside serving mode).
     pub lanes: Vec<LaneStats>,
-    queue_wait_us: Vec<f64>,
-    batch_widths: Vec<f64>,
+    /// Admission mode + SLO, set at server start (None outside serving).
+    pub admission: Option<AdmissionInfo>,
+    queue_wait_us: Digest,
+    batch_widths: Digest,
 }
 
 impl Telemetry {
@@ -108,27 +139,44 @@ impl Telemetry {
         self.batches += 1;
         self.batched_jobs += size as u64;
         self.max_batch_width = self.max_batch_width.max(size as u64);
-        push_sample(&mut self.batch_widths, size as f64);
+        self.batch_widths.record(size as f64);
     }
 
     /// Record the serving-layer overhead of one dispatched job: its queue
     /// wait plus the handoff events (enqueue message, reply message,
     /// reply rendezvous) charged to the serving ledger.
     pub fn record_served(&mut self, queue_wait_us: f64) {
-        push_sample(&mut self.queue_wait_us, queue_wait_us);
+        self.queue_wait_us.record(queue_wait_us);
         self.serving_ledger.queue_ns += (queue_wait_us * 1e3) as u64;
         self.serving_ledger.messages += 2;
         self.serving_ledger.syncs += 1;
     }
 
-    /// Record one admission rejection (`ERR BUSY`).
+    /// Record one admission rejection (`ERR BUSY`, the hard depth bound).
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
+    }
+
+    /// Record one governor shed (`ERR OVERLOADED`) against the lane the
+    /// request was routed to. A shed is scheduling overhead *managed
+    /// away*, so it also lands in the serving ledger.
+    pub fn record_shed(&mut self, lane: usize) {
+        self.shed += 1;
+        self.serving_ledger.sheds += 1;
+        if let Some(l) = self.lanes.get_mut(lane) {
+            l.sheds += 1;
+        }
     }
 
     /// Size the per-lane counters (called once at server start).
     pub fn init_lanes(&mut self, n: usize) {
         self.lanes = vec![LaneStats::default(); n];
+    }
+
+    /// Record the admission governor's identity (called once at server
+    /// start) so STATS can render the admission table.
+    pub fn init_admission(&mut self, mode: &'static str, slo_p90_us: f64) {
+        self.admission = Some(AdmissionInfo { mode, slo_p90_us });
     }
 
     /// Record one dispatched batch against its lane. A stolen batch is a
@@ -147,16 +195,20 @@ impl Telemetry {
                 l.steals += 1;
                 l.stolen_jobs += width as u64;
             }
-            push_sample(&mut l.batch_widths, width as f64);
+            l.batch_widths.record(width as f64);
         }
     }
 
-    /// Record one served job against its lane (plus the global serving
-    /// categories via [`record_served`](Telemetry::record_served)).
+    /// Record one served job's queue wait against the lane it was
+    /// *admitted* to — the same attribution the admission governor uses,
+    /// so the STATS admission table shows exactly the waits the governor
+    /// acts on even when work stealing executes the job elsewhere —
+    /// plus the global serving categories via
+    /// [`record_served`](Telemetry::record_served).
     pub fn record_lane_served(&mut self, lane: usize, queue_wait_us: f64) {
         self.record_served(queue_wait_us);
         if let Some(l) = self.lanes.get_mut(lane) {
-            push_sample(&mut l.queue_wait_us, queue_wait_us);
+            l.queue_wait_us.record(queue_wait_us);
         }
     }
 
@@ -169,14 +221,14 @@ impl Telemetry {
         self.per_engine.get(e.name()).map_or(0, |v| v.len())
     }
 
-    /// Queue-wait summary over served jobs, if any were queued.
-    pub fn queue_wait(&self) -> Option<Summary> {
-        Summary::of(&self.queue_wait_us)
+    /// Queue-wait percentile snapshot over served jobs, if any queued.
+    pub fn queue_wait(&self) -> Option<DigestSummary> {
+        self.queue_wait_us.summary()
     }
 
-    /// Batch-width summary over dispatched batches.
-    pub fn batch_width(&self) -> Option<Summary> {
-        Summary::of(&self.batch_widths)
+    /// Batch-width percentile snapshot over dispatched batches.
+    pub fn batch_width(&self) -> Option<DigestSummary> {
+        self.batch_widths.summary()
     }
 
     /// Render the service-time summary table.
@@ -201,19 +253,19 @@ impl Telemetry {
         }
         let mut out = t.render();
         // The serving table only renders when the serving layer actually
-        // ran (queue waits or rejections): trace-mode batching alone is
-        // coordinator batching, not serving overhead.
-        if self.queue_wait().is_some() || self.rejected > 0 {
+        // ran (queue waits, rejections, or sheds): trace-mode batching
+        // alone is coordinator batching, not serving overhead.
+        if self.queue_wait().is_some() || self.rejected > 0 || self.shed > 0 {
             let mut serving = AsciiTable::new(
                 "serving overhead",
-                &["category", "n", "mean", "median", "p90", "max"],
+                &["category", "n", "mean", "p50", "p90", "max"],
             );
             if let Some(s) = self.queue_wait() {
                 serving.row(vec![
                     "queue-wait (µs)".to_string(),
                     s.n.to_string(),
                     f(s.mean, 1),
-                    f(s.median, 1),
+                    f(s.p50, 1),
                     f(s.p90, 1),
                     f(s.max, 1),
                 ]);
@@ -223,7 +275,7 @@ impl Telemetry {
                     "batch-width (jobs)".to_string(),
                     s.n.to_string(),
                     f(s.mean, 2),
-                    f(s.median, 1),
+                    f(s.p50, 1),
                     f(s.p90, 1),
                     f(s.max, 0),
                 ]);
@@ -267,17 +319,45 @@ impl Telemetry {
             }
             out.push_str(&lt.render());
         }
+        // Admission table: per-lane queue-wait percentiles (from the
+        // digests — no per-sample buffer exists to consult) plus shed
+        // counts, under the governor's mode and SLO.
+        if let Some(adm) = &self.admission {
+            if self.lanes.iter().any(|l| l.queue_wait().is_some() || l.sheds > 0) {
+                let mut at = AsciiTable::new(
+                    &format!("admission (mode={}, slo p90={}µs)", adm.mode, f(adm.slo_p90_us, 0)),
+                    &["lane", "served", "p50 (µs)", "p90 (µs)", "p99 (µs)", "max (µs)", "sheds"],
+                );
+                for (i, l) in self.lanes.iter().enumerate() {
+                    let (served, p50, p90, p99, max) = match l.queue_wait() {
+                        Some(s) => {
+                            (s.n.to_string(), f(s.p50, 1), f(s.p90, 1), f(s.p99, 1), f(s.max, 1))
+                        }
+                        None => {
+                            let dash = || "-".to_string();
+                            ("0".to_string(), dash(), dash(), dash(), dash())
+                        }
+                    };
+                    at.row(vec![i.to_string(), served, p50, p90, p99, max, l.sheds.to_string()]);
+                }
+                out.push_str(&at.render());
+            }
+        }
         out.push_str(&format!(
-            "completed={} failed={} rejected={} steals={} batches={} (avg batch {:.1}, max width {})\n",
+            "completed={} failed={} rejected={} shed={} steals={} batches={} (avg batch {:.1}, max width {})\n",
             self.completed,
             self.failed,
             self.rejected,
+            self.shed,
             self.total_steals(),
             self.batches,
             if self.batches > 0 { self.batched_jobs as f64 / self.batches as f64 } else { 0.0 },
             self.max_batch_width,
         ));
-        if self.serving_ledger.total_events() > 0 || self.serving_ledger.queue_ns > 0 {
+        if self.serving_ledger.total_events() > 0
+            || self.serving_ledger.queue_ns > 0
+            || self.serving_ledger.sheds > 0
+        {
             out.push_str(&format!("serving ledger: {}\n", self.serving_ledger.summary()));
         }
         out
@@ -362,6 +442,70 @@ mod tests {
     }
 
     #[test]
+    fn sheds_count_per_lane_and_into_the_ledger() {
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        t.init_admission("adaptive", 1_000.0);
+        t.record_lane_served(0, 2_500.0);
+        t.record_shed(0);
+        t.record_shed(0);
+        t.record_shed(1);
+        assert_eq!(t.shed, 3);
+        assert_eq!(t.lanes[0].sheds, 2);
+        assert_eq!(t.lanes[1].sheds, 1);
+        assert_eq!(t.serving_ledger.sheds, 3);
+        assert_eq!(t.rejected, 0, "sheds are distinct from hard rejections");
+        let s = t.render();
+        assert!(s.contains("admission (mode=adaptive, slo p90=1000µs)"), "{s}");
+        assert!(s.contains("shed=3"), "{s}");
+        assert!(s.contains("sheds=3"), "ledger line carries sheds: {s}");
+    }
+
+    #[test]
+    fn admission_table_renders_lane_percentiles_from_digests() {
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        t.init_admission("adaptive", 5_000.0);
+        for wait in [100.0, 200.0, 400.0, 800.0] {
+            t.record_lane_served(0, wait);
+        }
+        let s = t.render();
+        assert!(s.contains("admission (mode=adaptive"), "{s}");
+        let lane0 = t.lanes[0].queue_wait().unwrap();
+        assert_eq!(lane0.n, 4);
+        assert!(lane0.p50 <= lane0.p90 && lane0.p90 <= lane0.p99 && lane0.p99 <= lane0.max);
+        assert_eq!(lane0.max, 800.0, "digest max is exact");
+        assert!(t.lanes[1].queue_wait().is_none(), "idle lane renders dashes");
+    }
+
+    #[test]
+    fn admission_table_absent_without_governor_info() {
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        t.record_lane_served(0, 100.0);
+        let s = t.render();
+        assert!(!s.contains("admission (mode="), "{s}");
+    }
+
+    #[test]
+    fn stats_snapshot_clone_renders_identically() {
+        // The STATS path renders from a clone taken under the telemetry
+        // lock; with digest-backed series the clone must lose nothing —
+        // byte-identical output under a fixed workload.
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        t.init_admission("adaptive", 2_000.0);
+        for i in 0..500 {
+            t.record(&res(RoutedEngine::CpuSerial, 10.0 + i as f64, true));
+            t.record_lane_batch(i % 2, 1 + i % 4, i % 7 == 0);
+            t.record_lane_served(i % 2, (i * 13 % 4_000) as f64 + 0.5);
+        }
+        t.record_rejected();
+        t.record_shed(1);
+        assert_eq!(t.render(), t.clone().render(), "snapshot clone must be lossless");
+    }
+
+    #[test]
     fn shape_series_count_stays_bounded() {
         let mut t = Telemetry::default();
         for n in 0..(super::SHAPE_CAP + 50) {
@@ -381,6 +525,19 @@ mod tests {
         }
         assert!(series.len() <= super::SAMPLE_CAP, "series grew to {}", series.len());
         assert!(series.len() > super::SAMPLE_CAP / 4, "decimation dropped too much");
+    }
+
+    #[test]
+    fn queue_wait_memory_is_fixed_not_per_sample() {
+        let mut t = Telemetry::default();
+        t.init_lanes(1);
+        for i in 0..100_000 {
+            t.record_lane_served(0, (i % 1000) as f64 + 1.0);
+        }
+        assert_eq!(t.queue_wait().unwrap().n, 100_000);
+        // The series is a fixed-size digest: cloning it cannot scale with
+        // the sample count (compile-time guarantee, asserted for intent).
+        assert!(Digest::memory_bytes() < 4096);
     }
 
     #[test]

@@ -28,13 +28,20 @@
 //!   mergesort / samplesort / bitonic baselines).
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX+Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); Python never runs on the request path.
-//! * [`coordinator`] — job queue, overhead-aware backend policy, shape
-//!   batching for XLA jobs, telemetry.
+//! * [`coordinator`] — the serving layer: concurrent TCP front end with
+//!   sharded per-shape-class dispatch lanes (work stealing, DRAIN rolling
+//!   restarts), overhead-aware backend policy, cross-connection shape
+//!   batching, SLO-driven adaptive admission
+//!   ([`coordinator::admission`]), and digest-backed telemetry. The wire
+//!   protocol is documented in `docs/PROTOCOL.md`, the data flow in
+//!   `docs/ARCHITECTURE.md`.
 //! * [`experiments`] / [`report`] — one runner per paper table/figure
 //!   (Table 1–3, Fig 1–5) plus ablations, with ASCII/CSV emitters.
 //! * [`bench`], [`prop`], [`cli`], [`config`], [`stats`], [`workload`],
 //!   [`util`] — in-repo substrates for criterion / proptest / clap / serde,
 //!   which are unavailable in this offline build (DESIGN.md §2).
+//!   [`stats::digest`] adds the fixed-memory streaming quantile digest
+//!   behind serving percentiles and adaptive admission.
 //!
 //! ## Quickstart
 //!

@@ -23,6 +23,13 @@ pub struct Ledger {
     /// already priced there by `OverheadParams::charge` — broken out so
     /// lane/core imbalance is visible as its own overhead signal.
     pub steals: u64,
+    /// Requests shed by the adaptive admission governor (`ERR
+    /// OVERLOADED`): scheduling overhead *managed away* rather than paid.
+    /// Each shed is queueing the SLO controller refused to absorb, so it
+    /// is accounted here alongside the overheads that were paid — but,
+    /// like `queue_ns`, it is bookkeeping that `OverheadParams::charge`
+    /// does not price, and it is excluded from `total_events`.
+    pub sheds: u64,
     /// Bytes moved across cores (δ).
     pub bytes: u64,
     /// Time spent waiting in a serving admission queue, ns. Measured (not
@@ -47,6 +54,7 @@ impl Ledger {
             syncs: delta.latch_waits,
             messages: delta.steals + delta.injected,
             steals: delta.steals,
+            sheds: 0,
             bytes: bytes_moved,
             queue_ns: 0,
             compute_ns: 0,
@@ -61,6 +69,7 @@ impl Ledger {
             syncs: self.syncs + other.syncs,
             messages: self.messages + other.messages,
             steals: self.steals + other.steals,
+            sheds: self.sheds + other.sheds,
             bytes: self.bytes + other.bytes,
             queue_ns: self.queue_ns + other.queue_ns,
             compute_ns: self.compute_ns + other.compute_ns,
@@ -77,11 +86,12 @@ impl Ledger {
     /// Human-readable one-liner for reports.
     pub fn summary(&self) -> String {
         format!(
-            "spawns={} syncs={} msgs={} steals={} bytes={} queue={}µs compute={}µs idle={}µs",
+            "spawns={} syncs={} msgs={} steals={} sheds={} bytes={} queue={}µs compute={}µs idle={}µs",
             self.spawns,
             self.syncs,
             self.messages,
             self.steals,
+            self.sheds,
             self.bytes,
             self.queue_ns / 1_000,
             self.compute_ns / 1_000,
@@ -116,21 +126,22 @@ mod tests {
 
     #[test]
     fn merge_adds_fields() {
-        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
-        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
+        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, sheds: 9, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
+        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, sheds: 90, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
         let m = a.merged(&b);
         assert_eq!(
             m,
-            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
+            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, sheds: 99, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
         );
-        assert_eq!(m.total_events(), 66, "steals are not double-counted");
+        assert_eq!(m.total_events(), 66, "steals and sheds are not double-counted");
     }
 
     #[test]
     fn summary_contains_fields() {
-        let l = Ledger { spawns: 7, steals: 2, queue_ns: 9_000, ..Default::default() };
+        let l = Ledger { spawns: 7, steals: 2, sheds: 3, queue_ns: 9_000, ..Default::default() };
         assert!(l.summary().contains("spawns=7"));
         assert!(l.summary().contains("steals=2"));
+        assert!(l.summary().contains("sheds=3"));
         assert!(l.summary().contains("queue=9µs"));
     }
 }

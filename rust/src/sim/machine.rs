@@ -325,6 +325,7 @@ impl Machine {
                 syncs: dag.syncs,
                 messages,
                 steals: 0,
+                sheds: 0,
                 bytes: bytes_moved,
                 queue_ns: 0,
                 compute_ns: compute as u64,

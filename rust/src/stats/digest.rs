@@ -1,0 +1,361 @@
+//! Fixed-memory streaming quantile digest for serving telemetry.
+//!
+//! The serving layer needs queue-wait percentiles that are (a) cheap to
+//! record on the dispatch hot path, (b) cheap to snapshot under the
+//! telemetry lock (`STATS` must not clone `O(samples)` buffers), and
+//! (c) mergeable, so rolling windows and cross-lane rollups are bucket
+//! additions rather than sample concatenations. [`Digest`] provides all
+//! three with a log-bucketed histogram (HDR-histogram style, the same
+//! family as t-digest/P² estimators but with a *provable* per-query
+//! error bound instead of a heuristic one):
+//!
+//! * values are counted into buckets spaced `2^(1/SUBS_PER_OCTAVE)`
+//!   apart geometrically, so memory is a fixed [`NBUCKETS`]-slot array
+//!   (≈2 KiB) no matter how many samples are recorded;
+//! * [`Digest::quantile`] returns the geometric midpoint of the bucket
+//!   containing the exact rank-`q` sample, which bounds the relative
+//!   value error by [`Digest::MAX_RATIO`] (≈4.6%, the half-bucket
+//!   `2^(1/16) ≈ 4.4%` plus float slack) for any value inside the
+//!   tracked range — see `rust/tests/prop_digest.rs` for the property
+//!   checked against exact sorted-sample quantiles;
+//! * [`Digest::merge`] is an element-wise bucket addition: exact,
+//!   commutative, and associative on counts, so merged quantiles equal
+//!   the quantiles of the union of the inputs' samples.
+//!
+//! The tracked range is `[2^-4, 2^30]` (in the caller's unit; for queue
+//! waits in µs that is 62.5 ns … ~18 min). Finite values outside it —
+//! including zero and negatives — clamp into the edge buckets, where the
+//! relative bound no longer applies; non-finite values are dropped;
+//! `min`/`max`/`mean` stay exact regardless because they are tracked
+//! directly.
+
+/// Geometric sub-buckets per factor-of-two. 8 gives a bucket width of
+/// `2^(1/8) ≈ 1.09`, i.e. ≤ ~4.4% error from the geometric midpoint.
+pub const SUBS_PER_OCTAVE: usize = 8;
+
+/// Smallest tracked value is `2^LOG2_MIN` (see module docs for units).
+pub const LOG2_MIN: f64 = -4.0;
+
+/// Largest tracked value is `2^LOG2_MAX`.
+pub const LOG2_MAX: f64 = 30.0;
+
+/// Bucket count: `(LOG2_MAX - LOG2_MIN) * SUBS_PER_OCTAVE` octant steps.
+/// Spelled as a literal so it can size an array type; the unit test
+/// `bucket_count_matches_range` pins it to the formula.
+pub const NBUCKETS: usize = 272;
+
+/// A fixed-memory streaming quantile digest (log-bucketed histogram).
+///
+/// `Clone` is a flat memcpy of ~2 KiB and `merge` a bucket-wise add, so
+/// snapshotting and windowing never touch per-sample storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Digest {
+    counts: [u64; NBUCKETS],
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Digest {
+    fn default() -> Self {
+        Digest::new()
+    }
+}
+
+/// Percentile snapshot rendered from a [`Digest`] (the digest analogue
+/// of [`super::Summary`], restricted to what buckets can answer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DigestSummary {
+    pub n: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Digest {
+    /// Guaranteed bound on `estimate / exact` (and its inverse) for
+    /// quantiles of samples inside the tracked range: half a bucket in
+    /// each direction, `2^(1 / (2 · SUBS_PER_OCTAVE)) ≈ 1.0443`, padded
+    /// slightly for floating-point slack in the bucket index math.
+    pub const MAX_RATIO: f64 = 1.046;
+
+    pub fn new() -> Digest {
+        Digest {
+            counts: [0u64; NBUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The bucket a (finite) value counts into. Zero and negative values
+    /// clamp to the lowest bucket; values past the tracked range clamp
+    /// to the edge buckets.
+    fn bucket_of(v: f64) -> usize {
+        if v <= 0.0 {
+            return 0;
+        }
+        let pos = (v.log2() - LOG2_MIN) * SUBS_PER_OCTAVE as f64;
+        if pos < 0.0 {
+            0
+        } else if pos >= NBUCKETS as f64 {
+            NBUCKETS - 1
+        } else {
+            pos as usize
+        }
+    }
+
+    /// Geometric midpoint of a bucket — the value a quantile query
+    /// reports for samples that landed in it.
+    fn representative(bucket: usize) -> f64 {
+        2f64.powf(LOG2_MIN + (bucket as f64 + 0.5) / SUBS_PER_OCTAVE as f64)
+    }
+
+    /// Record one observation. O(1), no allocation. Non-finite values
+    /// (NaN, ±∞) are dropped entirely: they have no meaningful bucket
+    /// and a single ∞ would poison the running mean forever.
+    pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        self.counts[Self::bucket_of(v)] += 1;
+        self.n += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Exact running mean (`None` when empty).
+    pub fn mean(&self) -> Option<f64> {
+        if self.n == 0 { None } else { Some(self.sum / self.n as f64) }
+    }
+
+    /// Exact minimum recorded value (`None` when empty).
+    pub fn min(&self) -> Option<f64> {
+        if self.n == 0 { None } else { Some(self.min) }
+    }
+
+    /// Exact maximum recorded value (`None` when empty).
+    pub fn max(&self) -> Option<f64> {
+        if self.n == 0 { None } else { Some(self.max) }
+    }
+
+    /// Estimate the `q`-quantile (`q` in `[0, 1]`), `None` when empty.
+    ///
+    /// Rank convention: the estimate targets the sample at ascending
+    /// index `ceil(q·n) - 1` (clamped into range). The reported value is
+    /// the geometric midpoint of that sample's bucket, clamped into the
+    /// exact observed `[min, max]`, so for in-range samples it is within
+    /// a factor [`Digest::MAX_RATIO`] of the true sorted-sample quantile.
+    ///
+    /// Delegates to [`Digest::quantile_union`] with an empty second
+    /// digest, so the rank/scan logic exists exactly once.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        Self::quantile_union(self, &Digest::new(), q)
+    }
+
+    /// Quantile of the union of two digests without materializing the
+    /// merge: one zipped cumulative walk over both bucket arrays, no
+    /// clone, no allocation. Equal to `a.clone().merge(b).quantile(q)`;
+    /// used on the admission hot path where that copy would be per-request
+    /// work under the governor's lane lock.
+    pub fn quantile_union(a: &Digest, b: &Digest, q: f64) -> Option<f64> {
+        let n = a.n + b.n;
+        if n == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        // An empty side contributes (+∞, -∞) sentinels, which min/max
+        // ignore by construction.
+        let (lo, hi) = (a.min.min(b.min), a.max.max(b.max));
+        let mut cum = 0u64;
+        for (bucket, (ca, cb)) in a.counts.iter().zip(b.counts.iter()).enumerate() {
+            cum += ca + cb;
+            if cum >= target {
+                return Some(Self::representative(bucket).clamp(lo, hi));
+            }
+        }
+        Some(hi)
+    }
+
+    /// Fold another digest in: bucket-wise addition (exact on counts and
+    /// therefore on every quantile of the union; commutative and
+    /// associative), exact on `min`/`max`, and summing on `mean`.
+    pub fn merge(&mut self, other: &Digest) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        if other.n > 0 {
+            if other.min < self.min {
+                self.min = other.min;
+            }
+            if other.max > self.max {
+                self.max = other.max;
+            }
+        }
+    }
+
+    /// Render the standard percentile snapshot (`None` when empty).
+    pub fn summary(&self) -> Option<DigestSummary> {
+        if self.n == 0 {
+            return None;
+        }
+        Some(DigestSummary {
+            n: self.n,
+            mean: self.mean().expect("nonempty"),
+            p50: self.quantile(0.50).expect("nonempty"),
+            p90: self.quantile(0.90).expect("nonempty"),
+            p99: self.quantile(0.99).expect("nonempty"),
+            max: self.max,
+        })
+    }
+
+    /// The fixed memory footprint of one digest, independent of how many
+    /// samples were recorded (asserted by `prop_digest.rs`).
+    pub fn memory_bytes() -> usize {
+        std::mem::size_of::<Digest>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_count_matches_range() {
+        assert_eq!(NBUCKETS, ((LOG2_MAX - LOG2_MIN) as usize) * SUBS_PER_OCTAVE);
+    }
+
+    #[test]
+    fn empty_digest_answers_none() {
+        let d = Digest::new();
+        assert_eq!(d.count(), 0);
+        assert!(d.is_empty());
+        assert!(d.quantile(0.5).is_none());
+        assert!(d.mean().is_none());
+        assert!(d.min().is_none());
+        assert!(d.max().is_none());
+        assert!(d.summary().is_none());
+    }
+
+    #[test]
+    fn single_value_is_every_quantile() {
+        let mut d = Digest::new();
+        d.record(42.0);
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let est = d.quantile(q).unwrap();
+            assert!(
+                est / 42.0 <= Digest::MAX_RATIO && 42.0 / est <= Digest::MAX_RATIO,
+                "q={q}: {est}"
+            );
+        }
+        assert_eq!(d.min(), Some(42.0));
+        assert_eq!(d.max(), Some(42.0));
+        assert_eq!(d.mean(), Some(42.0));
+    }
+
+    #[test]
+    fn quantiles_track_exact_on_a_known_sample() {
+        let mut d = Digest::new();
+        // 1..=100: exact p90 (ceil convention) is the 90th value = 90.
+        for v in 1..=100 {
+            d.record(v as f64);
+        }
+        assert_eq!(d.count(), 100);
+        let p90 = d.quantile(0.9).unwrap();
+        assert!(p90 / 90.0 <= Digest::MAX_RATIO && 90.0 / p90 <= Digest::MAX_RATIO, "{p90}");
+        let p50 = d.quantile(0.5).unwrap();
+        assert!(p50 / 50.0 <= Digest::MAX_RATIO && 50.0 / p50 <= Digest::MAX_RATIO, "{p50}");
+        assert!((d.mean().unwrap() - 50.5).abs() < 1e-9, "mean is exact");
+        let s = d.summary().unwrap();
+        assert_eq!(s.n, 100);
+        assert_eq!(s.max, 100.0);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99 && s.p99 <= s.max);
+    }
+
+    #[test]
+    fn out_of_range_values_clamp_into_edge_buckets() {
+        let mut d = Digest::new();
+        d.record(0.0); // below range: lowest bucket
+        d.record(-5.0); // negative: lowest bucket
+        d.record(1e30); // above range: highest bucket
+        d.record(f64::NAN); // dropped entirely
+        d.record(f64::INFINITY); // dropped: would poison the mean
+        d.record(f64::NEG_INFINITY); // dropped
+        assert_eq!(d.count(), 3);
+        assert!(d.mean().unwrap().is_finite(), "mean must survive ∞ inputs");
+        assert_eq!(d.min(), Some(-5.0), "min stays exact despite clamping");
+        assert_eq!(d.max(), Some(1e30), "max stays exact despite clamping");
+        // Quantiles stay inside the observed range via the min/max clamp.
+        let p99 = d.quantile(0.99).unwrap();
+        assert!(p99 <= 1e30 && p99 >= -5.0);
+    }
+
+    #[test]
+    fn merge_equals_recording_the_union() {
+        let (mut a, mut b, mut whole) = (Digest::new(), Digest::new(), Digest::new());
+        for v in [0.5, 3.0, 7.5, 100.0] {
+            a.record(v);
+            whole.record(v);
+        }
+        for v in [2.0, 9.0, 4096.0] {
+            b.record(v);
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        for q in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn quantile_union_equals_materialized_merge() {
+        let (mut a, mut b) = (Digest::new(), Digest::new());
+        for v in [0.5, 3.0, 7.5, 100.0, 250.0] {
+            a.record(v);
+        }
+        for v in [2.0, 9.0, 4096.0] {
+            b.record(v);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(Digest::quantile_union(&a, &b, q), merged.quantile(q), "q={q}");
+            assert_eq!(Digest::quantile_union(&b, &a, q), merged.quantile(q), "commutes, q={q}");
+        }
+        // One empty side degenerates to the other's quantile.
+        let empty = Digest::new();
+        assert_eq!(Digest::quantile_union(&a, &empty, 0.9), a.quantile(0.9));
+        assert_eq!(Digest::quantile_union(&empty, &empty, 0.9), None);
+    }
+
+    #[test]
+    fn memory_is_fixed_and_small() {
+        let bytes = Digest::memory_bytes();
+        assert!(bytes < 4096, "digest must stay ~2KiB, got {bytes}");
+        assert_eq!(bytes, std::mem::size_of::<Digest>());
+    }
+}

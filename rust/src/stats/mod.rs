@@ -1,7 +1,14 @@
-//! Robust summary statistics and a small least-squares fitter.
+//! Robust summary statistics, a small least-squares fitter, and a
+//! fixed-memory streaming quantile digest.
 //!
 //! Used by the bench harness (sample summaries), the overhead calibrator
-//! (fitting α/β/γ/δ from micro-benchmarks), and the report layer.
+//! (fitting α/β/γ/δ from micro-benchmarks), the report layer, and the
+//! serving telemetry ([`digest`] backs queue-wait percentiles and the
+//! adaptive admission governor without retaining per-sample buffers).
+
+pub mod digest;
+
+pub use digest::{Digest, DigestSummary};
 
 /// Summary of a sample of observations.
 #[derive(Debug, Clone, PartialEq)]

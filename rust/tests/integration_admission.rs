@@ -1,0 +1,143 @@
+//! Integration tests for SLO-driven adaptive admission: a lane driven
+//! past its queue-wait SLO must shed with `ERR OVERLOADED` (while the
+//! hard `ERR BUSY` path stays untouched), recover once the load drops,
+//! and report per-lane percentiles and shed counts in the STATS
+//! admission table. Fixed mode must never shed under the identical
+//! sequence.
+
+mod common;
+
+use common::{fetch_stats, stat_u64};
+use ohm::coordinator::server::Server;
+use ohm::coordinator::{AdmissionMode, CoordinatorCfg};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn request(out: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    writeln!(out, "{line}").unwrap();
+    out.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+fn quit(mut out: TcpStream, mut reader: BufReader<TcpStream>) {
+    assert_eq!(request(&mut out, &mut reader, "QUIT"), "BYE");
+}
+
+/// Deterministic overload: with `slo_p90_us = 0` every measured queue
+/// wait (always strictly positive) violates the SLO, so the very first
+/// served job flips its lane to shedding — no timing races involved.
+/// The governor observes the wait *before* the reply is written, so once
+/// the client has read its own `OK`, the next request must shed.
+fn overload_cfg(window_ms: u64) -> CoordinatorCfg {
+    CoordinatorCfg {
+        threads: 1,
+        serve_threads: 2,
+        queue_depth: 64,
+        // Stealing off so the sort lane's jobs execute on the sort lane;
+        // admission feedback is keyed by routed lane either way, but the
+        // test stays simplest with one moving part fewer.
+        steal: false,
+        admission: AdmissionMode::Adaptive,
+        slo_p90_us: 0.0,
+        admission_window_ms: window_ms,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn adaptive_sheds_past_slo_with_evidence_and_stats_table() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    // Window far longer than the test: the rolling estimate cannot age
+    // out mid-sequence, so every assertion is deterministic.
+    let h = std::thread::spawn(move || server.serve(overload_cfg(600_000), Some(2)).unwrap());
+
+    let (mut out, mut reader) = connect(addr);
+    let first = request(&mut out, &mut reader, "SORT 300 1");
+    assert!(first.starts_with("OK SORT n=300"), "no waits observed yet: {first}");
+
+    // The first job's queue wait is now in the rolling window and any
+    // positive p90 exceeds slo=0: the lane must shed, with evidence.
+    let second = request(&mut out, &mut reader, "SORT 300 2");
+    assert!(second.starts_with("ERR OVERLOADED"), "expected a shed: {second}");
+    assert!(second.contains("p90="), "shed must report the observed p90: {second}");
+    assert!(second.contains("slo=0"), "shed must report the SLO: {second}");
+
+    // Hysteresis: still shedding on the next request.
+    let third = request(&mut out, &mut reader, "SORT 300 3");
+    assert!(third.starts_with("ERR OVERLOADED"), "hysteresis must hold: {third}");
+
+    // The matmul lane is independent: its window is empty, so it admits.
+    let matmul = request(&mut out, &mut reader, "MATMUL 24 4");
+    assert!(matmul.starts_with("OK MATMUL n=24"), "sibling lane must admit: {matmul}");
+    quit(out, reader);
+
+    let stats = fetch_stats(addr);
+    h.join().unwrap();
+    assert_eq!(stat_u64(&stats, "shed="), 2, "stats:\n{stats}");
+    assert_eq!(stat_u64(&stats, "rejected="), 0, "sheds are not ERR BUSY:\n{stats}");
+    assert_eq!(stat_u64(&stats, "completed="), 2, "stats:\n{stats}");
+    assert!(stats.contains("admission (mode=adaptive, slo p90=0µs)"), "stats:\n{stats}");
+    assert!(stats.contains("sheds=2"), "ledger carries the sheds:\n{stats}");
+    // The admission table renders per-lane percentiles from the digests.
+    for col in ["p50 (µs)", "p90 (µs)", "p99 (µs)"] {
+        assert!(stats.contains(col), "admission percentile column {col} missing:\n{stats}");
+    }
+}
+
+#[test]
+fn adaptive_recovers_after_the_window_drains() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    // Short rolling window: after ~2 windows of silence the estimate is
+    // empty and the lane must re-admit (idle recovery).
+    let h = std::thread::spawn(move || server.serve(overload_cfg(400), Some(1)).unwrap());
+
+    let (mut out, mut reader) = connect(addr);
+    let first = request(&mut out, &mut reader, "SORT 300 1");
+    assert!(first.starts_with("OK SORT"), "{first}");
+    let second = request(&mut out, &mut reader, "SORT 300 2");
+    assert!(second.starts_with("ERR OVERLOADED"), "{second}");
+
+    // Let both half-windows age out, then the lane must admit again.
+    std::thread::sleep(Duration::from_millis(1_000));
+    let third = request(&mut out, &mut reader, "SORT 300 3");
+    assert!(third.starts_with("OK SORT"), "lane must recover after idle windows: {third}");
+    quit(out, reader);
+    h.join().unwrap();
+}
+
+#[test]
+fn fixed_admission_never_sheds_on_the_identical_sequence() {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg {
+        admission: AdmissionMode::Fixed,
+        // Same impossible SLO: fixed mode must ignore it entirely.
+        slo_p90_us: 0.0,
+        ..overload_cfg(600_000)
+    };
+    let h = std::thread::spawn(move || server.serve(cfg, Some(2)).unwrap());
+
+    let (mut out, mut reader) = connect(addr);
+    for seed in 1..=4 {
+        let reply = request(&mut out, &mut reader, &format!("SORT 300 {seed}"));
+        assert!(reply.starts_with("OK SORT"), "fixed mode must not shed: {reply}");
+    }
+    quit(out, reader);
+
+    let stats = fetch_stats(addr);
+    h.join().unwrap();
+    assert_eq!(stat_u64(&stats, "shed="), 0, "stats:\n{stats}");
+    assert_eq!(stat_u64(&stats, "completed="), 4, "stats:\n{stats}");
+    assert!(stats.contains("admission (mode=fixed"), "table still renders:\n{stats}");
+}

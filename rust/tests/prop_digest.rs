@@ -1,0 +1,168 @@
+//! Property tests for the fixed-memory streaming quantile digest
+//! (`ohm::stats::Digest`): quantile estimates against exact
+//! sorted-sample quantiles within the documented error bound, merge
+//! associativity / union-equivalence, and fixed memory across 1M
+//! inserts.
+
+use ohm::prop::{ensure, forall, Config, Gen};
+use ohm::stats::Digest;
+
+/// Log-uniform positive sample well inside the digest's tracked range
+/// (`[2^-4, 2^30]`), where the relative error bound is guaranteed.
+fn sample(g: &mut Gen) -> f64 {
+    // 10^(-1..5): 0.1 .. 100_000, the realistic µs queue-wait span.
+    10f64.powf(g.f64_unit() * 6.0 - 1.0)
+}
+
+fn samples(g: &mut Gen, len_max: usize) -> Vec<f64> {
+    let n = g.usize_in(1..len_max);
+    (0..n).map(|_| sample(g)).collect()
+}
+
+/// The exact quantile under the digest's own rank convention: the
+/// ascending sample at index `ceil(q·n) - 1` (clamped into range). Uses
+/// the *same* float expression as `Digest::quantile`, so the target rank
+/// can never disagree.
+fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len() as u64;
+    let target = ((q * n as f64).ceil() as u64).clamp(1, n);
+    sorted[(target - 1) as usize]
+}
+
+#[test]
+fn prop_quantiles_match_exact_within_relative_bound() {
+    forall(Config::default().cases(60), "digest quantile ≈ exact quantile", |g| {
+        let xs = samples(g, 2_000);
+        let mut d = Digest::new();
+        for &x in &xs {
+            d.record(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let exact = exact_quantile(&sorted, q);
+            let est = d.quantile(q).expect("nonempty digest");
+            let ratio = if est > exact { est / exact } else { exact / est };
+            ensure(ratio <= Digest::MAX_RATIO, || {
+                format!("q={q}: est {est} vs exact {exact} (ratio {ratio}, n={})", xs.len())
+            })?;
+        }
+        ensure(d.count() == xs.len() as u64, || "count mismatch".into())?;
+        ensure(d.min() == sorted.first().copied(), || "min must be exact".into())?;
+        ensure(d.max() == sorted.last().copied(), || "max must be exact".into())
+    });
+}
+
+#[test]
+fn prop_quantile_is_monotone_in_q() {
+    forall(Config::default().cases(40), "q ≤ q' ⇒ quantile(q) ≤ quantile(q')", |g| {
+        let xs = samples(g, 1_000);
+        let mut d = Digest::new();
+        for &x in &xs {
+            d.record(x);
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let v = d.quantile(q).expect("nonempty");
+            ensure(v >= prev, || format!("quantile regressed at q={q}: {v} < {prev}"))?;
+            prev = v;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_equals_union_and_is_associative() {
+    forall(Config::default().cases(40), "merge = union; (a⊕b)⊕c = a⊕(b⊕c)", |g| {
+        let (xs, ys, zs) = (samples(g, 500), samples(g, 500), samples(g, 500));
+        let digest_of = |vals: &[f64]| {
+            let mut d = Digest::new();
+            for &v in vals {
+                d.record(v);
+            }
+            d
+        };
+        let (a, b, c) = (digest_of(&xs), digest_of(&ys), digest_of(&zs));
+
+        // Union-equivalence: merging the parts equals digesting the whole.
+        let mut union = xs.clone();
+        union.extend_from_slice(&ys);
+        union.extend_from_slice(&zs);
+        let whole = digest_of(&union);
+
+        // Left fold vs right fold.
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+
+        for m in [&left, &right] {
+            ensure(m.count() == whole.count(), || "merged count mismatch".into())?;
+            ensure(m.min() == whole.min() && m.max() == whole.max(), || {
+                "merged min/max mismatch".into()
+            })?;
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                // Quantiles depend only on bucket counts, which add
+                // exactly — so merged quantiles are *identical*, not
+                // merely close.
+                ensure(m.quantile(q) == whole.quantile(q), || {
+                    format!("q={q}: merged {:?} vs whole {:?}", m.quantile(q), whole.quantile(q))
+                })?;
+            }
+            // Mean uses a float sum, so folds may differ by rounding only.
+            let (mm, wm) = (m.mean().unwrap(), whole.mean().unwrap());
+            ensure((mm - wm).abs() <= 1e-9 * wm.abs().max(1.0), || {
+                format!("merged mean {mm} vs whole {wm}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merging_an_empty_digest_is_identity() {
+    forall(Config::default().cases(30), "d ⊕ ∅ = d", |g| {
+        let xs = samples(g, 300);
+        let mut d = Digest::new();
+        for &x in &xs {
+            d.record(x);
+        }
+        let before = d.clone();
+        d.merge(&Digest::new());
+        ensure(d == before, || "merging empty changed the digest".into())
+    });
+}
+
+#[test]
+fn fixed_memory_across_one_million_inserts() {
+    // The digest's footprint is a compile-time constant: record 1M
+    // samples spanning the whole tracked range and confirm the struct is
+    // the same small fixed block it was when empty, while still
+    // answering coherent quantiles.
+    let bytes_empty = Digest::memory_bytes();
+    let mut d = Digest::new();
+    let mut x: u64 = 0x9E37_79B9_7F4A_7C15;
+    for _ in 0..1_000_000 {
+        // xorshift64*: cheap deterministic spread over many octaves.
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        let v = 0.1 + (x.wrapping_mul(0x2545_F491_4F6C_DD1D) % 1_000_000_000) as f64 / 1_000.0;
+        d.record(v);
+    }
+    assert_eq!(d.count(), 1_000_000);
+    assert_eq!(Digest::memory_bytes(), bytes_empty, "memory must not grow with samples");
+    assert!(Digest::memory_bytes() < 4096, "digest must stay ~2KiB");
+    let (p50, p90, p99) = (
+        d.quantile(0.5).unwrap(),
+        d.quantile(0.9).unwrap(),
+        d.quantile(0.99).unwrap(),
+    );
+    assert!(p50 <= p90 && p90 <= p99, "p50={p50} p90={p90} p99={p99}");
+    assert!(p99 <= d.max().unwrap());
+    assert!(d.min().unwrap() >= 0.1);
+}

@@ -108,6 +108,7 @@ fn prop_charge_additive_over_merged_ledgers() {
             syncs: g.u64() % 1000,
             messages: g.u64() % 1000,
             steals: 0,
+            sheds: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
@@ -129,6 +130,7 @@ fn prop_ideal_params_give_zero_charge() {
             syncs: g.u64() % 1000,
             messages: g.u64() % 1000,
             steals: 0,
+            sheds: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
