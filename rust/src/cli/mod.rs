@@ -10,20 +10,27 @@
 //!            [--batch-max N] [--batch-linger-us U] [--lanes N]
 //!            [--steal true|false | --no-steal]
 //!            [--admission fixed|adaptive] [--slo-p90-us N]
-//!            [--admission-window-ms N] [--config F]]
+//!            [--admission-window-ms N]
+//!            [--cache on|off] [--cache-entries N] [--cache-bytes N]
+//!            [--config F]]
 //!           # TCP front end: concurrent readers, per-shape-class dispatch
 //!           # lanes with work stealing, bounded per-lane admission queues
 //!           # (overflow → ERR BUSY), SLO-driven adaptive admission
 //!           # (rolling p90 queue wait past the SLO → ERR OVERLOADED),
-//!           # cross-connection shape batching, DRAIN protocol for
-//!           # rolling restarts — see docs/PROTOCOL.md
+//!           # warm result cache (repeat (kind, seed) requests answered
+//!           # engine=cache without queueing; single-flight, LRU +
+//!           # byte-bounded, off by default), cross-connection shape
+//!           # batching, DRAIN protocol for rolling restarts — see
+//!           # docs/PROTOCOL.md
 //! ohm loadgen --addr HOST:PORT [--clients N] [--reqs N] [--seed S]
+//!             [--retries N] [--backoff-us U] [--repeat-seeds]
 //!             [--drain [--out FILE]]
 //!           # drive a running server: N concurrent clients × mixed
 //!           # matmul/sort shapes, verify checksums against the serial
-//!           # engine, report client-observed latency p50/p90/p99 and
-//!           # BUSY/OVERLOADED reject counts, optionally DRAIN and save
-//!           # the final STATS
+//!           # engine, report client-observed latency p50/p90/p99
+//!           # (split hit-path vs miss-path when a result cache answers),
+//!           # goodput vs offered load under jittered BUSY/OVERLOADED
+//!           # retries, optionally DRAIN and save the final STATS
 //! ohm calibrate [--budget-ms N]
 //! ohm gantt (--matmul N | --sort N) [--cores N]
 //! ohm artifacts [--dir D]
@@ -62,15 +69,22 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|calibrate|
                          admission → ERR OVERLOADED past the queue-wait SLO,
                          --lanes N shape-class dispatch lanes, --steal
                          true|false (or --no-steal) idle-lane work stealing,
-                         --batch-max / --batch-linger-us shape-batch
-                         formation, DRAIN protocol command for rolling
-                         restarts, --config F reads [serving] + [lanes] +
-                         [admission]; protocol reference: docs/PROTOCOL.md)
+                         --cache on|off + --cache-entries/--cache-bytes
+                         warm result cache (repeat requests answered
+                         engine=cache without queueing), --batch-max /
+                         --batch-linger-us shape-batch formation, DRAIN
+                         protocol command for rolling restarts, --config F
+                         reads [serving] + [lanes] + [admission] + [cache];
+                         protocol reference: docs/PROTOCOL.md)
   loadgen               drive a running --listen server with concurrent
                         clients and checksum verification (--addr HOST:PORT,
-                        --clients N, --reqs N per client, --drain to finish
-                        with a DRAIN, --out FILE to save the final STATS;
-                        prints client-side p50/p90/p99 and shed counts)
+                        --clients N, --reqs N per client, --retries N +
+                        --backoff-us U jittered retry of BUSY/OVERLOADED,
+                        --repeat-seeds for a cache-hitting repeated-seed
+                        trace, --drain to finish with a DRAIN, --out FILE
+                        to save the final STATS; prints client-side
+                        p50/p90/p99 — hit vs miss path when cached —
+                        plus goodput vs offered load and shed counts)
   calibrate             probe host overhead constants
   gantt                 render a simulated schedule
   artifacts             list AOT artifacts\n";
@@ -271,13 +285,41 @@ fn cmd_serve(args: &Args) -> Result<String> {
         if let Some(v) = args.get_parsed::<u64>("admission-window-ms")? {
             serving.admission_window_ms = v.max(1);
         }
+        if let Some(v) = args.get("cache") {
+            serving.cache = match v {
+                "on" => true,
+                "off" => false,
+                other => bail!("flag --cache: unknown mode {other:?} (on|off)"),
+            };
+        }
+        // Reject degenerate cache budgets rather than clamp (mirrors the
+        // --slo-p90-us rule): a zero or negative cap would construct a
+        // cache that can hold nothing while still paying lookup and
+        // single-flight overhead on every request.
+        if let Some(v) = args.get_parsed::<i64>("cache-entries")? {
+            if v < 1 {
+                bail!("flag --cache-entries: must be ≥ 1, got {v} (use --cache off to disable)");
+            }
+            serving.cache_entries = v as usize;
+        }
+        if let Some(v) = args.get_parsed::<i64>("cache-bytes")? {
+            if v < 1 {
+                bail!("flag --cache-bytes: must be ≥ 1, got {v} (use --cache off to disable)");
+            }
+            serving.cache_bytes = v as u64;
+        }
         let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
         let conns = args.get_parsed::<usize>("conns")?;
         let mut cfg = CoordinatorCfg { threads, ..Default::default() };
         serving.apply(&mut cfg);
         let server = crate::coordinator::server::Server::bind(addr)?;
+        let cache_desc = if cfg.cache {
+            format!("cache on ({} entries, {} bytes)", cfg.cache_entries, cfg.cache_bytes)
+        } else {
+            "cache off".to_string()
+        };
         eprintln!(
-            "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs))",
+            "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs), {})",
             server.local_addr(),
             cfg.serve_threads,
             cfg.lanes,
@@ -286,6 +328,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
             cfg.batch_max,
             cfg.admission.name(),
             cfg.slo_p90_us,
+            cache_desc,
         );
         server.serve(cfg, conns)?;
         return Ok(format!("server on {} finished\n", server.local_addr()));
@@ -326,6 +369,18 @@ const LOADGEN_SHAPES: &[(&str, usize)] =
 /// visible from the client side), and `--drain` finishes with the
 /// `DRAIN` protocol (asserting post-drain admission answers
 /// `ERR DRAINING`), optionally saving the final STATS block to `--out`.
+///
+/// Overload-aware retries: `--retries N` re-sends a request answered
+/// `ERR OVERLOADED` / `ERR BUSY` up to N times with jittered linear
+/// backoff (`--backoff-us`, deterministic per-client jitter), so
+/// shed-heavy runs report **goodput vs offered load** instead of a
+/// misleading `ok` total — only requests still rejected after the
+/// retry budget count as busy/shed. `--repeat-seeds` reuses one seed
+/// per shape (instead of a unique seed per request), turning the run
+/// into a repeated-seed trace that exercises a server-side `--cache
+/// on` warm result cache; replies served with `engine=cache` are then
+/// reported as a separate hit-path latency line next to the miss path.
+///
 /// Errors (checksum mismatch, truncated reply, unclean drain) exit
 /// nonzero — this is the CI serving-smoke entry point.
 fn cmd_loadgen(args: &Args) -> Result<String> {
@@ -339,6 +394,22 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     let seed0 = args.get_parsed::<u64>("seed")?.unwrap_or(1);
     let drain = args.has("drain");
     let out_path = args.get("out").map(|s| s.to_string());
+    let retries = args.get_parsed::<usize>("retries")?.unwrap_or(0);
+    let backoff_us = args.get_parsed::<u64>("backoff-us")?.unwrap_or(500).max(1);
+    let repeat_seeds = args.has("repeat-seeds");
+
+    // The workload seed for client `c`'s request `k`. Default: unique
+    // per request (every execution is cold). With --repeat-seeds the
+    // seed depends only on the shape, so every request for a shape is
+    // the identical deterministic job — the repeated-seed trace a warm
+    // result cache exists for.
+    let seed_for = move |c: usize, k: usize| -> u64 {
+        if repeat_seeds {
+            seed0 + ((c + k) % LOADGEN_SHAPES.len()) as u64
+        } else {
+            seed0 + (c * 1000 + k) as u64
+        }
+    };
 
     // Serial reference checksums, computed up front (one shared
     // reference coordinator; the clients only compare strings).
@@ -348,34 +419,70 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
         let mut per = Vec::with_capacity(reqs);
         for k in 0..reqs {
             let (cmd, n) = LOADGEN_SHAPES[(c + k) % LOADGEN_SHAPES.len()];
-            let seed = seed0 + (c * 1000 + k) as u64;
             let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
-            let r = reference.submit(kind, seed);
+            let r = reference.submit(kind, seed_for(c, k));
             per.push(format!("checksum={:.4}", r.checksum));
         }
         expected.push(per);
     }
 
+    /// One request's final outcome after any retries.
+    struct ClientReply {
+        reply: String,
+        /// Client-observed latency of the *final* attempt, µs.
+        latency_us: f64,
+        /// Rejected attempts consumed before that outcome.
+        retries: usize,
+    }
+
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let addr = addr.clone();
-            std::thread::spawn(move || -> std::io::Result<Vec<(String, f64)>> {
+            std::thread::spawn(move || -> std::io::Result<Vec<ClientReply>> {
                 let stream = std::net::TcpStream::connect(addr.as_str())?;
                 let mut reader = BufReader::new(stream.try_clone()?);
                 let mut out = stream;
+                // Deterministic per-client jitter source (splitmix-style
+                // scramble of the client id + base seed).
+                let mut rng = crate::util::Pcg32::new(
+                    seed0.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(c as u64),
+                );
                 let mut replies = Vec::with_capacity(reqs);
                 for k in 0..reqs {
                     let (cmd, n) = LOADGEN_SHAPES[(c + k) % LOADGEN_SHAPES.len()];
-                    let seed = seed0 + (c * 1000 + k) as u64;
-                    let sw = std::time::Instant::now();
-                    writeln!(out, "{cmd} {n} {seed}")?;
-                    out.flush()?;
-                    let mut line = String::new();
-                    reader.read_line(&mut line)?;
-                    // Client-observed latency: request write → reply read,
-                    // so it includes queue wait, service, and the wire.
-                    let latency_us = sw.elapsed().as_nanos() as f64 / 1e3;
-                    replies.push((line.trim().to_string(), latency_us));
+                    let seed = seed_for(c, k);
+                    let mut attempt = 0usize;
+                    let final_reply = loop {
+                        let sw = std::time::Instant::now();
+                        writeln!(out, "{cmd} {n} {seed}")?;
+                        out.flush()?;
+                        let mut line = String::new();
+                        reader.read_line(&mut line)?;
+                        // Client-observed latency: request write → reply
+                        // read, so it includes queue wait, service, and
+                        // the wire.
+                        let latency_us = sw.elapsed().as_nanos() as f64 / 1e3;
+                        let reply = line.trim().to_string();
+                        // Retry the retryable rejects (PROTOCOL.md): the
+                        // soft SLO shed and the hard depth bound. ERR
+                        // DRAINING is terminal and everything else is a
+                        // real answer.
+                        let retryable =
+                            reply.starts_with("ERR OVERLOADED") || reply.starts_with("ERR BUSY");
+                        if retryable && attempt < retries {
+                            attempt += 1;
+                            // Jittered linear backoff in [base/2, base],
+                            // base growing with the attempt count, so
+                            // coordinated clients decorrelate instead of
+                            // re-stampeding the lane in lockstep.
+                            let base = backoff_us.saturating_mul(attempt as u64);
+                            let wait = base / 2 + rng.below(base / 2 + 1);
+                            std::thread::sleep(std::time::Duration::from_micros(wait));
+                            continue;
+                        }
+                        break ClientReply { reply, latency_us, retries: attempt };
+                    };
+                    replies.push(final_reply);
                 }
                 writeln!(out, "QUIT")?;
                 out.flush()?;
@@ -387,7 +494,11 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     let mut ok = 0usize;
     let mut busy = 0usize;
     let mut shed = 0usize;
+    let mut total_retries = 0usize;
+    let mut cache_hits = 0usize;
     let mut latencies_us: Vec<f64> = Vec::with_capacity(clients * reqs);
+    let mut hit_latencies_us: Vec<f64> = Vec::new();
+    let mut miss_latencies_us: Vec<f64> = Vec::new();
     let mut problems: Vec<String> = Vec::new();
     for (c, h) in handles.into_iter().enumerate() {
         let replies = match h.join() {
@@ -395,12 +506,23 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
             Ok(Err(e)) => bail!("loadgen client {c}: io error: {e}"),
             Err(_) => bail!("loadgen client {c} panicked"),
         };
-        for (k, (reply, latency_us)) in replies.iter().enumerate() {
+        for (k, r) in replies.iter().enumerate() {
+            total_retries += r.retries;
+            let reply = &r.reply;
             if reply.starts_with("OK ") {
                 ok += 1;
                 // Served requests only: a reject returns in µs and would
                 // drag the percentiles below what any served request saw.
-                latencies_us.push(*latency_us);
+                latencies_us.push(r.latency_us);
+                // Warm-cache hits identify themselves as engine=cache;
+                // split them out so the hit path's client-side latency
+                // is visible next to the executed (miss) path's.
+                if reply.contains(" engine=cache ") {
+                    cache_hits += 1;
+                    hit_latencies_us.push(r.latency_us);
+                } else {
+                    miss_latencies_us.push(r.latency_us);
+                }
                 let want = &expected[c][k];
                 if !reply.contains(want.as_str()) {
                     problems.push(format!("client {c} req {k}: got {reply:?}, want {want}"));
@@ -423,21 +545,48 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     let mut text = format!(
         "loadgen: {clients} clients x {reqs} reqs -> {ok} ok, {busy} busy, {shed} shed, 0 mismatches\n"
     );
+    // Goodput vs offered load: how much of the offered request stream
+    // was eventually served, and what the retry budget spent getting
+    // there. Without retries this collapses to ok/offered, making
+    // shed-heavy runs' real service rate explicit instead of burying
+    // sheds next to an `ok` total that looks healthy.
+    let offered = clients * reqs;
+    text.push_str(&format!(
+        "offered={} goodput={} ({:.1}%) retries={} (budget {}/req, backoff {}µs)\n",
+        offered,
+        ok,
+        100.0 * ok as f64 / offered as f64,
+        total_retries,
+        retries,
+        backoff_us,
+    ));
     // Exact percentiles of *client-observed* latency (request write →
     // reply read: queue wait + service + wire) over served (OK) requests.
     // Not the same quantity as the server's STATS queue-wait digests —
     // those isolate the wait component — but an upper envelope on them,
     // and exact: loadgen keeps every sample.
-    latencies_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let percentile_line = |lat: &mut Vec<f64>, label: &str| -> String {
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        format!(
+            "{label} (µs): p50={:.1} p90={:.1} p99={:.1} max={:.1} (n={})\n",
+            crate::stats::percentile_sorted(lat, 50.0),
+            crate::stats::percentile_sorted(lat, 90.0),
+            crate::stats::percentile_sorted(lat, 99.0),
+            lat[lat.len() - 1],
+            lat.len(),
+        )
+    };
     if !latencies_us.is_empty() {
-        text.push_str(&format!(
-            "client latency, served reqs (µs): p50={:.1} p90={:.1} p99={:.1} max={:.1} (n={})\n",
-            crate::stats::percentile_sorted(&latencies_us, 50.0),
-            crate::stats::percentile_sorted(&latencies_us, 90.0),
-            crate::stats::percentile_sorted(&latencies_us, 99.0),
-            latencies_us[latencies_us.len() - 1],
-            latencies_us.len(),
-        ));
+        text.push_str(&percentile_line(&mut latencies_us, "client latency, served reqs"));
+    }
+    // Hit-path vs miss-path split, once any reply came from the warm
+    // cache: the lower hit p50 is the managed-away redundant work,
+    // measured where it matters — at the client.
+    if cache_hits > 0 {
+        text.push_str(&percentile_line(&mut hit_latencies_us, "cache hit-path latency"));
+        if !miss_latencies_us.is_empty() {
+            text.push_str(&percentile_line(&mut miss_latencies_us, "cache miss-path latency"));
+        }
     }
     if drain {
         let stream = std::net::TcpStream::connect(addr.as_str())?;
@@ -602,6 +751,18 @@ mod tests {
     }
 
     #[test]
+    fn serve_listen_rejects_degenerate_cache_flags() {
+        // Zero/negative budgets and unknown modes are flag errors, not
+        // silently-clamped degenerate caches.
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache", "maybe"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-entries", "0"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-entries", "-3"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-entries", "x"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-bytes", "0"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-bytes", "-1"]).is_err());
+    }
+
+    #[test]
     fn loadgen_requires_addr() {
         assert!(call(&["loadgen"]).is_err());
     }
@@ -640,6 +801,41 @@ mod tests {
         assert!(stats.starts_with("DRAINED"), "{stats}");
         assert!(stats.contains("dispatch lanes"), "per-lane table in final STATS:\n{stats}");
         std::fs::remove_file(&stats_path).ok();
+    }
+
+    #[test]
+    fn loadgen_repeat_seeds_against_cached_server_reports_hit_path() {
+        let server = crate::coordinator::server::Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let cfg = CoordinatorCfg { threads: 1, cache: true, ..Default::default() };
+        let h = std::thread::spawn(move || {
+            server.serve(cfg, None).unwrap();
+        });
+        // Repeated seeds: one seed per shape, so after each shape's cold
+        // execution every further request is a warm hit (or a coalesced
+        // single-flight follower — also a hit).
+        let out = call(&[
+            "loadgen",
+            "--addr",
+            &addr,
+            "--clients",
+            "4",
+            "--reqs",
+            "4",
+            "--repeat-seeds",
+            "--retries",
+            "2",
+            "--backoff-us",
+            "200",
+            "--drain",
+        ])
+        .unwrap();
+        h.join().unwrap();
+        assert!(out.contains("16 ok, 0 busy, 0 shed, 0 mismatches"), "{out}");
+        assert!(out.contains("offered=16 goodput=16 (100.0%)"), "{out}");
+        assert!(out.contains("cache hit-path latency (µs): p50="), "{out}");
+        assert!(out.contains("cache miss-path latency (µs): p50="), "{out}");
+        assert!(out.contains("drain: clean"), "{out}");
     }
 
     #[test]

@@ -240,6 +240,15 @@ pub struct ServingConfig {
     /// Rolling half-window for the governor's queue-wait digests, ms
     /// (`[admission] window_ms = N`).
     pub admission_window_ms: u64,
+    /// Warm result cache (`[cache] enabled = bool`); default off, which
+    /// preserves pre-cache serving behaviour bit-for-bit.
+    pub cache: bool,
+    /// Global result-cache entry cap (`[cache] entries = N`, ≥ 1),
+    /// split across the per-lane shards.
+    pub cache_entries: usize,
+    /// Global result-cache byte budget (`[cache] bytes = N`, ≥ 1),
+    /// split across the per-lane shards.
+    pub cache_bytes: u64,
 }
 
 impl Default for ServingConfig {
@@ -257,13 +266,16 @@ impl Default for ServingConfig {
             admission: c.admission,
             slo_p90_us: c.slo_p90_us,
             admission_window_ms: c.admission_window_ms,
+            cache: c.cache,
+            cache_entries: c.cache_entries,
+            cache_bytes: c.cache_bytes,
         }
     }
 }
 
 impl ServingConfig {
-    /// Load from a TOML-subset file ([serving] + [lanes] sections);
-    /// missing keys keep their defaults.
+    /// Load from a TOML-subset file ([serving] + [lanes] + [admission] +
+    /// [cache] sections); missing keys keep their defaults.
     pub fn load(path: &Path) -> Result<ServingConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -313,6 +325,33 @@ impl ServingConfig {
                 cfg.admission_window_ms = v.as_usize().context("window_ms")?.max(1) as u64;
             }
         }
+        if let Some(sec) = t.get("cache") {
+            if let Some(v) = sec.get("enabled") {
+                cfg.cache = v.as_bool().context("cache enabled")?;
+            }
+            // Reject degenerate budgets rather than clamp (mirrors the
+            // SLO-flag rule): a zero/negative entry cap or byte budget
+            // would construct a cache that can hold nothing while still
+            // paying lookup and single-flight overhead on every request.
+            if let Some(v) = sec.get("entries") {
+                let entries = v
+                    .as_usize()
+                    .context("cache entries must be a positive integer")?;
+                if entries == 0 {
+                    bail!("cache entries must be ≥ 1, got 0 (a zero-capacity cache is degenerate; use enabled = false instead)");
+                }
+                cfg.cache_entries = entries;
+            }
+            if let Some(v) = sec.get("bytes") {
+                let bytes = v
+                    .as_usize()
+                    .context("cache bytes must be a positive integer")?;
+                if bytes == 0 {
+                    bail!("cache bytes must be ≥ 1, got 0 (a zero-byte cache is degenerate; use enabled = false instead)");
+                }
+                cfg.cache_bytes = bytes as u64;
+            }
+        }
         Ok(cfg)
     }
 
@@ -327,6 +366,9 @@ impl ServingConfig {
         cfg.admission = self.admission;
         cfg.slo_p90_us = self.slo_p90_us;
         cfg.admission_window_ms = self.admission_window_ms;
+        cfg.cache = self.cache;
+        cfg.cache_entries = self.cache_entries;
+        cfg.cache_bytes = self.cache_bytes;
     }
 }
 
@@ -428,6 +470,46 @@ flag = true
             (s.admission, s.slo_p90_us, s.admission_window_ms),
             (c.admission, c.slo_p90_us, c.admission_window_ms),
         );
+        assert_eq!(
+            (s.cache, s.cache_entries, s.cache_bytes),
+            (c.cache, c.cache_entries, c.cache_bytes),
+        );
+        assert!(!s.cache, "the result cache defaults to off");
+    }
+
+    #[test]
+    fn cache_section_overrides_and_applies() {
+        let t = parse("[cache]\nenabled = true\nentries = 128\nbytes = 65536\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert!(c.cache);
+        assert_eq!(c.cache_entries, 128);
+        assert_eq!(c.cache_bytes, 65_536);
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert!(coord.cache);
+        assert_eq!(coord.cache_entries, 128);
+        assert_eq!(coord.cache_bytes, 65_536);
+        // Unset [cache] keys keep their defaults.
+        let d = ServingConfig::default();
+        let t = parse("[cache]\nenabled = true\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!((c.cache_entries, c.cache_bytes), (d.cache_entries, d.cache_bytes));
+    }
+
+    #[test]
+    fn cache_section_rejects_degenerate_budgets() {
+        // Zero/negative budgets are config errors, not silently-clamped
+        // degenerate caches — same policy as the SLO flag.
+        for bad in [
+            "[cache]\nentries = 0\n",
+            "[cache]\nentries = -4\n",
+            "[cache]\nbytes = 0\n",
+            "[cache]\nbytes = -1024\n",
+            "[cache]\nenabled = 1\n",
+        ] {
+            let t = parse(bad).unwrap();
+            assert!(ServingConfig::from_table(&t).is_err(), "must reject {bad:?}");
+        }
     }
 
     #[test]

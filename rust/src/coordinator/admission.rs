@@ -66,8 +66,25 @@ impl AdmissionMode {
 /// `ERR OVERLOADED` reply).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Overload {
-    pub p90_us: f64,
+    /// The rolling p90 evidence behind the shed, µs. `None` when the
+    /// shedding lane has never completed a job — a *stalled* cold start
+    /// with no measurement to report. Rendering that absence as `0`
+    /// would claim a perfect wait on a wedged lane, so the reply spells
+    /// it out as `p90=stalled` instead (see `docs/PROTOCOL.md`).
+    pub p90_us: Option<f64>,
     pub slo_us: f64,
+}
+
+impl Overload {
+    /// The `p90=` value for the `ERR OVERLOADED` reply: the observed
+    /// rolling p90 in whole µs, or the explicit `stalled` marker when
+    /// no completion was ever measured.
+    pub fn p90_evidence(&self) -> String {
+        match self.p90_us {
+            Some(p90) => format!("{p90:.0}"),
+            None => "stalled".to_string(),
+        }
+    }
 }
 
 /// Per-lane rolling-window state. Two half-windows: quantiles are read
@@ -82,8 +99,11 @@ struct LaneWindow {
     shedding: bool,
     /// Last rolling p90 computed from a non-empty window: the shed
     /// evidence reported while a *stalled* lane (empty window, jobs
-    /// still queued) waits for fresh completions.
-    last_p90_us: f64,
+    /// still queued) waits for fresh completions. `None` until the
+    /// first estimate exists — a lane that has never completed a job
+    /// has no evidence, and the cold-start shed must say so
+    /// (`p90=stalled`) rather than fabricate a 0µs measurement.
+    last_p90_us: Option<f64>,
 }
 
 impl LaneWindow {
@@ -93,7 +113,7 @@ impl LaneWindow {
             previous: Digest::new(),
             started: Instant::now(),
             shedding: false,
-            last_p90_us: 0.0,
+            last_p90_us: None,
         }
     }
 
@@ -186,24 +206,26 @@ impl Governor {
             if w.shedding && queued() > 0 {
                 // Stalled, not idle: nothing completed for two windows
                 // but the queue is still backed up. Hold the shed on the
-                // last evidence we had.
+                // last evidence we had — or, on the cold-start corner
+                // where the lane has *never* completed a job, on the
+                // explicit `stalled` marker (never a fabricated p90=0).
                 return Err(Overload { p90_us: w.last_p90_us, slo_us: self.slo_p90_us });
             }
             // Truly idle (or never loaded): nothing to defend.
             w.shedding = false;
             return Ok(());
         };
-        w.last_p90_us = p90;
+        w.last_p90_us = Some(p90);
         if w.shedding {
             if p90 <= self.slo_p90_us * RECOVERY_FRACTION {
                 w.shedding = false;
                 Ok(())
             } else {
-                Err(Overload { p90_us: p90, slo_us: self.slo_p90_us })
+                Err(Overload { p90_us: Some(p90), slo_us: self.slo_p90_us })
             }
         } else if p90 > self.slo_p90_us {
             w.shedding = true;
-            Err(Overload { p90_us: p90, slo_us: self.slo_p90_us })
+            Err(Overload { p90_us: Some(p90), slo_us: self.slo_p90_us })
         } else {
             Ok(())
         }
@@ -255,7 +277,9 @@ mod tests {
         }
         let over = g.admit(0, || 0).expect_err("p90 ≈ 5000 > slo 1000 must shed");
         assert_eq!(over.slo_us, 1_000.0);
-        assert!(over.p90_us > 1_000.0, "reported p90 {} must exceed the SLO", over.p90_us);
+        let p90 = over.p90_us.expect("measured shed carries numeric evidence");
+        assert!(p90 > 1_000.0, "reported p90 {p90} must exceed the SLO");
+        assert_eq!(over.p90_evidence(), format!("{p90:.0}"));
         assert!(g.shedding(0));
         assert!(g.admit(1, || 0).is_ok(), "sibling lane is independent");
         assert!(g.admit(0, || 0).is_err(), "still shedding without recovery evidence");
@@ -323,10 +347,33 @@ mod tests {
         // hold, reporting the last known p90 as evidence.
         std::thread::sleep(Duration::from_millis(500));
         let over = g.admit(0, || 3).expect_err("stalled lane must keep shedding");
-        assert!(over.p90_us > 1_000.0, "stale evidence reported: {}", over.p90_us);
+        let p90 = over.p90_us.expect("a lane that completed jobs reports its stale p90");
+        assert!(p90 > 1_000.0, "stale evidence reported: {p90}");
         assert!(g.shedding(0));
         // Same moment, queue drained ⇒ genuinely idle ⇒ recover.
         assert!(g.admit(0, || 0).is_ok(), "empty queue turns the stall into idle recovery");
+        assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn cold_start_stall_reports_stalled_marker_not_zero() {
+        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 60_000, 1);
+        // Force the cold-start corner directly: a lane latched into
+        // shedding (e.g. by state carried across an operator SLO change)
+        // whose window never saw a completion — `last_p90_us` has no
+        // value to report.
+        g.lane(0).shedding = true;
+        let over = g.admit(0, || 3).expect_err("shedding + queued work must keep shedding");
+        assert_eq!(over.p90_us, None, "no completion ever measured ⇒ no numeric evidence");
+        assert_eq!(
+            over.p90_evidence(),
+            "stalled",
+            "the reply must say `p90=stalled`, never a fabricated `p90=0`"
+        );
+        assert_eq!(over.slo_us, 1_000.0, "the SLO itself is still reported");
+        // The same cold corner with an empty queue is idleness, not a
+        // stall: the lane reopens.
+        assert!(g.admit(0, || 0).is_ok());
         assert!(!g.shedding(0));
     }
 }

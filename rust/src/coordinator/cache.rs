@@ -1,0 +1,569 @@
+//! Warm result cache: sharded, bounded memoization of deterministic
+//! job results, in front of the dispatch lanes.
+//!
+//! Every job this framework serves is a pure function of its request:
+//! `(TraceKind, seed)` fully determines the generated input and
+//! therefore the output checksum. Re-executing an identical request is
+//! the purest form of the paper's *redundant work* overhead — cores
+//! spent recomputing a value the system already produced — so the
+//! serving layer eliminates it at the root instead of paying it
+//! per-request: a hit is answered by the connection reader itself,
+//! bypassing admission, the lane queues, and execution entirely. (It is
+//! the serving analogue of the coordinator's warm *executable* cache:
+//! that one skips recompilation, this one skips recomputation.)
+//!
+//! Design constraints, mirroring the rest of the serving layer:
+//!
+//! * **Sharded locking.** One shard per dispatch lane, selected by the
+//!   same [`ShapeClass`] routing the lanes use — so cache traffic for
+//!   lane A never contends with lane B, and no new *global* lock
+//!   appears on the hot path.
+//! * **Bounded.** Per-shard LRU (intrusive-list, O(1) touch/evict)
+//!   under both an entry cap and a byte budget; a forever-running
+//!   server cannot grow the cache without bound.
+//! * **Single-flight.** Concurrent identical requests coalesce: the
+//!   first becomes the *leader* (it executes through the normal
+//!   admission path and fills the cache exactly once — the fill happens
+//!   on the leader's reader thread, so it stays exactly-once even when
+//!   work stealing executes the job on a thief lane); followers block
+//!   on the leader's [`Flight`] and are served its result without ever
+//!   touching a queue. A leader that is rejected or fails *aborts* the
+//!   flight (guaranteed by [`Flight`]'s drop guard, so a panicking or
+//!   shed leader can never strand its followers), and each follower
+//!   then retries — at most one leader exists per key at any moment.
+//! * **Cheap observability.** Per-shard hit/miss/eviction/occupancy
+//!   counters are atomics read without taking any shard lock, so the
+//!   STATS "result cache" table does no O(entries) work — the same
+//!   contract the digest-backed telemetry upholds.
+//!
+//! The cache is off by default (`--cache on` enables it): with it off,
+//! replies, STATS, and admission behaviour are untouched.
+
+use super::lanes::ShapeClass;
+use crate::report::{table::f, AsciiTable};
+use crate::workload::traces::TraceKind;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The full deterministic input identity of a job: its kind (and size)
+/// plus the workload seed. Two requests with equal keys are guaranteed
+/// to produce bit-identical results.
+pub type CacheKey = (TraceKind, u64);
+
+/// A memoized successful result. Only `ok` executions are cached, so a
+/// hit can always be rendered as an `OK` reply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CachedResult {
+    /// The reply checksum, stored verbatim — a hit renders the same
+    /// bits a cold run would.
+    pub checksum: f64,
+}
+
+/// Outcome of a cache lookup.
+pub enum Lookup<'a> {
+    /// Served: the memoized result (possibly by waiting for a
+    /// concurrent leader's in-flight execution to complete).
+    Hit(CachedResult),
+    /// This caller is the single-flight leader for the key: it must
+    /// execute the job and then [`fill`](Flight::fill) (on success) or
+    /// [`abort`](Flight::abort) / drop (on rejection or failure) the
+    /// flight.
+    Miss(Flight<'a>),
+}
+
+/// Rendezvous cell between a single-flight leader and its followers.
+/// `None` outcome means the leader aborted (followers retry).
+struct FlightCell {
+    done: Mutex<Option<Option<CachedResult>>>,
+    cv: Condvar,
+}
+
+impl FlightCell {
+    fn new() -> FlightCell {
+        FlightCell { done: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn wait(&self) -> Option<CachedResult> {
+        let mut g = self.done.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(outcome) = *g {
+                return outcome;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn complete(&self, outcome: Option<CachedResult>) {
+        *self.done.lock().unwrap_or_else(|p| p.into_inner()) = Some(outcome);
+        self.cv.notify_all();
+    }
+}
+
+/// The single-flight leader's obligation. Dropping it without
+/// [`fill`](Flight::fill) aborts the flight: followers wake and retry
+/// (one of them becomes the next leader), and nothing is cached — so a
+/// leader rejected by admission, failed by an engine, or killed by a
+/// panic can never wedge its followers or poison the cache.
+pub struct Flight<'a> {
+    cache: &'a ResultCache,
+    shard: usize,
+    key: CacheKey,
+    cell: Arc<FlightCell>,
+    settled: bool,
+}
+
+impl Flight<'_> {
+    /// Publish a successful result: insert it into the cache (evicting
+    /// LRU entries past the shard's bounds) and wake every follower
+    /// with it. Exactly-once by construction — there is one leader.
+    pub fn fill(mut self, value: CachedResult) {
+        self.settled = true;
+        self.cache.settle(self.shard, self.key, &self.cell, Some(value));
+    }
+
+    /// Explicitly abort without caching. Equivalent to dropping the
+    /// flight; spelled out at call sites where the abort is a decision
+    /// rather than an unwind.
+    pub fn abort(mut self) {
+        self.settled = true;
+        self.cache.settle(self.shard, self.key, &self.cell, None);
+    }
+}
+
+impl Drop for Flight<'_> {
+    fn drop(&mut self) {
+        if !self.settled {
+            self.cache.settle(self.shard, self.key, &self.cell, None);
+        }
+    }
+}
+
+const NIL: usize = usize::MAX;
+
+/// One entry in the intrusive LRU list (slab-allocated; `prev`/`next`
+/// are slab indices, `NIL`-terminated).
+struct Node {
+    key: CacheKey,
+    value: CachedResult,
+    prev: usize,
+    next: usize,
+}
+
+/// Exact LRU over a slab + index map: O(1) get/insert/evict, no
+/// per-operation allocation once the slab has grown to the entry cap.
+struct Lru {
+    map: HashMap<CacheKey, usize>,
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// Most recently used.
+    head: usize,
+    /// Least recently used (the eviction candidate).
+    tail: usize,
+}
+
+impl Lru {
+    fn new() -> Lru {
+        Lru { map: HashMap::new(), nodes: Vec::new(), free: Vec::new(), head: NIL, tail: NIL }
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.nodes[i].prev, self.nodes[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.nodes[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.nodes[next].prev = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Lookup + recency touch.
+    fn get(&mut self, key: &CacheKey) -> Option<CachedResult> {
+        let &i = self.map.get(key)?;
+        self.unlink(i);
+        self.push_front(i);
+        Some(self.nodes[i].value)
+    }
+
+    /// Insert (or refresh) an entry at the recency head. Returns `true`
+    /// when the key is new (occupancy grew).
+    fn insert(&mut self, key: CacheKey, value: CachedResult) -> bool {
+        if let Some(&i) = self.map.get(&key) {
+            self.nodes[i].value = value;
+            self.unlink(i);
+            self.push_front(i);
+            return false;
+        }
+        let node = Node { key, value, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+        true
+    }
+
+    /// Remove and return the least-recently-used key.
+    fn evict_lru(&mut self) -> Option<CacheKey> {
+        let i = self.tail;
+        if i == NIL {
+            return None;
+        }
+        self.unlink(i);
+        let key = self.nodes[i].key;
+        self.map.remove(&key);
+        self.free.push(i);
+        Some(key)
+    }
+}
+
+/// Mutable shard state (behind the shard mutex).
+struct ShardState {
+    lru: Lru,
+    /// In-flight single-flight registrations: key → the leader's cell.
+    inflight: HashMap<CacheKey, Arc<FlightCell>>,
+}
+
+/// Lock-free shard counters, readable by STATS without the shard lock.
+#[derive(Default)]
+struct ShardCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    entries: AtomicU64,
+    bytes: AtomicU64,
+}
+
+/// Point-in-time counter snapshot for one shard.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Lookups served from the cache (including single-flight followers
+    /// served by a leader's completed execution).
+    pub hits: u64,
+    /// Lookups that made the caller a leader — every one corresponds to
+    /// at most one execution (fewer when the leader was rejected).
+    pub misses: u64,
+    /// Entries evicted to stay within the entry cap / byte budget.
+    pub evictions: u64,
+    /// Current occupancy.
+    pub entries: u64,
+    /// Current footprint, bytes (`entries × entry_bytes()`).
+    pub bytes: u64,
+}
+
+struct CacheShard {
+    state: Mutex<ShardState>,
+    counters: ShardCounters,
+}
+
+/// The sharded warm result cache. See the module docs for the design.
+pub struct ResultCache {
+    shards: Vec<CacheShard>,
+    /// Per-shard entry cap (global `--cache-entries` split evenly,
+    /// minimum 1).
+    shard_entries: usize,
+    /// Per-shard byte budget (global `--cache-bytes` split evenly,
+    /// minimum one entry's footprint).
+    shard_bytes: u64,
+}
+
+impl ResultCache {
+    /// `shards` mirrors the lane count (min 1); `entries` and `bytes`
+    /// are *global* budgets split evenly across shards — floor division,
+    /// so the shard caps never add up past the configured global bound.
+    /// Zero budgets are rejected upstream (CLI/config validation);
+    /// defensively, each shard still holds at least one entry, the one
+    /// case (budget < one entry per shard) where the global bound is
+    /// exceeded rather than serving a degenerate zero-capacity shard.
+    pub fn new(shards: usize, entries: usize, bytes: u64) -> ResultCache {
+        let shards = shards.max(1);
+        ResultCache {
+            shard_entries: (entries / shards).max(1),
+            shard_bytes: (bytes / shards as u64).max(entry_bytes()),
+            shards: (0..shards)
+                .map(|_| CacheShard {
+                    state: Mutex::new(ShardState { lru: Lru::new(), inflight: HashMap::new() }),
+                    counters: ShardCounters::default(),
+                })
+                .collect(),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard entry cap after splitting the global budget.
+    pub fn shard_entry_cap(&self) -> usize {
+        self.shard_entries
+    }
+
+    /// Per-shard byte budget after splitting the global budget.
+    pub fn shard_byte_budget(&self) -> u64 {
+        self.shard_bytes
+    }
+
+    /// The shard a key lives in: the same [`ShapeClass`] → lane mapping
+    /// the dispatch lanes use, so each lane's traffic owns one shard.
+    pub fn shard_of(&self, kind: &TraceKind) -> usize {
+        ShapeClass::of(kind).lane(self.shards.len())
+    }
+
+    fn lock(&self, s: usize) -> std::sync::MutexGuard<'_, ShardState> {
+        self.shards[s].state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Look up `(kind, seed)`. Returns [`Lookup::Hit`] when memoized —
+    /// possibly after blocking on a concurrent leader's execution — or
+    /// [`Lookup::Miss`] making this caller the single-flight leader.
+    /// The blocking wait happens *outside* the shard lock, so followers
+    /// never stall unrelated keys in the shard.
+    pub fn lookup(&self, kind: &TraceKind, seed: u64) -> Lookup<'_> {
+        let key = (*kind, seed);
+        let s = self.shard_of(kind);
+        loop {
+            let cell = {
+                let mut g = self.lock(s);
+                if let Some(value) = g.lru.get(&key) {
+                    self.shards[s].counters.hits.fetch_add(1, Ordering::Relaxed);
+                    return Lookup::Hit(value);
+                }
+                match g.inflight.get(&key) {
+                    Some(cell) => Arc::clone(cell),
+                    None => {
+                        let cell = Arc::new(FlightCell::new());
+                        g.inflight.insert(key, Arc::clone(&cell));
+                        self.shards[s].counters.misses.fetch_add(1, Ordering::Relaxed);
+                        return Lookup::Miss(Flight {
+                            cache: self,
+                            shard: s,
+                            key,
+                            cell,
+                            settled: false,
+                        });
+                    }
+                }
+            };
+            // Follower: block on the leader's outcome with no shard
+            // lock held. A filled flight is a hit; an aborted one loops
+            // back — the retry either finds the key cached meanwhile or
+            // promotes this caller to leader.
+            if let Some(value) = cell.wait() {
+                self.shards[s].counters.hits.fetch_add(1, Ordering::Relaxed);
+                return Lookup::Hit(value);
+            }
+        }
+    }
+
+    /// Resolve a flight: deregister it, optionally insert the result
+    /// (evicting past the shard bounds), refresh the occupancy
+    /// counters, then wake the followers.
+    fn settle(
+        &self,
+        s: usize,
+        key: CacheKey,
+        cell: &Arc<FlightCell>,
+        outcome: Option<CachedResult>,
+    ) {
+        {
+            let mut g = self.lock(s);
+            g.inflight.remove(&key);
+            if let Some(value) = outcome {
+                g.lru.insert(key, value);
+                while g.lru.len() > self.shard_entries
+                    || g.lru.len() as u64 * entry_bytes() > self.shard_bytes
+                {
+                    if g.lru.evict_lru().is_none() {
+                        break;
+                    }
+                    self.shards[s].counters.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            let len = g.lru.len() as u64;
+            self.shards[s].counters.entries.store(len, Ordering::Relaxed);
+            self.shards[s].counters.bytes.store(len * entry_bytes(), Ordering::Relaxed);
+        }
+        cell.complete(outcome);
+    }
+
+    /// Counter snapshot per shard (no shard lock taken).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|sh| ShardStats {
+                hits: sh.counters.hits.load(Ordering::Relaxed),
+                misses: sh.counters.misses.load(Ordering::Relaxed),
+                evictions: sh.counters.evictions.load(Ordering::Relaxed),
+                entries: sh.counters.entries.load(Ordering::Relaxed),
+                bytes: sh.counters.bytes.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Element-wise sum over [`shard_stats`](ResultCache::shard_stats).
+    pub fn totals(&self) -> ShardStats {
+        self.shard_stats().iter().fold(ShardStats::default(), |a, s| ShardStats {
+            hits: a.hits + s.hits,
+            misses: a.misses + s.misses,
+            evictions: a.evictions + s.evictions,
+            entries: a.entries + s.entries,
+            bytes: a.bytes + s.bytes,
+        })
+    }
+
+    /// Render the STATS "result cache" table plus its counter trailer
+    /// line. Reads only the atomic counters — O(shards), never
+    /// O(entries), and takes no shard lock.
+    pub fn render(&self) -> String {
+        let mut t = AsciiTable::new(
+            &format!(
+                "result cache (per shard: ≤{} entries, ≤{} bytes)",
+                self.shard_entries, self.shard_bytes
+            ),
+            &["shard", "hits", "misses", "evictions", "entries", "bytes"],
+        );
+        for (i, s) in self.shard_stats().iter().enumerate() {
+            t.row(vec![
+                i.to_string(),
+                s.hits.to_string(),
+                s.misses.to_string(),
+                s.evictions.to_string(),
+                s.entries.to_string(),
+                s.bytes.to_string(),
+            ]);
+        }
+        let total = self.totals();
+        let ratio = if total.hits + total.misses > 0 {
+            100.0 * total.hits as f64 / (total.hits + total.misses) as f64
+        } else {
+            0.0
+        };
+        let mut out = t.render();
+        out.push_str(&format!(
+            "cache: hits={} misses={} evictions={} entries={} bytes={} hit_ratio={}%\n",
+            total.hits,
+            total.misses,
+            total.evictions,
+            total.entries,
+            total.bytes,
+            f(ratio, 1),
+        ));
+        out
+    }
+}
+
+/// Accounted in-memory footprint of one cache entry: the slab node plus
+/// the index-map entry. Every entry costs the same, so a shard's byte
+/// footprint is exactly `entries × entry_bytes()` and the byte budget
+/// is enforced without per-entry measurement.
+pub fn entry_bytes() -> u64 {
+    (std::mem::size_of::<Node>()
+        + std::mem::size_of::<CacheKey>()
+        + 2 * std::mem::size_of::<usize>()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SORT: fn(usize) -> TraceKind = |n| TraceKind::Sort { n };
+
+    fn fill(cache: &ResultCache, kind: TraceKind, seed: u64, checksum: f64) {
+        match cache.lookup(&kind, seed) {
+            Lookup::Miss(flight) => flight.fill(CachedResult { checksum }),
+            Lookup::Hit(_) => panic!("expected a miss for {kind:?}/{seed}"),
+        }
+    }
+
+    #[test]
+    fn miss_fill_hit_round_trip() {
+        let cache = ResultCache::new(1, 8, 1 << 20);
+        fill(&cache, SORT(300), 7, 123.5);
+        match cache.lookup(&SORT(300), 7) {
+            Lookup::Hit(v) => assert_eq!(v.checksum.to_bits(), 123.5f64.to_bits()),
+            Lookup::Miss(_) => panic!("filled key must hit"),
+        }
+        let t = cache.totals();
+        assert_eq!((t.hits, t.misses, t.entries), (1, 1, 1));
+        assert_eq!(t.bytes, entry_bytes());
+    }
+
+    #[test]
+    fn distinct_seeds_are_distinct_keys() {
+        let cache = ResultCache::new(1, 8, 1 << 20);
+        fill(&cache, SORT(300), 1, 1.0);
+        assert!(
+            matches!(cache.lookup(&SORT(300), 2), Lookup::Miss(_)),
+            "same shape, different seed must miss"
+        );
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_within_entry_cap() {
+        let cache = ResultCache::new(1, 3, 1 << 20);
+        for seed in 1..=3 {
+            fill(&cache, SORT(100), seed, seed as f64);
+        }
+        // Touch seed 1 so seed 2 becomes the LRU, then overflow.
+        assert!(matches!(cache.lookup(&SORT(100), 1), Lookup::Hit(_)));
+        fill(&cache, SORT(100), 4, 4.0);
+        assert_eq!(cache.totals().entries, 3, "entry cap enforced");
+        assert_eq!(cache.totals().evictions, 1);
+        assert!(matches!(cache.lookup(&SORT(100), 1), Lookup::Hit(_)), "touched entry survives");
+        assert!(matches!(cache.lookup(&SORT(100), 2), Lookup::Miss(_)), "LRU entry evicted");
+    }
+
+    #[test]
+    fn byte_budget_bounds_occupancy() {
+        // Entry cap generous, byte budget only 2 entries wide.
+        let cache = ResultCache::new(1, 100, 2 * entry_bytes());
+        for seed in 1..=5 {
+            fill(&cache, SORT(100), seed, seed as f64);
+        }
+        let t = cache.totals();
+        assert!(t.entries <= 2, "byte budget must bound occupancy, got {}", t.entries);
+        assert!(t.bytes <= 2 * entry_bytes());
+        assert_eq!(t.evictions, 3);
+    }
+
+    #[test]
+    fn abort_caches_nothing_and_renders() {
+        let cache = ResultCache::new(2, 8, 1 << 20);
+        match cache.lookup(&SORT(100), 1) {
+            Lookup::Miss(flight) => flight.abort(),
+            Lookup::Hit(_) => panic!("cold cache"),
+        }
+        assert!(matches!(cache.lookup(&SORT(100), 1), Lookup::Miss(_)), "abort caches nothing");
+        let s = cache.render();
+        assert!(s.contains("result cache"), "{s}");
+        assert!(s.contains("hit_ratio=0.0%"), "{s}");
+        assert_eq!(cache.totals().misses, 2);
+    }
+}

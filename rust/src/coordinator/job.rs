@@ -33,6 +33,10 @@ pub enum RoutedEngine {
     Xla,
     CpuSerial,
     CpuParallel,
+    /// Served from the warm result cache — no engine executed at all.
+    /// Never returned by routing; stamped by the server's hit path so
+    /// replies and telemetry name where the answer came from.
+    Cache,
 }
 
 impl RoutedEngine {
@@ -41,6 +45,7 @@ impl RoutedEngine {
             RoutedEngine::Xla => "xla",
             RoutedEngine::CpuSerial => "cpu-serial",
             RoutedEngine::CpuParallel => "cpu-parallel",
+            RoutedEngine::Cache => "cache",
         }
     }
 }

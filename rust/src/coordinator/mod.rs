@@ -32,10 +32,15 @@
 //! [`Digest`](crate::stats::Digest)s, fixed memory) back into the
 //! admission decision — shedding with `ERR OVERLOADED` while a lane's
 //! rolling p90 wait exceeds the configured SLO and re-admitting with
-//! hysteresis once it recovers. The wire protocol is specified in
+//! hysteresis once it recovers. In front of all of that sits the
+//! optional warm **result cache** ([`cache`]): deterministic
+//! `(kind, seed)` repeats are answered by the reader itself —
+//! single-flight, sharded per lane, LRU + byte-bounded — without
+//! consuming any admission budget. The wire protocol is specified in
 //! `docs/PROTOCOL.md` and the data flow in `docs/ARCHITECTURE.md`.
 
 pub mod admission;
+pub mod cache;
 pub mod job;
 pub mod lanes;
 pub mod queue;
@@ -43,6 +48,7 @@ pub mod server;
 pub mod telemetry;
 
 pub use admission::{AdmissionMode, Governor};
+pub use cache::ResultCache;
 pub use job::{Job, JobResult, RoutedEngine};
 pub use lanes::{LanePool, ShapeClass};
 pub use queue::BoundedQueue;
@@ -96,6 +102,16 @@ pub struct CoordinatorCfg {
     /// queue-wait digests, ms (`--admission-window-ms`). Estimates cover
     /// one to two windows of recent history.
     pub admission_window_ms: u64,
+    /// Serving layer: enable the warm result cache (`--cache on|off`).
+    /// Off by default — with it off, replies, STATS, and admission
+    /// behaviour are byte-for-byte what they were without the cache.
+    pub cache: bool,
+    /// Serving layer: global result-cache entry cap (`--cache-entries`),
+    /// split evenly across the per-lane shards. Must be ≥ 1.
+    pub cache_entries: usize,
+    /// Serving layer: global result-cache byte budget (`--cache-bytes`),
+    /// split evenly across the per-lane shards. Must be ≥ 1.
+    pub cache_bytes: u64,
 }
 
 impl Default for CoordinatorCfg {
@@ -113,6 +129,9 @@ impl Default for CoordinatorCfg {
             admission: admission::AdmissionMode::Fixed,
             slo_p90_us: 10_000.0,
             admission_window_ms: 500,
+            cache: false,
+            cache_entries: 4096,
+            cache_bytes: 4 * 1024 * 1024,
         }
     }
 }

@@ -15,6 +15,13 @@
 //! QUIT                   → BYE (closes the connection)
 //! ```
 //!
+//! With `--cache on`, a repeat of an identical deterministic request
+//! (`(kind, n, seed)` equal) is answered from the warm result cache by
+//! the reader itself — `engine=cache`, `queue_us=0`, checksum
+//! bit-identical to the cold run — bypassing admission and the lane
+//! queues entirely; concurrent identical requests coalesce onto one
+//! execution (single-flight).
+//!
 //! Unknown/malformed input answers `ERR <reason>` and keeps the
 //! connection open; a request whose lane queue is at depth answers
 //! `ERR BUSY ...` (backpressure, not queueing); under `--admission
@@ -62,6 +69,7 @@
 //! unbounded.
 
 use super::admission::Governor;
+use super::cache::{self, ResultCache};
 use super::lanes::{Envelope, LanePool};
 use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
 use crate::workload::traces::TraceKind;
@@ -78,6 +86,10 @@ struct Shared {
     /// Adaptive-admission state: readers consult it before pushing, lane
     /// dispatchers feed it measured queue waits (inert in fixed mode).
     governor: Governor,
+    /// Warm result cache (`--cache on`), one shard per lane. `None`
+    /// when disabled — every request then takes exactly the pre-cache
+    /// path, byte for byte.
+    cache: Option<ResultCache>,
     telemetry: Mutex<Telemetry>,
     next_id: AtomicU64,
     /// Set by `DRAIN`: admission answers `ERR DRAINING` from then on.
@@ -126,6 +138,9 @@ impl Server {
                 cfg.admission_window_ms,
                 lane_count,
             ),
+            cache: cfg
+                .cache
+                .then(|| ResultCache::new(lane_count, cfg.cache_entries, cfg.cache_bytes)),
             telemetry: Mutex::new(telemetry),
             next_id: AtomicU64::new(1),
             draining: AtomicBool::new(false),
@@ -376,6 +391,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             let snapshot = telemetry_lock(shared).clone();
             let mut block = snapshot.render();
             block.push_str(&queue_line(shared));
+            block.push_str(&cache_block(shared));
             Response::Block(block)
         }
         Some("DRAIN") => {
@@ -395,6 +411,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             let mut block = String::from("DRAINED\n");
             block.push_str(&snapshot.render());
             block.push_str(&queue_line(shared));
+            block.push_str(&cache_block(shared));
             block.push_str(&format!(
                 "drained: admitted={} finished={}\n",
                 shared.admitted.load(Ordering::SeqCst),
@@ -426,6 +443,36 @@ fn respond(shared: &Shared, line: &str) -> Response {
                 return Response::Line(format!("ERR DRAINING {cmd} rejected: server is draining"));
             }
             let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
+            // Warm result cache, consulted after the drain check (DRAIN
+            // is terminal — a draining server must not keep answering,
+            // even from memory) but before *any* admission state: a hit
+            // is served right here on the reader thread. It consumes no
+            // admission budget, touches no lane queue, and contributes
+            // nothing to the queue-wait digests — so hits keep flowing
+            // even while the lane itself is shedding. A miss makes this
+            // reader the single-flight leader: concurrent identical
+            // requests block on `flight` instead of all executing, and
+            // the leader fills the cache exactly once below (reader-side
+            // fill, so exactly-once holds even when work stealing runs
+            // the job on a thief lane). Every rejection or failure path
+            // from here on drops `flight`, which aborts it — followers
+            // wake and retry rather than hang.
+            let mut flight = None;
+            if let Some(cache) = &shared.cache {
+                let sw = Instant::now();
+                match cache.lookup(&kind, seed) {
+                    cache::Lookup::Hit(hit) => {
+                        let lookup_us = sw.elapsed().as_nanos() as f64 / 1e3;
+                        telemetry_lock(shared).record_cache_hit(lookup_us);
+                        return Response::Line(format!(
+                            "OK {cmd} n={n} engine={} us={lookup_us:.1} queue_us=0.0 checksum={:.4}",
+                            RoutedEngine::Cache.name(),
+                            hit.checksum
+                        ));
+                    }
+                    cache::Lookup::Miss(f) => flight = Some(f),
+                }
+            }
             // Soft admission first: the governor sheds when this lane's
             // rolling p90 queue wait exceeds the SLO (adaptive mode only;
             // in fixed mode admit() returns before taking any lock, and
@@ -437,8 +484,9 @@ fn respond(shared: &Shared, line: &str) -> Response {
             if let Err(over) = shared.governor.admit(lane, || shared.lanes.queue(lane).len()) {
                 telemetry_lock(shared).record_shed(lane);
                 return Response::Line(format!(
-                    "ERR OVERLOADED p90={:.0} slo={:.0}",
-                    over.p90_us, over.slo_us
+                    "ERR OVERLOADED p90={} slo={:.0}",
+                    over.p90_evidence(),
+                    over.slo_us
                 ));
             }
             let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
@@ -472,13 +520,23 @@ fn respond(shared: &Shared, line: &str) -> Response {
                 ));
             }
             match reply_rx.recv() {
-                Ok(r) if r.ok => Response::Line(format!(
-                    "OK {cmd} n={n} engine={} us={:.1} queue_us={:.1} checksum={:.4}",
-                    r.engine.name(),
-                    r.service_us,
-                    r.queue_us,
-                    r.checksum
-                )),
+                Ok(r) if r.ok => {
+                    // Leader fill: publish the verbatim checksum so a
+                    // later hit renders bit-identically, and wake any
+                    // single-flight followers with it. Failed or lost
+                    // executions fall through to the arms below, where
+                    // dropping `flight` aborts instead of caching.
+                    if let Some(f) = flight.take() {
+                        f.fill(cache::CachedResult { checksum: r.checksum });
+                    }
+                    Response::Line(format!(
+                        "OK {cmd} n={n} engine={} us={:.1} queue_us={:.1} checksum={:.4}",
+                        r.engine.name(),
+                        r.service_us,
+                        r.queue_us,
+                        r.checksum
+                    ))
+                }
                 Ok(r) => {
                     Response::Line(format!("ERR {cmd} n={n} failed on engine {}", r.engine.name()))
                 }
@@ -488,6 +546,15 @@ fn respond(shared: &Shared, line: &str) -> Response {
         Some(other) => Response::Line(format!("ERR unknown command {other:?}")),
         None => Response::Line("ERR empty request".into()),
     }
+}
+
+/// The result-cache table appended to STATS/DRAIN blocks: per-shard
+/// hits/misses/evictions/occupancy plus the hit-ratio trailer, read
+/// from atomic counters (no shard lock, no O(entries) work). Empty with
+/// the cache disabled, keeping those blocks byte-identical to a
+/// cache-less server.
+fn cache_block(shared: &Shared) -> String {
+    shared.cache.as_ref().map_or_else(String::new, ResultCache::render)
 }
 
 /// The occupancy line appended to STATS/DRAIN blocks.
@@ -562,6 +629,33 @@ mod tests {
         assert!(out[2].starts_with("OK SORT n=200"), "{out:?}");
         assert_eq!(out[3], "PONG");
         assert_eq!(out[4], "BYE");
+    }
+
+    #[test]
+    fn warm_cache_hit_replies_bit_identical_checksum_from_cache_engine() {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let h = std::thread::spawn(move || {
+            server
+                .serve(CoordinatorCfg { threads: 2, cache: true, ..Default::default() }, Some(1))
+                .unwrap();
+        });
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for l in ["SORT 300 7", "SORT 300 7", "SORT 300 8", "QUIT"] {
+            writeln!(conn, "{l}").unwrap();
+        }
+        conn.flush().unwrap();
+        let out: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+        h.join().unwrap();
+        assert!(out[0].starts_with("OK SORT n=300"), "{out:?}");
+        assert!(!out[0].contains("engine=cache"), "cold run executes: {out:?}");
+        assert!(out[1].contains("engine=cache"), "repeat is served warm: {out:?}");
+        assert!(out[1].contains("queue_us=0.0"), "hits never queue: {out:?}");
+        let checksum = |s: &str| {
+            s.split_whitespace().find(|t| t.starts_with("checksum=")).unwrap().to_string()
+        };
+        assert_eq!(checksum(&out[0]), checksum(&out[1]), "bit-identical checksum: {out:?}");
+        assert!(!out[2].contains("engine=cache"), "different seed misses: {out:?}");
     }
 
     #[test]

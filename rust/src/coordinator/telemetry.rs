@@ -157,6 +157,22 @@ impl Telemetry {
         self.rejected += 1;
     }
 
+    /// Record one warm-cache hit: a request served by its reader from
+    /// the result cache, without execution or queueing. Counts toward
+    /// `completed` and the `engine:cache` service-time series (the time
+    /// the cache took to serve it — near-zero for a plain hit, the wait
+    /// for the leader's execution for a coalesced single-flight
+    /// follower), and lands
+    /// in the serving ledger as redundant work *managed away*
+    /// (`cache_hits`). It must NOT touch the queue-wait digests or any
+    /// per-lane admission state: a hit never queued, so folding it into
+    /// the governor's evidence would corrupt the feedback loop.
+    pub fn record_cache_hit(&mut self, lookup_us: f64) {
+        self.completed += 1;
+        self.serving_ledger.cache_hits += 1;
+        push_sample(self.per_engine.entry(RoutedEngine::Cache.name()).or_default(), lookup_us);
+    }
+
     /// Record one governor shed (`ERR OVERLOADED`) against the lane the
     /// request was routed to. A shed is scheduling overhead *managed
     /// away*, so it also lands in the serving ledger.
@@ -357,6 +373,7 @@ impl Telemetry {
         if self.serving_ledger.total_events() > 0
             || self.serving_ledger.queue_ns > 0
             || self.serving_ledger.sheds > 0
+            || self.serving_ledger.cache_hits > 0
         {
             out.push_str(&format!("serving ledger: {}\n", self.serving_ledger.summary()));
         }
@@ -476,6 +493,23 @@ mod tests {
         assert!(lane0.p50 <= lane0.p90 && lane0.p90 <= lane0.p99 && lane0.p99 <= lane0.max);
         assert_eq!(lane0.max, 800.0, "digest max is exact");
         assert!(t.lanes[1].queue_wait().is_none(), "idle lane renders dashes");
+    }
+
+    #[test]
+    fn cache_hits_count_completed_and_ledger_but_never_queue_digests() {
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        t.record_cache_hit(4.0);
+        t.record_cache_hit(6.0);
+        assert_eq!(t.completed, 2, "hits are served requests");
+        assert_eq!(t.serving_ledger.cache_hits, 2);
+        assert_eq!(t.engine_count(RoutedEngine::Cache), 2);
+        assert!(t.queue_wait().is_none(), "hits bypass the queue-wait digest");
+        assert!(t.lanes.iter().all(|l| l.queue_wait().is_none()), "and every lane digest");
+        assert_eq!(t.serving_ledger.queue_ns, 0, "no fabricated queue time");
+        let s = t.render();
+        assert!(s.contains("engine:cache"), "{s}");
+        assert!(s.contains("cache_hits=2"), "ledger line carries the hits: {s}");
     }
 
     #[test]

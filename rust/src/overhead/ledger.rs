@@ -30,6 +30,12 @@ pub struct Ledger {
     /// like `queue_ns`, it is bookkeeping that `OverheadParams::charge`
     /// does not price, and it is excluded from `total_events`.
     pub sheds: u64,
+    /// Requests served from the warm result cache instead of being
+    /// re-executed: redundant-work overhead *managed away* at the root.
+    /// Like `sheds`, bookkeeping `OverheadParams::charge` does not
+    /// price, excluded from `total_events`, and rendered in summaries
+    /// only when nonzero (a cache-less run reads exactly as before).
+    pub cache_hits: u64,
     /// Bytes moved across cores (δ).
     pub bytes: u64,
     /// Time spent waiting in a serving admission queue, ns. Measured (not
@@ -55,6 +61,7 @@ impl Ledger {
             messages: delta.steals + delta.injected,
             steals: delta.steals,
             sheds: 0,
+            cache_hits: 0,
             bytes: bytes_moved,
             queue_ns: 0,
             compute_ns: 0,
@@ -70,6 +77,7 @@ impl Ledger {
             messages: self.messages + other.messages,
             steals: self.steals + other.steals,
             sheds: self.sheds + other.sheds,
+            cache_hits: self.cache_hits + other.cache_hits,
             bytes: self.bytes + other.bytes,
             queue_ns: self.queue_ns + other.queue_ns,
             compute_ns: self.compute_ns + other.compute_ns,
@@ -83,15 +91,23 @@ impl Ledger {
         self.spawns + self.syncs + self.messages
     }
 
-    /// Human-readable one-liner for reports.
+    /// Human-readable one-liner for reports. `cache_hits=` appears only
+    /// when nonzero, so runs without a result cache (the default) keep
+    /// their summary byte-for-byte unchanged.
     pub fn summary(&self) -> String {
+        let cache = if self.cache_hits > 0 {
+            format!(" cache_hits={}", self.cache_hits)
+        } else {
+            String::new()
+        };
         format!(
-            "spawns={} syncs={} msgs={} steals={} sheds={} bytes={} queue={}µs compute={}µs idle={}µs",
+            "spawns={} syncs={} msgs={} steals={} sheds={}{} bytes={} queue={}µs compute={}µs idle={}µs",
             self.spawns,
             self.syncs,
             self.messages,
             self.steals,
             self.sheds,
+            cache,
             self.bytes,
             self.queue_ns / 1_000,
             self.compute_ns / 1_000,
@@ -126,14 +142,14 @@ mod tests {
 
     #[test]
     fn merge_adds_fields() {
-        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, sheds: 9, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
-        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, sheds: 90, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
+        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, sheds: 9, cache_hits: 5, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
+        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, sheds: 90, cache_hits: 50, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
         let m = a.merged(&b);
         assert_eq!(
             m,
-            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, sheds: 99, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
+            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, sheds: 99, cache_hits: 55, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
         );
-        assert_eq!(m.total_events(), 66, "steals and sheds are not double-counted");
+        assert_eq!(m.total_events(), 66, "steals, sheds, and cache hits are not double-counted");
     }
 
     #[test]
@@ -143,5 +159,17 @@ mod tests {
         assert!(l.summary().contains("steals=2"));
         assert!(l.summary().contains("sheds=3"));
         assert!(l.summary().contains("queue=9µs"));
+    }
+
+    #[test]
+    fn summary_shows_cache_hits_only_when_present() {
+        let quiet = Ledger { sheds: 3, ..Default::default() };
+        assert!(
+            !quiet.summary().contains("cache_hits"),
+            "cache-less summaries stay byte-identical: {}",
+            quiet.summary()
+        );
+        let warm = Ledger { sheds: 3, cache_hits: 4, ..Default::default() };
+        assert!(warm.summary().contains("sheds=3 cache_hits=4"), "{}", warm.summary());
     }
 }

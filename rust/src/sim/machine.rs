@@ -326,6 +326,7 @@ impl Machine {
                 messages,
                 steals: 0,
                 sheds: 0,
+                cache_hits: 0,
                 bytes: bytes_moved,
                 queue_ns: 0,
                 compute_ns: compute as u64,

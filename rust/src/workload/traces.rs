@@ -17,7 +17,8 @@ pub struct TraceJob {
     pub seed: u64,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+// `Hash`: a `TraceKind` (with the seed) is the warm result cache's key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TraceKind {
     /// Square matmul of the given order.
     Matmul { n: usize },

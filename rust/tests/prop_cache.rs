@@ -1,0 +1,190 @@
+//! Property tests for the warm result cache: hit fidelity (bit-identical
+//! checksums), LRU + byte-budget eviction bounds, single-flight
+//! exactly-once execution under concurrent identical requests, and
+//! shard independence under the lane-mirroring shard map.
+
+use ohm::coordinator::cache::{entry_bytes, CachedResult, Lookup, ResultCache};
+use ohm::coordinator::{Coordinator, CoordinatorCfg};
+use ohm::workload::traces::TraceKind;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+
+fn fill(cache: &ResultCache, kind: TraceKind, seed: u64, checksum: f64) {
+    match cache.lookup(&kind, seed) {
+        Lookup::Miss(flight) => flight.fill(CachedResult { checksum }),
+        Lookup::Hit(_) => panic!("expected a miss for {kind:?}/{seed}"),
+    }
+}
+
+#[test]
+fn hit_returns_bit_identical_checksum_to_a_cold_run() {
+    // The cached value round-trips the checksum a real cold execution
+    // produced — same bits, not merely approximately equal.
+    let coord = Coordinator::new(CoordinatorCfg { threads: 2, ..Default::default() }, None);
+    let cache = ResultCache::new(2, 64, 1 << 20);
+    for (kind, seed) in [
+        (TraceKind::Sort { n: 300 }, 7u64),
+        (TraceKind::Sort { n: 999 }, 1),
+        (TraceKind::Matmul { n: 24 }, 42),
+        (TraceKind::Matmul { n: 48 }, 3),
+    ] {
+        let cold = coord.execute_job(&ohm::coordinator::Job { id: 1, kind, seed, arrival_us: 0 });
+        assert!(cold.ok);
+        fill(&cache, kind, seed, cold.checksum);
+        match cache.lookup(&kind, seed) {
+            Lookup::Hit(hit) => assert_eq!(
+                hit.checksum.to_bits(),
+                cold.checksum.to_bits(),
+                "hit must be bit-identical for {kind:?}/{seed}"
+            ),
+            Lookup::Miss(_) => panic!("just-filled key must hit: {kind:?}/{seed}"),
+        }
+    }
+    let totals = cache.totals();
+    assert_eq!((totals.hits, totals.misses), (4, 4));
+}
+
+#[test]
+fn lru_eviction_respects_entry_cap_and_recency() {
+    // Single shard so every key contends for the same bound.
+    let cache = ResultCache::new(1, 4, 1 << 30);
+    for seed in 0..4 {
+        fill(&cache, TraceKind::Sort { n: 100 }, seed, seed as f64);
+    }
+    // Touch seeds 0 and 1; 2 becomes least recently used.
+    assert!(matches!(cache.lookup(&TraceKind::Sort { n: 100 }, 0), Lookup::Hit(_)));
+    assert!(matches!(cache.lookup(&TraceKind::Sort { n: 100 }, 1), Lookup::Hit(_)));
+    fill(&cache, TraceKind::Sort { n: 100 }, 4, 4.0);
+    fill(&cache, TraceKind::Sort { n: 100 }, 5, 5.0);
+    let t = cache.totals();
+    assert_eq!(t.entries, 4, "entry cap holds");
+    assert_eq!(t.evictions, 2);
+    assert_eq!(t.bytes, 4 * entry_bytes());
+    // Recency order: 0 and 1 survived, 2 and 3 were evicted.
+    for (seed, hit) in [(0u64, true), (1, true), (2, false), (3, false), (4, true), (5, true)] {
+        let got = matches!(cache.lookup(&TraceKind::Sort { n: 100 }, seed), Lookup::Hit(_));
+        assert_eq!(got, hit, "seed {seed}: expected hit={hit}");
+    }
+}
+
+#[test]
+fn byte_budget_bounds_occupancy_below_the_entry_cap() {
+    // Entry cap generous; the byte budget (3 entries wide) must bind.
+    let budget = 3 * entry_bytes();
+    let cache = ResultCache::new(1, 1_000, budget);
+    for seed in 0..20 {
+        fill(&cache, TraceKind::Sort { n: 100 }, seed, seed as f64);
+    }
+    let t = cache.totals();
+    assert!(t.entries <= 3, "byte budget must bound occupancy: {} entries", t.entries);
+    assert!(t.bytes <= budget, "footprint {} exceeds budget {budget}", t.bytes);
+    assert_eq!(t.evictions, 20 - t.entries);
+    // The survivors are the most recently inserted keys.
+    assert!(matches!(cache.lookup(&TraceKind::Sort { n: 100 }, 19), Lookup::Hit(_)));
+}
+
+#[test]
+fn single_flight_executes_exactly_once_under_concurrent_identical_requests() {
+    const WAITERS: usize = 8;
+    let cache = Arc::new(ResultCache::new(2, 64, 1 << 20));
+    let executions = Arc::new(AtomicUsize::new(0));
+    let start = Arc::new(Barrier::new(WAITERS));
+    let handles: Vec<_> = (0..WAITERS)
+        .map(|_| {
+            let cache = Arc::clone(&cache);
+            let executions = Arc::clone(&executions);
+            let start = Arc::clone(&start);
+            std::thread::spawn(move || -> f64 {
+                start.wait();
+                match cache.lookup(&TraceKind::Matmul { n: 32 }, 9) {
+                    Lookup::Miss(flight) => {
+                        // The leader "executes": slow enough that the
+                        // other threads pile up as followers.
+                        executions.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        flight.fill(CachedResult { checksum: 77.25 });
+                        77.25
+                    }
+                    Lookup::Hit(hit) => hit.checksum,
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap().to_bits(), 77.25f64.to_bits(), "every waiter gets the result");
+    }
+    assert_eq!(executions.load(Ordering::SeqCst), 1, "exactly one execution for N requests");
+    let t = cache.totals();
+    assert_eq!(t.misses, 1, "one leader");
+    assert_eq!(t.hits as usize, WAITERS - 1, "followers count as hits");
+}
+
+#[test]
+fn aborted_leader_wakes_followers_and_promotes_exactly_one() {
+    // A leader that aborts (rejected / failed execution) must not strand
+    // its followers: one of them becomes the next leader, the rest keep
+    // coalescing. No outcome is ever cached.
+    let cache = Arc::new(ResultCache::new(1, 8, 1 << 20));
+    let leader_flight = match cache.lookup(&TraceKind::Sort { n: 200 }, 5) {
+        Lookup::Miss(f) => f,
+        Lookup::Hit(_) => panic!("cold cache"),
+    };
+    let follower = {
+        let cache = Arc::clone(&cache);
+        std::thread::spawn(move || match cache.lookup(&TraceKind::Sort { n: 200 }, 5) {
+            Lookup::Miss(f) => {
+                // Promoted to leader after the abort: completes the job.
+                f.fill(CachedResult { checksum: 5.5 });
+                "promoted"
+            }
+            Lookup::Hit(_) => "hit",
+        })
+    };
+    // Give the follower time to register, then abort the leader.
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    leader_flight.abort();
+    assert_eq!(follower.join().unwrap(), "promoted", "abort promotes a follower to leader");
+    assert!(matches!(cache.lookup(&TraceKind::Sort { n: 200 }, 5), Lookup::Hit(_)));
+}
+
+#[test]
+fn dropped_flight_aborts_like_an_explicit_abort() {
+    let cache = ResultCache::new(1, 8, 1 << 20);
+    match cache.lookup(&TraceKind::Sort { n: 100 }, 1) {
+        Lookup::Miss(flight) => drop(flight), // e.g. a panicking leader
+        Lookup::Hit(_) => panic!("cold cache"),
+    }
+    assert!(
+        matches!(cache.lookup(&TraceKind::Sort { n: 100 }, 1), Lookup::Miss(_)),
+        "a dropped flight caches nothing and frees the key"
+    );
+}
+
+#[test]
+fn shards_are_independent_and_mirror_the_lane_map() {
+    // Two shards mirror the two-lane kind partition: matmuls and sorts
+    // own different shards, so filling one to eviction leaves the other
+    // untouched.
+    let cache = ResultCache::new(2, 4, 1 << 30); // 2 entries per shard
+    let matmul = TraceKind::Matmul { n: 64 };
+    let sort = TraceKind::Sort { n: 100 };
+    assert_ne!(
+        cache.shard_of(&matmul),
+        cache.shard_of(&sort),
+        "kinds partition the shards like they partition the lanes"
+    );
+    assert_eq!(cache.shard_entry_cap(), 2, "global cap splits across shards");
+    for seed in 0..6 {
+        fill(&cache, matmul, seed, seed as f64);
+    }
+    fill(&cache, sort, 1, 1.0);
+    let stats = cache.shard_stats();
+    let (m, s) = (cache.shard_of(&matmul), cache.shard_of(&sort));
+    assert_eq!(stats[m].misses, 6);
+    assert_eq!(stats[m].evictions, 4, "matmul shard evicted down to its cap");
+    assert_eq!(stats[m].entries, 2);
+    assert_eq!(stats[s].misses, 1, "sort shard untouched by matmul pressure");
+    assert_eq!(stats[s].evictions, 0);
+    assert_eq!(stats[s].entries, 1);
+    assert!(matches!(cache.lookup(&sort, 1), Lookup::Hit(_)));
+}

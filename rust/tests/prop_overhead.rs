@@ -109,6 +109,7 @@ fn prop_charge_additive_over_merged_ledgers() {
             messages: g.u64() % 1000,
             steals: 0,
             sheds: 0,
+            cache_hits: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
@@ -131,6 +132,7 @@ fn prop_ideal_params_give_zero_charge() {
             messages: g.u64() % 1000,
             steals: 0,
             sheds: 0,
+            cache_hits: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
