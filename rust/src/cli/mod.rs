@@ -10,13 +10,18 @@
 //!            [--batch-max N] [--batch-linger-us U] [--lanes N]
 //!            [--steal true|false | --no-steal]
 //!            [--admission fixed|adaptive] [--slo-p90-us N]
-//!            [--admission-window-ms N]
+//!            [--slo CLASS=US[,CLASS=US...]] [--admission-window-ms N]
+//!            [--rebalance off|adaptive] [--rebalance-window-ms N]
 //!            [--cache on|off] [--cache-entries N] [--cache-bytes N]
 //!            [--config F]]
 //!           # TCP front end: concurrent readers, per-shape-class dispatch
 //!           # lanes with work stealing, bounded per-lane admission queues
 //!           # (overflow → ERR BUSY), SLO-driven adaptive admission
-//!           # (rolling p90 queue wait past the SLO → ERR OVERLOADED),
+//!           # (rolling p90 queue wait past the class's SLO → ERR
+//!           # OVERLOADED; per-class budgets via --slo / [admission.slo]),
+//!           # epoch-versioned routing with load-driven lane
+//!           # repartitioning (--rebalance adaptive re-buckets hot shape
+//!           # classes onto cold lanes within their kind span),
 //!           # warm result cache (repeat (kind, seed) requests answered
 //!           # engine=cache without queueing; single-flight, LRU +
 //!           # byte-bounded, off by default), cross-connection shape
@@ -24,10 +29,12 @@
 //!           # docs/PROTOCOL.md
 //! ohm loadgen --addr HOST:PORT [--clients N] [--reqs N] [--seed S]
 //!             [--retries N] [--backoff-us U] [--repeat-seeds]
-//!             [--drain [--out FILE]]
+//!             [--skew S] [--drain [--out FILE]]
 //!           # drive a running server: N concurrent clients × mixed
-//!           # matmul/sort shapes, verify checksums against the serial
-//!           # engine, report client-observed latency p50/p90/p99
+//!           # matmul/sort shapes (round-robin, or Zipf(S)-skewed with
+//!           # --skew for a reproducible lane-imbalanced trace), verify
+//!           # checksums against the serial engine, report
+//!           # client-observed latency p50/p90/p99
 //!           # (split hit-path vs miss-path when a result cache answers),
 //!           # goodput vs offered load under jittered BUSY/OVERLOADED
 //!           # retries, optionally DRAIN and save the final STATS
@@ -67,24 +74,33 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|calibrate|
                          per-lane admission bound → ERR BUSY past it,
                          --admission fixed|adaptive + --slo-p90-us N soft
                          admission → ERR OVERLOADED past the queue-wait SLO,
+                         --slo CLASS=US[,...] per-shape-class SLO overrides
+                         (e.g. --slo matmul/2^6=2500,sort/2^9=800),
                          --lanes N shape-class dispatch lanes, --steal
                          true|false (or --no-steal) idle-lane work stealing,
+                         --rebalance off|adaptive + --rebalance-window-ms N
+                         load-driven lane repartitioning (epoch-versioned
+                         routing; hot classes move to cold lanes within
+                         their kind span, STATS gains a routing table),
                          --cache on|off + --cache-entries/--cache-bytes
                          warm result cache (repeat requests answered
                          engine=cache without queueing), --batch-max /
                          --batch-linger-us shape-batch formation, DRAIN
                          protocol command for rolling restarts, --config F
-                         reads [serving] + [lanes] + [admission] + [cache];
+                         reads [serving] + [lanes] + [admission] +
+                         [admission.slo] + [rebalance] + [cache];
                          protocol reference: docs/PROTOCOL.md)
   loadgen               drive a running --listen server with concurrent
                         clients and checksum verification (--addr HOST:PORT,
                         --clients N, --reqs N per client, --retries N +
                         --backoff-us U jittered retry of BUSY/OVERLOADED,
                         --repeat-seeds for a cache-hitting repeated-seed
-                        trace, --drain to finish with a DRAIN, --out FILE
-                        to save the final STATS; prints client-side
-                        p50/p90/p99 — hit vs miss path when cached —
-                        plus goodput vs offered load and shed counts)
+                        trace, --skew S for a Zipf(S)-skewed shape mix
+                        (reproducible lane imbalance), --drain to finish
+                        with a DRAIN, --out FILE to save the final STATS;
+                        prints client-side p50/p90/p99 — hit vs miss path
+                        when cached — plus goodput vs offered load and
+                        shed counts)
   calibrate             probe host overhead constants
   gantt                 render a simulated schedule
   artifacts             list AOT artifacts\n";
@@ -282,8 +298,37 @@ fn cmd_serve(args: &Args) -> Result<String> {
             }
             serving.slo_p90_us = v;
         }
+        if let Some(v) = args.get("slo") {
+            // Per-shape-class SLO overrides: `--slo matmul/2^6=2500`
+            // (comma-separated for several classes). Appended after any
+            // [admission.slo] config entries, so the CLI wins per class.
+            for part in v.split(',') {
+                let (name, us) = part
+                    .split_once('=')
+                    .with_context(|| format!("flag --slo: expected class=µs, got {part:?}"))?;
+                let class = crate::coordinator::ShapeClass::parse(name).with_context(|| {
+                    format!("flag --slo: unknown shape class {name:?} (e.g. matmul/2^6)")
+                })?;
+                let slo: f64 = us
+                    .trim()
+                    .parse()
+                    .ok()
+                    .with_context(|| format!("flag --slo: cannot parse µs value {us:?}"))?;
+                if !slo.is_finite() || slo < 0.0 {
+                    bail!("flag --slo: {name}: must be a finite value ≥ 0, got {slo:?}");
+                }
+                serving.slo_overrides.push((class, slo));
+            }
+        }
         if let Some(v) = args.get_parsed::<u64>("admission-window-ms")? {
             serving.admission_window_ms = v.max(1);
+        }
+        if let Some(v) = args.get("rebalance") {
+            serving.rebalance = crate::coordinator::RebalanceMode::from_name(v)
+                .with_context(|| format!("flag --rebalance: unknown mode {v:?} (off|adaptive)"))?;
+        }
+        if let Some(v) = args.get_parsed::<u64>("rebalance-window-ms")? {
+            serving.rebalance_window_ms = v.max(1);
         }
         if let Some(v) = args.get("cache") {
             serving.cache = match v {
@@ -318,8 +363,20 @@ fn cmd_serve(args: &Args) -> Result<String> {
         } else {
             "cache off".to_string()
         };
+        // Non-default routing/SLO extras only: the default banner stays
+        // byte-identical to the pre-routing-layer server.
+        let mut extras = String::new();
+        if cfg.rebalance == crate::coordinator::RebalanceMode::Adaptive {
+            extras.push_str(&format!(
+                ", rebalance adaptive (window {}ms)",
+                cfg.rebalance_window_ms
+            ));
+        }
+        if !cfg.slo_overrides.is_empty() {
+            extras.push_str(&format!(", {} per-class slo overrides", cfg.slo_overrides.len()));
+        }
         eprintln!(
-            "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs), {})",
+            "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs), {}{})",
             server.local_addr(),
             cfg.serve_threads,
             cfg.lanes,
@@ -329,6 +386,7 @@ fn cmd_serve(args: &Args) -> Result<String> {
             cfg.admission.name(),
             cfg.slo_p90_us,
             cache_desc,
+            extras,
         );
         server.serve(cfg, conns)?;
         return Ok(format!("server on {} finished\n", server.local_addr()));
@@ -380,6 +438,11 @@ const LOADGEN_SHAPES: &[(&str, usize)] =
 /// into a repeated-seed trace that exercises a server-side `--cache
 /// on` warm result cache; replies served with `engine=cache` are then
 /// reported as a separate hit-path latency line next to the miss path.
+/// `--skew <s>` replaces the balanced round-robin shape mix with
+/// independent Zipf(s) draws (rank 0 the most popular shape), producing
+/// a reproducible shape-class-skewed trace — the demand pattern the
+/// server's `--rebalance adaptive` lane repartitioning exists for; the
+/// realized mix is printed as a `skew=... shape mix:` line.
 ///
 /// Errors (checksum mismatch, truncated reply, unclean drain) exit
 /// nonzero — this is the CI serving-smoke entry point.
@@ -397,15 +460,55 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     let retries = args.get_parsed::<usize>("retries")?.unwrap_or(0);
     let backoff_us = args.get_parsed::<u64>("backoff-us")?.unwrap_or(500).max(1);
     let repeat_seeds = args.has("repeat-seeds");
+    let skew = match args.get_parsed::<f64>("skew")? {
+        Some(s) if !s.is_finite() || s < 0.0 => {
+            bail!("flag --skew: must be a finite Zipf exponent ≥ 0, got {s:?}")
+        }
+        s => s,
+    };
 
-    // The workload seed for client `c`'s request `k`. Default: unique
-    // per request (every execution is cold). With --repeat-seeds the
-    // seed depends only on the shape, so every request for a shape is
-    // the identical deterministic job — the repeated-seed trace a warm
-    // result cache exists for.
-    let seed_for = move |c: usize, k: usize| -> u64 {
+    // Which LOADGEN_SHAPES index client `c`'s request `k` uses. The
+    // default is the historical round-robin (a balanced trace); with
+    // `--skew <s>` each request is an independent Zipf(s) draw over the
+    // shapes (rank 0 the most popular), so a shape-class-skewed —
+    // lane-imbalanced — trace is reproducible from the CLI. The draw is
+    // deterministic per (seed, client): the reference checksums, the
+    // client threads, and a rerun of the same command all agree.
+    let shape_plan: Vec<Vec<usize>> = (0..clients)
+        .map(|c| match skew {
+            None => (0..reqs).map(|k| (c + k) % LOADGEN_SHAPES.len()).collect(),
+            Some(s) => {
+                let weights: Vec<f64> = (0..LOADGEN_SHAPES.len())
+                    .map(|rank| 1.0 / ((rank + 1) as f64).powf(s))
+                    .collect();
+                let total: f64 = weights.iter().sum();
+                let mut rng = crate::util::Pcg32::new(
+                    seed0.wrapping_mul(0xA076_1D64_78BD_642F).wrapping_add(c as u64),
+                );
+                (0..reqs)
+                    .map(|_| {
+                        let mut u = rng.f64() * total;
+                        for (i, w) in weights.iter().enumerate() {
+                            if u < *w {
+                                return i;
+                            }
+                            u -= w;
+                        }
+                        LOADGEN_SHAPES.len() - 1
+                    })
+                    .collect()
+            }
+        })
+        .collect();
+
+    // The workload seed for client `c`'s request `k` of shape
+    // `shape_idx`. Default: unique per request (every execution is
+    // cold). With --repeat-seeds the seed depends only on the shape, so
+    // every request for a shape is the identical deterministic job —
+    // the repeated-seed trace a warm result cache exists for.
+    let seed_for = move |c: usize, k: usize, shape_idx: usize| -> u64 {
         if repeat_seeds {
-            seed0 + ((c + k) % LOADGEN_SHAPES.len()) as u64
+            seed0 + shape_idx as u64
         } else {
             seed0 + (c * 1000 + k) as u64
         }
@@ -418,9 +521,10 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     for c in 0..clients {
         let mut per = Vec::with_capacity(reqs);
         for k in 0..reqs {
-            let (cmd, n) = LOADGEN_SHAPES[(c + k) % LOADGEN_SHAPES.len()];
+            let idx = shape_plan[c][k];
+            let (cmd, n) = LOADGEN_SHAPES[idx];
             let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
-            let r = reference.submit(kind, seed_for(c, k));
+            let r = reference.submit(kind, seed_for(c, k, idx));
             per.push(format!("checksum={:.4}", r.checksum));
         }
         expected.push(per);
@@ -438,6 +542,7 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     let handles: Vec<_> = (0..clients)
         .map(|c| {
             let addr = addr.clone();
+            let plan = shape_plan[c].clone();
             std::thread::spawn(move || -> std::io::Result<Vec<ClientReply>> {
                 let stream = std::net::TcpStream::connect(addr.as_str())?;
                 let mut reader = BufReader::new(stream.try_clone()?);
@@ -449,8 +554,9 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
                 );
                 let mut replies = Vec::with_capacity(reqs);
                 for k in 0..reqs {
-                    let (cmd, n) = LOADGEN_SHAPES[(c + k) % LOADGEN_SHAPES.len()];
-                    let seed = seed_for(c, k);
+                    let idx = plan[k];
+                    let (cmd, n) = LOADGEN_SHAPES[idx];
+                    let seed = seed_for(c, k, idx);
                     let mut attempt = 0usize;
                     let final_reply = loop {
                         let sw = std::time::Instant::now();
@@ -560,6 +666,22 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
         retries,
         backoff_us,
     ));
+    // The realized Zipf draw, so a skewed run documents its own
+    // imbalance (and a rerun can be eyeballed against it).
+    if let Some(s) = skew {
+        let mut counts = vec![0usize; LOADGEN_SHAPES.len()];
+        for per in &shape_plan {
+            for &i in per {
+                counts[i] += 1;
+            }
+        }
+        let mix: Vec<String> = LOADGEN_SHAPES
+            .iter()
+            .zip(&counts)
+            .map(|((cmd, n), count)| format!("{}/{n}={count}", cmd.to_lowercase()))
+            .collect();
+        text.push_str(&format!("skew={s} shape mix: {}\n", mix.join(" ")));
+    }
     // Exact percentiles of *client-observed* latency (request write →
     // reply read: queue wait + service + wire) over served (OK) requests.
     // Not the same quantity as the server's STATS queue-wait digests —
@@ -763,8 +885,51 @@ mod tests {
     }
 
     #[test]
+    fn serve_listen_rejects_malformed_routing_and_slo_flags() {
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--rebalance", "turbo"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--rebalance-window-ms", "x"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo", "matmul=100"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo", "tensor/2^6=100"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo", "matmul/2^6"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo", "matmul/2^6=abc"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--slo", "matmul/2^6=-5"]).is_err());
+        assert!(call(&[
+            "serve", "--listen", "127.0.0.1:0", "--slo", "matmul/2^6=100,sort/2^9=",
+        ])
+        .is_err());
+    }
+
+    #[test]
     fn loadgen_requires_addr() {
         assert!(call(&["loadgen"]).is_err());
+    }
+
+    #[test]
+    fn loadgen_rejects_bad_skew() {
+        assert!(call(&["loadgen", "--addr", "127.0.0.1:1", "--skew", "abc"]).is_err());
+        assert!(call(&["loadgen", "--addr", "127.0.0.1:1", "--skew", "-1.0"]).is_err());
+        assert!(call(&["loadgen", "--addr", "127.0.0.1:1", "--skew", "NaN"]).is_err());
+    }
+
+    #[test]
+    fn loadgen_skewed_trace_verifies_against_live_server() {
+        let server = crate::coordinator::server::Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let h = std::thread::spawn(move || {
+            server.serve(CoordinatorCfg { threads: 1, ..Default::default() }, None).unwrap();
+        });
+        // A strongly skewed mix still checksum-verifies every reply:
+        // the reference coordinator replays the identical Zipf draw.
+        let out = call(&[
+            "loadgen", "--addr", &addr, "--clients", "3", "--reqs", "5", "--skew", "1.2",
+            "--drain",
+        ])
+        .unwrap();
+        h.join().unwrap();
+        assert!(out.contains("15 ok, 0 busy, 0 shed, 0 mismatches"), "{out}");
+        assert!(out.contains("skew=1.2 shape mix: "), "{out}");
+        assert!(out.contains("matmul/24="), "{out}");
+        assert!(out.contains("drain: clean"), "{out}");
     }
 
     #[test]

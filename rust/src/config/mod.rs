@@ -5,7 +5,7 @@
 //! floats, booleans, quoted strings, and flat arrays of those; `#`
 //! comments. That subset covers every config this repo ships.
 
-use crate::coordinator::AdmissionMode;
+use crate::coordinator::{AdmissionMode, RebalanceMode, ShapeClass};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -237,9 +237,18 @@ pub struct ServingConfig {
     /// p90 queue-wait SLO the adaptive governor defends, µs
     /// (`[admission] slo_p90_us = N`).
     pub slo_p90_us: f64,
+    /// Per-shape-class SLO overrides (`[admission.slo]` section: one
+    /// `matmul/2^6 = 2500`-style entry per class), layered over
+    /// `slo_p90_us`.
+    pub slo_overrides: Vec<(ShapeClass, f64)>,
     /// Rolling half-window for the governor's queue-wait digests, ms
     /// (`[admission] window_ms = N`).
     pub admission_window_ms: u64,
+    /// Routing-rebalance mode (`[rebalance] mode = "off"|"adaptive"`);
+    /// off by default, which pins the epoch-0 seed routing table.
+    pub rebalance: RebalanceMode,
+    /// Rebalancer decision window, ms (`[rebalance] window_ms = N`).
+    pub rebalance_window_ms: u64,
     /// Warm result cache (`[cache] enabled = bool`); default off, which
     /// preserves pre-cache serving behaviour bit-for-bit.
     pub cache: bool,
@@ -265,7 +274,10 @@ impl Default for ServingConfig {
             steal: c.steal,
             admission: c.admission,
             slo_p90_us: c.slo_p90_us,
+            slo_overrides: c.slo_overrides,
             admission_window_ms: c.admission_window_ms,
+            rebalance: c.rebalance,
+            rebalance_window_ms: c.rebalance_window_ms,
             cache: c.cache,
             cache_entries: c.cache_entries,
             cache_bytes: c.cache_bytes,
@@ -325,6 +337,34 @@ impl ServingConfig {
                 cfg.admission_window_ms = v.as_usize().context("window_ms")?.max(1) as u64;
             }
         }
+        if let Some(sec) = t.get("admission.slo") {
+            // Per-shape-class SLO table: `matmul/2^6 = 2500` (µs per
+            // class-name key). Unknown class names and degenerate SLOs
+            // are config errors, not silent skips — a typoed class
+            // would otherwise silently keep the default budget.
+            for (key, v) in sec {
+                let class = ShapeClass::parse(key).with_context(|| {
+                    format!("[admission.slo]: unknown shape class {key:?} (e.g. matmul/2^6)")
+                })?;
+                let slo = v.as_f64().with_context(|| format!("[admission.slo] {key}"))?;
+                if !slo.is_finite() || slo < 0.0 {
+                    bail!("[admission.slo] {key}: must be a finite value ≥ 0, got {slo:?}");
+                }
+                cfg.slo_overrides.push((class, slo));
+            }
+        }
+        if let Some(sec) = t.get("rebalance") {
+            if let Some(v) = sec.get("mode") {
+                let name = v.as_str().context("rebalance mode")?;
+                cfg.rebalance = RebalanceMode::from_name(name).with_context(|| {
+                    format!("unknown rebalance mode {name:?} (off|adaptive)")
+                })?;
+            }
+            if let Some(v) = sec.get("window_ms") {
+                let ms = v.as_usize().context("rebalance window_ms")?;
+                cfg.rebalance_window_ms = ms.max(1) as u64;
+            }
+        }
         if let Some(sec) = t.get("cache") {
             if let Some(v) = sec.get("enabled") {
                 cfg.cache = v.as_bool().context("cache enabled")?;
@@ -365,7 +405,10 @@ impl ServingConfig {
         cfg.steal = self.steal;
         cfg.admission = self.admission;
         cfg.slo_p90_us = self.slo_p90_us;
+        cfg.slo_overrides = self.slo_overrides.clone();
         cfg.admission_window_ms = self.admission_window_ms;
+        cfg.rebalance = self.rebalance;
+        cfg.rebalance_window_ms = self.rebalance_window_ms;
         cfg.cache = self.cache;
         cfg.cache_entries = self.cache_entries;
         cfg.cache_bytes = self.cache_bytes;
@@ -475,6 +518,60 @@ flag = true
             (c.cache, c.cache_entries, c.cache_bytes),
         );
         assert!(!s.cache, "the result cache defaults to off");
+        assert_eq!(
+            (s.rebalance, s.rebalance_window_ms, s.slo_overrides.clone()),
+            (c.rebalance, c.rebalance_window_ms, c.slo_overrides.clone()),
+        );
+        assert_eq!(s.rebalance, RebalanceMode::Off, "rebalancing defaults to off");
+        assert!(s.slo_overrides.is_empty(), "uniform SLO by default");
+    }
+
+    #[test]
+    fn rebalance_section_overrides_and_applies() {
+        let t = parse("[rebalance]\nmode = \"adaptive\"\nwindow_ms = 100\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.rebalance, RebalanceMode::Adaptive);
+        assert_eq!(c.rebalance_window_ms, 100);
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert_eq!(coord.rebalance, RebalanceMode::Adaptive);
+        assert_eq!(coord.rebalance_window_ms, 100);
+        // Unset keys keep defaults; window 0 clamps to 1.
+        let t = parse("[rebalance]\nwindow_ms = 0\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.rebalance, RebalanceMode::Off);
+        assert_eq!(c.rebalance_window_ms, 1);
+        // Unknown mode is a config error, not a silent default.
+        let t = parse("[rebalance]\nmode = \"sometimes\"\n").unwrap();
+        assert!(ServingConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn admission_slo_section_parses_per_class_overrides() {
+        let toml = "[admission]\nmode = \"adaptive\"\nslo_p90_us = 5000\n\
+                    [admission.slo]\nmatmul/2^6 = 2500\nsort/2^9 = 800.5\n";
+        let t = parse(toml).unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.slo_p90_us, 5000.0);
+        let names: Vec<(String, f64)> =
+            c.slo_overrides.iter().map(|(cl, us)| (cl.name(), *us)).collect();
+        assert_eq!(
+            names,
+            vec![("matmul/2^6".to_string(), 2500.0), ("sort/2^9".to_string(), 800.5)]
+        );
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert_eq!(coord.slo_overrides.len(), 2);
+        // Unknown class names and degenerate SLOs are config errors.
+        for bad in [
+            "[admission.slo]\nmatmul/9 = 100\n",
+            "[admission.slo]\ntensor/2^6 = 100\n",
+            "[admission.slo]\nsort/2^9 = -5\n",
+            "[admission.slo]\nsort/2^9 = \"fast\"\n",
+        ] {
+            let t = parse(bad).unwrap();
+            assert!(ServingConfig::from_table(&t).is_err(), "must reject {bad:?}");
+        }
     }
 
     #[test]

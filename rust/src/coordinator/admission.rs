@@ -23,9 +23,22 @@
 //!   controller cannot flap around the threshold.
 //!
 //! [`AdmissionMode::Fixed`] keeps the PR 1 behaviour bit-for-bit: the
-//! governor admits unconditionally and records nothing.
+//! governor admits unconditionally and records nothing (unless the
+//! load-driven rebalancer is on — it feeds off the same windows, so
+//! [`Governor::with_recording`] can keep them populated in fixed mode
+//! without changing any admission decision).
+//!
+//! The SLO itself is a **per-shape-class table** ([`SloTable`]): one
+//! default `slo_p90_us` plus optional per-class overrides
+//! (`[admission.slo]` config / `--slo class=µs`), so a slow-matmul lane
+//! and a fast-sort lane defend different budgets. The rolling windows
+//! stay per-*lane* (that is where the queue is), while the threshold —
+//! and the shed latch — are per-*class* of the incoming request.
 
+use super::lanes::ShapeClass;
+use super::routing::{class_slot, CLASS_SLOTS};
 use crate::stats::Digest;
+use std::collections::HashSet;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -58,6 +71,47 @@ impl AdmissionMode {
             "adaptive" => Some(AdmissionMode::Adaptive),
             _ => None,
         }
+    }
+}
+
+/// Per-shape-class p90 queue-wait SLOs: a uniform default plus sparse
+/// per-class overrides. With no overrides every class shares the
+/// default, which reproduces the single-SLO behaviour decision-for-
+/// decision.
+#[derive(Debug, Clone)]
+pub struct SloTable {
+    default_us: f64,
+    per_class: Vec<Option<f64>>,
+}
+
+impl SloTable {
+    /// Every class defends `default_us` (the `--slo-p90-us` value).
+    pub fn uniform(default_us: f64) -> SloTable {
+        SloTable { default_us, per_class: vec![None; CLASS_SLOTS] }
+    }
+
+    /// Override one class's SLO (config `[admission.slo]` / `--slo`).
+    pub fn set(&mut self, class: ShapeClass, slo_us: f64) {
+        self.per_class[class_slot(class)] = Some(slo_us);
+    }
+
+    /// The SLO a request of `class` is admitted against.
+    pub fn slo_for(&self, class: ShapeClass) -> f64 {
+        self.per_class[class_slot(class)].unwrap_or(self.default_us)
+    }
+
+    /// The uniform default (classes without an override).
+    pub fn default_us(&self) -> f64 {
+        self.default_us
+    }
+
+    /// The configured overrides, in class order.
+    pub fn overrides(&self) -> Vec<(ShapeClass, f64)> {
+        self.per_class
+            .iter()
+            .enumerate()
+            .filter_map(|(slot, v)| v.map(|us| (super::routing::slot_class(slot), us)))
+            .collect()
     }
 }
 
@@ -96,7 +150,12 @@ struct LaneWindow {
     current: Digest,
     previous: Digest,
     started: Instant,
-    shedding: bool,
+    /// Shape classes currently latched into shedding on this lane. The
+    /// window (and therefore the p90 evidence) is per-lane; the latch is
+    /// per-class because each class defends its own SLO — with a uniform
+    /// [`SloTable`] the observable decisions collapse to the old
+    /// single-latch behaviour exactly.
+    shedding: HashSet<ShapeClass>,
     /// Last rolling p90 computed from a non-empty window: the shed
     /// evidence reported while a *stalled* lane (empty window, jobs
     /// still queued) waits for fresh completions. `None` until the
@@ -112,7 +171,7 @@ impl LaneWindow {
             current: Digest::new(),
             previous: Digest::new(),
             started: Instant::now(),
-            shedding: false,
+            shedding: HashSet::new(),
             last_p90_us: None,
         }
     }
@@ -145,28 +204,47 @@ impl LaneWindow {
 /// admission on lane A never contends with dispatch on lane B.
 pub struct Governor {
     mode: AdmissionMode,
-    slo_p90_us: f64,
+    slo: SloTable,
     window: Duration,
+    /// Record queue waits into the windows. On in adaptive mode; the
+    /// rebalancer turns it on in fixed mode too
+    /// ([`with_recording`](Governor::with_recording)) since its
+    /// imbalance signal reads the same windows.
+    record_waits: bool,
     lanes: Vec<Mutex<LaneWindow>>,
 }
 
 impl Governor {
     /// `window_ms` is the rolling half-window length (clamped ≥ 1 ms).
-    pub fn new(mode: AdmissionMode, slo_p90_us: f64, window_ms: u64, lanes: usize) -> Governor {
+    pub fn new(mode: AdmissionMode, slo: SloTable, window_ms: u64, lanes: usize) -> Governor {
         Governor {
             mode,
-            slo_p90_us,
+            slo,
             window: Duration::from_millis(window_ms.max(1)),
+            record_waits: mode == AdmissionMode::Adaptive,
             lanes: (0..lanes.max(1)).map(|_| Mutex::new(LaneWindow::new())).collect(),
         }
+    }
+
+    /// Force queue-wait recording even in fixed mode (the rebalancer
+    /// reads the windows; admission decisions are unaffected).
+    pub fn with_recording(mut self, record: bool) -> Governor {
+        self.record_waits = self.record_waits || record;
+        self
     }
 
     pub fn mode(&self) -> AdmissionMode {
         self.mode
     }
 
+    /// The uniform default SLO (classes without an override).
     pub fn slo_p90_us(&self) -> f64 {
-        self.slo_p90_us
+        self.slo.default_us()
+    }
+
+    /// The per-class SLO table admission checks against.
+    pub fn slo_table(&self) -> &SloTable {
+        &self.slo
     }
 
     /// Lock one lane's window, tolerating poison (advisory state only).
@@ -175,9 +253,10 @@ impl Governor {
     }
 
     /// Record one dispatched job's measured queue wait against the lane
-    /// it was admitted to. No-op in [`AdmissionMode::Fixed`].
+    /// it was admitted to. No-op unless the windows have a consumer
+    /// (adaptive admission and/or the rebalancer).
     pub fn observe(&self, lane: usize, queue_wait_us: f64) {
-        if self.mode == AdmissionMode::Fixed {
+        if !self.record_waits {
             return;
         }
         let mut w = self.lane(lane);
@@ -185,8 +264,11 @@ impl Governor {
         w.current.record(queue_wait_us);
     }
 
-    /// Admission check for a request routed to `lane`. `Ok` admits;
-    /// `Err` is a shed with the evidence for the `ERR OVERLOADED` reply.
+    /// Admission check for a request of `class` routed to `lane`. `Ok`
+    /// admits; `Err` is a shed with the evidence for the
+    /// `ERR OVERLOADED` reply. The rolling-p90 evidence is the lane's;
+    /// the SLO it is held against — and the shed latch — are the
+    /// class's.
     ///
     /// `queued` reports the lane's current queue length; it
     /// distinguishes *idle* from *stalled* when the rolling window is
@@ -196,44 +278,66 @@ impl Governor {
     /// to be low, they are simply not observed). Lazy because reading it
     /// takes the lane queue's mutex, and the common non-empty-window
     /// path must not pay that on every admission.
-    pub fn admit(&self, lane: usize, queued: impl FnOnce() -> usize) -> Result<(), Overload> {
+    pub fn admit(
+        &self,
+        lane: usize,
+        class: ShapeClass,
+        queued: impl FnOnce() -> usize,
+    ) -> Result<(), Overload> {
         if self.mode == AdmissionMode::Fixed {
             return Ok(());
         }
+        let slo_us = self.slo.slo_for(class);
         let mut w = self.lane(lane);
         w.rotate(self.window);
         let Some(p90) = w.rolling_p90() else {
-            if w.shedding && queued() > 0 {
+            if !w.shedding.is_empty() && queued() > 0 {
                 // Stalled, not idle: nothing completed for two windows
-                // but the queue is still backed up. Hold the shed on the
-                // last evidence we had — or, on the cold-start corner
-                // where the lane has *never* completed a job, on the
-                // explicit `stalled` marker (never a fabricated p90=0).
-                return Err(Overload { p90_us: w.last_p90_us, slo_us: self.slo_p90_us });
+                // but the queue is still backed up — and a stall wedges
+                // the whole lane, so any latched class holds the shed
+                // for every class queued behind it. Report the last
+                // evidence we had — or, on the cold-start corner where
+                // the lane has *never* completed a job, the explicit
+                // `stalled` marker (never a fabricated p90=0).
+                return Err(Overload { p90_us: w.last_p90_us, slo_us });
             }
             // Truly idle (or never loaded): nothing to defend.
-            w.shedding = false;
+            w.shedding.clear();
             return Ok(());
         };
         w.last_p90_us = Some(p90);
-        if w.shedding {
-            if p90 <= self.slo_p90_us * RECOVERY_FRACTION {
-                w.shedding = false;
+        if w.shedding.contains(&class) {
+            if p90 <= slo_us * RECOVERY_FRACTION {
+                w.shedding.remove(&class);
                 Ok(())
             } else {
-                Err(Overload { p90_us: Some(p90), slo_us: self.slo_p90_us })
+                Err(Overload { p90_us: Some(p90), slo_us })
             }
-        } else if p90 > self.slo_p90_us {
-            w.shedding = true;
-            Err(Overload { p90_us: Some(p90), slo_us: self.slo_p90_us })
+        } else if p90 > slo_us
+            || (!w.shedding.is_empty() && p90 > slo_us * RECOVERY_FRACTION)
+        {
+            // Either this class's own SLO is blown, or the lane is in
+            // overload recovery (some class latched) and this class sits
+            // inside its *own* hysteresis band — admitting it would keep
+            // the shared queue busy and park the lane's p90 above the
+            // latched class's recovery point forever (starvation). With a
+            // uniform SLO this clause is exactly the old lane-wide latch.
+            w.shedding.insert(class);
+            Err(Overload { p90_us: Some(p90), slo_us })
         } else {
             Ok(())
         }
     }
 
-    /// Whether a lane is currently shedding (test/observability hook).
+    /// Whether any class is currently latched shedding on a lane
+    /// (test/observability hook).
     pub fn shedding(&self, lane: usize) -> bool {
-        self.lane(lane).shedding
+        !self.lane(lane).shedding.is_empty()
+    }
+
+    /// Whether one specific class is latched shedding on a lane.
+    pub fn shedding_class(&self, lane: usize, class: ShapeClass) -> bool {
+        self.lane(lane).shedding.contains(&class)
     }
 
     /// The lane's current rolling p90 estimate, if any recent waits.
@@ -242,11 +346,29 @@ impl Governor {
         w.rotate(self.window);
         w.rolling_p90()
     }
+
+    /// The rebalancer's imbalance signal for one lane: the rolling p90
+    /// and how many waits the two half-windows currently hold.
+    pub fn window_load(&self, lane: usize) -> (Option<f64>, u64) {
+        let mut w = self.lane(lane);
+        w.rotate(self.window);
+        (w.rolling_p90(), w.current.count() + w.previous.count())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::traces::TraceKind;
+
+    /// The class most tests route: sort/2^8.
+    fn sc() -> ShapeClass {
+        ShapeClass::of(&TraceKind::Sort { n: 300 })
+    }
+
+    fn governor(mode: AdmissionMode, slo_us: f64, window_ms: u64, lanes: usize) -> Governor {
+        Governor::new(mode, SloTable::uniform(slo_us), window_ms, lanes)
+    }
 
     #[test]
     fn mode_names_round_trip() {
@@ -257,41 +379,127 @@ mod tests {
     }
 
     #[test]
+    fn slo_table_defaults_and_overrides() {
+        let mut t = SloTable::uniform(1_000.0);
+        assert_eq!(t.default_us(), 1_000.0);
+        assert_eq!(t.slo_for(sc()), 1_000.0);
+        assert!(t.overrides().is_empty());
+        let matmul = ShapeClass::of(&TraceKind::Matmul { n: 64 });
+        t.set(matmul, 2_500.0);
+        assert_eq!(t.slo_for(matmul), 2_500.0, "override wins for its class");
+        assert_eq!(t.slo_for(sc()), 1_000.0, "other classes keep the default");
+        assert_eq!(t.overrides(), vec![(matmul, 2_500.0)]);
+    }
+
+    #[test]
     fn fixed_mode_always_admits_and_records_nothing() {
-        let g = Governor::new(AdmissionMode::Fixed, 1.0, 1_000, 2);
+        let g = governor(AdmissionMode::Fixed, 1.0, 1_000, 2);
         for _ in 0..10 {
             g.observe(0, 1e9);
-            assert!(g.admit(0, || 0).is_ok());
+            assert!(g.admit(0, sc(), || 0).is_ok());
         }
         assert!(g.rolling_p90(0).is_none(), "fixed mode keeps no window");
         assert!(!g.shedding(0));
     }
 
     #[test]
-    fn adaptive_sheds_past_slo_and_reports_evidence() {
-        // Window long enough that nothing rotates mid-test.
-        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 60_000, 2);
-        assert!(g.admit(0, || 0).is_ok(), "no samples yet: admit");
+    fn fixed_mode_with_recording_keeps_windows_but_never_sheds() {
+        // The rebalancer's configuration: fixed admission, recording on.
+        let g = governor(AdmissionMode::Fixed, 1.0, 60_000, 2).with_recording(true);
         for _ in 0..10 {
             g.observe(0, 5_000.0);
         }
-        let over = g.admit(0, || 0).expect_err("p90 ≈ 5000 > slo 1000 must shed");
+        let (p90, n) = g.window_load(0);
+        assert_eq!(n, 10, "waits land in the window for the rebalancer");
+        assert!(p90.is_some());
+        assert!(g.admit(0, sc(), || 0).is_ok(), "admission decisions stay fixed-mode");
+        assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn adaptive_sheds_past_slo_and_reports_evidence() {
+        // Window long enough that nothing rotates mid-test.
+        let g = governor(AdmissionMode::Adaptive, 1_000.0, 60_000, 2);
+        assert!(g.admit(0, sc(), || 0).is_ok(), "no samples yet: admit");
+        for _ in 0..10 {
+            g.observe(0, 5_000.0);
+        }
+        let over = g.admit(0, sc(), || 0).expect_err("p90 ≈ 5000 > slo 1000 must shed");
         assert_eq!(over.slo_us, 1_000.0);
         let p90 = over.p90_us.expect("measured shed carries numeric evidence");
         assert!(p90 > 1_000.0, "reported p90 {p90} must exceed the SLO");
         assert_eq!(over.p90_evidence(), format!("{p90:.0}"));
         assert!(g.shedding(0));
-        assert!(g.admit(1, || 0).is_ok(), "sibling lane is independent");
-        assert!(g.admit(0, || 0).is_err(), "still shedding without recovery evidence");
+        assert!(g.shedding_class(0, sc()));
+        assert!(g.admit(1, sc(), || 0).is_ok(), "sibling lane is independent");
+        assert!(g.admit(0, sc(), || 0).is_err(), "still shedding without recovery evidence");
+        let (p90, n) = g.window_load(0);
+        assert_eq!(n, 10);
+        assert!(p90.unwrap() > 1_000.0);
     }
 
     #[test]
     fn adaptive_admits_under_slo() {
-        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 60_000, 1);
+        let g = governor(AdmissionMode::Adaptive, 1_000.0, 60_000, 1);
         for _ in 0..10 {
             g.observe(0, 100.0);
         }
-        assert!(g.admit(0, || 0).is_ok());
+        assert!(g.admit(0, sc(), || 0).is_ok());
+        assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn per_class_slos_shed_independently_on_one_lane() {
+        // Two classes share a lane (and therefore one wait window), but
+        // defend different budgets: the tight-SLO class sheds while the
+        // loose-SLO class keeps being admitted.
+        let loose = ShapeClass::of(&TraceKind::Sort { n: 300 }); // sort/2^8
+        let tight = ShapeClass::of(&TraceKind::Sort { n: 1000 }); // sort/2^9
+        let mut slo = SloTable::uniform(10_000.0);
+        slo.set(tight, 100.0);
+        let g = Governor::new(AdmissionMode::Adaptive, slo, 60_000, 1);
+        for _ in 0..10 {
+            g.observe(0, 5_000.0);
+        }
+        assert!(g.admit(0, loose, || 0).is_ok(), "5000 < 10000: loose class admits");
+        let over = g.admit(0, tight, || 0).expect_err("5000 > 100: tight class sheds");
+        assert_eq!(over.slo_us, 100.0, "the shed reports the class's own SLO");
+        assert!(g.shedding_class(0, tight));
+        assert!(!g.shedding_class(0, loose), "the latch is per class");
+        assert!(g.admit(0, loose, || 0).is_ok(), "loose class unaffected by the latch");
+    }
+
+    #[test]
+    fn recovery_band_sheds_unlatched_classes_while_a_peer_is_latched() {
+        // Uniform SLO, two classes sharing one lane: once one class is
+        // latched, a lane p90 inside the hysteresis band (0.8·slo, slo]
+        // must shed the *other* class too — otherwise its traffic keeps
+        // the shared queue busy and parks the p90 above the latched
+        // class's recovery point forever. This is exactly the old
+        // lane-wide latch behaviour under a uniform SLO.
+        let a = ShapeClass::of(&TraceKind::Sort { n: 300 });
+        let b = ShapeClass::of(&TraceKind::Sort { n: 1000 });
+        let g = governor(AdmissionMode::Adaptive, 1_000.0, 100, 1);
+        for _ in 0..10 {
+            g.observe(0, 5_000.0);
+        }
+        assert!(g.admit(0, a, || 0).is_err(), "a latches at p90 ≈ 5000");
+        // Age the overload out and land the window in the band.
+        std::thread::sleep(Duration::from_millis(250));
+        for _ in 0..10 {
+            g.observe(0, 900.0);
+        }
+        let over = g.admit(0, b, || 0).expect_err("900 > 0.8·1000 with a latched: b sheds too");
+        assert_eq!(over.slo_us, 1_000.0);
+        assert!(g.shedding_class(0, b), "b latches in the band");
+        assert!(g.admit(0, a, || 0).is_err(), "a still held by hysteresis");
+        // Clear recovery reopens both classes.
+        std::thread::sleep(Duration::from_millis(250));
+        for _ in 0..10 {
+            g.observe(0, 100.0);
+        }
+        assert!(g.admit(0, a, || 0).is_ok());
+        assert!(g.admit(0, b, || 0).is_ok());
         assert!(!g.shedding(0));
     }
 
@@ -301,11 +509,11 @@ mod tests {
         // replace it with waits just *below* the SLO but *above* the
         // recovery fraction, the lane must keep shedding; only clearly
         // lower waits (or an empty window) reopen it.
-        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 100, 1);
+        let g = governor(AdmissionMode::Adaptive, 1_000.0, 100, 1);
         for _ in 0..10 {
             g.observe(0, 5_000.0);
         }
-        assert!(g.admit(0, || 0).is_err());
+        assert!(g.admit(0, sc(), || 0).is_err());
         // Age the 5000µs samples fully out (≥ 2 windows), then observe
         // waits at 90% of the SLO — under the SLO, over the 80% recovery
         // threshold.
@@ -313,57 +521,57 @@ mod tests {
         for _ in 0..10 {
             g.observe(0, 900.0);
         }
-        assert!(g.admit(0, || 0).is_err(), "900 > 0.8·1000: hysteresis holds the shed");
+        assert!(g.admit(0, sc(), || 0).is_err(), "900 > 0.8·1000: hysteresis holds the shed");
         // Now age those out and observe clearly-recovered waits.
         std::thread::sleep(Duration::from_millis(250));
         for _ in 0..10 {
             g.observe(0, 100.0);
         }
-        assert!(g.admit(0, || 0).is_ok(), "100 ≤ 0.8·1000: recovered");
+        assert!(g.admit(0, sc(), || 0).is_ok(), "100 ≤ 0.8·1000: recovered");
         assert!(!g.shedding(0));
     }
 
     #[test]
     fn idle_window_recovers_a_shedding_lane() {
-        let g = Governor::new(AdmissionMode::Adaptive, 0.0, 50, 1);
+        let g = governor(AdmissionMode::Adaptive, 0.0, 50, 1);
         g.observe(0, 50.0);
-        assert!(g.admit(0, || 0).is_err(), "any positive wait exceeds slo 0");
+        assert!(g.admit(0, sc(), || 0).is_err(), "any positive wait exceeds slo 0");
         // No further traffic and an empty queue: after two window
         // lengths the rolling estimate is empty and the lane reopens.
         std::thread::sleep(Duration::from_millis(150));
-        assert!(g.admit(0, || 0).is_ok(), "idle lane recovers by window expiry");
+        assert!(g.admit(0, sc(), || 0).is_ok(), "idle lane recovers by window expiry");
         assert!(!g.shedding(0));
     }
 
     #[test]
     fn stalled_lane_with_queued_work_does_not_idle_recover() {
-        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 200, 1);
+        let g = governor(AdmissionMode::Adaptive, 1_000.0, 200, 1);
         for _ in 0..5 {
             g.observe(0, 5_000.0);
         }
-        assert!(g.admit(0, || 3).is_err(), "over SLO: shed");
+        assert!(g.admit(0, sc(), || 3).is_err(), "over SLO: shed");
         // Both half-windows age out with zero completions — but jobs are
         // still queued, so this is a stall, not idleness: the shed must
         // hold, reporting the last known p90 as evidence.
         std::thread::sleep(Duration::from_millis(500));
-        let over = g.admit(0, || 3).expect_err("stalled lane must keep shedding");
+        let over = g.admit(0, sc(), || 3).expect_err("stalled lane must keep shedding");
         let p90 = over.p90_us.expect("a lane that completed jobs reports its stale p90");
         assert!(p90 > 1_000.0, "stale evidence reported: {p90}");
         assert!(g.shedding(0));
         // Same moment, queue drained ⇒ genuinely idle ⇒ recover.
-        assert!(g.admit(0, || 0).is_ok(), "empty queue turns the stall into idle recovery");
+        assert!(g.admit(0, sc(), || 0).is_ok(), "empty queue turns the stall into idle recovery");
         assert!(!g.shedding(0));
     }
 
     #[test]
     fn cold_start_stall_reports_stalled_marker_not_zero() {
-        let g = Governor::new(AdmissionMode::Adaptive, 1_000.0, 60_000, 1);
+        let g = governor(AdmissionMode::Adaptive, 1_000.0, 60_000, 1);
         // Force the cold-start corner directly: a lane latched into
         // shedding (e.g. by state carried across an operator SLO change)
         // whose window never saw a completion — `last_p90_us` has no
         // value to report.
-        g.lane(0).shedding = true;
-        let over = g.admit(0, || 3).expect_err("shedding + queued work must keep shedding");
+        g.lane(0).shedding.insert(sc());
+        let over = g.admit(0, sc(), || 3).expect_err("shedding + queued work must keep shedding");
         assert_eq!(over.p90_us, None, "no completion ever measured ⇒ no numeric evidence");
         assert_eq!(
             over.p90_evidence(),
@@ -373,7 +581,7 @@ mod tests {
         assert_eq!(over.slo_us, 1_000.0, "the SLO itself is still reported");
         // The same cold corner with an empty queue is idleness, not a
         // stall: the lane reopens.
-        assert!(g.admit(0, || 0).is_ok());
+        assert!(g.admit(0, sc(), || 0).is_ok());
         assert!(!g.shedding(0));
     }
 }

@@ -40,6 +40,7 @@
 //! replies, STATS, and admission behaviour are untouched.
 
 use super::lanes::ShapeClass;
+use super::routing;
 use crate::report::{table::f, AsciiTable};
 use crate::workload::traces::TraceKind;
 use std::collections::HashMap;
@@ -330,10 +331,15 @@ impl ResultCache {
         self.shard_bytes
     }
 
-    /// The shard a key lives in: the same [`ShapeClass`] → lane mapping
-    /// the dispatch lanes use, so each lane's traffic owns one shard.
+    /// The shard a key lives in: the canonical **seed** [`ShapeClass`]
+    /// → lane mapping ([`routing::seed_lane`]), which the routing table
+    /// keeps *epoch-invariant* ([`routing::RoutingTable::shard_of`]).
+    /// Deliberately not the epoch's live lane assignment: a rebalance
+    /// moves where a class executes, never where it is memoized, so LRU
+    /// residency and in-flight single-flight leadership survive an
+    /// epoch swap — the fill stays exactly-once across it.
     pub fn shard_of(&self, kind: &TraceKind) -> usize {
-        ShapeClass::of(kind).lane(self.shards.len())
+        routing::seed_lane(ShapeClass::of(kind), self.shards.len())
     }
 
     fn lock(&self, s: usize) -> std::sync::MutexGuard<'_, ShardState> {

@@ -14,7 +14,13 @@
 //!   half, rounded up; sort classes the rest), so with ≥ 2 lanes a slow
 //!   matmul can never queue ahead of a sort, *by construction*;
 //! * size buckets hash (FNV-1a) onto the lanes within their kind's
-//!   partition, so hot shapes spread across a wider pool;
+//!   partition, so hot shapes spread across a wider pool — and since
+//!   the routing layer ([`super::routing`]) became epoch-versioned,
+//!   that assignment is a swappable [`super::routing::RoutingTable`]:
+//!   the rebalancer may re-bucket a hot class within its kind's span,
+//!   while [`LanePool::admit`] stamps every envelope with the
+//!   `(lane, epoch)` it was admitted under so in-flight attribution
+//!   never mixes regimes;
 //! * an idle lane **steals** a shape-pure run from a sibling's queue
 //!   head ([`BoundedQueue::try_pop_run`] moves the run under one lock,
 //!   keeping delivery exactly-once), so sharding never strands work.
@@ -31,9 +37,10 @@
 //! sheds matmuls while the sort lanes keep admitting.
 
 use super::queue::{BoundedQueue, PopTimeout};
+use super::routing::{self, Router};
 use super::{Job, JobResult};
 use crate::workload::traces::TraceKind;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// How long a lane blocks on its own queue before re-checking for
@@ -52,6 +59,12 @@ pub struct Envelope {
     /// per-lane telemetry) keys on this, not on whichever dispatcher
     /// ends up executing the job after a steal.
     pub lane: usize,
+    /// The routing epoch the envelope was admitted under — stamped by
+    /// [`LanePool::admit`] from the same table snapshot as `lane`, so a
+    /// later epoch swap can never re-attribute an in-flight job: its
+    /// queue-wait and steal accounting stay keyed to the regime that
+    /// admitted it.
+    pub epoch: u64,
     pub enqueued: Instant,
     pub reply: mpsc::Sender<JobResult>,
 }
@@ -76,15 +89,6 @@ pub struct ShapeClass {
     bucket: u8,
 }
 
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
-
 impl ShapeClass {
     pub fn of(kind: &TraceKind) -> ShapeClass {
         let (k, n) = match kind {
@@ -95,26 +99,50 @@ impl ShapeClass {
         ShapeClass { kind: k, bucket }
     }
 
-    /// Stable lane assignment. With one lane everything shares it; with
-    /// more, matmul classes own lanes `[0, ceil(lanes/2))` and sort
-    /// classes own the rest, and the size bucket hashes within the
-    /// kind's span. The kind partition is the head-of-line guarantee:
-    /// for `lanes >= 2`, no matmul ever queues on a sort lane.
+    /// Construct from raw parts (`kind` 0 = matmul / 1 = sort, `bucket`
+    /// a `floor(log2 n)` value) — the routing table and SLO config use
+    /// this to enumerate/parse classes. `None` outside the valid space.
+    pub fn from_parts(kind: u8, bucket: u8) -> Option<ShapeClass> {
+        ((kind as usize) < routing::KINDS && (bucket as usize) < routing::MAX_BUCKETS)
+            .then_some(ShapeClass { kind, bucket })
+    }
+
+    /// 0 = matmul, 1 = sort (the kind-partition dimension).
+    pub fn kind_id(&self) -> u8 {
+        self.kind
+    }
+
+    /// `floor(log2 n)` size bucket.
+    pub fn bucket(&self) -> u8 {
+        self.bucket
+    }
+
+    /// The *seed* (epoch-0) lane assignment — the static kind-partition
+    /// + FNV-bucket rule, now canonically owned by
+    /// [`routing::seed_lane`]; an epoch-versioned server consults its
+    /// [`routing::RoutingTable`] instead, which may have re-bucketed
+    /// this class within its kind's span.
     pub fn lane(&self, lanes: usize) -> usize {
-        let lanes = lanes.max(1);
-        if lanes == 1 {
-            return 0;
-        }
-        let sort_span = lanes / 2;
-        let (base, span) =
-            if self.kind == 0 { (0, lanes - sort_span) } else { (lanes - sort_span, sort_span) };
-        base + (fnv1a(&[self.kind, self.bucket]) % span as u64) as usize
+        routing::seed_lane(*self, lanes)
     }
 
     /// Human-readable class label, e.g. `matmul/2^6`.
     pub fn name(&self) -> String {
         let kind = if self.kind == 0 { "matmul" } else { "sort" };
         format!("{kind}/2^{}", self.bucket)
+    }
+
+    /// Parse a [`name`](ShapeClass::name)-format label
+    /// (`matmul/2^<bucket>` / `sort/2^<bucket>`) — the `[admission.slo]`
+    /// config keys and `--slo` override grammar.
+    pub fn parse(s: &str) -> Option<ShapeClass> {
+        let (kind_name, bucket) = s.trim().split_once("/2^")?;
+        let kind = match kind_name {
+            "matmul" => 0u8,
+            "sort" => 1u8,
+            _ => return None,
+        };
+        ShapeClass::from_parts(kind, bucket.parse().ok()?)
     }
 }
 
@@ -123,17 +151,33 @@ fn same_shape(a: &Envelope, b: &Envelope) -> bool {
 }
 
 /// The sharded admission layer: one bounded queue per lane, shape-class
-/// routing on push, work stealing on pop.
+/// routing on push (via the epoch-versioned [`Router`]), work stealing
+/// on pop.
 pub struct LanePool {
     queues: Vec<BoundedQueue<Envelope>>,
+    router: Arc<Router>,
     steal: bool,
 }
 
 impl LanePool {
     /// `lanes` queues (min 1) of `depth` each; `steal` enables the idle
-    /// lane fallback.
+    /// lane fallback. Routing stays pinned to the epoch-0 seed table —
+    /// the historical static assignment; use
+    /// [`with_router`](LanePool::with_router) to share a rebalanceable
+    /// router.
     pub fn new(lanes: usize, depth: usize, steal: bool) -> LanePool {
-        LanePool { queues: (0..lanes.max(1)).map(|_| BoundedQueue::new(depth)).collect(), steal }
+        LanePool::with_router(Arc::new(Router::new(lanes)), depth, steal)
+    }
+
+    /// A pool routed by a shared [`Router`], so the server's rebalancer
+    /// can republish the ShapeClass → lane table under it. The queue
+    /// count is pinned to the router's lane count.
+    pub fn with_router(router: Arc<Router>, depth: usize, steal: bool) -> LanePool {
+        LanePool {
+            queues: (0..router.lane_count()).map(|_| BoundedQueue::new(depth)).collect(),
+            router,
+            steal,
+        }
     }
 
     pub fn lane_count(&self) -> usize {
@@ -145,9 +189,14 @@ impl LanePool {
         self.steal && self.queues.len() > 1
     }
 
-    /// The lane a job of this kind routes to.
+    /// The lane a job of this kind routes to under the current epoch.
     pub fn route(&self, kind: &TraceKind) -> usize {
-        ShapeClass::of(kind).lane(self.queues.len())
+        self.router.route(kind).0
+    }
+
+    /// The routing handle this pool admits through.
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
     }
 
     /// A lane's queue (panics on an out-of-range lane index).
@@ -156,13 +205,15 @@ impl LanePool {
     }
 
     /// Admission: push the envelope onto its routed lane, stamping
-    /// [`Envelope::lane`] so downstream attribution cannot diverge from
-    /// the queue actually used. `Ok(lane)` on success; `Err(envelope)`
-    /// when that lane is at depth or closed — the caller turns that
-    /// into `ERR BUSY` / `ERR DRAINING`.
+    /// [`Envelope::lane`] and [`Envelope::epoch`] from one routing-table
+    /// snapshot so downstream attribution cannot diverge from the queue
+    /// actually used — nor mix regimes across an epoch swap. `Ok(lane)`
+    /// on success; `Err(envelope)` when that lane is at depth or closed
+    /// — the caller turns that into `ERR BUSY` / `ERR DRAINING`.
     pub fn admit(&self, mut env: Envelope) -> Result<usize, Envelope> {
-        let lane = self.route(&env.job.kind);
+        let (lane, epoch) = self.router.route(&env.job.kind);
         env.lane = lane;
+        env.epoch = epoch;
         self.queues[lane].try_push(env).map(|()| lane)
     }
 
@@ -257,7 +308,8 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let e = Envelope {
             job: Job { id, kind, seed: 0, arrival_us: 0 },
-            lane: 0, // stamped by admit(); raw-push tests leave it unused
+            lane: 0,  // stamped by admit(); raw-push tests leave it unused
+            epoch: 0, // likewise
             enqueued: Instant::now(),
             reply: tx,
         };
@@ -275,6 +327,20 @@ mod tests {
         assert_eq!(a, b);
         assert_ne!(a, c);
         assert_eq!(ShapeClass::of(&TraceKind::Sort { n: 1000 }).name(), "sort/2^9");
+    }
+
+    #[test]
+    fn shape_class_parse_round_trips_names() {
+        for kind in [TraceKind::Matmul { n: 100 }, TraceKind::Sort { n: 1000 }] {
+            let c = ShapeClass::of(&kind);
+            assert_eq!(ShapeClass::parse(&c.name()), Some(c), "{}", c.name());
+        }
+        assert_eq!(ShapeClass::parse(" matmul/2^6 "), ShapeClass::from_parts(0, 6));
+        assert!(ShapeClass::parse("matmul/6").is_none(), "bucket must be spelled 2^b");
+        assert!(ShapeClass::parse("tensor/2^6").is_none(), "unknown kind");
+        assert!(ShapeClass::parse("sort/2^64").is_none(), "bucket out of range");
+        assert!(ShapeClass::parse("sort/2^-1").is_none());
+        assert!(ShapeClass::from_parts(2, 0).is_none(), "kind out of range");
     }
 
     #[test]
@@ -305,6 +371,25 @@ mod tests {
         assert_eq!(pool.total_len(), 2);
         assert_eq!(pool.queue(0).pop().unwrap().lane, 0, "admit stamps the admitted lane");
         assert_eq!(pool.queue(1).pop().unwrap().lane, 1, "admit stamps the admitted lane");
+    }
+
+    #[test]
+    fn admit_stamps_lane_and_epoch_from_one_snapshot() {
+        let pool = LanePool::new(4, 8, false);
+        let kind = TraceKind::Sort { n: 1000 }; // sort/2^9 → seed lane 3 of 4
+        let (a, _arx) = env(1, kind);
+        assert_eq!(pool.admit(a).unwrap(), 3);
+        // Republish the class onto the other sort lane: the queued
+        // envelope keeps its admitted (lane, epoch); new admissions get
+        // the new pair.
+        let table = pool.router().load().with_move(ShapeClass::of(&kind), 2).unwrap();
+        pool.router().publish(table).unwrap();
+        let (b, _brx) = env(2, kind);
+        assert_eq!(pool.admit(b).unwrap(), 2, "new epoch routes to the moved lane");
+        let old = pool.queue(3).pop().unwrap();
+        assert_eq!((old.lane, old.epoch), (3, 0), "in-flight job keeps its admitted epoch");
+        let new = pool.queue(2).pop().unwrap();
+        assert_eq!((new.lane, new.epoch), (2, 1));
     }
 
     #[test]

@@ -36,7 +36,13 @@
 //! optional warm **result cache** ([`cache`]): deterministic
 //! `(kind, seed)` repeats are answered by the reader itself —
 //! single-flight, sharded per lane, LRU + byte-bounded — without
-//! consuming any admission budget. The wire protocol is specified in
+//! consuming any admission budget. The ShapeClass → lane assignment
+//! itself is owned by the epoch-versioned [`routing`] layer: with
+//! `--rebalance adaptive` a [`routing::Rebalancer`] thread re-buckets
+//! hot shape classes onto cold lanes (within their kind span) from the
+//! governor's observed per-lane queue-wait imbalance, publishing a new
+//! routing epoch while in-flight jobs keep their admitted epoch's
+//! attribution. The wire protocol is specified in
 //! `docs/PROTOCOL.md` and the data flow in `docs/ARCHITECTURE.md`.
 
 pub mod admission;
@@ -44,14 +50,16 @@ pub mod cache;
 pub mod job;
 pub mod lanes;
 pub mod queue;
+pub mod routing;
 pub mod server;
 pub mod telemetry;
 
-pub use admission::{AdmissionMode, Governor};
+pub use admission::{AdmissionMode, Governor, SloTable};
 pub use cache::ResultCache;
 pub use job::{Job, JobResult, RoutedEngine};
 pub use lanes::{LanePool, ShapeClass};
 pub use queue::BoundedQueue;
+pub use routing::{RebalanceMode, Router, RoutingTable};
 pub use telemetry::Telemetry;
 
 use crate::dla::matmul;
@@ -98,6 +106,21 @@ pub struct CoordinatorCfg {
     /// Serving layer: the p90 queue-wait SLO the adaptive governor
     /// defends, in µs (`--slo-p90-us`). Ignored in `Fixed` mode.
     pub slo_p90_us: f64,
+    /// Serving layer: per-shape-class SLO overrides (`--slo
+    /// class=µs[,class=µs...]` / `[admission.slo]` config), layered
+    /// over `slo_p90_us` so e.g. matmul and sort classes defend
+    /// different budgets. Empty = one uniform SLO.
+    pub slo_overrides: Vec<(lanes::ShapeClass, f64)>,
+    /// Serving layer: routing-rebalance mode (`--rebalance
+    /// off|adaptive`). `Off` (default) pins the epoch-0 seed table —
+    /// the historical static assignment, bit-for-bit; `Adaptive` runs
+    /// the [`routing::Rebalancer`] thread, re-bucketing hot shape
+    /// classes onto cold lanes within their kind span from observed
+    /// per-lane queue-wait imbalance.
+    pub rebalance: routing::RebalanceMode,
+    /// Serving layer: the rebalancer's decision window, ms
+    /// (`--rebalance-window-ms`). Ignored with `--rebalance off`.
+    pub rebalance_window_ms: u64,
     /// Serving layer: rolling half-window length for the governor's
     /// queue-wait digests, ms (`--admission-window-ms`). Estimates cover
     /// one to two windows of recent history.
@@ -128,6 +151,9 @@ impl Default for CoordinatorCfg {
             steal: true,
             admission: admission::AdmissionMode::Fixed,
             slo_p90_us: 10_000.0,
+            slo_overrides: Vec::new(),
+            rebalance: routing::RebalanceMode::Off,
+            rebalance_window_ms: 500,
             admission_window_ms: 500,
             cache: false,
             cache_entries: 4096,

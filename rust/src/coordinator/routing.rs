@@ -1,0 +1,696 @@
+//! Epoch-versioned routing: the single authority for ShapeClass → lane
+//! (and class → cache-shard) assignment, plus the load-driven
+//! rebalancer that republishes it.
+//!
+//! Before this layer existed, the kind-partition + FNV-bucket rule was
+//! duplicated across the lane pool, the result cache, and the server —
+//! and it was *static*: a skewed workload pinned its hot shape classes
+//! to one lane while sibling lanes idled, and the admission governor
+//! then shed load that spare capacity could have served. The paper's
+//! thesis says scheduling overheads must be managed at the root, and
+//! the root cause here is the assignment itself, so this module makes
+//! it a first-class, swappable object:
+//!
+//! * [`RoutingTable`] — an immutable snapshot of the full class → lane
+//!   assignment, stamped with a monotonically increasing **epoch**.
+//!   Epoch 0 is the *seed table*: exactly the historical kind-partition
+//!   + FNV-bucket rule ([`seed_lane`]), so `--rebalance off` (which
+//!   never publishes a successor) behaves bit-for-bit like the static
+//!   scheme.
+//! * [`Router`] — the shared handle: readers load the current table
+//!   (an `Arc` swap behind an `RwLock`, O(1) and contention-free on the
+//!   read side), and the rebalancer publishes successors. Epochs only
+//!   move forward; a stale publish is rejected.
+//! * [`Rebalancer`] — the feedback controller (`--rebalance adaptive`):
+//!   each window it reads the admission governor's per-lane rolling
+//!   p90s and window sample counts plus the router's per-class request
+//!   counters, and when one lane's wait p90 dwarfs its coldest sibling
+//!   within the same kind span ([`REBALANCE_RATIO`], with hysteresis
+//!   re-arming via [`REARM_RATIO`]/[`REARM_TICKS`]) it moves the
+//!   hottest class on the hot lane onto the cold lane and publishes a
+//!   new epoch.
+//!
+//! Two invariants make an epoch swap safe everywhere else:
+//!
+//! * **In-flight jobs keep their admitted epoch.** [`super::lanes::LanePool::admit`]
+//!   stamps each envelope with the `(lane, epoch)` pair read from one
+//!   table snapshot; queue-wait attribution, steal accounting, and the
+//!   per-lane telemetry series all key on that stamp, so a job admitted
+//!   under epoch N is never re-routed or re-attributed by a later swap.
+//! * **The cache-shard map is epoch-invariant.** [`RoutingTable::shard_of`]
+//!   always answers the seed assignment, no matter the epoch: a class
+//!   whose *dispatch lane* moves keeps its *cache shard*, so LRU
+//!   residency survives the swap and single-flight leadership (which is
+//!   registered per shard) stays exactly-once across it.
+//!
+//! The kind partition itself is preserved by construction: a move is
+//! only legal within the class's kind span ([`kind_span`]), so a slow
+//! matmul still can never queue ahead of a sort.
+
+use super::lanes::ShapeClass;
+use crate::report::AsciiTable;
+use crate::workload::traces::TraceKind;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Shape kinds (matmul, sort) — the partition dimension.
+pub const KINDS: usize = 2;
+/// Size buckets per kind (`floor(log2 n)` of a `usize`-sized job).
+pub const MAX_BUCKETS: usize = usize::BITS as usize;
+/// Total addressable shape classes; the routing table is fully
+/// materialized over this (small) space.
+pub const CLASS_SLOTS: usize = KINDS * MAX_BUCKETS;
+
+/// FNV-1a, the seed table's bucket-spreading hash (stability matters:
+/// epoch 0 must reproduce the historical assignment bit-for-bit).
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The contiguous `(base, span)` of lanes a kind owns. With one lane
+/// everything shares it; otherwise matmul owns the first `ceil(lanes/2)`
+/// lanes and sort the rest — the structural head-of-line guarantee.
+pub fn kind_span(kind: u8, lanes: usize) -> (usize, usize) {
+    let lanes = lanes.max(1);
+    if lanes == 1 {
+        return (0, 1);
+    }
+    let sort_span = lanes / 2;
+    if kind == 0 {
+        (0, lanes - sort_span)
+    } else {
+        (lanes - sort_span, sort_span)
+    }
+}
+
+/// The epoch-0 assignment: the class's size bucket FNV-hashes onto the
+/// lanes within its kind's span. This is the one canonical copy of the
+/// rule previously duplicated across `lanes.rs`, `cache.rs`, and the
+/// server; [`ShapeClass::lane`] delegates here.
+pub fn seed_lane(class: ShapeClass, lanes: usize) -> usize {
+    let (base, span) = kind_span(class.kind_id(), lanes);
+    base + (fnv1a(&[class.kind_id(), class.bucket()]) % span as u64) as usize
+}
+
+/// Dense index of a class in the materialized table.
+pub fn class_slot(class: ShapeClass) -> usize {
+    class.kind_id() as usize * MAX_BUCKETS + class.bucket() as usize
+}
+
+/// Inverse of [`class_slot`].
+pub fn slot_class(slot: usize) -> ShapeClass {
+    ShapeClass::from_parts((slot / MAX_BUCKETS) as u8, (slot % MAX_BUCKETS) as u8)
+        .expect("every slot < CLASS_SLOTS is a valid class")
+}
+
+/// An immutable, epoch-stamped snapshot of the full ShapeClass → lane
+/// assignment (plus the epoch-invariant class → cache-shard map).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoutingTable {
+    epoch: u64,
+    lanes: usize,
+    /// Lane per [`class_slot`]; fully materialized so `lane_of` is one
+    /// indexed load with no hashing on the admission hot path.
+    assign: Vec<u16>,
+}
+
+impl RoutingTable {
+    /// Epoch 0: the historical static assignment, bit-for-bit.
+    pub fn seed(lanes: usize) -> RoutingTable {
+        let lanes = lanes.max(1);
+        let assign =
+            (0..CLASS_SLOTS).map(|slot| seed_lane(slot_class(slot), lanes) as u16).collect();
+        RoutingTable { epoch: 0, lanes, assign }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.lanes
+    }
+
+    /// The dispatch lane a class routes to under this epoch.
+    pub fn lane_of(&self, class: ShapeClass) -> usize {
+        self.assign[class_slot(class)] as usize
+    }
+
+    /// The result-cache shard a class's keys live in. **Epoch-invariant
+    /// by design** — always the seed assignment — so cached entries and
+    /// in-flight single-flight registrations survive a lane move: only
+    /// where a class *executes* changes, never where it is *memoized*.
+    pub fn shard_of(&self, class: ShapeClass) -> usize {
+        seed_lane(class, self.lanes)
+    }
+
+    /// A successor table (epoch + 1) with `class` reassigned to lane
+    /// `to`. Rejects a move that would break the kind partition: the
+    /// target must lie within the class's own kind span.
+    pub fn with_move(&self, class: ShapeClass, to: usize) -> Result<RoutingTable> {
+        let (base, span) = kind_span(class.kind_id(), self.lanes);
+        if to < base || to >= base + span {
+            bail!(
+                "routing: lane {to} is outside the {} span [{base}, {})",
+                class.name(),
+                base + span
+            );
+        }
+        let mut next = self.clone();
+        next.epoch = self.epoch + 1;
+        next.assign[class_slot(class)] = to as u16;
+        Ok(next)
+    }
+
+    /// Classes whose assignment differs from the seed table, with their
+    /// current lane (empty at epoch 0 by construction).
+    pub fn moved(&self) -> Vec<(ShapeClass, usize)> {
+        (0..CLASS_SLOTS)
+            .map(slot_class)
+            .filter(|c| self.lane_of(*c) != self.shard_of(*c))
+            .map(|c| (c, self.lane_of(c)))
+            .collect()
+    }
+
+    /// Count of classes assigned differently between two tables.
+    fn diff_count(&self, other: &RoutingTable) -> u64 {
+        self.assign.iter().zip(other.assign.iter()).filter(|(a, b)| a != b).count() as u64
+    }
+}
+
+/// Whether the rebalancer runs (`--rebalance off|adaptive`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// Never publish a successor epoch: routing stays the epoch-0 seed
+    /// table for the server's lifetime (the historical behaviour).
+    Off,
+    /// Run the [`Rebalancer`] thread: republish the table when observed
+    /// per-lane queue waits show a persistent imbalance.
+    Adaptive,
+}
+
+impl RebalanceMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RebalanceMode::Off => "off",
+            RebalanceMode::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RebalanceMode> {
+        match s {
+            "off" => Some(RebalanceMode::Off),
+            "adaptive" => Some(RebalanceMode::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// The shared routing handle: O(1) snapshot loads for readers, epoch-
+/// monotonic publishes for the rebalancer, and per-class request
+/// counters (the rebalancer's "which class is hot" signal, and the
+/// routing STATS table's traffic column).
+pub struct Router {
+    table: RwLock<Arc<RoutingTable>>,
+    /// Total classes moved across all published epochs.
+    moves: AtomicU64,
+    /// Requests routed per [`class_slot`] (counted at routing time, so
+    /// shed/rejected requests still register demand — a lane shedding
+    /// 100% of a hot class must still look hot to the rebalancer).
+    traffic: Vec<AtomicU64>,
+}
+
+impl Router {
+    pub fn new(lanes: usize) -> Router {
+        Router {
+            table: RwLock::new(Arc::new(RoutingTable::seed(lanes))),
+            moves: AtomicU64::new(0),
+            traffic: (0..CLASS_SLOTS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn lane_count(&self) -> usize {
+        self.load().lane_count()
+    }
+
+    /// Snapshot the current table (cheap: one `Arc` clone under a read
+    /// lock held for nanoseconds).
+    pub fn load(&self) -> Arc<RoutingTable> {
+        Arc::clone(&self.table.read().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    /// Route a job kind under the current epoch: `(lane, epoch)` read
+    /// from one snapshot, so the pair is always internally consistent.
+    pub fn route(&self, kind: &TraceKind) -> (usize, u64) {
+        let t = self.load();
+        (t.lane_of(ShapeClass::of(kind)), t.epoch())
+    }
+
+    /// Record one routed request against its class (admitted or not).
+    pub fn note_request(&self, kind: &TraceKind) {
+        self.traffic[class_slot(ShapeClass::of(kind))].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Publish a successor table. The epoch must advance strictly and
+    /// the lane count must match; returns the number of classes that
+    /// moved (also accumulated into [`moves`](Router::moves)).
+    pub fn publish(&self, next: RoutingTable) -> Result<u64> {
+        let mut g = self.table.write().unwrap_or_else(|p| p.into_inner());
+        if next.lane_count() != g.lane_count() {
+            bail!("routing: lane count changed {} → {}", g.lane_count(), next.lane_count());
+        }
+        if next.epoch() <= g.epoch() {
+            bail!("routing: stale epoch {} (current {})", next.epoch(), g.epoch());
+        }
+        let moved = next.diff_count(&g);
+        self.moves.fetch_add(moved, Ordering::Relaxed);
+        *g = Arc::new(next);
+        Ok(moved)
+    }
+
+    /// Total classes moved across all epochs.
+    pub fn moves(&self) -> u64 {
+        self.moves.load(Ordering::Relaxed)
+    }
+
+    /// Per-[`class_slot`] routed-request counts.
+    pub fn traffic_snapshot(&self) -> Vec<u64> {
+        self.traffic.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The STATS "routing" table + trailer: one row per shape class
+    /// that has seen traffic or been moved off its seed lane, then
+    /// `routing: epoch=<e> moves=<m> lanes=<n>`. Reads one table
+    /// snapshot and the atomic counters — no O(work) scans.
+    pub fn render(&self) -> String {
+        let table = self.load();
+        let traffic = self.traffic_snapshot();
+        let mut t = AsciiTable::new(
+            "routing (shape class → lane)",
+            &["class", "lane", "seed lane", "requests"],
+        );
+        for slot in 0..CLASS_SLOTS {
+            let class = slot_class(slot);
+            let (lane, seed) = (table.lane_of(class), table.shard_of(class));
+            if traffic[slot] == 0 && lane == seed {
+                continue;
+            }
+            t.row(vec![
+                class.name(),
+                lane.to_string(),
+                seed.to_string(),
+                traffic[slot].to_string(),
+            ]);
+        }
+        let mut out = if t.is_empty() { String::new() } else { t.render() };
+        out.push_str(&format!(
+            "routing: epoch={} moves={} lanes={}\n",
+            table.epoch(),
+            self.moves(),
+            table.lane_count()
+        ));
+        out
+    }
+}
+
+/// One lane's load evidence for a rebalance decision: the admission
+/// governor's rolling p90 queue wait, how many waits the window holds,
+/// and the lane queue's current occupancy. The occupancy disambiguates
+/// an *empty* window: no samples with an empty queue is an idle lane (a
+/// good move target), while no samples with work still queued is a
+/// **stalled** lane — nothing has completed for two windows — which
+/// must never be mistaken for cold capacity.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LaneLoad {
+    pub p90_us: Option<f64>,
+    pub samples: u64,
+    pub queued: usize,
+}
+
+/// Act when the hot lane's rolling p90 is at least this multiple of its
+/// coldest same-span sibling's (or the sibling has no samples at all).
+pub const REBALANCE_RATIO: f64 = 3.0;
+/// Hysteresis re-arm: after a move, a kind span only re-arms once its
+/// hot/cold ratio falls to this (the new regime has genuinely evened
+/// out) — or after [`REARM_TICKS`] windows, whichever comes first.
+pub const REARM_RATIO: f64 = 1.5;
+/// Re-arm a span after this many windows even if still skewed, so a
+/// workload that stays pathological can be chased further.
+pub const REARM_TICKS: u32 = 10;
+/// The hot lane must hold at least this many waits in its rolling
+/// window before its p90 counts as evidence.
+pub const MIN_WINDOW_SAMPLES: u64 = 1;
+
+/// A published reassignment.
+#[derive(Debug, Clone, Copy)]
+pub struct Move {
+    pub class: ShapeClass,
+    pub from: usize,
+    pub to: usize,
+    /// The epoch the move was published as.
+    pub epoch: u64,
+}
+
+/// The load-driven feedback controller. One instance per server, ticked
+/// once per rebalance window by its own thread; all decision state
+/// (hysteresis arms, traffic deltas) lives here, so the decision step
+/// is a pure function of its inputs and unit-testable without threads.
+pub struct Rebalancer {
+    /// Per-kind hysteresis: a span that just moved a class is disarmed
+    /// until its load evens out (or [`REARM_TICKS`] windows pass).
+    armed: [bool; KINDS],
+    ticks_since_move: [u32; KINDS],
+    /// The last `(class, from-lane)` moved per kind: moving that class
+    /// straight back to the lane it left requires *measured* evidence
+    /// there (see the anti-ping-pong check in [`tick`](Rebalancer::tick)).
+    last_move: [Option<(ShapeClass, usize)>; KINDS],
+    last_traffic: Vec<u64>,
+}
+
+impl Default for Rebalancer {
+    fn default() -> Self {
+        Rebalancer::new()
+    }
+}
+
+impl Rebalancer {
+    pub fn new() -> Rebalancer {
+        Rebalancer {
+            armed: [true; KINDS],
+            ticks_since_move: [0; KINDS],
+            last_move: [None; KINDS],
+            last_traffic: vec![0; CLASS_SLOTS],
+        }
+    }
+
+    /// One decision window: inspect per-lane loads, publish at most one
+    /// move (the hottest class on the hottest lane → the coldest lane
+    /// within the same kind span), and return it. `loads` is indexed by
+    /// lane.
+    pub fn tick(&mut self, router: &Router, loads: &[LaneLoad]) -> Option<Move> {
+        let table = router.load();
+        let traffic = router.traffic_snapshot();
+        let delta: Vec<u64> = traffic
+            .iter()
+            .enumerate()
+            .map(|(i, now)| now.saturating_sub(self.last_traffic.get(i).copied().unwrap_or(0)))
+            .collect();
+        self.last_traffic = traffic;
+
+        let mut published = None;
+        for kind in 0..KINDS as u8 {
+            let (base, span) = kind_span(kind, table.lane_count());
+            if span < 2 {
+                continue;
+            }
+            let pressure = |l: usize| loads.get(l).and_then(|x| x.p90_us).unwrap_or(0.0);
+            let samples = |l: usize| loads.get(l).map_or(0, |x| x.samples);
+            // Stalled ≠ idle: an empty window over a *non-empty* queue
+            // means completions stopped, not that the lane has spare
+            // capacity — such a lane must never be picked as the move
+            // target (and its missing samples already disqualify it as
+            // a measured hot lane).
+            let stalled = |l: usize| samples(l) == 0 && loads.get(l).map_or(0, |x| x.queued) > 0;
+            let hot = (base..base + span)
+                .max_by(|a, b| pressure(*a).total_cmp(&pressure(*b)))
+                .expect("span >= 2");
+            let Some(cold) = (base..base + span)
+                .filter(|&l| !stalled(l))
+                .min_by(|a, b| pressure(*a).total_cmp(&pressure(*b)))
+            else {
+                continue; // every lane in the span is stalled: hands off
+            };
+            let (hot_p90, cold_p90) = (pressure(hot), pressure(cold));
+            let balanced =
+                hot_p90 <= 0.0 || (samples(cold) > 0 && hot_p90 <= REARM_RATIO * cold_p90);
+            if !self.armed[kind as usize] {
+                // Disarmed span: count windows toward the forced re-arm,
+                // or re-arm early once the load has evened out. Either
+                // way, act next window at the earliest — a fresh move
+                // must see at least one window of the new regime.
+                self.ticks_since_move[kind as usize] += 1;
+                if balanced || self.ticks_since_move[kind as usize] >= REARM_TICKS {
+                    self.armed[kind as usize] = true;
+                }
+                continue;
+            }
+            if published.is_some() || hot == cold {
+                continue;
+            }
+            if samples(hot) < MIN_WINDOW_SAMPLES || hot_p90 <= 0.0 {
+                continue;
+            }
+            let imbalanced =
+                samples(cold) == 0 || cold_p90 <= 0.0 || hot_p90 >= REBALANCE_RATIO * cold_p90;
+            if !imbalanced {
+                continue;
+            }
+            // The hottest class currently assigned to the hot lane, by
+            // routed requests this window (demand, not completions — a
+            // 100%-shed class must still register).
+            let candidate = (0..CLASS_SLOTS)
+                .filter(|&slot| delta[slot] > 0)
+                .map(slot_class)
+                .filter(|c| c.kind_id() == kind && table.lane_of(*c) == hot)
+                .max_by_key(|c| delta[class_slot(*c)]);
+            let Some(class) = candidate else { continue };
+            // Anti-ping-pong: a class's traffic follows it, so the lane
+            // it just left always looks empty afterwards. Moving it
+            // straight back on that vacuum alone would oscillate forever
+            // on a perfectly healthy workload — the return trip needs
+            // *measured* evidence (samples on the old lane showing it
+            // genuinely colder).
+            if samples(cold) == 0 && self.last_move[kind as usize] == Some((class, cold)) {
+                continue;
+            }
+            let Ok(next) = table.with_move(class, cold) else { continue };
+            let epoch = next.epoch();
+            if router.publish(next).is_ok() {
+                self.armed[kind as usize] = false;
+                self.ticks_since_move[kind as usize] = 0;
+                self.last_move[kind as usize] = Some((class, hot));
+                published = Some(Move { class, from: hot, to: cold, epoch });
+            }
+        }
+        published
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn class(kind: u8, bucket: u8) -> ShapeClass {
+        ShapeClass::from_parts(kind, bucket).unwrap()
+    }
+
+    #[test]
+    fn seed_table_matches_the_historical_static_rule() {
+        for lanes in 1..=8 {
+            let t = RoutingTable::seed(lanes);
+            assert_eq!(t.epoch(), 0);
+            for slot in 0..CLASS_SLOTS {
+                let c = slot_class(slot);
+                assert_eq!(t.lane_of(c), c.lane(lanes), "class {} lanes {lanes}", c.name());
+                assert_eq!(t.shard_of(c), c.lane(lanes), "shard == seed lane at epoch 0");
+            }
+            assert!(t.moved().is_empty());
+        }
+    }
+
+    #[test]
+    fn with_move_respects_the_kind_partition() {
+        let t = RoutingTable::seed(4);
+        let sort = class(1, 9); // sort span is lanes {2, 3}
+        let moved = t.with_move(sort, 2).unwrap();
+        assert_eq!(moved.epoch(), 1);
+        assert_eq!(moved.lane_of(sort), 2);
+        assert_eq!(moved.shard_of(sort), t.shard_of(sort), "cache shard never moves");
+        assert!(t.with_move(sort, 0).is_err(), "matmul span is off limits");
+        assert!(t.with_move(sort, 4).is_err(), "out of range");
+        let matmul = class(0, 4); // matmul span is lanes {0, 1}
+        assert!(t.with_move(matmul, 3).is_err(), "sort span is off limits");
+        assert!(t.with_move(matmul, 1).is_ok());
+    }
+
+    #[test]
+    fn router_publish_is_epoch_monotonic() {
+        let r = Router::new(4);
+        let t0 = r.load();
+        let sort = class(1, 9);
+        let t1 = t0.with_move(sort, 2).unwrap();
+        assert_eq!(r.publish(t1.clone()).unwrap(), 1, "one class moved");
+        assert_eq!(r.load().epoch(), 1);
+        assert_eq!(r.moves(), 1);
+        // Re-publishing the same epoch — or anything older — is stale.
+        assert!(r.publish(t1).is_err());
+        assert!(r.publish(RoutingTable::seed(4)).is_err(), "epoch 0 is stale now");
+        assert!(r.publish(RoutingTable::seed(6).with_move(sort, 4).unwrap()).is_err(),
+            "lane-count change rejected");
+        assert_eq!(r.load().epoch(), 1, "failed publishes leave the table untouched");
+    }
+
+    #[test]
+    fn route_tracks_the_published_epoch() {
+        let r = Router::new(4);
+        let kind = TraceKind::Sort { n: 1000 }; // sort/2^9 → seed lane 3
+        let (lane0, epoch0) = r.route(&kind);
+        assert_eq!(epoch0, 0);
+        let moved = r.load().with_move(ShapeClass::of(&kind), 2).unwrap();
+        r.publish(moved).unwrap();
+        let (lane1, epoch1) = r.route(&kind);
+        assert_eq!(epoch1, 1);
+        assert_ne!(lane0, lane1, "the class moved lanes");
+        assert_eq!(lane1, 2);
+    }
+
+    #[test]
+    fn traffic_counters_and_render() {
+        let r = Router::new(4);
+        let kind = TraceKind::Sort { n: 1000 };
+        for _ in 0..3 {
+            r.note_request(&kind);
+        }
+        let s = r.render();
+        assert!(s.contains("sort/2^9"), "{s}");
+        assert!(s.contains("routing: epoch=0 moves=0 lanes=4"), "{s}");
+        let moved = r.load().with_move(ShapeClass::of(&kind), 2).unwrap();
+        r.publish(moved).unwrap();
+        let s = r.render();
+        assert!(s.contains("routing: epoch=1 moves=1 lanes=4"), "{s}");
+    }
+
+    #[test]
+    fn rebalancer_moves_hot_class_to_cold_lane_with_hysteresis() {
+        let r = Router::new(4);
+        let hot_kind = TraceKind::Sort { n: 1000 }; // sort/2^9 → lane 3
+        for _ in 0..10 {
+            r.note_request(&hot_kind);
+        }
+        let mut reb = Rebalancer::new();
+        // Lane 3 hot, lane 2 silent: imbalance with an empty sibling.
+        let loads = |hot_lane: usize, p90: f64| -> Vec<LaneLoad> {
+            let mut v = vec![LaneLoad::default(); 4];
+            v[hot_lane] = LaneLoad { p90_us: Some(p90), samples: 8, queued: 0 };
+            v
+        };
+        let mv = reb.tick(&r, &loads(3, 5_000.0)).expect("imbalance must move");
+        assert_eq!((mv.from, mv.to, mv.epoch), (3, 2, 1));
+        assert_eq!(mv.class.name(), "sort/2^9");
+        assert_eq!(r.load().lane_of(mv.class), 2);
+        // Disarmed: the same evidence (now on lane 2) must not ping-pong
+        // the class straight back.
+        for _ in 0..10 {
+            r.note_request(&hot_kind);
+        }
+        assert!(reb.tick(&r, &loads(2, 5_000.0)).is_none(), "hysteresis holds");
+        // Even after the forced re-arm, the return trip to lane 3 is
+        // blocked while lane 3 is merely *empty* — the vacuum behind the
+        // move is not evidence, and without this a healthy steady
+        // workload would oscillate between the two lanes forever.
+        for _ in 0..REARM_TICKS + 2 {
+            r.note_request(&hot_kind);
+            assert!(
+                reb.tick(&r, &loads(2, 5_000.0)).is_none(),
+                "empty-lane return trip must stay blocked"
+            );
+        }
+        // With *measured* evidence that lane 3 is genuinely colder
+        // (samples on both sides, ratio past the threshold), the return
+        // move is legitimate.
+        let mut measured = vec![LaneLoad::default(); 4];
+        measured[2] = LaneLoad { p90_us: Some(6_000.0), samples: 8, queued: 0 };
+        measured[3] = LaneLoad { p90_us: Some(100.0), samples: 4, queued: 0 };
+        r.note_request(&hot_kind);
+        let mv2 = reb.tick(&r, &measured).expect("measured imbalance re-moves");
+        assert_eq!((mv2.from, mv2.to, mv2.epoch), (2, 3, 2));
+        assert_eq!(r.load().lane_of(mv2.class), 3);
+    }
+
+    #[test]
+    fn rebalancer_never_targets_a_stalled_lane() {
+        // 6 lanes ⇒ sort span {3, 4, 5}; sort/2^9 seed-routes to lane 3.
+        let r = Router::new(6);
+        let hot_kind = TraceKind::Sort { n: 1000 };
+        for _ in 0..10 {
+            r.note_request(&hot_kind);
+        }
+        let mut reb = Rebalancer::new();
+        let mut loads = vec![LaneLoad::default(); 6];
+        loads[3] = LaneLoad { p90_us: Some(5_000.0), samples: 8, queued: 4 };
+        // Lane 4 has an empty window but a backed-up queue: *stalled*,
+        // not idle — the move must pick the genuinely idle lane 5.
+        loads[4] = LaneLoad { p90_us: None, samples: 0, queued: 7 };
+        let mv = reb.tick(&r, &loads).expect("imbalance with an idle sibling moves");
+        assert_eq!((mv.from, mv.to), (3, 5), "stalled lane 4 skipped as target");
+
+        // 4 lanes ⇒ sort span {2, 3}: when the only sibling is stalled,
+        // no move happens at all.
+        let r = Router::new(4);
+        for _ in 0..10 {
+            r.note_request(&hot_kind);
+        }
+        let mut reb = Rebalancer::new();
+        let mut loads = vec![LaneLoad::default(); 4];
+        loads[3] = LaneLoad { p90_us: Some(5_000.0), samples: 8, queued: 4 };
+        loads[2] = LaneLoad { p90_us: None, samples: 0, queued: 3 };
+        assert!(reb.tick(&r, &loads).is_none(), "never move onto a stalled lane");
+        assert_eq!(r.load().epoch(), 0);
+    }
+
+    #[test]
+    fn rebalancer_ignores_balanced_and_evidence_free_spans() {
+        let r = Router::new(4);
+        for kind in [TraceKind::Sort { n: 1000 }, TraceKind::Sort { n: 300 }] {
+            for _ in 0..5 {
+                r.note_request(&kind);
+            }
+        }
+        let mut reb = Rebalancer::new();
+        // No samples anywhere: nothing to act on.
+        assert!(reb.tick(&r, &[LaneLoad::default(); 4]).is_none());
+        // Balanced waits (ratio < REBALANCE_RATIO): still nothing.
+        let balanced: Vec<LaneLoad> = (0..4)
+            .map(|l| {
+                let p90 = if l == 3 { 1_000.0 } else { 600.0 };
+                LaneLoad { p90_us: Some(p90), samples: 8, queued: 0 }
+            })
+            .collect();
+        assert!(reb.tick(&r, &balanced).is_none());
+        assert_eq!(r.load().epoch(), 0);
+        assert_eq!(r.moves(), 0);
+    }
+
+    #[test]
+    fn rebalancer_needs_traffic_to_pick_a_class() {
+        let r = Router::new(4);
+        let mut reb = Rebalancer::new();
+        let mut loads = vec![LaneLoad::default(); 4];
+        loads[3] = LaneLoad { p90_us: Some(9_000.0), samples: 8, queued: 0 };
+        // Hot waits but zero routed requests this window: no candidate
+        // class, no move (stale heat must not shuffle idle classes).
+        assert!(reb.tick(&r, &loads).is_none());
+        assert_eq!(r.load().epoch(), 0);
+    }
+
+    #[test]
+    fn single_lane_and_two_lane_pools_never_rebalance() {
+        for lanes in [1, 2] {
+            let r = Router::new(lanes);
+            for _ in 0..10 {
+                r.note_request(&TraceKind::Sort { n: 1000 });
+            }
+            let mut reb = Rebalancer::new();
+            let loads: Vec<LaneLoad> = (0..lanes)
+                .map(|_| LaneLoad { p90_us: Some(9_000.0), samples: 9, queued: 0 })
+                .collect();
+            assert!(reb.tick(&r, &loads).is_none(), "span width 1 cannot move ({lanes} lanes)");
+        }
+    }
+}

@@ -54,7 +54,12 @@
 //!   head-of-line-block queued sorts; an idle lane **steals** a
 //!   shape-pure run from a sibling so sharding never strands work;
 //! * each reader blocks on its job's reply channel, so per-connection
-//!   response order is preserved while cross-connection execution batches.
+//!   response order is preserved while cross-connection execution batches;
+//! * with `--rebalance adaptive`, one **rebalancer thread** reads the
+//!   governor's per-lane wait windows each rebalance window and
+//!   republishes the epoch-versioned routing table when a kind span is
+//!   persistently imbalanced — in-flight jobs keep their admitted
+//!   epoch's `(lane, epoch)` attribution across the swap.
 //!
 //! Queue wait, batch width, rejections, and per-lane steal/imbalance
 //! counters land in the shared [`Telemetry`] (rendered by `STATS`)
@@ -68,9 +73,10 @@
 //! loop blocks on a bounded channel), so no in-process queue is ever
 //! unbounded.
 
-use super::admission::Governor;
+use super::admission::{Governor, SloTable};
 use super::cache::{self, ResultCache};
-use super::lanes::{Envelope, LanePool};
+use super::lanes::{Envelope, LanePool, ShapeClass};
+use super::routing::{LaneLoad, RebalanceMode, Rebalancer, Router};
 use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
 use crate::workload::traces::TraceKind;
 use anyhow::Result;
@@ -83,6 +89,14 @@ use std::time::{Duration, Instant};
 /// State shared by readers and the lane dispatchers.
 struct Shared {
     lanes: LanePool,
+    /// The epoch-versioned ShapeClass → lane table (shared with the
+    /// lane pool; the rebalancer publishes successors under it).
+    router: Arc<Router>,
+    /// Rebalance mode, for gating the routing STATS block (and the
+    /// rebalancer thread itself).
+    rebalance: RebalanceMode,
+    /// Tells the rebalancer thread to exit at wind-down.
+    rebalance_stop: AtomicBool,
     /// Adaptive-admission state: readers consult it before pushing, lane
     /// dispatchers feed it measured queue waits (inert in fixed mode).
     governor: Governor,
@@ -129,15 +143,25 @@ impl Server {
         let lane_count = cfg.lanes.max(1);
         let mut telemetry = Telemetry::default();
         telemetry.init_lanes(lane_count);
-        telemetry.init_admission(cfg.admission.name(), cfg.slo_p90_us);
+        telemetry.init_admission(
+            cfg.admission.name(),
+            cfg.slo_p90_us,
+            cfg.slo_overrides.iter().map(|(c, us)| (c.name(), *us)).collect(),
+        );
+        let mut slo = SloTable::uniform(cfg.slo_p90_us);
+        for (class, us) in &cfg.slo_overrides {
+            slo.set(*class, *us);
+        }
+        let router = Arc::new(Router::new(lane_count));
         let shared = Arc::new(Shared {
-            lanes: LanePool::new(lane_count, cfg.queue_depth, cfg.steal),
-            governor: Governor::new(
-                cfg.admission,
-                cfg.slo_p90_us,
-                cfg.admission_window_ms,
-                lane_count,
-            ),
+            lanes: LanePool::with_router(Arc::clone(&router), cfg.queue_depth, cfg.steal),
+            router,
+            rebalance: cfg.rebalance,
+            rebalance_stop: AtomicBool::new(false),
+            governor: Governor::new(cfg.admission, slo, cfg.admission_window_ms, lane_count)
+                // The rebalancer reads the governor's wait windows, so
+                // keep them populated even under fixed admission.
+                .with_recording(cfg.rebalance == RebalanceMode::Adaptive),
             cache: cfg
                 .cache
                 .then(|| ResultCache::new(lane_count, cfg.cache_entries, cfg.cache_bytes)),
@@ -160,6 +184,17 @@ impl Server {
                 std::thread::spawn(move || lane_loop(lane, &shared, &cfg))
             })
             .collect();
+
+        // Load-driven repartitioning (`--rebalance adaptive`): one
+        // feedback thread reading the governor's per-lane windows each
+        // rebalance window and republishing the routing table when a
+        // kind span is persistently imbalanced. With `--rebalance off`
+        // no thread exists and routing stays the epoch-0 seed table.
+        let rebalancer = (cfg.rebalance == RebalanceMode::Adaptive).then(|| {
+            let shared = Arc::clone(&shared);
+            let window = Duration::from_millis(cfg.rebalance_window_ms.max(1));
+            std::thread::spawn(move || rebalance_loop(&shared, window))
+        });
 
         // Reader pool: serve_threads workers, one connection each at a time.
         // The handoff buffer is bounded (2× the pool) so overload parks in
@@ -217,7 +252,54 @@ impl Server {
         for d in dispatchers {
             let _ = d.join();
         }
+        shared.rebalance_stop.store(true, Ordering::SeqCst);
+        if let Some(h) = rebalancer {
+            let _ = h.join();
+        }
         accept_result
+    }
+}
+
+/// The rebalancer thread body: tick the decision loop once per window
+/// (polling a fine-grained clock so shutdown/drain is prompt), publish
+/// at most one move per tick, and pre-open the new epoch's telemetry
+/// table so per-lane series split regimes cleanly.
+fn rebalance_loop(shared: &Shared, window: Duration) {
+    let mut rebalancer = Rebalancer::new();
+    let poll = Duration::from_millis(10).min(window);
+    let mut elapsed = Duration::ZERO;
+    loop {
+        if shared.rebalance_stop.load(Ordering::SeqCst)
+            || shared.shutdown.load(Ordering::SeqCst)
+            || shared.draining.load(Ordering::SeqCst)
+        {
+            return;
+        }
+        std::thread::sleep(poll);
+        elapsed += poll;
+        if elapsed < window {
+            continue;
+        }
+        elapsed = Duration::ZERO;
+        let loads: Vec<LaneLoad> = (0..shared.lanes.lane_count())
+            .map(|lane| {
+                let (p90_us, samples) = shared.governor.window_load(lane);
+                // Queue occupancy distinguishes idle from stalled when
+                // the window is empty (a stalled lane must never look
+                // like a cold move target).
+                LaneLoad { p90_us, samples, queued: shared.lanes.queue(lane).len() }
+            })
+            .collect();
+        if let Some(mv) = rebalancer.tick(&shared.router, &loads) {
+            telemetry_lock(shared).begin_epoch(mv.epoch);
+            eprintln!(
+                "ohm: routing epoch {}: moved {} lane {} → {} (load-driven rebalance)",
+                mv.epoch,
+                mv.class.name(),
+                mv.from,
+                mv.to
+            );
+        }
     }
 }
 
@@ -253,7 +335,11 @@ fn lane_dispatch(lane: usize, shared: &Shared, cfg: &CoordinatorCfg) {
     let coord = Coordinator::new(cfg.clone(), runtime);
     let linger = Duration::from_micros(cfg.batch_linger_us);
     while let Some(batch) = shared.lanes.next_batch(lane, cfg.batch_max, linger) {
-        telemetry_lock(shared).record_lane_batch(lane, batch.envelopes.len(), batch.stolen);
+        // Batches are shape-pure runs from one queue, so every envelope
+        // in a run shares its admitted epoch except across the instant
+        // of a swap; attribute the batch to its head's epoch.
+        let epoch = batch.envelopes[0].epoch;
+        telemetry_lock(shared).record_lane_batch(lane, epoch, batch.envelopes.len(), batch.stolen);
         for env in batch.envelopes {
             execute_one(&coord, shared, env);
         }
@@ -274,6 +360,7 @@ fn execute_one(coord: &Coordinator, shared: &Shared, env: Envelope) {
     // on. Observed before the reply is sent, so a client that has seen
     // its own OK can rely on the sample being in the rolling window.
     let admit_lane = env.lane;
+    let admit_epoch = env.epoch;
     shared.governor.observe(admit_lane, queue_us);
     let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         coord.execute_job(&env.job)
@@ -307,7 +394,7 @@ fn execute_one(coord: &Coordinator, shared: &Shared, env: Envelope) {
         } else {
             t.record(&r);
         }
-        t.record_lane_served(admit_lane, queue_us);
+        t.record_lane_served(admit_lane, admit_epoch, queue_us);
     }
     shared.finished.fetch_add(1, Ordering::SeqCst);
     // A reader that hung up mid-flight just drops the result.
@@ -392,6 +479,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             let mut block = snapshot.render();
             block.push_str(&queue_line(shared));
             block.push_str(&cache_block(shared));
+            block.push_str(&routing_block(shared));
             Response::Block(block)
         }
         Some("DRAIN") => {
@@ -412,6 +500,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             block.push_str(&snapshot.render());
             block.push_str(&queue_line(shared));
             block.push_str(&cache_block(shared));
+            block.push_str(&routing_block(shared));
             block.push_str(&format!(
                 "drained: admitted={} finished={}\n",
                 shared.admitted.load(Ordering::SeqCst),
@@ -473,16 +562,24 @@ fn respond(shared: &Shared, line: &str) -> Response {
                     cache::Lookup::Miss(f) => flight = Some(f),
                 }
             }
-            // Soft admission first: the governor sheds when this lane's
-            // rolling p90 queue wait exceeds the SLO (adaptive mode only;
-            // in fixed mode admit() returns before taking any lock, and
-            // the lazy `queued` closure keeps the queue mutex untouched
-            // outside the rare empty-window path). Distinct from ERR
-            // BUSY — the queue may well have room; it is the *wait*, not
-            // the depth, that is out of budget.
-            let lane = shared.lanes.route(&kind);
-            if let Err(over) = shared.governor.admit(lane, || shared.lanes.queue(lane).len()) {
-                telemetry_lock(shared).record_shed(lane);
+            // Route under the current epoch (and register demand with
+            // the router's per-class traffic counters — sheds included,
+            // so a 100%-shed hot class still looks hot to the
+            // rebalancer). Soft admission next: the governor sheds when
+            // this lane's rolling p90 queue wait exceeds the *class's*
+            // SLO (adaptive mode only; in fixed mode admit() returns
+            // before taking any lock, and the lazy `queued` closure
+            // keeps the queue mutex untouched outside the rare
+            // empty-window path). Distinct from ERR BUSY — the queue
+            // may well have room; it is the *wait*, not the depth, that
+            // is out of budget.
+            let class = ShapeClass::of(&kind);
+            shared.router.note_request(&kind);
+            let (lane, epoch) = shared.router.route(&kind);
+            if let Err(over) =
+                shared.governor.admit(lane, class, || shared.lanes.queue(lane).len())
+            {
+                telemetry_lock(shared).record_shed(lane, epoch);
                 return Response::Line(format!(
                     "ERR OVERLOADED p90={} slo={:.0}",
                     over.p90_evidence(),
@@ -493,7 +590,8 @@ fn respond(shared: &Shared, line: &str) -> Response {
             let (reply_tx, reply_rx) = mpsc::channel();
             let envelope = Envelope {
                 job: Job { id, kind, seed, arrival_us: 0 },
-                lane, // provisional; admit() re-stamps authoritatively
+                lane,  // provisional; admit() re-stamps authoritatively
+                epoch, // likewise
                 enqueued: Instant::now(),
                 reply: reply_tx,
             };
@@ -555,6 +653,19 @@ fn respond(shared: &Shared, line: &str) -> Response {
 /// cache-less server.
 fn cache_block(shared: &Shared) -> String {
     shared.cache.as_ref().map_or_else(String::new, ResultCache::render)
+}
+
+/// The routing table appended to STATS/DRAIN blocks: per-class lane
+/// assignment (vs the seed lane) with request counts, plus the
+/// `routing: epoch=<e> moves=<m>` trailer. Rendered only under
+/// `--rebalance adaptive` — with rebalancing off, routing is the
+/// immutable seed table and these blocks stay byte-identical to a
+/// pre-routing-layer server.
+fn routing_block(shared: &Shared) -> String {
+    match shared.rebalance {
+        RebalanceMode::Off => String::new(),
+        RebalanceMode::Adaptive => shared.router.render(),
+    }
 }
 
 /// The occupancy line appended to STATS/DRAIN blocks.
@@ -656,6 +767,38 @@ mod tests {
         };
         assert_eq!(checksum(&out[0]), checksum(&out[1]), "bit-identical checksum: {out:?}");
         assert!(!out[2].contains("engine=cache"), "different seed misses: {out:?}");
+    }
+
+    #[test]
+    fn routing_block_only_renders_under_adaptive_rebalance() {
+        // Default (--rebalance off): STATS must stay byte-compatible
+        // with the pre-routing-layer server — no routing table, no
+        // epoch trailer.
+        let out = roundtrip(&["SORT 200 1", "STATS"]);
+        assert!(!out.iter().any(|l| l.starts_with("routing")), "{out:?}");
+        assert!(!out.iter().any(|l| l.contains("epoch")), "{out:?}");
+        // Adaptive: the routing trailer (epoch 0, no moves yet) and the
+        // per-class assignment row appear.
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let cfg = CoordinatorCfg {
+            threads: 1,
+            rebalance: super::RebalanceMode::Adaptive,
+            ..Default::default()
+        };
+        let h = std::thread::spawn(move || server.serve(cfg, Some(1)).unwrap());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for l in ["SORT 200 1", "STATS", "QUIT"] {
+            writeln!(conn, "{l}").unwrap();
+        }
+        conn.flush().unwrap();
+        let out: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+        h.join().unwrap();
+        assert!(
+            out.iter().any(|l| l.starts_with("routing: epoch=0 moves=0")),
+            "routing trailer missing: {out:?}"
+        );
+        assert!(out.iter().any(|l| l.contains("sort/2^7")), "per-class row missing: {out:?}");
     }
 
     #[test]

@@ -44,6 +44,14 @@ fn push_sample(series: &mut Vec<f64>, sample: f64) {
     series.push(sample);
 }
 
+/// Epoch tables kept per server: the per-lane series are keyed on
+/// `(lane, routing epoch)` so STATS never mixes pre- and post-rebalance
+/// regimes in one row — but a forever-rebalancing server must not grow
+/// telemetry without bound, so only the newest `EPOCH_CAP` epochs are
+/// retained (older tables age out of the snapshot; their global
+/// counters are already rolled up).
+pub const EPOCH_CAP: usize = 6;
+
 /// Per-lane serving counters: lane imbalance (skewed queue waits, steal
 /// traffic, thin batches, shed hotspots) is a first-class overhead,
 /// reported per lane so a hot shape class is visible instead of averaged
@@ -79,12 +87,27 @@ impl LaneStats {
     }
 }
 
+/// One routing epoch's worth of per-lane counters. The per-lane
+/// telemetry series are keyed on `(lane, epoch)`: a job admitted under
+/// epoch N is recorded against epoch N's table even when it completes
+/// after a rebalance published N+1, so no row ever conflates pre- and
+/// post-rebalance traffic.
+#[derive(Debug, Default, Clone)]
+pub struct EpochLanes {
+    pub epoch: u64,
+    pub lanes: Vec<LaneStats>,
+}
+
 /// Admission-governor identity for the STATS "admission" table: which
-/// mode the server runs and the SLO it defends.
+/// mode the server runs, the default SLO it defends, and any per-class
+/// overrides.
 #[derive(Debug, Clone)]
 pub struct AdmissionInfo {
     pub mode: &'static str,
     pub slo_p90_us: f64,
+    /// Per-shape-class SLO overrides (class name → µs), rendered as a
+    /// trailer under the admission table; empty with a uniform SLO.
+    pub slo_overrides: Vec<(String, f64)>,
 }
 
 /// Aggregates job results for reporting. `Clone` so readers can snapshot
@@ -110,8 +133,13 @@ pub struct Telemetry {
     /// events (enqueue + reply message, reply rendezvous) per served job,
     /// cross-lane steal migrations, and governor sheds.
     pub serving_ledger: Ledger,
-    /// Per-dispatch-lane counters (empty outside serving mode).
-    pub lanes: Vec<LaneStats>,
+    /// Per-dispatch-lane counters, one table per routing epoch (empty
+    /// outside serving mode; a single epoch-0 entry on a server that
+    /// never rebalances). Ordered by epoch; at most [`EPOCH_CAP`]
+    /// entries are retained.
+    pub lane_epochs: Vec<EpochLanes>,
+    /// Lane count per epoch table, fixed at server start.
+    lane_count: usize,
     /// Admission mode + SLO, set at server start (None outside serving).
     pub admission: Option<AdmissionInfo>,
     queue_wait_us: Digest,
@@ -173,38 +201,80 @@ impl Telemetry {
         push_sample(self.per_engine.entry(RoutedEngine::Cache.name()).or_default(), lookup_us);
     }
 
-    /// Record one governor shed (`ERR OVERLOADED`) against the lane the
-    /// request was routed to. A shed is scheduling overhead *managed
-    /// away*, so it also lands in the serving ledger.
-    pub fn record_shed(&mut self, lane: usize) {
+    /// Record one governor shed (`ERR OVERLOADED`) against the
+    /// `(lane, epoch)` the request was routed under. A shed is
+    /// scheduling overhead *managed away*, so it also lands in the
+    /// serving ledger.
+    pub fn record_shed(&mut self, lane: usize, epoch: u64) {
         self.shed += 1;
         self.serving_ledger.sheds += 1;
-        if let Some(l) = self.lanes.get_mut(lane) {
+        if let Some(l) = self.lane_slot(lane, epoch) {
             l.sheds += 1;
         }
     }
 
-    /// Size the per-lane counters (called once at server start).
+    /// Size the per-lane counters (called once at server start): one
+    /// epoch-0 table of `n` lanes.
     pub fn init_lanes(&mut self, n: usize) {
-        self.lanes = vec![LaneStats::default(); n];
+        self.lane_count = n;
+        self.lane_epochs = vec![EpochLanes { epoch: 0, lanes: vec![LaneStats::default(); n] }];
     }
 
     /// Record the admission governor's identity (called once at server
     /// start) so STATS can render the admission table.
-    pub fn init_admission(&mut self, mode: &'static str, slo_p90_us: f64) {
-        self.admission = Some(AdmissionInfo { mode, slo_p90_us });
+    pub fn init_admission(
+        &mut self,
+        mode: &'static str,
+        slo_p90_us: f64,
+        slo_overrides: Vec<(String, f64)>,
+    ) {
+        self.admission = Some(AdmissionInfo { mode, slo_p90_us, slo_overrides });
     }
 
-    /// Record one dispatched batch against its lane. A stolen batch is a
-    /// cross-lane migration: one γ message in the serving ledger, broken
-    /// out in its `steals` counter.
-    pub fn record_lane_batch(&mut self, lane: usize, width: usize, stolen: bool) {
+    /// Open a fresh per-lane table for a newly published routing epoch
+    /// (idempotent; prunes tables beyond [`EPOCH_CAP`], oldest first).
+    /// Recording against an epoch creates its table on demand too, so
+    /// the rebalancer's call ordering cannot race job completions.
+    pub fn begin_epoch(&mut self, epoch: u64) {
+        let _ = self.lane_slot(0, epoch);
+    }
+
+    /// The `(lane, epoch)` stats cell, creating (and pruning) the
+    /// epoch's table as needed. `None` when lane telemetry is not
+    /// initialized, the lane is out of range, or the epoch has already
+    /// aged out of the retained window.
+    fn lane_slot(&mut self, lane: usize, epoch: u64) -> Option<&mut LaneStats> {
+        if lane >= self.lane_count {
+            return None;
+        }
+        if !self.lane_epochs.iter().any(|e| e.epoch == epoch) {
+            let at = self
+                .lane_epochs
+                .iter()
+                .position(|e| e.epoch > epoch)
+                .unwrap_or(self.lane_epochs.len());
+            self.lane_epochs.insert(
+                at,
+                EpochLanes { epoch, lanes: vec![LaneStats::default(); self.lane_count] },
+            );
+            while self.lane_epochs.len() > EPOCH_CAP {
+                self.lane_epochs.remove(0);
+            }
+        }
+        let idx = self.lane_epochs.iter().position(|e| e.epoch == epoch)?;
+        self.lane_epochs[idx].lanes.get_mut(lane)
+    }
+
+    /// Record one dispatched batch against its `(lane, epoch)`. A stolen
+    /// batch is a cross-lane migration: one γ message in the serving
+    /// ledger, broken out in its `steals` counter.
+    pub fn record_lane_batch(&mut self, lane: usize, epoch: u64, width: usize, stolen: bool) {
         self.record_batch(width);
         if stolen {
             self.serving_ledger.steals += 1;
             self.serving_ledger.messages += 1;
         }
-        if let Some(l) = self.lanes.get_mut(lane) {
+        if let Some(l) = self.lane_slot(lane, epoch) {
             l.batches += 1;
             l.dispatched += width as u64;
             if stolen {
@@ -215,22 +285,28 @@ impl Telemetry {
         }
     }
 
-    /// Record one served job's queue wait against the lane it was
-    /// *admitted* to — the same attribution the admission governor uses,
-    /// so the STATS admission table shows exactly the waits the governor
-    /// acts on even when work stealing executes the job elsewhere —
+    /// Record one served job's queue wait against the `(lane, epoch)` it
+    /// was *admitted* under — the same attribution the admission
+    /// governor uses, so the STATS admission table shows exactly the
+    /// waits the governor acts on even when work stealing executes the
+    /// job elsewhere (and never mixes regimes across a rebalance) —
     /// plus the global serving categories via
     /// [`record_served`](Telemetry::record_served).
-    pub fn record_lane_served(&mut self, lane: usize, queue_wait_us: f64) {
+    pub fn record_lane_served(&mut self, lane: usize, epoch: u64, queue_wait_us: f64) {
         self.record_served(queue_wait_us);
-        if let Some(l) = self.lanes.get_mut(lane) {
+        if let Some(l) = self.lane_slot(lane, epoch) {
             l.queue_wait_us.record(queue_wait_us);
         }
     }
 
-    /// Total stolen batches across all lanes.
+    /// Total stolen batches across all lanes and epochs.
     pub fn total_steals(&self) -> u64 {
-        self.lanes.iter().map(|l| l.steals).sum()
+        self.lane_epochs.iter().flat_map(|e| e.lanes.iter()).map(|l| l.steals).sum()
+    }
+
+    /// One epoch's per-lane stats (test/observability hook).
+    pub fn epoch_lanes(&self, epoch: u64) -> Option<&[LaneStats]> {
+        self.lane_epochs.iter().find(|e| e.epoch == epoch).map(|e| e.lanes.as_slice())
     }
 
     pub fn engine_count(&self, e: RoutedEngine) -> usize {
@@ -301,10 +377,23 @@ impl Telemetry {
             }
         }
         // Per-lane breakdown, once any lane has dispatched: imbalance
-        // (skewed waits, steal traffic) must be visible per lane.
-        if self.lanes.iter().any(|l| l.batches > 0) {
+        // (skewed waits, steal traffic) must be visible per lane. One
+        // table per routing epoch — a server that never rebalances has
+        // exactly one, titled as before; epoch suffixes appear only once
+        // a swap has split the series, so regimes are never mixed.
+        let multi_epoch = self.lane_epochs.len() > 1
+            || self.lane_epochs.first().is_some_and(|e| e.epoch != 0);
+        for el in &self.lane_epochs {
+            if !el.lanes.iter().any(|l| l.batches > 0) {
+                continue;
+            }
+            let title = if multi_epoch {
+                format!("dispatch lanes (epoch {})", el.epoch)
+            } else {
+                "dispatch lanes".to_string()
+            };
             let mut lt = AsciiTable::new(
-                "dispatch lanes",
+                &title,
                 &[
                     "lane",
                     "jobs",
@@ -316,7 +405,7 @@ impl Telemetry {
                     "wait p90 (µs)",
                 ],
             );
-            for (i, l) in self.lanes.iter().enumerate() {
+            for (i, l) in el.lanes.iter().enumerate() {
                 let width = l.batch_width().map_or("-".to_string(), |s| f(s.mean, 2));
                 let (wait_mean, wait_p90) = match l.queue_wait() {
                     Some(s) => (f(s.mean, 1), f(s.p90, 1)),
@@ -337,14 +426,28 @@ impl Telemetry {
         }
         // Admission table: per-lane queue-wait percentiles (from the
         // digests — no per-sample buffer exists to consult) plus shed
-        // counts, under the governor's mode and SLO.
+        // counts, under the governor's mode and SLO — again one table
+        // per routing epoch, so admission evidence never mixes regimes.
         if let Some(adm) = &self.admission {
-            if self.lanes.iter().any(|l| l.queue_wait().is_some() || l.sheds > 0) {
+            for el in &self.lane_epochs {
+                if !el.lanes.iter().any(|l| l.queue_wait().is_some() || l.sheds > 0) {
+                    continue;
+                }
+                let title = if multi_epoch {
+                    format!(
+                        "admission (mode={}, slo p90={}µs, epoch {})",
+                        adm.mode,
+                        f(adm.slo_p90_us, 0),
+                        el.epoch
+                    )
+                } else {
+                    format!("admission (mode={}, slo p90={}µs)", adm.mode, f(adm.slo_p90_us, 0))
+                };
                 let mut at = AsciiTable::new(
-                    &format!("admission (mode={}, slo p90={}µs)", adm.mode, f(adm.slo_p90_us, 0)),
+                    &title,
                     &["lane", "served", "p50 (µs)", "p90 (µs)", "p99 (µs)", "max (µs)", "sheds"],
                 );
-                for (i, l) in self.lanes.iter().enumerate() {
+                for (i, l) in el.lanes.iter().enumerate() {
                     let (served, p50, p90, p99, max) = match l.queue_wait() {
                         Some(s) => {
                             (s.n.to_string(), f(s.p50, 1), f(s.p90, 1), f(s.p99, 1), f(s.max, 1))
@@ -357,6 +460,14 @@ impl Telemetry {
                     at.row(vec![i.to_string(), served, p50, p90, p99, max, l.sheds.to_string()]);
                 }
                 out.push_str(&at.render());
+            }
+            if !adm.slo_overrides.is_empty() {
+                let rendered: Vec<String> = adm
+                    .slo_overrides
+                    .iter()
+                    .map(|(class, us)| format!("{class}={}µs", f(*us, 0)))
+                    .collect();
+                out.push_str(&format!("admission slo overrides: {}\n", rendered.join(" ")));
             }
         }
         out.push_str(&format!(
@@ -438,61 +549,103 @@ mod tests {
     fn lane_stats_track_steals_and_render() {
         let mut t = Telemetry::default();
         t.init_lanes(2);
-        t.record_lane_batch(0, 3, false);
-        t.record_lane_batch(1, 2, true);
-        t.record_lane_served(0, 100.0);
-        t.record_lane_served(0, 300.0);
-        t.record_lane_served(1, 50.0);
-        assert_eq!(t.lanes[0].batches, 1);
-        assert_eq!(t.lanes[0].dispatched, 3);
-        assert_eq!(t.lanes[0].steals, 0);
-        assert_eq!(t.lanes[1].steals, 1);
-        assert_eq!(t.lanes[1].stolen_jobs, 2);
+        t.record_lane_batch(0, 0, 3, false);
+        t.record_lane_batch(1, 0, 2, true);
+        t.record_lane_served(0, 0, 100.0);
+        t.record_lane_served(0, 0, 300.0);
+        t.record_lane_served(1, 0, 50.0);
+        let lanes = t.epoch_lanes(0).unwrap();
+        assert_eq!(lanes[0].batches, 1);
+        assert_eq!(lanes[0].dispatched, 3);
+        assert_eq!(lanes[0].steals, 0);
+        assert_eq!(lanes[1].steals, 1);
+        assert_eq!(lanes[1].stolen_jobs, 2);
+        assert_eq!(lanes[0].queue_wait().unwrap().n, 2);
         assert_eq!(t.total_steals(), 1);
         assert_eq!(t.batches, 2, "lane batches roll up into the global counter");
         assert_eq!(t.serving_ledger.steals, 1);
         assert_eq!(t.serving_ledger.messages, 7, "2 per served job + 1 per steal");
-        assert_eq!(t.lanes[0].queue_wait().unwrap().n, 2);
         let s = t.render();
         assert!(s.contains("dispatch lanes"), "{s}");
+        assert!(!s.contains("dispatch lanes (epoch"), "single epoch keeps the plain title: {s}");
         assert!(s.contains("steals=1"), "{s}");
+    }
+
+    #[test]
+    fn lane_series_key_on_lane_and_epoch_so_regimes_never_mix() {
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        // Epoch 0 traffic on lane 1, then a rebalance publishes epoch 1
+        // and later jobs land there — including a straggler admitted
+        // under epoch 0 that completes after the swap.
+        t.record_lane_batch(1, 0, 2, false);
+        t.record_lane_served(1, 0, 900.0);
+        t.begin_epoch(1);
+        t.record_lane_batch(0, 1, 1, false);
+        t.record_lane_served(0, 1, 40.0);
+        t.record_lane_served(1, 0, 950.0); // straggler: epoch-0 attribution
+        let e0 = t.epoch_lanes(0).unwrap();
+        let e1 = t.epoch_lanes(1).unwrap();
+        assert_eq!(e0[1].queue_wait().unwrap().n, 2, "both epoch-0 waits, straggler included");
+        assert_eq!(e1[0].queue_wait().unwrap().n, 1);
+        assert!(e1[1].queue_wait().is_none(), "epoch 1 lane 1 saw nothing");
+        let s = t.render();
+        assert!(s.contains("dispatch lanes (epoch 0)"), "{s}");
+        assert!(s.contains("dispatch lanes (epoch 1)"), "{s}");
+    }
+
+    #[test]
+    fn epoch_tables_stay_bounded() {
+        let mut t = Telemetry::default();
+        t.init_lanes(2);
+        for epoch in 0..20u64 {
+            t.record_lane_served(0, epoch, 100.0);
+        }
+        assert!(t.lane_epochs.len() <= super::EPOCH_CAP, "grew to {}", t.lane_epochs.len());
+        assert!(t.epoch_lanes(19).is_some(), "newest epoch retained");
+        assert!(t.epoch_lanes(0).is_none(), "oldest epoch aged out");
+        assert_eq!(t.queue_wait().unwrap().n, 20, "global rollups keep every sample");
     }
 
     #[test]
     fn sheds_count_per_lane_and_into_the_ledger() {
         let mut t = Telemetry::default();
         t.init_lanes(2);
-        t.init_admission("adaptive", 1_000.0);
-        t.record_lane_served(0, 2_500.0);
-        t.record_shed(0);
-        t.record_shed(0);
-        t.record_shed(1);
+        t.init_admission("adaptive", 1_000.0, Vec::new());
+        t.record_lane_served(0, 0, 2_500.0);
+        t.record_shed(0, 0);
+        t.record_shed(0, 0);
+        t.record_shed(1, 0);
         assert_eq!(t.shed, 3);
-        assert_eq!(t.lanes[0].sheds, 2);
-        assert_eq!(t.lanes[1].sheds, 1);
+        let lanes = t.epoch_lanes(0).unwrap();
+        assert_eq!(lanes[0].sheds, 2);
+        assert_eq!(lanes[1].sheds, 1);
         assert_eq!(t.serving_ledger.sheds, 3);
         assert_eq!(t.rejected, 0, "sheds are distinct from hard rejections");
         let s = t.render();
         assert!(s.contains("admission (mode=adaptive, slo p90=1000µs)"), "{s}");
         assert!(s.contains("shed=3"), "{s}");
         assert!(s.contains("sheds=3"), "ledger line carries sheds: {s}");
+        assert!(!s.contains("slo overrides"), "uniform SLO renders no overrides line: {s}");
     }
 
     #[test]
     fn admission_table_renders_lane_percentiles_from_digests() {
         let mut t = Telemetry::default();
         t.init_lanes(2);
-        t.init_admission("adaptive", 5_000.0);
+        t.init_admission("adaptive", 5_000.0, vec![("sort/2^9".to_string(), 800.0)]);
         for wait in [100.0, 200.0, 400.0, 800.0] {
-            t.record_lane_served(0, wait);
+            t.record_lane_served(0, 0, wait);
         }
         let s = t.render();
         assert!(s.contains("admission (mode=adaptive"), "{s}");
-        let lane0 = t.lanes[0].queue_wait().unwrap();
+        assert!(s.contains("admission slo overrides: sort/2^9=800µs"), "{s}");
+        let lanes = t.epoch_lanes(0).unwrap();
+        let lane0 = lanes[0].queue_wait().unwrap();
         assert_eq!(lane0.n, 4);
         assert!(lane0.p50 <= lane0.p90 && lane0.p90 <= lane0.p99 && lane0.p99 <= lane0.max);
         assert_eq!(lane0.max, 800.0, "digest max is exact");
-        assert!(t.lanes[1].queue_wait().is_none(), "idle lane renders dashes");
+        assert!(lanes[1].queue_wait().is_none(), "idle lane renders dashes");
     }
 
     #[test]
@@ -505,7 +658,10 @@ mod tests {
         assert_eq!(t.serving_ledger.cache_hits, 2);
         assert_eq!(t.engine_count(RoutedEngine::Cache), 2);
         assert!(t.queue_wait().is_none(), "hits bypass the queue-wait digest");
-        assert!(t.lanes.iter().all(|l| l.queue_wait().is_none()), "and every lane digest");
+        assert!(
+            t.lane_epochs.iter().flat_map(|e| e.lanes.iter()).all(|l| l.queue_wait().is_none()),
+            "and every lane digest"
+        );
         assert_eq!(t.serving_ledger.queue_ns, 0, "no fabricated queue time");
         let s = t.render();
         assert!(s.contains("engine:cache"), "{s}");
@@ -516,7 +672,7 @@ mod tests {
     fn admission_table_absent_without_governor_info() {
         let mut t = Telemetry::default();
         t.init_lanes(2);
-        t.record_lane_served(0, 100.0);
+        t.record_lane_served(0, 0, 100.0);
         let s = t.render();
         assert!(!s.contains("admission (mode="), "{s}");
     }
@@ -528,14 +684,14 @@ mod tests {
         // byte-identical output under a fixed workload.
         let mut t = Telemetry::default();
         t.init_lanes(2);
-        t.init_admission("adaptive", 2_000.0);
+        t.init_admission("adaptive", 2_000.0, Vec::new());
         for i in 0..500 {
             t.record(&res(RoutedEngine::CpuSerial, 10.0 + i as f64, true));
-            t.record_lane_batch(i % 2, 1 + i % 4, i % 7 == 0);
-            t.record_lane_served(i % 2, (i * 13 % 4_000) as f64 + 0.5);
+            t.record_lane_batch(i % 2, (i >= 250) as u64, 1 + i % 4, i % 7 == 0);
+            t.record_lane_served(i % 2, (i >= 250) as u64, (i * 13 % 4_000) as f64 + 0.5);
         }
         t.record_rejected();
-        t.record_shed(1);
+        t.record_shed(1, 1);
         assert_eq!(t.render(), t.clone().render(), "snapshot clone must be lossless");
     }
 
@@ -566,7 +722,7 @@ mod tests {
         let mut t = Telemetry::default();
         t.init_lanes(1);
         for i in 0..100_000 {
-            t.record_lane_served(0, (i % 1000) as f64 + 1.0);
+            t.record_lane_served(0, 0, (i % 1000) as f64 + 1.0);
         }
         assert_eq!(t.queue_wait().unwrap().n, 100_000);
         // The series is a fixed-size digest: cloning it cannot scale with

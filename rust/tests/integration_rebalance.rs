@@ -1,0 +1,206 @@
+//! Integration tests for load-driven lane repartitioning: a skewed
+//! trace pinned to one lane must trigger an epoch swap that moves the
+//! hot shape class onto a cold sibling (strictly lowering the shed
+//! count vs `--rebalance off` under the identical sequence), and a
+//! DRAIN racing the rebalancer must still exit with
+//! `admitted == finished`.
+//!
+//! Determinism: `slo_p90_us = 0` + a rolling window far longer than the
+//! test means the governor sheds a lane's hot class from its second
+//! request onward and never idle-recovers — so with rebalancing off the
+//! reply sequence is exactly reproducible, and every extra `OK` under
+//! `--rebalance adaptive` is attributable to an epoch swap opening a
+//! cold lane.
+
+mod common;
+
+use common::{fetch_stats, stat_u64};
+use ohm::coordinator::server::Server;
+use ohm::coordinator::{AdmissionMode, CoordinatorCfg, RebalanceMode};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn request(out: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    writeln!(out, "{line}").unwrap();
+    out.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+fn quit(mut out: TcpStream, mut reader: BufReader<TcpStream>) {
+    assert_eq!(request(&mut out, &mut reader, "QUIT"), "BYE");
+}
+
+/// 4 lanes ⇒ the sort span is lanes {2, 3}; `SORT 1000` (sort/2^9)
+/// seed-routes to lane 3 with lane 2 as its idle sibling. Stealing off
+/// so spare capacity can only be reached by *routing* — exactly the
+/// imbalance the rebalancer exists to fix.
+fn skew_cfg(rebalance: RebalanceMode) -> CoordinatorCfg {
+    CoordinatorCfg {
+        threads: 1,
+        serve_threads: 2,
+        lanes: 4,
+        steal: false,
+        admission: AdmissionMode::Adaptive,
+        slo_p90_us: 0.0,
+        admission_window_ms: 600_000,
+        rebalance,
+        rebalance_window_ms: 100,
+        ..Default::default()
+    }
+}
+
+/// The identical skewed sequence against either server: one warm-up
+/// `OK` (cold window admits), four sheds that also register demand,
+/// a pause covering several rebalance windows, then twelve paced
+/// requests. Returns `(ok, shed)` counts over all seventeen requests.
+fn drive_skewed(addr: SocketAddr) -> (usize, usize) {
+    let (mut out, mut reader) = connect(addr);
+    let first = request(&mut out, &mut reader, "SORT 1000 1");
+    assert!(first.starts_with("OK SORT n=1000"), "cold lane must admit: {first}");
+    let (mut ok, mut shed) = (1usize, 0usize);
+    let mut tally = |r: String| {
+        if r.starts_with("OK SORT") {
+            ok += 1;
+        } else if r.starts_with("ERR OVERLOADED") {
+            shed += 1;
+        } else {
+            panic!("unexpected reply: {r}");
+        }
+    };
+    // Four quick requests register demand (all shed with rebalancing
+    // off; under adaptive, a very early epoch swap may already serve
+    // some — the aggregate assertions don't care which side of the
+    // swap they land on).
+    for seed in 2..=5 {
+        tally(request(&mut out, &mut reader, &format!("SORT 1000 {seed}")));
+    }
+    // Several rebalance windows: with `adaptive`, the hot sort class
+    // (demanded but 100%-shed) moves onto the idle sort sibling here.
+    std::thread::sleep(Duration::from_millis(500));
+    for seed in 6..=17 {
+        tally(request(&mut out, &mut reader, &format!("SORT 1000 {seed}")));
+        // Pace the tail so rebalance ticks interleave with live demand.
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    quit(out, reader);
+    (ok, shed)
+}
+
+#[test]
+fn rebalance_moves_the_hot_class_and_sheds_drop() {
+    // Baseline: rebalancing off. The hot class stays latched on lane 3
+    // forever (the window never rotates), so exactly the warm-up
+    // request is served — deterministically.
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let h =
+        std::thread::spawn(move || server.serve(skew_cfg(RebalanceMode::Off), Some(2)).unwrap());
+    let (ok_off, shed_off) = drive_skewed(addr);
+    let stats_off = fetch_stats(addr);
+    h.join().unwrap();
+    assert_eq!((ok_off, shed_off), (1, 16), "off-mode sequence is fully deterministic");
+    assert!(!stats_off.contains("routing"), "no routing block with rebalance off:\n{stats_off}");
+
+    // Same sequence under --rebalance adaptive: the rebalancer must
+    // move sort/2^9 onto the cold sort lane, whose fresh window admits
+    // again — strictly more OKs, strictly fewer sheds.
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let h = std::thread::spawn(move || {
+        server.serve(skew_cfg(RebalanceMode::Adaptive), Some(2)).unwrap()
+    });
+    let (ok_adaptive, shed_adaptive) = drive_skewed(addr);
+    let stats = fetch_stats(addr);
+    h.join().unwrap();
+    assert!(
+        shed_adaptive < shed_off,
+        "rebalancing must strictly lower the shed count: adaptive {shed_adaptive} vs off {shed_off}"
+    );
+    assert!(ok_adaptive > ok_off, "spare capacity must serve load: {ok_adaptive} vs {ok_off}");
+    assert_eq!(ok_adaptive + shed_adaptive, 17, "every request accounted for");
+    // The routing STATS block proves the move: a published epoch, a
+    // nonzero move count, and the hot class off its seed lane.
+    assert!(stats.contains("routing (shape class → lane)"), "stats:\n{stats}");
+    assert!(stat_u64(&stats, "routing: epoch=") >= 1, "stats:\n{stats}");
+    assert!(stat_u64(&stats, "moves=") >= 1, "stats:\n{stats}");
+    assert!(stats.contains("sort/2^9"), "hot class in the routing table:\n{stats}");
+    // Per-lane telemetry splits regimes: epoch-suffixed lane tables.
+    assert!(stats.contains("dispatch lanes (epoch"), "epoch-keyed lane stats:\n{stats}");
+}
+
+#[test]
+fn drain_mid_rebalance_exits_with_admitted_equals_finished() {
+    // A live rebalancer (50 ms windows) while jobs flow and a DRAIN
+    // lands mid-stream: the server must still complete every admitted
+    // job and report admitted == finished, then exit cleanly.
+    let cfg = CoordinatorCfg {
+        threads: 1,
+        serve_threads: 4,
+        lanes: 4,
+        steal: false,
+        admission: AdmissionMode::Adaptive,
+        slo_p90_us: 1e9, // generous: keep jobs flowing, not shedding
+        admission_window_ms: 50,
+        rebalance: RebalanceMode::Adaptive,
+        rebalance_window_ms: 50,
+        ..Default::default()
+    };
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let h = std::thread::spawn(move || server.serve(cfg, None).unwrap());
+
+    // Background load: 4 clients × 6 skewed sorts. Replies may be OK or
+    // ERR DRAINING depending on where the drain lands — both are fine;
+    // anything else is a protocol failure.
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let (mut out, mut reader) = connect(addr);
+                for k in 0..6 {
+                    let r =
+                        request(&mut out, &mut reader, &format!("SORT 1000 {}", c * 100 + k + 1));
+                    assert!(
+                        r.starts_with("OK SORT") || r.starts_with("ERR DRAINING"),
+                        "unexpected reply under drain: {r}"
+                    );
+                }
+                quit(out, reader);
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(120));
+    let (mut out, mut reader) = connect(addr);
+    writeln!(out, "DRAIN").unwrap();
+    out.flush().unwrap();
+    let mut block = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed mid-DRAIN:\n{block}");
+        if line.trim() == "." {
+            break;
+        }
+        block.push_str(&line);
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    h.join().unwrap();
+    assert!(block.starts_with("DRAINED"), "{block}");
+    let admitted = stat_u64(&block, "drained: admitted=");
+    let finished = stat_u64(&block, "finished=");
+    assert_eq!(admitted, finished, "drain completeness across an active rebalancer:\n{block}");
+    assert!(
+        block.contains("routing: epoch="),
+        "routing trailer in the final DRAIN stats:\n{block}"
+    );
+}

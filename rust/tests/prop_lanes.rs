@@ -17,7 +17,8 @@ fn mk_env(id: u64, kind: TraceKind) -> (Envelope, mpsc::Receiver<JobResult>) {
     let (tx, rx) = mpsc::channel();
     let env = Envelope {
         job: Job { id, kind, seed: 0, arrival_us: 0 },
-        lane: 0, // stamped by admit(); raw-push paths leave it unused
+        lane: 0,  // stamped by admit(); raw-push paths leave it unused
+        epoch: 0, // likewise
         enqueued: Instant::now(),
         reply: tx,
     };

@@ -1,0 +1,216 @@
+//! Property tests for the epoch-versioned routing layer
+//! (`coordinator::routing`): epochs advance monotonically, every
+//! ShapeClass always maps to exactly one lane *within its kind span*
+//! no matter how many moves have been published, an epoch swap never
+//! re-attributes an in-flight envelope, and the class → cache-shard
+//! map stays consistent with the table (and epoch-invariant, which is
+//! what keeps single-flight cache fills exactly-once across a swap).
+
+use ohm::coordinator::cache::{CachedResult, Lookup, ResultCache};
+use ohm::coordinator::lanes::{Envelope, LanePool, ShapeClass};
+use ohm::coordinator::routing::{self, Router, RoutingTable};
+use ohm::coordinator::{Job, JobResult};
+use ohm::prop::{ensure, forall, Config, Gen};
+use ohm::workload::traces::TraceKind;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+fn mk_env(id: u64, kind: TraceKind) -> (Envelope, mpsc::Receiver<JobResult>) {
+    let (tx, rx) = mpsc::channel();
+    let env = Envelope {
+        job: Job { id, kind, seed: 0, arrival_us: 0 },
+        lane: 0,  // stamped by admit()
+        epoch: 0, // likewise
+        enqueued: Instant::now(),
+        reply: tx,
+    };
+    (env, rx)
+}
+
+fn rand_kind(g: &mut Gen) -> TraceKind {
+    let n = g.usize_in(1..4096);
+    if g.bool() {
+        TraceKind::Matmul { n }
+    } else {
+        TraceKind::Sort { n }
+    }
+}
+
+/// Apply a random sequence of legal moves to a router, checking each
+/// publish advances the epoch by exactly one.
+fn random_moves(g: &mut Gen, router: &Router, count: usize) -> Result<(), String> {
+    for _ in 0..count {
+        let table = router.load();
+        let class = ShapeClass::of(&rand_kind(g));
+        let (base, span) = routing::kind_span(class.kind_id(), table.lane_count());
+        let to = base + g.usize_in(0..span);
+        let before = table.epoch();
+        let next = table.with_move(class, to).map_err(|e| e.to_string())?;
+        ensure(next.epoch() == before + 1, || "with_move must advance the epoch by 1".into())?;
+        router.publish(next).map_err(|e| e.to_string())?;
+        ensure(router.load().epoch() == before + 1, || "publish must install the epoch".into())?;
+    }
+    Ok(())
+}
+
+/// Epoch monotonicity: every published table advances the epoch, and a
+/// stale republish (any already-seen epoch) is rejected without
+/// touching the installed table.
+#[test]
+fn prop_epochs_only_move_forward() {
+    forall(Config::default().cases(30), "epochs are strictly monotonic", |g| {
+        let lanes = g.usize_in(1..6);
+        let router = Router::new(lanes);
+        random_moves(g, &router, g.usize_in(1..12))?;
+        let current = router.load();
+        // Any table with epoch ≤ current must be rejected.
+        let stale = RoutingTable::seed(lanes);
+        ensure(router.publish(stale).is_err(), || "epoch-0 republish must fail".into())?;
+        ensure(router.load().epoch() == current.epoch(), || {
+            "a rejected publish must leave the table untouched".into()
+        })
+    });
+}
+
+/// Exactly-one-lane within the kind span: under any sequence of moves,
+/// every class (and every concrete job kind) maps to exactly one lane,
+/// in range, inside its kind's span — the head-of-line partition is
+/// preserved by construction.
+#[test]
+fn prop_every_class_maps_to_one_lane_in_its_kind_span() {
+    forall(Config::default().cases(30), "kind partition survives rebalancing", |g| {
+        let lanes = g.usize_in(1..6);
+        let router = Router::new(lanes);
+        random_moves(g, &router, g.usize_in(0..15))?;
+        let table = router.load();
+        for slot in 0..routing::CLASS_SLOTS {
+            let class = routing::slot_class(slot);
+            let lane = table.lane_of(class);
+            let (base, span) = routing::kind_span(class.kind_id(), lanes);
+            ensure(lane >= base && lane < base + span, || {
+                format!("{} on lane {lane}, span [{base}, {})", class.name(), base + span)
+            })?;
+        }
+        // And routing a concrete job agrees with the table.
+        for _ in 0..20 {
+            let kind = rand_kind(g);
+            let (lane, epoch) = router.route(&kind);
+            ensure(lane == table.lane_of(ShapeClass::of(&kind)), || {
+                "route() must agree with the installed table".into()
+            })?;
+            ensure(epoch == table.epoch(), || "route() must report the live epoch".into())?;
+        }
+        Ok(())
+    });
+}
+
+/// Swap preserves in-flight attribution: an envelope admitted under
+/// epoch N keeps its `(lane, epoch)` stamp across any later publishes,
+/// while envelopes admitted after a swap carry the new pair — so
+/// queue-wait/steal accounting can never mix regimes.
+#[test]
+fn prop_swap_preserves_in_flight_attribution() {
+    forall(Config::default().cases(30), "in-flight envelopes keep their admitted epoch", |g| {
+        let lanes = g.usize_in(1..6);
+        let pool = LanePool::with_router(Arc::new(Router::new(lanes)), 256, false);
+        let mut rxs = Vec::new();
+        let mut admitted: Vec<(u64, usize, u64)> = Vec::new(); // (id, lane, epoch)
+        for round in 0..g.usize_in(1..5) {
+            for i in 0..g.usize_in(1..8) as u64 {
+                let id = ((round as u64) << 16) | i;
+                let kind = rand_kind(g);
+                let (env, rx) = mk_env(id, kind);
+                let lane = pool.admit(env).map_err(|_| "queue full".to_string())?;
+                admitted.push((id, lane, pool.router().load().epoch()));
+                rxs.push(rx);
+            }
+            random_moves(g, pool.router(), 1)?;
+        }
+        // Drain every queue; each envelope must still carry exactly the
+        // (lane, epoch) it was admitted under.
+        let mut seen = Vec::new();
+        for lane in 0..pool.lane_count() {
+            while let Some(env) = pool.queue(lane).pop() {
+                ensure(env.lane == lane, || "envelope on a queue it was not stamped for".into())?;
+                seen.push((env.job.id, env.lane, env.epoch));
+            }
+        }
+        seen.sort_unstable();
+        admitted.sort_unstable();
+        ensure(seen == admitted, || {
+            format!("attribution drifted across swaps:\n got {seen:?}\nwant {admitted:?}")
+        })
+    });
+}
+
+/// The cache-shard map stays consistent with the table: for every class
+/// and every epoch, `RoutingTable::shard_of` equals the cache's own
+/// shard choice and never changes across publishes — a moved class
+/// keeps its shard.
+#[test]
+fn prop_cache_shard_map_is_epoch_invariant_and_consistent() {
+    forall(Config::default().cases(30), "shard map consistent with the table", |g| {
+        let lanes = g.usize_in(1..6);
+        let router = Router::new(lanes);
+        let cache = ResultCache::new(lanes, 64, 1 << 20);
+        let seed_table = router.load();
+        let seed_shards: Vec<usize> = (0..routing::CLASS_SLOTS)
+            .map(|s| seed_table.shard_of(routing::slot_class(s)))
+            .collect();
+        random_moves(g, &router, g.usize_in(0..12))?;
+        let table = router.load();
+        for slot in 0..routing::CLASS_SLOTS {
+            let class = routing::slot_class(slot);
+            ensure(table.shard_of(class) == seed_shards[slot], || {
+                format!("{}'s shard moved across epochs", class.name())
+            })?;
+        }
+        for _ in 0..20 {
+            let kind = rand_kind(g);
+            let class = ShapeClass::of(&kind);
+            ensure(cache.shard_of(&kind) == table.shard_of(class), || {
+                "cache shard disagrees with the routing table".into()
+            })?;
+            ensure(table.shard_of(class) < cache.shard_count(), || "shard out of range".into())?;
+        }
+        Ok(())
+    });
+}
+
+/// Single-flight stays exactly-once across an epoch swap: a leader
+/// registered before the swap still owns the key afterwards (same
+/// shard), so a concurrent identical request coalesces onto it instead
+/// of executing again — one miss, one fill, everyone else hits.
+#[test]
+fn single_flight_fill_is_exactly_once_across_an_epoch_swap() {
+    let lanes = 4;
+    let router = Router::new(lanes);
+    let cache = Arc::new(ResultCache::new(lanes, 64, 1 << 20));
+    let kind = TraceKind::Sort { n: 1000 }; // sort/2^9: seed lane 3 of 4
+    // Leader registers pre-swap.
+    let flight = match cache.lookup(&kind, 7) {
+        Lookup::Miss(f) => f,
+        Lookup::Hit(_) => panic!("cold cache must miss"),
+    };
+    // The class's *dispatch* lane moves; its shard must not.
+    let moved = router.load().with_move(ShapeClass::of(&kind), 2).unwrap();
+    router.publish(moved).unwrap();
+    assert_eq!(router.load().lane_of(ShapeClass::of(&kind)), 2);
+    // A concurrent identical request lands in the same shard and blocks
+    // as a follower on the pre-swap leader.
+    let follower = {
+        let cache = Arc::clone(&cache);
+        std::thread::spawn(move || match cache.lookup(&kind, 7) {
+            Lookup::Hit(v) => v.checksum,
+            Lookup::Miss(_) => panic!("post-swap lookup must coalesce onto the leader"),
+        })
+    };
+    // Give the follower time to park on the flight, then fill once.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    flight.fill(CachedResult { checksum: 42.5 });
+    assert_eq!(follower.join().unwrap().to_bits(), 42.5f64.to_bits());
+    let totals = cache.totals();
+    assert_eq!(totals.misses, 1, "exactly one leader across the swap");
+    assert_eq!(totals.hits, 1, "the post-swap request was served by the fill");
+    assert_eq!(totals.entries, 1, "exactly one fill landed");
+}
