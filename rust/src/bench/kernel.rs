@@ -1,0 +1,402 @@
+//! The `ohm bench` harness: a machine-readable kernel-performance
+//! trajectory (`BENCH_matmul.json` / `BENCH_sort.json`), committed per PR
+//! and regression-gated in CI (`tools/bench_gate.py`).
+//!
+//! Two modes:
+//!
+//! * **virtual** — the committed baseline. Every number is a closed-form
+//!   evaluation of the calibrated overhead model
+//!   ([`overhead::model`](crate::overhead::model) with
+//!   [`OverheadParams::paper_2022`]): serial time, best-grain parallel
+//!   time, the α/β/γ/δ overhead breakdown at the chosen grain, and the
+//!   serial/parallel crossover size. Virtual numbers are exactly
+//!   reproducible on any machine (no wall clock, no libm beyond `log2`),
+//!   which is what makes a *committed* perf file meaningful to diff —
+//!   they change only when the model, the parameters, or the estimates
+//!   change.
+//! * **wall** — measured on the host: the real kernels run with
+//!   [`Stopwatch`] timing, the pool's metrics delta converted to a
+//!   [`Ledger`] and priced by the same params, and every parallel result
+//!   checksum-verified against the serial reference before its time is
+//!   accepted. Wall numbers are host-specific and are *not* committed;
+//!   the CI gate compares them with a wide (15%) tolerance when used.
+//!
+//! Schema (`ohm-bench/v1`) is documented in `docs/BENCH.md`; the gate's
+//! Python mirror of the virtual arithmetic lives in `tools/bench_gate.py`.
+
+use crate::dla::{matmul, microkernel};
+use crate::overhead::{model, Ledger, OverheadParams, WorkEstimate};
+use crate::pool::ThreadPool;
+use crate::sort::{samplesort_inplace, serial_quicksort, PivotStrategy, SortCostModel};
+use crate::util::Stopwatch;
+use crate::workload::{arrays, matrices};
+
+/// Calibrated matmul multiply-add cost used by the virtual sweep
+/// (1 ns/op — the `paper_2022` work scale).
+pub const MATMUL_OP_NS: f64 = 1.0;
+
+/// Default sweep sizes (matmul order n ⇒ n³ work).
+pub const MATMUL_SIZES: [usize; 6] = [16, 32, 64, 128, 256, 512];
+/// Default sweep sizes (sort element count).
+pub const SORT_SIZES: [usize; 7] = [100, 300, 1000, 3000, 10_000, 30_000, 100_000];
+
+/// Which kernel domain a document covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topic {
+    Matmul,
+    Sort,
+}
+
+impl Topic {
+    pub fn name(self) -> &'static str {
+        match self {
+            Topic::Matmul => "matmul",
+            Topic::Sort => "sort",
+        }
+    }
+
+    pub fn default_sizes(self) -> Vec<usize> {
+        match self {
+            Topic::Matmul => MATMUL_SIZES.to_vec(),
+            Topic::Sort => SORT_SIZES.to_vec(),
+        }
+    }
+
+    /// The model estimate for one problem size — the single source of
+    /// truth shared by virtual mode, wall-mode grain choice, and the
+    /// crossover search (and mirrored by `tools/bench_gate.py`).
+    pub fn estimate(self, n: usize) -> WorkEstimate {
+        match self {
+            // n³ multiply-adds; distribution payload = A + C (B shared).
+            Topic::Matmul => WorkEstimate::fully_parallel(
+                n as f64 * n as f64 * n as f64 * MATMUL_OP_NS,
+                (2 * n * n * 4) as u64,
+            ),
+            Topic::Sort => crate::sort::estimate(n, &SortCostModel::paper_2022()),
+        }
+    }
+}
+
+/// Per-event overhead charge at the chosen grain, in ns (Ledger classes
+/// priced by [`OverheadParams`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverheadBreakdown {
+    pub spawn_ns: f64,
+    pub sync_ns: f64,
+    pub msg_ns: f64,
+    pub byte_ns: f64,
+}
+
+impl OverheadBreakdown {
+    pub fn total_ns(&self) -> f64 {
+        self.spawn_ns + self.sync_ns + self.msg_ns + self.byte_ns
+    }
+
+    /// Price a measured ledger with the given params.
+    pub fn from_ledger(ledger: &Ledger, params: &OverheadParams) -> Self {
+        OverheadBreakdown {
+            spawn_ns: params.alpha_spawn_ns * ledger.spawns as f64,
+            sync_ns: params.beta_sync_ns * ledger.syncs as f64,
+            msg_ns: params.gamma_msg_ns * ledger.messages as f64,
+            byte_ns: params.delta_byte_ns * ledger.bytes as f64,
+        }
+    }
+
+    /// The model's predicted charge for `tasks` tasks on `p` cores —
+    /// the same event counts `predict_parallel_ns` assumes.
+    pub fn predicted(params: &OverheadParams, est: &WorkEstimate, p: usize, tasks: usize) -> Self {
+        let migrations = tasks as f64 * (p.saturating_sub(1)) as f64 / p as f64;
+        let bytes_moved = est.dist_bytes as f64 * (p.saturating_sub(1)) as f64 / p as f64;
+        OverheadBreakdown {
+            spawn_ns: params.alpha_spawn_ns * tasks as f64,
+            sync_ns: params.beta_sync_ns * tasks as f64,
+            msg_ns: params.gamma_msg_ns * migrations,
+            byte_ns: params.delta_byte_ns * bytes_moved,
+        }
+    }
+}
+
+/// One measured (or predicted) sweep point.
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    pub n: usize,
+    pub serial_ns: f64,
+    pub parallel_ns: f64,
+    /// Task count the parallel time was taken at (model best grain).
+    pub tasks: usize,
+    pub speedup: f64,
+    pub overhead: OverheadBreakdown,
+}
+
+/// A complete `BENCH_<topic>.json` document.
+#[derive(Debug, Clone)]
+pub struct BenchDoc {
+    pub topic: Topic,
+    /// `"virtual"` or `"wall"`.
+    pub mode: &'static str,
+    pub cores: usize,
+    pub params: OverheadParams,
+    /// Smallest sweep size where parallel beats serial, if any.
+    pub crossover_n: Option<usize>,
+    pub points: Vec<BenchPoint>,
+    pub provenance: String,
+}
+
+/// Deterministic model-based sweep (the committed baseline).
+pub fn virtual_doc(
+    topic: Topic,
+    sizes: &[usize],
+    cores: usize,
+    params: &OverheadParams,
+) -> BenchDoc {
+    let points = sizes
+        .iter()
+        .map(|&n| {
+            let est = topic.estimate(n);
+            let serial_ns = model::predict_serial_ns(&est);
+            let (tasks, parallel_ns) = model::best_grain(params, &est, cores, 64 * cores);
+            BenchPoint {
+                n,
+                serial_ns,
+                parallel_ns,
+                tasks,
+                speedup: serial_ns / parallel_ns,
+                overhead: OverheadBreakdown::predicted(params, &est, cores, tasks),
+            }
+        })
+        .collect();
+    BenchDoc {
+        topic,
+        mode: "virtual",
+        cores,
+        params: *params,
+        crossover_n: model::crossover(params, cores, sizes, |n| topic.estimate(n)),
+        points,
+        provenance: format!(
+            "closed-form overhead model (overhead::model, paper_2022 params), {cores} cores; \
+             deterministic — no wall clock"
+        ),
+    }
+}
+
+/// Host-measured sweep. Each parallel result is checksum-verified against
+/// the serial reference before its timing is recorded; a mismatch panics
+/// (a wrong fast kernel must never produce a bench number).
+pub fn wall_doc(topic: Topic, sizes: &[usize], cores: usize, params: &OverheadParams) -> BenchDoc {
+    let pool = ThreadPool::new(cores);
+    let samples = 3usize;
+    let points = sizes
+        .iter()
+        .map(|&n| {
+            let est = topic.estimate(n);
+            let (tasks, _) = model::best_grain(params, &est, cores, 64 * cores);
+            let (serial_ns, parallel_ns, ledger) = match topic {
+                Topic::Matmul => wall_matmul_point(n, &pool, tasks, samples, est.dist_bytes),
+                Topic::Sort => wall_sort_point(n, &pool, tasks, samples),
+            };
+            BenchPoint {
+                n,
+                serial_ns,
+                parallel_ns,
+                tasks,
+                speedup: serial_ns / parallel_ns,
+                overhead: OverheadBreakdown::from_ledger(&ledger, params),
+            }
+        })
+        .collect();
+    // Wall crossover: first sweep size whose measured speedup exceeds 1.
+    let crossover_n = {
+        let pts: &Vec<BenchPoint> = &points;
+        pts.iter().find(|p| p.speedup > 1.0).map(|p| p.n)
+    };
+    BenchDoc {
+        topic,
+        mode: "wall",
+        cores,
+        params: *params,
+        crossover_n,
+        points,
+        provenance: format!("host-measured, min of {samples} samples, {cores}-thread pool"),
+    }
+}
+
+fn wall_matmul_point(
+    n: usize,
+    pool: &ThreadPool,
+    tasks: usize,
+    samples: usize,
+    dist_bytes: u64,
+) -> (f64, f64, Ledger) {
+    let a = matrices::uniform(n, n, 0xA0 ^ n as u64);
+    let b = matrices::uniform(n, n, 0xB0 ^ n as u64);
+    let want = matmul::serial(&a, &b);
+    let serial_ns = min_time_ns(samples, || {
+        let c = microkernel::multiply(&a, &b);
+        assert_eq!(c, want, "microkernel checksum mismatch at n={n}");
+    });
+    let before = pool.metrics();
+    let parallel_ns = min_time_ns(samples, || {
+        let c = matmul::parallel(&a, &b, pool, tasks);
+        assert_eq!(c, want, "parallel checksum mismatch at n={n}");
+    });
+    let delta = pool.metrics().delta_since(&before);
+    debug_assert!(delta.overhead_events() > 0, "parallel matmul must fork");
+    (serial_ns, parallel_ns, Ledger::from_metrics(&delta, dist_bytes))
+}
+
+fn wall_sort_point(
+    n: usize,
+    pool: &ThreadPool,
+    tasks: usize,
+    samples: usize,
+) -> (f64, f64, Ledger) {
+    let orig = arrays::uniform_i64(n, 0xC0 ^ n as u64);
+    let mut want = orig.clone();
+    serial_quicksort(&mut want, PivotStrategy::MedianOf3, 7);
+    let serial_ns = min_time_ns(samples, || {
+        let mut xs = orig.clone();
+        serial_quicksort(&mut xs, PivotStrategy::MedianOf3, 7);
+        assert_eq!(xs, want, "serial sort checksum mismatch at n={n}");
+    });
+    let buckets = tasks.max(2);
+    let before = pool.metrics();
+    let parallel_ns = min_time_ns(samples, || {
+        let mut xs = orig.clone();
+        samplesort_inplace(&mut xs, buckets, Some(pool), 7);
+        assert_eq!(xs, want, "samplesort checksum mismatch at n={n}");
+    });
+    let delta = pool.metrics().delta_since(&before);
+    (serial_ns, parallel_ns, Ledger::from_metrics(&delta, (n * 8) as u64))
+}
+
+fn min_time_ns(samples: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    (0..samples.max(1))
+        .map(|_| {
+            let sw = Stopwatch::start();
+            f();
+            sw.elapsed_ns() as f64
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+// --- JSON emission (hand-rolled: the workspace is offline, no serde) ---
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".into()
+    }
+}
+
+impl BenchDoc {
+    /// Serialize as the `ohm-bench/v1` JSON documented in `docs/BENCH.md`.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"ohm-bench/v1\",\n");
+        s.push_str(&format!("  \"topic\": \"{}\",\n", self.topic.name()));
+        s.push_str(&format!("  \"mode\": \"{}\",\n", self.mode));
+        s.push_str(&format!("  \"cores\": {},\n", self.cores));
+        s.push_str(&format!(
+            "  \"params\": {{\"alpha_spawn_ns\": {}, \"beta_sync_ns\": {}, \"gamma_msg_ns\": {}, \"delta_byte_ns\": {}}},\n",
+            jf(self.params.alpha_spawn_ns),
+            jf(self.params.beta_sync_ns),
+            jf(self.params.gamma_msg_ns),
+            jf(self.params.delta_byte_ns)
+        ));
+        match self.crossover_n {
+            Some(n) => s.push_str(&format!("  \"crossover_n\": {n},\n")),
+            None => s.push_str("  \"crossover_n\": null,\n"),
+        }
+        s.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            let o = &p.overhead;
+            s.push_str(&format!(
+                "    {{\"n\": {}, \"serial_ns\": {}, \"parallel_ns\": {}, \"tasks\": {}, \"speedup\": {}, \
+                 \"overhead\": {{\"spawn_ns\": {}, \"sync_ns\": {}, \"msg_ns\": {}, \"byte_ns\": {}, \"total_ns\": {}}}}}{}\n",
+                p.n,
+                jf(p.serial_ns),
+                jf(p.parallel_ns),
+                p.tasks,
+                jf(p.speedup),
+                jf(o.spawn_ns),
+                jf(o.sync_ns),
+                jf(o.msg_ns),
+                jf(o.byte_ns),
+                jf(o.total_ns()),
+                if i + 1 < self.points.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!("  \"provenance\": \"{}\"\n", self.provenance.replace('"', "'")));
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_matmul_has_crossover_and_speedup_above_it() {
+        let doc = virtual_doc(Topic::Matmul, &MATMUL_SIZES, 4, &OverheadParams::paper_2022());
+        let x = doc.crossover_n.expect("matmul sweep must cross over");
+        assert_eq!(x, 64, "paper_2022 4-core matmul crossover");
+        for p in doc.points.iter().filter(|p| p.n >= x) {
+            assert!(p.speedup > 1.0, "n={} speedup={}", p.n, p.speedup);
+        }
+        for p in doc.points.iter().filter(|p| p.n < x) {
+            assert!(p.speedup < 1.0, "below crossover parallel must lose (n={})", p.n);
+        }
+    }
+
+    #[test]
+    fn virtual_sort_crossover_in_sweep() {
+        let doc = virtual_doc(Topic::Sort, &SORT_SIZES, 4, &OverheadParams::paper_2022());
+        let x = doc.crossover_n.expect("sort sweep must cross over");
+        assert!(SORT_SIZES.contains(&x));
+        let last = doc.points.last().unwrap();
+        assert!(last.speedup > 1.5, "large sorts must show real speedup: {}", last.speedup);
+    }
+
+    #[test]
+    fn virtual_overhead_breakdown_is_consistent() {
+        // serial − (parallel − overhead) must equal the modeled compute
+        // gap: parallel = critical_path + overhead exactly.
+        let doc = virtual_doc(Topic::Matmul, &[256], 4, &OverheadParams::paper_2022());
+        let p = &doc.points[0];
+        let est = Topic::Matmul.estimate(256);
+        let waves = p.tasks.div_ceil(4) as f64;
+        let critical = est.total_work_ns * waves / p.tasks as f64;
+        assert!((p.parallel_ns - (critical + p.overhead.total_ns())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_shape_round_trips_key_fields() {
+        let doc = virtual_doc(Topic::Matmul, &[16, 64], 4, &OverheadParams::paper_2022());
+        let j = doc.to_json();
+        assert!(j.contains("\"schema\": \"ohm-bench/v1\""));
+        assert!(j.contains("\"topic\": \"matmul\""));
+        assert!(j.contains("\"mode\": \"virtual\""));
+        assert!(j.contains("\"crossover_n\": 64"));
+        assert_eq!(j.matches("\"n\": ").count(), 2, "one per sweep point");
+        // Determinism: same inputs, same bytes.
+        let again = virtual_doc(Topic::Matmul, &[16, 64], 4, &OverheadParams::paper_2022());
+        assert_eq!(j, again.to_json());
+    }
+
+    #[test]
+    fn wall_mode_small_sweep_verifies_checksums() {
+        // Tiny sizes: exercises the measurement + checksum path quickly.
+        // (Timing values are not asserted — only correctness plumbing.)
+        let doc = wall_doc(Topic::Matmul, &[16, 32], 2, &OverheadParams::paper_2022());
+        assert_eq!(doc.points.len(), 2);
+        assert!(doc.points.iter().all(|p| p.serial_ns > 0.0 && p.parallel_ns > 0.0));
+        let doc = wall_doc(Topic::Sort, &[100, 1000], 2, &OverheadParams::paper_2022());
+        assert_eq!(doc.points.len(), 2);
+        assert!(doc.points.iter().all(|p| p.serial_ns > 0.0));
+    }
+}

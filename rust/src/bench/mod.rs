@@ -9,6 +9,8 @@
 //! statistical confidence — they are deterministic — so [`Runner::record`]
 //! also accepts externally-computed values (e.g. simulated microseconds).
 
+pub mod kernel;
+
 use crate::stats::Summary;
 use crate::util::timer::fmt_ns;
 use std::fs;

@@ -38,6 +38,13 @@
 //!           # (split hit-path vs miss-path when a result cache answers),
 //!           # goodput vs offered load under jittered BUSY/OVERLOADED
 //!           # retries, optionally DRAIN and save the final STATS
+//! ohm bench [--json] [--topic matmul|sort|all] [--mode virtual|wall]
+//!           [--cores N] [--sizes N,N,...] [--out DIR]
+//!           # kernel perf trajectory: size sweep per topic, serial vs
+//!           # best-grain parallel, α/β/γ/δ overhead breakdown, crossover
+//!           # size; --json writes BENCH_<topic>.json (schema ohm-bench/v1,
+//!           # docs/BENCH.md) for the committed baselines tools/bench_gate.py
+//!           # regression-gates in CI
 //! ohm calibrate [--budget-ms N]
 //! ohm gantt (--matmul N | --sort N) [--cores N]
 //! ohm artifacts [--dir D]
@@ -64,7 +71,7 @@ use parser::Args;
 use std::fmt::Write as _;
 use std::path::Path;
 
-const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|calibrate|gantt|artifacts> [flags]
+const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|bench|calibrate|gantt|artifacts> [flags]
   experiment <id|all>   regenerate paper tables/figures (see DESIGN.md §5)
   matmul --n N          run one overhead-managed matmul
   sort --n N            run one overhead-managed quicksort
@@ -101,6 +108,13 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|calibrate|
                         prints client-side p50/p90/p99 — hit vs miss path
                         when cached — plus goodput vs offered load and
                         shed counts)
+  bench                 kernel perf sweep: serial vs best-grain parallel
+                        with the α/β/γ/δ overhead breakdown and the
+                        serial/parallel crossover size per topic
+                        (--topic matmul|sort|all, --mode virtual|wall,
+                        --cores N, --sizes N,N,..., --json writes
+                        BENCH_<topic>.json baselines to --out DIR;
+                        schema + gate threshold: docs/BENCH.md)
   calibrate             probe host overhead constants
   gantt                 render a simulated schedule
   artifacts             list AOT artifacts\n";
@@ -115,6 +129,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         Some("sort") => cmd_sort(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("bench") => cmd_bench(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("gantt") => cmd_gantt(&args),
         Some("artifacts") => cmd_artifacts(&args),
@@ -751,6 +766,83 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     Ok(text)
 }
 
+/// Kernel perf trajectory: per-topic size sweep of serial vs best-grain
+/// parallel with the priced overhead breakdown and the crossover size.
+/// `--json` writes the `BENCH_<topic>.json` baselines the CI `bench-gate`
+/// job compares against (schema and thresholds: docs/BENCH.md).
+fn cmd_bench(args: &Args) -> Result<String> {
+    use crate::bench::kernel::{self, Topic};
+    let mode = args.get("mode").unwrap_or("virtual");
+    if !matches!(mode, "virtual" | "wall") {
+        bail!("flag --mode: unknown mode {mode:?} (virtual|wall)");
+    }
+    let cores = args.get_parsed::<usize>("cores")?.unwrap_or(4).max(1);
+    let topics: Vec<Topic> = match args.get("topic").unwrap_or("all") {
+        "matmul" => vec![Topic::Matmul],
+        "sort" => vec![Topic::Sort],
+        "all" => vec![Topic::Matmul, Topic::Sort],
+        other => bail!("flag --topic: unknown topic {other:?} (matmul|sort|all)"),
+    };
+    let sizes_override: Option<Vec<usize>> = match args.get("sizes") {
+        Some(s) => Some(
+            s.split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| n > 0)
+                        .with_context(|| format!("flag --sizes: bad size {t:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        None => None,
+    };
+    let params = OverheadParams::paper_2022();
+    let mut text = String::new();
+    for topic in topics {
+        let sizes = sizes_override.clone().unwrap_or_else(|| topic.default_sizes());
+        let doc = match mode {
+            "virtual" => kernel::virtual_doc(topic, &sizes, cores, &params),
+            _ => kernel::wall_doc(topic, &sizes, cores, &params),
+        };
+        if args.has("json") {
+            let dir = Path::new(args.get("out").unwrap_or("."));
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating bench output dir {}", dir.display()))?;
+            let path = dir.join(format!("BENCH_{}.json", topic.name()));
+            std::fs::write(&path, doc.to_json())
+                .with_context(|| format!("writing {}", path.display()))?;
+            writeln!(text, "wrote {}", path.display()).unwrap();
+        } else {
+            use crate::report::{table::f, AsciiTable};
+            let crossover = doc
+                .crossover_n
+                .map_or("none in sweep".to_string(), |n| format!("n={n}"));
+            let mut table = AsciiTable::new(
+                &format!(
+                    "bench {} ({} mode, {cores} cores) — serial/parallel crossover: {crossover}",
+                    topic.name(),
+                    doc.mode
+                ),
+                &["n", "serial ms", "parallel ms", "tasks", "speedup", "overhead ms"],
+            );
+            for p in &doc.points {
+                table.row(vec![
+                    p.n.to_string(),
+                    f(p.serial_ns / 1e6, 3),
+                    f(p.parallel_ns / 1e6, 3),
+                    p.tasks.to_string(),
+                    format!("{:.2}x", p.speedup),
+                    f(p.overhead.total_ns() / 1e6, 3),
+                ]);
+            }
+            text.push_str(&table.render());
+            text.push('\n');
+        }
+    }
+    Ok(text)
+}
+
 fn cmd_calibrate(args: &Args) -> Result<String> {
     let budget = args.get_parsed::<u64>("budget-ms")?.unwrap_or(1000);
     let cal = Calibration::with_fallback(budget);
@@ -851,6 +943,33 @@ mod tests {
     fn gantt_renders() {
         let out = call(&["gantt", "--sort", "2000"]).unwrap();
         assert!(out.contains("core  0"), "{out}");
+    }
+
+    #[test]
+    fn bench_virtual_table_reports_crossover() {
+        let out = call(&["bench", "--topic", "matmul", "--cores", "4"]).unwrap();
+        assert!(out.contains("crossover: n=64"), "{out}");
+        assert!(out.contains("speedup"), "{out}");
+    }
+
+    #[test]
+    fn bench_json_writes_baseline_files() {
+        let dir = std::env::temp_dir().join("ohm-cli-bench");
+        let out = call(&["bench", "--json", "--out", dir.to_str().unwrap()]).unwrap();
+        assert!(out.contains("BENCH_matmul.json"), "{out}");
+        assert!(out.contains("BENCH_sort.json"), "{out}");
+        let j = std::fs::read_to_string(dir.join("BENCH_matmul.json")).unwrap();
+        assert!(j.contains("\"schema\": \"ohm-bench/v1\""));
+        assert!(j.contains("\"mode\": \"virtual\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_rejects_bad_flags() {
+        assert!(call(&["bench", "--topic", "fft"]).is_err());
+        assert!(call(&["bench", "--mode", "turbo"]).is_err());
+        assert!(call(&["bench", "--sizes", "10,x"]).is_err());
+        assert!(call(&["bench", "--sizes", "0"]).is_err());
     }
 
     #[test]

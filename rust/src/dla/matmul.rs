@@ -18,6 +18,7 @@
 //!   dispatches to the context's engine.
 
 use super::matrix::Matrix;
+use super::microkernel;
 use crate::exec::{Engine, ExecCtx, RunReport};
 use crate::overhead::{Ledger, WorkEstimate};
 use crate::pool::ThreadPool;
@@ -127,10 +128,10 @@ pub fn parallel(a: &Matrix, b: &Matrix, pool: &ThreadPool, tasks: usize) -> Matr
         pool.scope(|s| {
             for (ci, chunk) in chunks {
                 s.spawn(move |_| {
-                    let row0 = ci * chunk_rows;
-                    for (r, crow) in chunk.chunks_mut(n).enumerate() {
-                        matmul_row(a, b, crow, row0 + r);
-                    }
+                    // Packed microkernel per chunk; bit-identical to the
+                    // per-row axpy it replaces (see `dla::microkernel`).
+                    let rows = chunk.len() / n;
+                    microkernel::multiply_rows(a, b, chunk, ci * chunk_rows, rows);
                 });
             }
         });

@@ -1,0 +1,200 @@
+//! Packed register-blocked matmul microkernel — the layer *below* the
+//! row-block [`parallel`](super::matmul::parallel) distribution and the
+//! [`strassen`](super::strassen) recursion.
+//!
+//! The existing [`blocked`](super::matmul::blocked) engine tiles the
+//! loop nest but still walks `A` and `B` in their row-major layouts, so
+//! the inner axpy strides through `B` one full row per `k` step. This
+//! kernel adds the two classical GEMM refinements under it:
+//!
+//! * **Packing** — for each `KC`-deep slice of the contraction, `A` is
+//!   repacked into `MR`-row panels and `B` into `NR`-column panels, both
+//!   k-major, so the microkernel reads two small contiguous streams
+//!   regardless of the matrices' true leading dimensions;
+//! * **Register tiling** — an `MR`×`NR` accumulator block lives in
+//!   registers across the whole `KC` loop, turning ~`MR·NR` loads per
+//!   `k` step into `MR + NR`.
+//!
+//! **Bit-exactness contract.** Every output element accumulates its
+//! products in strictly ascending `k` order — `KC` slices are processed
+//! in order and the microkernel's `k` loop is ascending — which is
+//! exactly the accumulation order of the serial reference
+//! (`matmul::serial`'s axpy walks `k` ascending). Products are computed
+//! as a single f32 multiply followed by an f32 add (Rust never
+//! contracts to FMA implicitly), so the result is **bit-identical** to
+//! `serial`, not merely close: the property tests in
+//! `rust/tests/prop_kernels.rs` assert `==`, including non-power-of-two
+//! and size-0/1 edges. That is what lets it slot under Strassen's base
+//! case and `parallel`'s row chunks without perturbing any existing
+//! cross-engine equality test.
+
+use super::matrix::Matrix;
+
+/// Microkernel rows (register-tile height).
+pub const MR: usize = 4;
+/// Microkernel columns (register-tile width; two f32x4 lanes).
+pub const NR: usize = 8;
+/// Contraction depth per packed slice (panel working set ≈ L2-sized:
+/// `KC·(MR+NR)·4` bytes per active pair of panels).
+pub const KC: usize = 256;
+
+/// `C = A·B` via the packed microkernel. Drop-in replacement for
+/// [`super::matmul::serial`] with identical (bit-exact) results.
+pub fn multiply(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "contraction mismatch");
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    multiply_rows(a, b, c.data_mut(), 0, a.rows());
+    c
+}
+
+/// Compute rows `[row0, row0 + rows)` of `C = A·B` into `out`
+/// (`rows × b.cols()` row-major). This is the entry point the parallel
+/// engine uses: each spawned task owns a disjoint row chunk of `C` and
+/// runs the packed kernel on it independently.
+pub fn multiply_rows(a: &Matrix, b: &Matrix, out: &mut [f32], row0: usize, rows: usize) {
+    let (k, n) = (a.cols(), b.cols());
+    debug_assert_eq!(out.len(), rows * n);
+    if rows == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let rows_main = rows - rows % MR;
+    let n_main = n - n % NR;
+    // Panel buffers, reused across KC slices.
+    let mut apack = vec![0.0f32; rows_main.max(1) * KC.min(k)];
+    let mut bpack = vec![0.0f32; n_main.max(1) * KC.min(k)];
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        // Pack A[row0.., k0..k0+kc] into MR-row panels, k-major: panel
+        // `ir` holds kc groups of MR consecutive row elements.
+        for ir in (0..rows_main).step_by(MR) {
+            let dst = &mut apack[ir * kc..(ir + MR) * kc];
+            for (kk, group) in dst.chunks_exact_mut(MR).enumerate() {
+                for (r, slot) in group.iter_mut().enumerate() {
+                    *slot = a.get(row0 + ir + r, k0 + kk);
+                }
+            }
+        }
+        // Pack B[k0..k0+kc, ..n_main] into NR-column panels, k-major.
+        for jr in (0..n_main).step_by(NR) {
+            let dst = &mut bpack[jr * kc..(jr + NR) * kc];
+            for (kk, group) in dst.chunks_exact_mut(NR).enumerate() {
+                group.copy_from_slice(&b.row(k0 + kk)[jr..jr + NR]);
+            }
+        }
+        // Main region: MR×NR register tiles over the packed panels.
+        for ir in (0..rows_main).step_by(MR) {
+            let ap = &apack[ir * kc..(ir + MR) * kc];
+            for jr in (0..n_main).step_by(NR) {
+                let bp = &bpack[jr * kc..(jr + NR) * kc];
+                kernel(ap, bp, kc, out, ir, jr, n);
+            }
+            // Column tail for the main rows: scalar axpy, k ascending.
+            if n_main < n {
+                for r in 0..MR {
+                    let crow = &mut out[(ir + r) * n + n_main..(ir + r) * n + n];
+                    for kk in 0..kc {
+                        let aik = ap[kk * MR + r];
+                        let brow = &b.row(k0 + kk)[n_main..];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+        }
+        // Row tail: plain k-ascending axpy over the whole width.
+        for i in rows_main..rows {
+            let crow = &mut out[i * n..(i + 1) * n];
+            for kk in 0..kc {
+                let aik = a.get(row0 + i, k0 + kk);
+                let brow = b.row(k0 + kk);
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// The MR×NR register-tile kernel: load the accumulator block from `C`,
+/// stream the two packed panels over `kc` ascending, write back. The
+/// accumulator array is small enough (`MR·NR` f32) for LLVM to keep it
+/// entirely in vector registers.
+#[inline]
+fn kernel(ap: &[f32], bp: &[f32], kc: usize, out: &mut [f32], ir: usize, jr: usize, n: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, row) in acc.iter_mut().enumerate() {
+        row.copy_from_slice(&out[(ir + r) * n + jr..(ir + r) * n + jr + NR]);
+    }
+    for kk in 0..kc {
+        let av = &ap[kk * MR..kk * MR + MR];
+        let bv = &bp[kk * NR..kk * NR + NR];
+        for (row, &aik) in acc.iter_mut().zip(av) {
+            for (cv, &bvv) in row.iter_mut().zip(bv) {
+                *cv += aik * bvv;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        out[(ir + r) * n + jr..(ir + r) * n + jr + NR].copy_from_slice(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dla::matmul;
+    use crate::workload::matrices;
+
+    #[test]
+    fn bit_identical_to_serial_square() {
+        for n in [1usize, 2, 4, 16, 64, 128] {
+            let a = matrices::uniform(n, n, n as u64);
+            let b = matrices::uniform(n, n, n as u64 + 100);
+            assert_eq!(multiply(&a, &b), matmul::serial(&a, &b), "n={n}");
+        }
+    }
+
+    #[test]
+    fn bit_identical_rectangular_and_ragged() {
+        // Shapes straddling every MR/NR/KC edge: primes, exact tiles,
+        // one-off tiles.
+        for (m, k, n) in [(3, 5, 7), (4, 8, 8), (5, 9, 9), (13, 17, 9), (31, 257, 33)] {
+            let a = matrices::uniform(m, k, 7);
+            let b = matrices::uniform(k, n, 8);
+            assert_eq!(multiply(&a, &b), matmul::serial(&a, &b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims() {
+        let a = matrices::uniform(0, 4, 1);
+        let b = matrices::uniform(4, 3, 2);
+        assert_eq!(multiply(&a, &b).rows(), 0);
+        let a = matrices::uniform(3, 0, 1);
+        let b = matrices::uniform(0, 2, 2);
+        let c = multiply(&a, &b);
+        assert!(c.data().iter().all(|&v| v == 0.0), "empty contraction is zero");
+        let a = matrices::uniform(2, 3, 1);
+        let b = matrices::uniform(3, 0, 2);
+        assert_eq!(multiply(&a, &b).data().len(), 0);
+    }
+
+    #[test]
+    fn multiply_rows_computes_one_chunk() {
+        let a = matrices::uniform(10, 12, 3);
+        let b = matrices::uniform(12, 11, 4);
+        let want = matmul::serial(&a, &b);
+        let mut chunk = vec![0.0f32; 4 * 11];
+        multiply_rows(&a, &b, &mut chunk, 5, 4);
+        for r in 0..4 {
+            assert_eq!(&chunk[r * 11..(r + 1) * 11], want.row(5 + r), "row {r}");
+        }
+    }
+}

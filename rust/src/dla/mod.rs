@@ -4,6 +4,7 @@
 pub mod chain;
 pub mod matmul;
 pub mod matrix;
+pub mod microkernel;
 pub mod strassen;
 
 pub use matrix::Matrix;

@@ -14,8 +14,8 @@
 //! row-block matmul, which is why the paper's "each problem space
 //! requires detailed and independent analysis" conclusion applies.
 
-use super::matmul;
 use super::matrix::Matrix;
+use super::microkernel;
 use crate::pool::ThreadPool;
 
 /// Below this order, fall back to the tuned classical kernel.
@@ -28,7 +28,9 @@ pub fn strassen(a: &Matrix, b: &Matrix, cutoff: usize) -> Matrix {
     let n = a.rows();
     let cutoff = cutoff.max(2);
     if n <= cutoff || n % 2 != 0 {
-        return matmul::serial(a, b);
+        // Base case: the packed microkernel (bit-identical to
+        // `matmul::serial`, so Strassen's cross-engine tests still hold).
+        return microkernel::multiply(a, b);
     }
     let (a11, a12, a21, a22) = split(a);
     let (b11, b12, b21, b22) = split(b);
@@ -153,6 +155,7 @@ fn combine(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dla::matmul;
     use crate::workload::matrices;
 
     #[test]

@@ -73,6 +73,12 @@ impl MetricsSnapshot {
             overflow_inline: self.overflow_inline - earlier.overflow_inline,
         }
     }
+
+    /// Total α/β/γ-class events in this snapshot — the scalar the bench
+    /// harness checks to confirm a "parallel" measurement actually forked.
+    pub fn overhead_events(&self) -> u64 {
+        self.spawns + self.injected + self.latch_waits + self.steals
+    }
 }
 
 #[cfg(test)]

@@ -17,10 +17,12 @@ pub mod baselines;
 pub mod parallel;
 pub mod pivot;
 pub mod quicksort;
+pub mod samplesort_inplace;
 
 pub use parallel::parallel_quicksort;
 pub use pivot::PivotStrategy;
 pub use quicksort::{serial_quicksort, OpCounts};
+pub use samplesort_inplace::samplesort_inplace;
 
 use crate::overhead::WorkEstimate;
 

@@ -1,0 +1,211 @@
+//! Multi-pivot samplesort with **in-place** partitioning.
+//!
+//! [`baselines::samplesort`](super::baselines::samplesort) scatters into
+//! per-bucket `Vec`s and gathers back — 2n element moves and ~n·8 bytes
+//! of transient allocation per call. This variant keeps the same
+//! splitter-selection scheme (oversampled random sample, one splitter per
+//! bucket boundary) but partitions with the American-flag cycle-following
+//! permutation: one counting pass, then each misplaced element is walked
+//! around its permutation cycle directly into its destination bucket, so
+//! the only allocations are the `O(buckets)` cursor arrays.
+//!
+//! The buckets are then disjoint sub-slices of the input, so the
+//! per-bucket sorts run on the pool via `split_at_mut` chunks with no
+//! copy-out/copy-in — the p-way generalization of the paper's in-place
+//! master-slave quicksort split, without the scatter/gather overhead the
+//! Ledger would book as `bytes_moved`.
+
+use super::quicksort::OpCounts;
+use super::PivotStrategy;
+use crate::pool::ThreadPool;
+use crate::util::Pcg32;
+
+const OVERSAMPLE: usize = 8;
+const SMALL_CUTOFF: usize = 64;
+
+/// Sort `xs` ascending with `buckets`-way in-place samplesort; buckets
+/// sort on `pool` when one is supplied. Deterministic for a given
+/// `(xs, buckets, seed)` regardless of pool size.
+pub fn samplesort_inplace(
+    xs: &mut [i64],
+    buckets: usize,
+    pool: Option<&ThreadPool>,
+    seed: u64,
+) -> OpCounts {
+    let n = xs.len();
+    let buckets = buckets.clamp(1, n.max(1));
+    if n <= SMALL_CUTOFF || buckets == 1 {
+        let mut ops = OpCounts::default();
+        let mut rng = Pcg32::new(seed);
+        super::quicksort::quicksort_rec(xs, PivotStrategy::MedianOf3, &mut rng, &mut ops);
+        return ops;
+    }
+    let mut ops = OpCounts::default();
+    let mut rng = Pcg32::new(seed);
+
+    // Oversampled splitters — same selection scheme as the scatter
+    // baseline so the two variants see comparable bucket balance.
+    let mut sample: Vec<i64> =
+        (0..buckets * OVERSAMPLE).map(|_| xs[rng.below(n as u64) as usize]).collect();
+    sample.sort_unstable();
+    ops.scan_ops += sample.len() as u64;
+    let splitters: Vec<i64> = (1..buckets).map(|i| sample[i * OVERSAMPLE]).collect();
+    let classify_cost = (splitters.len().max(1)).ilog2() as u64 + 1;
+
+    // Counting pass: bucket sizes → [start, end) ranges.
+    let mut counts = vec![0usize; buckets];
+    for &v in xs.iter() {
+        counts[splitters.partition_point(|&s| s < v)] += 1;
+        ops.comparisons += classify_cost;
+    }
+    let mut starts = vec![0usize; buckets];
+    for b in 1..buckets {
+        starts[b] = starts[b - 1] + counts[b - 1];
+    }
+    let ends: Vec<usize> = starts.iter().zip(&counts).map(|(&s, &c)| s + c).collect();
+
+    // American-flag permutation: `next[b]` is the first not-yet-settled
+    // slot of bucket `b`. Every element left of `next[b]` within bucket
+    // `b` is already home, so each element moves at most once.
+    let mut next = starts;
+    for b in 0..buckets {
+        while next[b] < ends[b] {
+            let slot = next[b];
+            let mut v = xs[slot];
+            let mut dest = splitters.partition_point(|&s| s < v);
+            ops.comparisons += classify_cost;
+            while dest != b {
+                // Follow the cycle: swap `v` into its destination's
+                // cursor slot and continue with the evicted element.
+                let d = next[dest];
+                next[dest] += 1;
+                core::mem::swap(&mut v, &mut xs[d]);
+                ops.swaps += 1;
+                dest = splitters.partition_point(|&s| s < v);
+                ops.comparisons += classify_cost;
+            }
+            xs[slot] = v;
+            next[b] += 1;
+        }
+    }
+
+    // Buckets are now disjoint slices — carve them out and sort each,
+    // on the pool when supplied. Per-bucket RNG seeds match the scatter
+    // baseline so pivot sequences are comparable.
+    let mut slices: Vec<&mut [i64]> = Vec::with_capacity(buckets);
+    let mut rest = xs;
+    for &c in &counts {
+        let (head, tail) = rest.split_at_mut(c);
+        slices.push(head);
+        rest = tail;
+    }
+    let bucket_ops: Vec<OpCounts> = match pool {
+        Some(pool) => {
+            let mut slots: Vec<OpCounts> = vec![OpCounts::default(); buckets];
+            {
+                let jobs: Vec<(&mut OpCounts, &mut [i64])> =
+                    slots.iter_mut().zip(slices).collect();
+                pool.scope(|s| {
+                    for (bi, (slot, part)) in jobs.into_iter().enumerate() {
+                        s.spawn(move |_| {
+                            let mut o = OpCounts::default();
+                            let mut r = Pcg32::new(seed ^ (bi as u64) << 20);
+                            super::quicksort::quicksort_rec(
+                                part,
+                                PivotStrategy::MedianOf3,
+                                &mut r,
+                                &mut o,
+                            );
+                            *slot = o;
+                        });
+                    }
+                });
+            }
+            slots
+        }
+        None => slices
+            .into_iter()
+            .enumerate()
+            .map(|(bi, part)| {
+                let mut o = OpCounts::default();
+                let mut r = Pcg32::new(seed ^ (bi as u64) << 20);
+                super::quicksort::quicksort_rec(part, PivotStrategy::MedianOf3, &mut r, &mut o);
+                o
+            })
+            .collect(),
+    };
+    for o in bucket_ops {
+        ops = ops.merged(&o);
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sort::{is_permutation, is_sorted, serial_quicksort};
+    use crate::workload::arrays::{self, Distribution};
+
+    fn check(n: usize, buckets: usize, dist: Distribution, pool: Option<&ThreadPool>) {
+        let orig = arrays::generate(n, dist, 123);
+        let mut xs = orig.clone();
+        samplesort_inplace(&mut xs, buckets, pool, 5);
+        assert!(is_sorted(&xs), "n={n} buckets={buckets} {}", dist.name());
+        assert!(is_permutation(&xs, &orig));
+    }
+
+    #[test]
+    fn sorts_across_sizes_and_bucket_counts() {
+        for n in [0usize, 1, 2, 17, 64, 65, 100, 1000, 5000] {
+            for buckets in [1usize, 2, 8, 16] {
+                check(n, buckets, Distribution::UniformRandom, None);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_distributions() {
+        for dist in [
+            Distribution::Sorted,
+            Distribution::Reverse,
+            Distribution::FewUnique { k: 3 },
+        ] {
+            check(3000, 8, dist, None);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_exactly() {
+        let pool = ThreadPool::new(3);
+        for n in [65usize, 1000, 5000] {
+            let orig = arrays::uniform_i64(n, 9);
+            let (mut a, mut b) = (orig.clone(), orig.clone());
+            let oa = samplesort_inplace(&mut a, 8, None, 5);
+            let ob = samplesort_inplace(&mut b, 8, Some(&pool), 5);
+            assert_eq!(a, b, "n={n}");
+            // Same splitters + same per-bucket seeds ⇒ same op counts.
+            assert_eq!(oa, ob, "n={n}");
+        }
+        check(5000, 8, Distribution::FewUnique { k: 4 }, Some(&pool));
+    }
+
+    #[test]
+    fn output_matches_serial_quicksort_reference() {
+        for n in [0usize, 1, 100, 2500] {
+            let orig = arrays::uniform_i64(n, 31);
+            let mut a = orig.clone();
+            let mut b = orig.clone();
+            samplesort_inplace(&mut a, 8, None, 7);
+            serial_quicksort(&mut b, PivotStrategy::Random, 7);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn counts_include_partition_work() {
+        let mut xs = arrays::uniform_i64(2000, 2);
+        let ops = samplesort_inplace(&mut xs, 8, None, 1);
+        assert!(ops.comparisons > 2000, "classification counted: {ops:?}");
+        assert!(ops.swaps > 0, "cycle moves counted");
+    }
+}

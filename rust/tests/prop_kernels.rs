@@ -1,0 +1,141 @@
+//! Property tests for the PR's two fast kernels and the committed bench
+//! baselines:
+//!
+//! * the packed matmul microkernel is **bit-identical** to
+//!   `matmul::serial` (not approximately equal) across random shapes,
+//!   including non-power-of-two and size-0/1 edges — the contract that
+//!   lets it slot under Strassen and the parallel row-chunker;
+//! * in-place samplesort produces exactly the serial reference's output
+//!   (and the same operation counts serial vs pooled) across sizes,
+//!   bucket counts, and adversarial distributions;
+//! * the committed `BENCH_matmul.json` is byte-identical to what this
+//!   build's virtual sweep emits (the matmul model is libm-free, so its
+//!   f64 arithmetic is exactly reproducible everywhere), and the
+//!   committed `BENCH_sort.json` agrees on the integer fields (its
+//!   `log2` may differ by 1 ulp across libms, so floats get a gate-side
+//!   tolerance instead — see tools/bench_gate.py).
+
+use ohm::bench::kernel::{virtual_doc, Topic, MATMUL_SIZES, SORT_SIZES};
+use ohm::dla::{matmul, microkernel};
+use ohm::overhead::OverheadParams;
+use ohm::pool::ThreadPool;
+use ohm::sort::{samplesort_inplace, serial_quicksort, PivotStrategy};
+use ohm::util::Pcg32;
+use ohm::workload::{arrays, matrices};
+
+#[test]
+fn microkernel_bit_identical_random_shapes() {
+    let mut rng = Pcg32::new(0xFEED);
+    for trial in 0..40 {
+        let m = rng.below(70) as usize;
+        let k = rng.below(300) as usize;
+        let n = rng.below(40) as usize;
+        let a = matrices::uniform(m, k, trial * 2 + 1);
+        let b = matrices::uniform(k, n, trial * 2 + 2);
+        assert_eq!(
+            microkernel::multiply(&a, &b),
+            matmul::serial(&a, &b),
+            "shape {m}x{k}x{n} (trial {trial})"
+        );
+    }
+}
+
+#[test]
+fn microkernel_edges_and_tile_boundaries() {
+    // Every row/col/depth combination straddling the MR=4 / NR=8 /
+    // KC=256 tile boundaries, plus the degenerate sizes.
+    for &m in &[0usize, 1, 3, 4, 5, 8] {
+        for &n in &[0usize, 1, 7, 8, 9, 16] {
+            for &k in &[0usize, 1, 255, 256, 257] {
+                let a = matrices::uniform(m, k, 11);
+                let b = matrices::uniform(k, n, 12);
+                assert_eq!(
+                    microkernel::multiply(&a, &b),
+                    matmul::serial(&a, &b),
+                    "shape {m}x{k}x{n}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_matmul_still_bit_identical_through_microkernel() {
+    // The parallel engine now routes chunks through the microkernel;
+    // the historical bit-identity guarantee must survive that rewiring.
+    let pool = ThreadPool::new(3);
+    for &n in &[1usize, 13, 64, 130] {
+        let a = matrices::uniform(n, n, n as u64 + 40);
+        let b = matrices::uniform(n, n, n as u64 + 41);
+        let want = matmul::serial(&a, &b);
+        for &tasks in &[1usize, 2, 7, 32] {
+            assert_eq!(matmul::parallel(&a, &b, &pool, tasks), want, "n={n} tasks={tasks}");
+        }
+    }
+}
+
+#[test]
+fn samplesort_inplace_matches_serial_reference() {
+    // i64 sorting has a unique ascending output, so any correct sorter
+    // must match serial quicksort exactly.
+    for &n in &[0usize, 1, 2, 16, 17, 64, 65, 100, 1000, 4097] {
+        for &buckets in &[1usize, 2, 8, 13] {
+            let orig = arrays::uniform_i64(n, n as u64 ^ 0x51);
+            let mut got = orig.clone();
+            let mut want = orig.clone();
+            samplesort_inplace(&mut got, buckets, None, 9);
+            serial_quicksort(&mut want, PivotStrategy::MedianOf3, 9);
+            assert_eq!(got, want, "n={n} buckets={buckets}");
+        }
+    }
+}
+
+#[test]
+fn samplesort_inplace_pool_equals_serial_run() {
+    let pool = ThreadPool::new(4);
+    for &n in &[65usize, 1000, 20_000] {
+        let orig = arrays::uniform_i64(n, 0xD00D ^ n as u64);
+        let (mut a, mut b) = (orig.clone(), orig.clone());
+        let oa = samplesort_inplace(&mut a, 8, None, 3);
+        let ob = samplesort_inplace(&mut b, 8, Some(&pool), 3);
+        assert_eq!(a, b, "n={n}");
+        assert_eq!(oa, ob, "op counts must not depend on the pool (n={n})");
+    }
+}
+
+#[test]
+fn committed_matmul_baseline_matches_this_build() {
+    let committed = include_str!("../../BENCH_matmul.json");
+    let doc = virtual_doc(Topic::Matmul, &MATMUL_SIZES, 4, &OverheadParams::paper_2022());
+    assert_eq!(
+        doc.to_json(),
+        committed,
+        "BENCH_matmul.json is stale — regenerate with `ohm bench --json --topic matmul`"
+    );
+}
+
+#[test]
+fn committed_sort_baseline_integer_fields_match() {
+    let committed = include_str!("../../BENCH_sort.json");
+    let doc = virtual_doc(Topic::Sort, &SORT_SIZES, 4, &OverheadParams::paper_2022());
+    // Integer fields are libm-independent; floats are gate-checked with
+    // a tolerance in tools/bench_gate.py instead.
+    let crossover = doc.crossover_n.expect("sort sweep crosses over");
+    assert!(
+        committed.contains(&format!("\"crossover_n\": {crossover}")),
+        "committed sort crossover disagrees with this build (want {crossover})"
+    );
+    for p in &doc.points {
+        assert!(
+            committed.contains(&format!("\"n\": {}, ", p.n)),
+            "committed sort sweep missing n={}",
+            p.n
+        );
+        assert!(
+            committed.contains(&format!("\"tasks\": {}, ", p.tasks)),
+            "committed sort grain disagrees at n={} (want tasks={})",
+            p.n,
+            p.tasks
+        );
+    }
+}

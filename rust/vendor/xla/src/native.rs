@@ -1,0 +1,139 @@
+//! dlopen-based PJRT plugin loader (`feature = "pjrt"`).
+//!
+//! The real `xla` crate links `libxla_extension` at build time, which
+//! would break the default offline build. This loader instead resolves
+//! the plugin at *runtime*: it dlopens the shared library and looks up
+//! `GetPjrtApi`, the standard entry point every PJRT C-API plugin
+//! exports. A successful load proves a usable plugin is present;
+//! lowering HLO through the C API is the next step on the ROADMAP and
+//! until then compile/execute keep returning [`crate::Error`], so the
+//! coordinator's CPU fallback stays intact either way.
+//!
+//! Search order for the library:
+//! 1. `$XLA_EXTENSION_DIR/lib/libxla_extension.so`
+//! 2. `$XLA_EXTENSION_DIR/libxla_extension.so`
+//! 3. `libxla_extension.so` on the default dynamic-linker path
+
+use std::ffi::{c_char, c_int, c_void, CStr, CString};
+use std::path::PathBuf;
+
+use crate::{Error, Result};
+
+#[link(name = "dl")]
+extern "C" {
+    fn dlopen(filename: *const c_char, flag: c_int) -> *mut c_void;
+    fn dlsym(handle: *mut c_void, symbol: *const c_char) -> *mut c_void;
+    fn dlerror() -> *mut c_char;
+}
+
+/// `RTLD_NOW | RTLD_LOCAL` on Linux: resolve every symbol up front so a
+/// broken plugin fails at load time, not mid-execution.
+const RTLD_NOW: c_int = 2;
+
+/// Symbol every PJRT C-API plugin must export.
+const ENTRY_SYMBOL: &str = "GetPjrtApi";
+
+fn last_dl_error() -> String {
+    // Safety: dlerror returns a thread-local NUL-terminated string (or
+    // null when no error is pending); we copy it out immediately.
+    unsafe {
+        let msg = dlerror();
+        if msg.is_null() {
+            "unknown dlopen error".to_string()
+        } else {
+            CStr::from_ptr(msg).to_string_lossy().into_owned()
+        }
+    }
+}
+
+/// A loaded PJRT plugin: the library handle plus its resolved entry
+/// point. The handle is intentionally never dlclosed — PJRT plugins
+/// register global state and must stay mapped for the process lifetime.
+pub struct Plugin {
+    pub library: String,
+    handle: *mut c_void,
+    entry: *mut c_void,
+}
+
+// Safety: the handle and entry pointer are process-global, immutable
+// once loaded, and the C API behind them is documented thread-safe.
+unsafe impl Send for Plugin {}
+unsafe impl Sync for Plugin {}
+
+impl Plugin {
+    /// Load the plugin from the default search path.
+    pub fn load() -> Result<Plugin> {
+        let mut candidates: Vec<String> = Vec::new();
+        if let Ok(dir) = std::env::var("XLA_EXTENSION_DIR") {
+            let dir = PathBuf::from(dir);
+            candidates.push(dir.join("lib/libxla_extension.so").display().to_string());
+            candidates.push(dir.join("libxla_extension.so").display().to_string());
+        }
+        candidates.push("libxla_extension.so".to_string());
+        Self::load_from(&candidates)
+    }
+
+    /// Load the first candidate that dlopens and exports [`ENTRY_SYMBOL`].
+    pub fn load_from(candidates: &[String]) -> Result<Plugin> {
+        let mut attempts: Vec<String> = Vec::new();
+        for cand in candidates {
+            let cpath = match CString::new(cand.as_str()) {
+                Ok(c) => c,
+                Err(_) => {
+                    attempts.push(format!("{cand}: embedded NUL in path"));
+                    continue;
+                }
+            };
+            // Safety: cpath is a valid NUL-terminated string; dlopen has
+            // no other preconditions.
+            let handle = unsafe { dlopen(cpath.as_ptr(), RTLD_NOW) };
+            if handle.is_null() {
+                attempts.push(format!("{cand}: {}", last_dl_error()));
+                continue;
+            }
+            let sym = CString::new(ENTRY_SYMBOL).expect("static symbol name");
+            // Safety: handle came from a successful dlopen above.
+            let entry = unsafe { dlsym(handle, sym.as_ptr()) };
+            if entry.is_null() {
+                attempts.push(format!("{cand}: loaded, but no `{ENTRY_SYMBOL}` export"));
+                continue;
+            }
+            return Ok(Plugin { library: cand.clone(), handle, entry });
+        }
+        Err(Error::pjrt(format!(
+            "no usable PJRT plugin found (tried: {})",
+            attempts.join("; ")
+        )))
+    }
+
+    /// Raw `GetPjrtApi` pointer, for the future C-API bridge.
+    pub fn entry_point(&self) -> *mut c_void {
+        self.entry
+    }
+
+    /// Raw library handle (kept alive for the process lifetime).
+    pub fn raw_handle(&self) -> *mut c_void {
+        self.handle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_plugin_fails_with_attempt_trail() {
+        let err = Plugin::load_from(&["/nonexistent/libxla_extension.so".to_string()])
+            .err()
+            .expect("a bogus path must not produce a plugin");
+        let msg = err.to_string();
+        assert!(msg.contains("no usable PJRT plugin"), "{msg}");
+        assert!(msg.contains("/nonexistent/libxla_extension.so"), "{msg}");
+    }
+
+    #[test]
+    fn nul_in_path_is_reported_not_panicked() {
+        let err = Plugin::load_from(&["bad\0path".to_string()]).err().expect("must fail");
+        assert!(err.to_string().contains("embedded NUL"), "{}", err);
+    }
+}

@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Bench baseline emitter + regression gate for the `ohm bench` trajectory.
+
+Two roles:
+
+* ``--emit [DIR]`` — write ``BENCH_matmul.json`` / ``BENCH_sort.json``
+  baselines by mirroring, f64-op for f64-op, the *virtual* sweep in
+  ``rust/src/bench/kernel.rs`` (which itself evaluates
+  ``rust/src/overhead/model.rs``). The matmul model is libm-free, so the
+  mirror is bit-identical to the Rust emitter there (and
+  ``rust/tests/prop_kernels.rs`` asserts byte equality); the sort model
+  uses ``log2``, identical on any IEEE libm to ~1 ulp, which the gate's
+  tolerance absorbs. This mirror exists because the build container that
+  authored this repo has no Rust toolchain — CI re-derives the same
+  numbers from the Rust side and the gate cross-checks them.
+
+* ``--check DIR`` — compare candidate ``BENCH_*.json`` files (produced in
+  CI by ``ohm bench --json --out DIR``) against the committed baselines:
+  fail on a regression beyond the per-mode threshold (virtual: 1e-9
+  relative — any drift means the model changed and the baseline must be
+  regenerated deliberately; wall: 15% slower), warn on improvement so the
+  committed file gets refreshed.
+
+Exit codes: 0 = pass (warnings allowed), 1 = regression / structural drift.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+# --- mirrored constants (rust/src/overhead/model.rs, bench/kernel.rs) ---
+
+PAPER_2022 = {
+    "alpha_spawn_ns": 25_000.0,
+    "beta_sync_ns": 8_000.0,
+    "gamma_msg_ns": 1_200.0,
+    "delta_byte_ns": 0.25,
+}
+MATMUL_OP_NS = 1.0
+SORT_OP_NS = 225.0  # SortCostModel::paper_2022().op_ns
+MATMUL_SIZES = [16, 32, 64, 128, 256, 512]
+SORT_SIZES = [100, 300, 1000, 3000, 10_000, 30_000, 100_000]
+CORES = 4
+
+VIRTUAL_RTOL = 1e-9
+WALL_RTOL = 0.15
+
+
+def estimate(topic: str, n: int) -> tuple[float, int]:
+    """(total_work_ns, dist_bytes) — Topic::estimate."""
+    if topic == "matmul":
+        return float(n) * float(n) * float(n) * MATMUL_OP_NS, 2 * n * n * 4
+    # sort::estimate: 1.39·n·log2(max(n,2)) comparisons at op_ns each.
+    nf = float(n)
+    ops = 1.39 * nf * math.log2(max(nf, 2.0))
+    return ops * SORT_OP_NS, n * 8
+
+
+def predict_parallel_ns(work_ns: float, dist_bytes: int, p: int, tasks: int) -> float:
+    # Mirrors model::predict_parallel_ns with parallel_fraction = 1.0,
+    # preserving the Rust expression's left-associated addition order.
+    par_work = work_ns * 1.0
+    ser_work = work_ns - par_work
+    waves = float(-(-tasks // p))  # div_ceil
+    critical_path = par_work * waves / float(tasks)
+    migrations = float(tasks) * float(p - 1) / float(p)
+    bytes_moved = float(dist_bytes) * float(p - 1) / float(p)
+    return (
+        ser_work
+        + critical_path
+        + PAPER_2022["alpha_spawn_ns"] * float(tasks)
+        + PAPER_2022["beta_sync_ns"] * float(tasks)
+        + PAPER_2022["gamma_msg_ns"] * migrations
+        + PAPER_2022["delta_byte_ns"] * bytes_moved
+    )
+
+
+def best_grain(work_ns: float, dist_bytes: int, p: int, max_tasks: int) -> tuple[int, float]:
+    best = (p, predict_parallel_ns(work_ns, dist_bytes, p, p))
+    tasks = p
+    while tasks <= max_tasks:
+        t = predict_parallel_ns(work_ns, dist_bytes, p, tasks)
+        if t < best[1]:
+            best = (tasks, t)
+        tasks *= 2
+    return best
+
+
+def crossover(topic: str, sizes: list[int], p: int) -> int | None:
+    for n in sizes:
+        work, dist = estimate(topic, n)
+        _, tp = best_grain(work, dist, p, 64 * p)
+        if tp < work:  # predict_serial_ns == total_work_ns
+            return n
+    return None
+
+
+def jf(v: float) -> str:
+    return f"{v:.3f}" if math.isfinite(v) else "null"
+
+
+def virtual_doc_json(topic: str, sizes: list[int], cores: int) -> str:
+    """Byte-for-byte mirror of BenchDoc::to_json for virtual mode."""
+    lines = [
+        "{",
+        '  "schema": "ohm-bench/v1",',
+        f'  "topic": "{topic}",',
+        '  "mode": "virtual",',
+        f'  "cores": {cores},',
+        '  "params": {"alpha_spawn_ns": %s, "beta_sync_ns": %s, "gamma_msg_ns": %s, "delta_byte_ns": %s},'
+        % (
+            jf(PAPER_2022["alpha_spawn_ns"]),
+            jf(PAPER_2022["beta_sync_ns"]),
+            jf(PAPER_2022["gamma_msg_ns"]),
+            jf(PAPER_2022["delta_byte_ns"]),
+        ),
+    ]
+    x = crossover(topic, sizes, cores)
+    lines.append(f'  "crossover_n": {x if x is not None else "null"},')
+    lines.append('  "points": [')
+    for i, n in enumerate(sizes):
+        work, dist = estimate(topic, n)
+        tasks, parallel = best_grain(work, dist, cores, 64 * cores)
+        speedup = work / parallel
+        migrations = float(tasks) * float(cores - 1) / float(cores)
+        bytes_moved = float(dist) * float(cores - 1) / float(cores)
+        spawn = PAPER_2022["alpha_spawn_ns"] * float(tasks)
+        sync = PAPER_2022["beta_sync_ns"] * float(tasks)
+        msg = PAPER_2022["gamma_msg_ns"] * migrations
+        byte = PAPER_2022["delta_byte_ns"] * bytes_moved
+        total = spawn + sync + msg + byte
+        comma = "," if i + 1 < len(sizes) else ""
+        lines.append(
+            '    {"n": %d, "serial_ns": %s, "parallel_ns": %s, "tasks": %d, "speedup": %s, '
+            '"overhead": {"spawn_ns": %s, "sync_ns": %s, "msg_ns": %s, "byte_ns": %s, "total_ns": %s}}%s'
+            % (n, jf(work), jf(parallel), tasks, jf(speedup), jf(spawn), jf(sync), jf(msg), jf(byte), jf(total), comma)
+        )
+    lines.append("  ],")
+    prov = (
+        f"closed-form overhead model (overhead::model, paper_2022 params), {cores} cores; "
+        "deterministic — no wall clock"
+    )
+    lines.append(f'  "provenance": "{prov}"')
+    lines.append("}")
+    return "\n".join(lines) + "\n"
+
+
+def emit(out_dir: Path) -> int:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for topic, sizes in [("matmul", MATMUL_SIZES), ("sort", SORT_SIZES)]:
+        path = out_dir / f"BENCH_{topic}.json"
+        path.write_text(virtual_doc_json(topic, sizes, CORES))
+        print(f"wrote {path}")
+    return 0
+
+
+def compare_docs(name: str, committed: dict, candidate: dict) -> tuple[list[str], list[str]]:
+    """(failures, warnings) for one topic."""
+    fails: list[str] = []
+    warns: list[str] = []
+    for key in ("schema", "topic", "mode", "cores"):
+        if committed.get(key) != candidate.get(key):
+            fails.append(f"{name}: field {key!r} drifted: {committed.get(key)!r} -> {candidate.get(key)!r}")
+    if committed.get("crossover_n") != candidate.get("crossover_n"):
+        fails.append(
+            f"{name}: crossover_n moved {committed.get('crossover_n')} -> {candidate.get('crossover_n')}"
+        )
+    rtol = VIRTUAL_RTOL if candidate.get("mode") == "virtual" else WALL_RTOL
+    cpts = {p["n"]: p for p in committed.get("points", [])}
+    kpts = {p["n"]: p for p in candidate.get("points", [])}
+    if set(cpts) != set(kpts):
+        fails.append(f"{name}: sweep sizes drifted: {sorted(cpts)} -> {sorted(kpts)}")
+        return fails, warns
+    for n in sorted(cpts):
+        old, new = cpts[n], kpts[n]
+        if candidate.get("mode") == "virtual" and old.get("tasks") != new.get("tasks"):
+            fails.append(f"{name} n={n}: best grain moved {old.get('tasks')} -> {new.get('tasks')}")
+        for field in ("serial_ns", "parallel_ns"):
+            o, c = float(old[field]), float(new[field])
+            if o == 0.0:
+                continue
+            rel = (c - o) / o
+            if rel > rtol:
+                fails.append(f"{name} n={n}: {field} regressed {rel * 100.0:+.2f}% ({o:.3f} -> {c:.3f})")
+            elif rel < -rtol:
+                warns.append(
+                    f"{name} n={n}: {field} improved {rel * 100.0:+.2f}% — refresh the committed baseline"
+                )
+    return fails, warns
+
+
+def check(candidate_dir: Path, committed_dir: Path) -> int:
+    fails: list[str] = []
+    warns: list[str] = []
+    found = 0
+    for topic in ("matmul", "sort"):
+        name = f"BENCH_{topic}.json"
+        committed_path = committed_dir / name
+        candidate_path = candidate_dir / name
+        if not committed_path.exists():
+            fails.append(f"{name}: no committed baseline at {committed_path}")
+            continue
+        if not candidate_path.exists():
+            fails.append(f"{name}: candidate missing at {candidate_path} (did `ohm bench --json` run?)")
+            continue
+        found += 1
+        committed = json.loads(committed_path.read_text())
+        candidate = json.loads(candidate_path.read_text())
+        f, w = compare_docs(name, committed, candidate)
+        fails.extend(f)
+        warns.extend(w)
+    for w in warns:
+        print(f"WARN {w}")
+    for f in fails:
+        print(f"FAIL {f}")
+    print(f"bench gate: {found} topics compared, {len(fails)} failures, {len(warns)} warnings")
+    return 1 if fails else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit", nargs="?", const=".", metavar="DIR", help="write baseline BENCH_*.json files")
+    ap.add_argument("--check", metavar="DIR", help="compare DIR/BENCH_*.json against committed baselines")
+    ap.add_argument("--committed", default=".", metavar="DIR", help="directory holding committed baselines")
+    args = ap.parse_args()
+    if args.emit is not None:
+        return emit(Path(args.emit))
+    if args.check:
+        return check(Path(args.check), Path(args.committed))
+    ap.error("one of --emit / --check is required")
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())
