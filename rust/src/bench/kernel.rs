@@ -25,7 +25,7 @@
 //! Python mirror of the virtual arithmetic lives in `tools/bench_gate.py`.
 
 use crate::dla::{matmul, microkernel};
-use crate::overhead::{model, Ledger, OverheadParams, WorkEstimate};
+use crate::overhead::{CostModel, Ledger, OverheadParams, StaticCostModel, WorkEstimate};
 use crate::pool::ThreadPool;
 use crate::sort::{samplesort_inplace, serial_quicksort, PivotStrategy, SortCostModel};
 use crate::util::Stopwatch;
@@ -149,12 +149,13 @@ pub fn virtual_doc(
     cores: usize,
     params: &OverheadParams,
 ) -> BenchDoc {
+    let cost = StaticCostModel::new(*params);
     let points = sizes
         .iter()
         .map(|&n| {
             let est = topic.estimate(n);
-            let serial_ns = model::predict_serial_ns(&est);
-            let (tasks, parallel_ns) = model::best_grain(params, &est, cores, 64 * cores);
+            let serial_ns = cost.predict_serial_ns(&est);
+            let (tasks, parallel_ns) = cost.predict_parallel_ns(&est, cores);
             BenchPoint {
                 n,
                 serial_ns,
@@ -170,7 +171,7 @@ pub fn virtual_doc(
         mode: "virtual",
         cores,
         params: *params,
-        crossover_n: model::crossover(params, cores, sizes, |n| topic.estimate(n)),
+        crossover_n: cost.crossover(cores, sizes, &|n| topic.estimate(n)),
         points,
         provenance: format!(
             "closed-form overhead model (overhead::model, paper_2022 params), {cores} cores; \
@@ -183,13 +184,14 @@ pub fn virtual_doc(
 /// the serial reference before its timing is recorded; a mismatch panics
 /// (a wrong fast kernel must never produce a bench number).
 pub fn wall_doc(topic: Topic, sizes: &[usize], cores: usize, params: &OverheadParams) -> BenchDoc {
+    let cost = StaticCostModel::new(*params);
     let pool = ThreadPool::new(cores);
     let samples = 3usize;
     let points = sizes
         .iter()
         .map(|&n| {
             let est = topic.estimate(n);
-            let (tasks, _) = model::best_grain(params, &est, cores, 64 * cores);
+            let (tasks, _) = cost.predict_parallel_ns(&est, cores);
             let (serial_ns, parallel_ns, ledger) = match topic {
                 Topic::Matmul => wall_matmul_point(n, &pool, tasks, samples, est.dist_bytes),
                 Topic::Sort => wall_sort_point(n, &pool, tasks, samples),

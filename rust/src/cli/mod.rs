@@ -13,7 +13,7 @@
 //!            [--slo CLASS=US[,CLASS=US...]] [--admission-window-ms N]
 //!            [--rebalance off|adaptive] [--rebalance-window-ms N]
 //!            [--cache on|off] [--cache-entries N] [--cache-bytes N]
-//!            [--config F]]
+//!            [--cost-model on|off] [--config F]]
 //!           # TCP front end: concurrent readers, per-shape-class dispatch
 //!           # lanes with work stealing, bounded per-lane admission queues
 //!           # (overflow → ERR BUSY), SLO-driven adaptive admission
@@ -24,7 +24,12 @@
 //!           # classes onto cold lanes within their kind span),
 //!           # warm result cache (repeat (kind, seed) requests answered
 //!           # engine=cache without queueing; single-flight, LRU +
-//!           # byte-bounded, off by default), cross-connection shape
+//!           # byte-bounded, off by default), cost-model-driven
+//!           # scheduling (--cost-model on: jobs below the predicted
+//!           # serial/parallel crossover run serial-inline on the lane
+//!           # thread, admission sheds on predicted queue wait, the
+//!           # rebalancer weighs classes by predicted cost; off by
+//!           # default), cross-connection shape
 //!           # batching, DRAIN protocol for rolling restarts — see
 //!           # docs/PROTOCOL.md
 //! ohm loadgen --addr HOST:PORT [--clients N] [--reqs N] [--seed S]
@@ -91,11 +96,16 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|bench|cali
                          their kind span, STATS gains a routing table),
                          --cache on|off + --cache-entries/--cache-bytes
                          warm result cache (repeat requests answered
-                         engine=cache without queueing), --batch-max /
+                         engine=cache without queueing), --cost-model
+                         on|off cost-model-driven scheduling (predicted
+                         crossover → engine=serial-inline dispatch,
+                         predictive admission, cost-weighted rebalance;
+                         STATS gains a cost-model table), --batch-max /
                          --batch-linger-us shape-batch formation, DRAIN
                          protocol command for rolling restarts, --config F
                          reads [serving] + [lanes] + [admission] +
-                         [admission.slo] + [rebalance] + [cache];
+                         [admission.slo] + [rebalance] + [cache] +
+                         [costmodel];
                          protocol reference: docs/PROTOCOL.md)
   loadgen               drive a running --listen server with concurrent
                         clients and checksum verification (--addr HOST:PORT,
@@ -368,6 +378,13 @@ fn cmd_serve(args: &Args) -> Result<String> {
             }
             serving.cache_bytes = v as u64;
         }
+        if let Some(v) = args.get("cost-model") {
+            serving.cost_model = match v {
+                "on" => true,
+                "off" => false,
+                other => bail!("flag --cost-model: unknown mode {other:?} (on|off)"),
+            };
+        }
         let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
         let conns = args.get_parsed::<usize>("conns")?;
         let mut cfg = CoordinatorCfg { threads, ..Default::default() };
@@ -389,6 +406,9 @@ fn cmd_serve(args: &Args) -> Result<String> {
         }
         if !cfg.slo_overrides.is_empty() {
             extras.push_str(&format!(", {} per-class slo overrides", cfg.slo_overrides.len()));
+        }
+        if cfg.cost_model {
+            extras.push_str(", cost model on");
         }
         eprintln!(
             "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs), {}{})",
@@ -1001,6 +1021,12 @@ mod tests {
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-entries", "x"]).is_err());
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-bytes", "0"]).is_err());
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cache-bytes", "-1"]).is_err());
+    }
+
+    #[test]
+    fn serve_listen_rejects_bad_cost_model_flag() {
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cost-model", "maybe"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cost-model", "true"]).is_err());
     }
 
     #[test]

@@ -258,6 +258,11 @@ pub struct ServingConfig {
     /// Global result-cache byte budget (`[cache] bytes = N`, ≥ 1),
     /// split across the per-lane shards.
     pub cache_bytes: u64,
+    /// Cost-model-driven scheduling (`[costmodel] enabled = bool`):
+    /// serial-inline dispatch below the predicted crossover, predictive
+    /// admission, and cost-weighted rebalancing. Default off, which
+    /// preserves pre-cost-model serving behaviour bit-for-bit.
+    pub cost_model: bool,
 }
 
 impl Default for ServingConfig {
@@ -281,6 +286,7 @@ impl Default for ServingConfig {
             cache: c.cache,
             cache_entries: c.cache_entries,
             cache_bytes: c.cache_bytes,
+            cost_model: c.cost_model,
         }
     }
 }
@@ -392,6 +398,11 @@ impl ServingConfig {
                 cfg.cache_bytes = bytes as u64;
             }
         }
+        if let Some(sec) = t.get("costmodel") {
+            if let Some(v) = sec.get("enabled") {
+                cfg.cost_model = v.as_bool().context("costmodel enabled")?;
+            }
+        }
         Ok(cfg)
     }
 
@@ -412,6 +423,7 @@ impl ServingConfig {
         cfg.cache = self.cache;
         cfg.cache_entries = self.cache_entries;
         cfg.cache_bytes = self.cache_bytes;
+        cfg.cost_model = self.cost_model;
     }
 }
 
@@ -518,6 +530,8 @@ flag = true
             (c.cache, c.cache_entries, c.cache_bytes),
         );
         assert!(!s.cache, "the result cache defaults to off");
+        assert_eq!(s.cost_model, c.cost_model);
+        assert!(!s.cost_model, "the cost model defaults to off");
         assert_eq!(
             (s.rebalance, s.rebalance_window_ms, s.slo_overrides.clone()),
             (c.rebalance, c.rebalance_window_ms, c.slo_overrides.clone()),
@@ -607,6 +621,19 @@ flag = true
             let t = parse(bad).unwrap();
             assert!(ServingConfig::from_table(&t).is_err(), "must reject {bad:?}");
         }
+    }
+
+    #[test]
+    fn costmodel_section_overrides_and_applies() {
+        let t = parse("[costmodel]\nenabled = true\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert!(c.cost_model);
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert!(coord.cost_model);
+        // Non-bool values are config errors, not silent defaults.
+        let t = parse("[costmodel]\nenabled = 1\n").unwrap();
+        assert!(ServingConfig::from_table(&t).is_err());
     }
 
     #[test]

@@ -35,11 +35,12 @@
 //! stay per-*lane* (that is where the queue is), while the threshold —
 //! and the shed latch — are per-*class* of the incoming request.
 
+use super::costmodel::ServeCostModel;
 use super::lanes::ShapeClass;
 use super::routing::{class_slot, CLASS_SLOTS};
 use crate::stats::Digest;
 use std::collections::HashSet;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Hysteresis: a shedding lane re-admits once its rolling p90 falls to
@@ -211,6 +212,12 @@ pub struct Governor {
     /// ([`with_recording`](Governor::with_recording)) since its
     /// imbalance signal reads the same windows.
     record_waits: bool,
+    /// Predictive admission (`--cost-model on` + adaptive mode): shed
+    /// when the cost model's predicted queue wait (per-class service
+    /// EWMA × queue depth) already exceeds the class SLO — *before* the
+    /// measured p90 degrades. `None` keeps measured-only admission
+    /// decision-for-decision.
+    cost: Option<Arc<ServeCostModel>>,
     lanes: Vec<Mutex<LaneWindow>>,
 }
 
@@ -222,6 +229,7 @@ impl Governor {
             slo,
             window: Duration::from_millis(window_ms.max(1)),
             record_waits: mode == AdmissionMode::Adaptive,
+            cost: None,
             lanes: (0..lanes.max(1)).map(|_| Mutex::new(LaneWindow::new())).collect(),
         }
     }
@@ -230,6 +238,14 @@ impl Governor {
     /// reads the windows; admission decisions are unaffected).
     pub fn with_recording(mut self, record: bool) -> Governor {
         self.record_waits = self.record_waits || record;
+        self
+    }
+
+    /// Attach the serving cost model (`--cost-model on`): adaptive
+    /// admission additionally sheds on *predicted* queue wait. Fixed
+    /// mode is unaffected — it still admits unconditionally.
+    pub fn with_cost_model(mut self, cost: Option<Arc<ServeCostModel>>) -> Governor {
+        self.cost = cost;
         self
     }
 
@@ -325,6 +341,20 @@ impl Governor {
             w.shedding.insert(class);
             Err(Overload { p90_us: Some(p90), slo_us })
         } else {
+            // Measured p90 is healthy. With the cost model attached,
+            // also check the *predicted* wait for this request: observed
+            // per-class service EWMA × current queue depth. A burst of
+            // expensive jobs can fill the queue faster than the measured
+            // window reacts — the prediction sheds ahead of the damage.
+            // No latch: the prediction falls as the queue drains, so the
+            // decision self-recovers without hysteresis.
+            if let Some(cm) = &self.cost {
+                if let Some(wait_us) = cm.predicted_wait_us(class, queued()) {
+                    if wait_us > slo_us {
+                        return Err(Overload { p90_us: Some(p90), slo_us });
+                    }
+                }
+            }
             Ok(())
         }
     }
@@ -561,6 +591,35 @@ mod tests {
         // Same moment, queue drained ⇒ genuinely idle ⇒ recover.
         assert!(g.admit(0, sc(), || 0).is_ok(), "empty queue turns the stall into idle recovery");
         assert!(!g.shedding(0));
+    }
+
+    #[test]
+    fn predictive_admission_sheds_on_forecast_before_p90_degrades() {
+        use crate::coordinator::costmodel::ServeCostModel;
+        use crate::overhead::OverheadParams;
+
+        let cm = Arc::new(ServeCostModel::new(OverheadParams::paper_2022(), 4));
+        let g = governor(AdmissionMode::Adaptive, 1_000.0, 60_000, 1)
+            .with_cost_model(Some(Arc::clone(&cm)));
+        // Measured waits are healthy — classic admission would admit.
+        for _ in 0..10 {
+            g.observe(0, 100.0);
+        }
+        // But each sort/2^8 job is *known* (observed EWMA) to take 800µs…
+        for _ in 0..10 {
+            cm.observe(&TraceKind::Sort { n: 300 }, 800.0);
+        }
+        // …so 5 queued ahead forecast a 4000µs wait against a 1000µs SLO.
+        let over = g.admit(0, sc(), || 5).expect_err("predicted wait 4000 > slo 1000");
+        assert_eq!(over.slo_us, 1_000.0);
+        assert!(!g.shedding(0), "predictive sheds never latch");
+        assert!(g.admit(0, sc(), || 1).is_ok(), "shallow queue forecasts under the SLO");
+        // Without the cost model the same state admits.
+        let plain = governor(AdmissionMode::Adaptive, 1_000.0, 60_000, 1);
+        for _ in 0..10 {
+            plain.observe(0, 100.0);
+        }
+        assert!(plain.admit(0, sc(), || 5).is_ok());
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! The serving layer's cost-model handle: [`ServeCostModel`] maps
+//! [`ShapeClass`]es onto the overhead layer's online
+//! [`CostTable`](crate::overhead::CostTable) and answers the three
+//! serve-time questions the redesign wires in (`--cost-model on`):
+//!
+//! * **Dispatch** — [`should_inline`](ServeCostModel::should_inline):
+//!   is this job predicted below the serial/parallel crossover? If so
+//!   the dispatcher runs it serial-inline on the lane thread
+//!   (`engine=serial-inline`), skipping the fork-join overhead the
+//!   model says would dominate — the paper's central trade-off acted on
+//!   per request instead of per calibration run.
+//! * **Admission** — [`predicted_wait_us`](ServeCostModel::predicted_wait_us):
+//!   expected queue wait if admitted now (observed per-class service
+//!   EWMA × queue depth). The adaptive governor sheds on this *before*
+//!   the measured p90 degrades.
+//! * **Rebalancing** — [`class_cost_ns`](ServeCostModel::class_cost_ns):
+//!   predicted per-job cost of a class, so the rebalancer weighs a wide
+//!   matmul class above a thin sort class instead of comparing raw
+//!   request counts.
+//!
+//! Predictions start from the static paper calibration and are
+//! bias-corrected online: every completed execution feeds the table's
+//! EWMA (`observe`), so a class whose real service time drifts from the
+//! model pulls its own predictions with it. The arithmetic lives in
+//! [`crate::overhead::costmodel`]; this module owns only the
+//! ShapeClass ↔ slot mapping and the STATS rendering.
+
+use super::lanes::ShapeClass;
+use super::routing::{class_slot, slot_class, CLASS_SLOTS};
+use super::{matmul_work_est, sort_work_est};
+use crate::overhead::{CostModel, CostTable, OverheadParams, WorkEstimate};
+use crate::report::{table::f, AsciiTable};
+use crate::workload::traces::TraceKind;
+
+/// Serving-layer cost model: one [`CostTable`] slot per addressable
+/// shape class, shared by the lane dispatchers (observe + inline
+/// decisions), the admission governor (predicted wait), and the
+/// rebalancer (class weights).
+pub struct ServeCostModel {
+    table: CostTable,
+}
+
+/// The work estimate the serving layer prices a job kind at — the same
+/// estimates [`Coordinator::route`](super::Coordinator::route) feeds the
+/// per-region manager, so serve-time and execute-time decisions price
+/// one model.
+fn estimate(kind: &TraceKind) -> WorkEstimate {
+    match kind {
+        TraceKind::Matmul { n } => matmul_work_est(*n),
+        TraceKind::Sort { n } => sort_work_est(*n),
+    }
+}
+
+/// A class's representative job size: the lower edge of its
+/// power-of-two bucket (`2^bucket`). Used to price a *class* (not a
+/// specific job) for rebalancing weights.
+fn representative_kind(class: ShapeClass) -> TraceKind {
+    let n = 1usize << class.bucket().min(usize::BITS as u8 - 1);
+    if class.kind_id() == 0 {
+        TraceKind::Matmul { n }
+    } else {
+        TraceKind::Sort { n }
+    }
+}
+
+impl ServeCostModel {
+    /// Calibrated table over the full class space; `cores` is the CPU
+    /// pool width the parallel predictions assume (`cfg.threads`).
+    pub fn new(params: OverheadParams, cores: usize) -> ServeCostModel {
+        ServeCostModel { table: CostTable::new(CLASS_SLOTS, params, cores) }
+    }
+
+    /// Serve-time crossover: true when the static serial prediction
+    /// beats the bias-corrected parallel prediction — the job should run
+    /// serial-inline on the lane thread, skipping fork-join overhead.
+    pub fn should_inline(&self, kind: &TraceKind) -> bool {
+        let est = estimate(kind);
+        let slot = class_slot(ShapeClass::of(kind));
+        let serial_ns = self.table.static_model().predict_serial_ns(&est);
+        serial_ns <= self.table.predict_parallel_ns(slot, &est)
+    }
+
+    /// Feed back one completed execution (any engine): refreshes the
+    /// class's observed-service EWMA and its prediction bias.
+    pub fn observe(&self, kind: &TraceKind, service_us: f64) {
+        let est = estimate(kind);
+        let slot = class_slot(ShapeClass::of(kind));
+        let cm = self.table.static_model();
+        let (_, parallel_ns) = cm.predict_parallel_ns(&est, self.table.cores());
+        let predicted_ns = cm.predict_serial_ns(&est).min(parallel_ns);
+        self.table.observe(slot, predicted_ns, service_us * 1e3);
+    }
+
+    /// Record one serial-inline execution for the class.
+    pub fn note_inline(&self, kind: &TraceKind) {
+        self.table.note_inline(class_slot(ShapeClass::of(kind)));
+    }
+
+    /// Predicted queue wait, µs, if a job of `class` were admitted to a
+    /// lane with `queued` jobs ahead of it: observed per-class service
+    /// EWMA × depth. `None` until the class has completed at least one
+    /// job — predicting from zero evidence is how admission governors
+    /// cause outages, so the governor falls back to measured p90 alone.
+    pub fn predicted_wait_us(&self, class: ShapeClass, queued: usize) -> Option<f64> {
+        let slot = class_slot(class);
+        self.table
+            .expected_service_ns(slot)
+            .map(|service_ns| service_ns * queued as f64 / 1e3)
+    }
+
+    /// Predicted per-job cost of a class, ns — the rebalancer's weight.
+    /// The observed EWMA when the class has history; otherwise the
+    /// static model's cheapest-engine prediction at the class's
+    /// representative size, so a never-served wide matmul class still
+    /// outweighs a never-served thin sort class.
+    pub fn class_cost_ns(&self, class: ShapeClass) -> f64 {
+        let slot = class_slot(class);
+        if let Some(ns) = self.table.expected_service_ns(slot) {
+            return ns;
+        }
+        let est = estimate(&representative_kind(class));
+        let cm = self.table.static_model();
+        let (_, parallel_ns) = cm.predict_parallel_ns(&est, self.table.cores());
+        cm.predict_serial_ns(&est).min(parallel_ns)
+    }
+
+    /// Total serial-inline executions across all classes.
+    pub fn inline_count(&self) -> u64 {
+        self.table.inline_total()
+    }
+
+    /// The STATS/DRAIN "cost model" table: per-class predicted vs
+    /// observed service time, bias, samples, and inline-serial count for
+    /// every class with history, plus a trailer with the predicted
+    /// serve-time crossover per kind. Rendered only with `--cost-model
+    /// on`, so those blocks stay byte-identical when it is off.
+    pub fn render(&self) -> String {
+        let cores = self.table.cores();
+        let cm = self.table.static_model();
+        let mut t = AsciiTable::new(
+            "cost model (per shape class)",
+            &["class", "predicted (µs)", "observed (µs)", "bias", "samples", "inline"],
+        );
+        for slot in 0..CLASS_SLOTS {
+            let c = self.table.snapshot(slot);
+            if c.samples == 0 && c.inline_serial == 0 {
+                continue;
+            }
+            let class = slot_class(slot);
+            let predicted_ns = self.class_cost_ns(class);
+            let observed = if c.samples > 0 { f(c.observed_ns / 1e3, 1) } else { "-".into() };
+            t.row(vec![
+                class.name(),
+                f(predicted_ns / 1e3, 1),
+                observed,
+                f(c.bias, 2),
+                c.samples.to_string(),
+                c.inline_serial.to_string(),
+            ]);
+        }
+        let mut out = if t.is_empty() { String::new() } else { t.render() };
+        let fmt_n = |x: Option<usize>| x.map_or("-".to_string(), |n| n.to_string());
+        let matmul_x = cm.crossover(cores, &crate::bench::kernel::MATMUL_SIZES, &|n| {
+            matmul_work_est(n)
+        });
+        let sort_x =
+            cm.crossover(cores, &crate::bench::kernel::SORT_SIZES, &|n| sort_work_est(n));
+        out.push_str(&format!(
+            "cost model: cores={} crossover matmul n={} sort n={} inline_serial={}\n",
+            cores,
+            fmt_n(matmul_x),
+            fmt_n(sort_x),
+            self.inline_count(),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ServeCostModel {
+        ServeCostModel::new(OverheadParams::paper_2022(), 4)
+    }
+
+    #[test]
+    fn below_crossover_shapes_inline_and_large_ones_pool() {
+        let m = model();
+        // Every default loadgen shape sits below the paper_2022 4-core
+        // crossover, so the CI smoke's inline count is deterministic.
+        for kind in [
+            TraceKind::Matmul { n: 24 },
+            TraceKind::Matmul { n: 48 },
+            TraceKind::Sort { n: 300 },
+            TraceKind::Sort { n: 999 },
+        ] {
+            assert!(m.should_inline(&kind), "{kind:?} is below crossover");
+        }
+        assert!(!m.should_inline(&TraceKind::Matmul { n: 512 }));
+        assert!(!m.should_inline(&TraceKind::Sort { n: 100_000 }));
+    }
+
+    #[test]
+    fn learned_bias_can_flip_the_inline_decision() {
+        let m = model();
+        let kind = TraceKind::Matmul { n: 128 };
+        assert!(!m.should_inline(&kind), "above crossover at unit bias");
+        // The pool consistently takes ~4× the static parallel prediction
+        // (contention the model never priced): the bias correction pulls
+        // the class under the crossover.
+        let est = super::estimate(&kind);
+        let (_, parallel_ns) =
+            m.table.static_model().predict_parallel_ns(&est, m.table.cores());
+        for _ in 0..40 {
+            m.observe(&kind, parallel_ns * 8.0 / 1e3);
+        }
+        assert!(m.should_inline(&kind), "learned slowdown must flip the decision");
+    }
+
+    #[test]
+    fn predicted_wait_needs_evidence_then_scales_with_depth() {
+        let m = model();
+        let class = ShapeClass::of(&TraceKind::Sort { n: 300 });
+        assert_eq!(m.predicted_wait_us(class, 5), None, "no samples: no prediction");
+        for _ in 0..10 {
+            m.observe(&TraceKind::Sort { n: 300 }, 200.0); // 200µs service
+        }
+        let w3 = m.predicted_wait_us(class, 3).unwrap();
+        let w6 = m.predicted_wait_us(class, 6).unwrap();
+        assert!((w3 - 600.0).abs() < 30.0, "3 deep ≈ 600µs: {w3}");
+        assert!((w6 - 2.0 * w3).abs() < 1e-6, "wait is linear in depth");
+        assert_eq!(m.predicted_wait_us(class, 0), Some(0.0));
+    }
+
+    #[test]
+    fn class_weights_rank_wide_matmul_above_thin_sort() {
+        let m = model();
+        let wide = ShapeClass::of(&TraceKind::Matmul { n: 256 });
+        let thin = ShapeClass::of(&TraceKind::Sort { n: 300 });
+        assert!(
+            m.class_cost_ns(wide) > 100.0 * m.class_cost_ns(thin),
+            "static weights: {} vs {}",
+            m.class_cost_ns(wide),
+            m.class_cost_ns(thin)
+        );
+        // Observed history overrides the static weight.
+        for _ in 0..10 {
+            m.observe(&TraceKind::Sort { n: 300 }, 50_000.0); // 50ms measured
+        }
+        assert!((m.class_cost_ns(thin) - 50_000_000.0).abs() < 500_000.0);
+    }
+
+    #[test]
+    fn render_shows_classes_with_history_and_the_crossover_trailer() {
+        let m = model();
+        let quiet = m.render();
+        assert!(!quiet.contains("cost model (per shape class)"), "no rows yet: {quiet}");
+        assert!(quiet.contains("cost model: cores=4 crossover matmul n=64 sort n="), "{quiet}");
+        m.observe(&TraceKind::Matmul { n: 48 }, 120.0);
+        m.note_inline(&TraceKind::Matmul { n: 48 });
+        let s = m.render();
+        assert!(s.contains("cost model (per shape class)"), "{s}");
+        assert!(s.contains("matmul/2^5"), "{s}");
+        assert!(s.contains("inline_serial=1"), "{s}");
+    }
+}

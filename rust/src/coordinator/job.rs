@@ -37,6 +37,13 @@ pub enum RoutedEngine {
     /// Never returned by routing; stamped by the server's hit path so
     /// replies and telemetry name where the answer came from.
     Cache,
+    /// Executed serially right on the lane thread because the cost model
+    /// predicted the job below the serial/parallel crossover — the
+    /// fork-join machinery (and its α/β/γ/δ overhead) was skipped
+    /// entirely. Never returned by routing; stamped by the dispatcher's
+    /// cost-model path (`--cost-model on`). Checksums are bit-identical
+    /// to pooled execution of the same `(kind, n, seed)`.
+    SerialInline,
 }
 
 impl RoutedEngine {
@@ -46,6 +53,7 @@ impl RoutedEngine {
             RoutedEngine::CpuSerial => "cpu-serial",
             RoutedEngine::CpuParallel => "cpu-parallel",
             RoutedEngine::Cache => "cache",
+            RoutedEngine::SerialInline => "serial-inline",
         }
     }
 }

@@ -47,6 +47,7 @@
 
 pub mod admission;
 pub mod cache;
+pub mod costmodel;
 pub mod job;
 pub mod lanes;
 pub mod queue;
@@ -56,6 +57,7 @@ pub mod telemetry;
 
 pub use admission::{AdmissionMode, Governor, SloTable};
 pub use cache::ResultCache;
+pub use costmodel::ServeCostModel;
 pub use job::{Job, JobResult, RoutedEngine};
 pub use lanes::{LanePool, ShapeClass};
 pub use queue::BoundedQueue;
@@ -135,6 +137,14 @@ pub struct CoordinatorCfg {
     /// Serving layer: global result-cache byte budget (`--cache-bytes`),
     /// split evenly across the per-lane shards. Must be ≥ 1.
     pub cache_bytes: u64,
+    /// Serving layer: consult the online cost model at serve time
+    /// (`--cost-model on|off`). Off by default — with it off, dispatch,
+    /// admission, rebalancing, replies, and STATS are byte-for-byte what
+    /// they were without the cost model. On, jobs predicted below the
+    /// serial/parallel crossover run serial-inline on the lane thread
+    /// (`engine=serial-inline`), the adaptive governor sheds on predicted
+    /// queue wait, and the rebalancer weighs classes by predicted cost.
+    pub cost_model: bool,
 }
 
 impl Default for CoordinatorCfg {
@@ -158,6 +168,7 @@ impl Default for CoordinatorCfg {
             cache: false,
             cache_entries: 4096,
             cache_bytes: 4 * 1024 * 1024,
+            cost_model: false,
         }
     }
 }
@@ -166,6 +177,10 @@ impl Default for CoordinatorCfg {
 pub struct Coordinator {
     cfg: CoordinatorCfg,
     cpu: ExecCtx,
+    /// Dedicated serial context for the cost model's inline path: no
+    /// thread pool, no fork-join machinery — the lane thread itself runs
+    /// the kernel. Cheap to hold (no worker threads are spawned).
+    serial: ExecCtx,
     runtime: Option<Runtime>,
     pub telemetry: Telemetry,
     next_id: u64,
@@ -175,7 +190,8 @@ impl Coordinator {
     /// Build with an optional XLA runtime (None ⇒ CPU-only routing).
     pub fn new(cfg: CoordinatorCfg, runtime: Option<Runtime>) -> Coordinator {
         let cpu = ExecCtx::threaded(cfg.threads);
-        Coordinator { cfg, cpu, runtime, telemetry: Telemetry::default(), next_id: 1 }
+        let serial = ExecCtx::serial();
+        Coordinator { cfg, cpu, serial, runtime, telemetry: Telemetry::default(), next_id: 1 }
     }
 
     /// Route a job without executing it (policy unit under test).
@@ -280,13 +296,48 @@ impl Coordinator {
             ok,
         }
     }
+
+    /// Execute one job serially, inline on the calling (lane) thread —
+    /// the cost model's below-crossover path (`--cost-model on`). The
+    /// fork-join machinery is never touched: the kernel runs under the
+    /// dedicated serial [`ExecCtx`], and the result is stamped
+    /// [`RoutedEngine::SerialInline`]. Checksums are bit-identical to
+    /// pooled execution of the same `(kind, n, seed)`: the packed matmul
+    /// microkernel is gate-tested identical to the serial reference, and
+    /// a sorted array's element sum is engine-independent.
+    pub fn execute_job_inline(&self, job: &Job) -> JobResult {
+        let sw = Stopwatch::start();
+        let (checksum, ok) = match &job.kind {
+            TraceKind::Matmul { n } => {
+                let a = matrices::uniform(*n, *n, job.seed);
+                let b = matrices::uniform(*n, *n, job.seed ^ 0xABCD);
+                let (c, _) = matmul::run(&a, &b, &self.serial);
+                (c.frobenius(), true)
+            }
+            TraceKind::Sort { n } => {
+                let mut xs = arrays::uniform_i64(*n, job.seed);
+                let _ = sort::parallel_quicksort(&mut xs, self.cfg.pivot, &self.serial);
+                let ok = sort::is_sorted(&xs);
+                (xs.iter().map(|&v| v as f64).sum(), ok)
+            }
+        };
+        JobResult {
+            id: job.id,
+            shape_key: job.shape_key(),
+            engine: RoutedEngine::SerialInline,
+            service_us: sw.elapsed_ns() as f64 / 1e3,
+            queue_us: 0.0,
+            checksum,
+            ok,
+        }
+    }
 }
 
-fn matmul_work_est(n: usize) -> crate::overhead::WorkEstimate {
+pub(crate) fn matmul_work_est(n: usize) -> crate::overhead::WorkEstimate {
     crate::overhead::WorkEstimate::fully_parallel((n as f64).powi(3), (2 * n * n * 4) as u64)
 }
 
-fn sort_work_est(n: usize) -> crate::overhead::WorkEstimate {
+pub(crate) fn sort_work_est(n: usize) -> crate::overhead::WorkEstimate {
     sort::estimate(n, &sort::SortCostModel::host(4.0))
 }
 
@@ -344,6 +395,28 @@ mod tests {
         c.run_trace(&trace);
         assert_eq!(c.telemetry.batches, 3, "three consecutive-shape groups");
         assert_eq!(c.telemetry.batched_jobs, 5);
+    }
+
+    #[test]
+    fn inline_serial_checksums_are_bit_identical_to_pooled() {
+        let c = cpu_coordinator();
+        for kind in [
+            TraceKind::Matmul { n: 48 },
+            TraceKind::Matmul { n: 128 },
+            TraceKind::Sort { n: 999 },
+        ] {
+            let job = Job { id: 1, kind, seed: 7, arrival_us: 0 };
+            let pooled = c.execute_job(&job);
+            let inline = c.execute_job_inline(&job);
+            assert_eq!(inline.engine, RoutedEngine::SerialInline);
+            assert!(pooled.ok && inline.ok);
+            assert_eq!(
+                pooled.checksum.to_bits(),
+                inline.checksum.to_bits(),
+                "inline vs pooled checksum diverged for {:?}",
+                job.kind
+            );
+        }
     }
 
     #[test]

@@ -47,6 +47,7 @@
 //! only legal within the class's kind span ([`kind_span`]), so a slow
 //! matmul still can never queue ahead of a sort.
 
+use super::costmodel::ServeCostModel;
 use super::lanes::ShapeClass;
 use crate::report::AsciiTable;
 use crate::workload::traces::TraceKind;
@@ -346,6 +347,12 @@ pub const REARM_TICKS: u32 = 10;
 /// The hot lane must hold at least this many waits in its rolling
 /// window before its p90 counts as evidence.
 pub const MIN_WINDOW_SAMPLES: u64 = 1;
+/// Cost-model churn gate (`--cost-model on`): a move only publishes when
+/// its predicted benefit — the candidate class's window traffic × the
+/// hot/cold p90 gap, µs — exceeds this. An epoch swap is not free (the
+/// moved class arrives at a lane with cold locality, and the span goes
+/// hysteresis-blind for a window), so marginal wins are left alone.
+pub const CHURN_COST_US: f64 = 10_000.0;
 
 /// A published reassignment.
 #[derive(Debug, Clone, Copy)]
@@ -371,6 +378,11 @@ pub struct Rebalancer {
     /// there (see the anti-ping-pong check in [`tick`](Rebalancer::tick)).
     last_move: [Option<(ShapeClass, usize)>; KINDS],
     last_traffic: Vec<u64>,
+    /// Predicted-cost placement (`--cost-model on`): candidate classes
+    /// are ranked by window traffic × predicted per-job cost instead of
+    /// raw traffic, and a move must clear [`CHURN_COST_US`]. `None`
+    /// keeps the traffic-delta greedy rule decision-for-decision.
+    cost: Option<Arc<ServeCostModel>>,
 }
 
 impl Default for Rebalancer {
@@ -386,7 +398,17 @@ impl Rebalancer {
             ticks_since_move: [0; KINDS],
             last_move: [None; KINDS],
             last_traffic: vec![0; CLASS_SLOTS],
+            cost: None,
         }
+    }
+
+    /// Attach the serving cost model: candidate selection weighs demand
+    /// by predicted per-job cost (a wide matmul class outweighs a thin
+    /// sort class at equal traffic) and marginal moves are suppressed by
+    /// the [`CHURN_COST_US`] gate.
+    pub fn with_cost_model(mut self, cost: Option<Arc<ServeCostModel>>) -> Rebalancer {
+        self.cost = cost;
+        self
     }
 
     /// One decision window: inspect per-lane loads, publish at most one
@@ -453,13 +475,34 @@ impl Rebalancer {
             }
             // The hottest class currently assigned to the hot lane, by
             // routed requests this window (demand, not completions — a
-            // 100%-shed class must still register).
-            let candidate = (0..CLASS_SLOTS)
-                .filter(|&slot| delta[slot] > 0)
-                .map(slot_class)
-                .filter(|c| c.kind_id() == kind && table.lane_of(*c) == hot)
-                .max_by_key(|c| delta[class_slot(*c)]);
+            // 100%-shed class must still register). With the cost model
+            // attached, demand is weighed by predicted per-job cost:
+            // moving one wide matmul class relieves more queue-seconds
+            // than moving a thin sort class with more requests.
+            let on_hot = || {
+                (0..CLASS_SLOTS)
+                    .filter(|&slot| delta[slot] > 0)
+                    .map(slot_class)
+                    .filter(|c| c.kind_id() == kind && table.lane_of(*c) == hot)
+            };
+            let candidate = match &self.cost {
+                Some(cm) => {
+                    let weight =
+                        |c: &ShapeClass| delta[class_slot(*c)] as f64 * cm.class_cost_ns(*c);
+                    on_hot().max_by(|a, b| weight(a).total_cmp(&weight(b)))
+                }
+                None => on_hot().max_by_key(|c| delta[class_slot(*c)]),
+            };
             let Some(class) = candidate else { continue };
+            // Churn gate: the move's predicted benefit (this window's
+            // demand for the class × the wait gap it would cross) must
+            // be worth an epoch swap.
+            if self.cost.is_some() {
+                let benefit_us = delta[class_slot(class)] as f64 * (hot_p90 - cold_p90);
+                if benefit_us < CHURN_COST_US {
+                    continue;
+                }
+            }
             // Anti-ping-pong: a class's traffic follows it, so the lane
             // it just left always looks empty afterwards. Moving it
             // straight back on that vacuum alone would oscillate forever
@@ -676,6 +719,52 @@ mod tests {
         // Hot waits but zero routed requests this window: no candidate
         // class, no move (stale heat must not shuffle idle classes).
         assert!(reb.tick(&r, &loads).is_none());
+        assert_eq!(r.load().epoch(), 0);
+    }
+
+    #[test]
+    fn cost_weighted_candidate_prefers_the_expensive_class() {
+        use crate::overhead::OverheadParams;
+
+        // Find two sort classes — one thin, one wide — that share seed
+        // lane 3 of a 4-lane pool, so both are candidates on the same
+        // hot lane.
+        let t = RoutingTable::seed(4);
+        let on3: Vec<u8> = (4..24).filter(|&b| t.lane_of(class(1, b)) == 3).collect();
+        let (thin, wide) = (*on3.first().unwrap(), *on3.last().unwrap());
+        assert!(wide >= thin + 4, "need a genuinely wider class on the lane: {on3:?}");
+        let seed_traffic = |r: &Router| {
+            for _ in 0..10 {
+                r.note_request(&TraceKind::Sort { n: 1usize << thin });
+            }
+            r.note_request(&TraceKind::Sort { n: 1usize << wide });
+        };
+        let mut loads = vec![LaneLoad::default(); 4];
+        loads[3] = LaneLoad { p90_us: Some(50_000.0), samples: 8, queued: 0 };
+
+        // Traffic-delta rule: 10 thin requests beat 1 wide request.
+        let r = Router::new(4);
+        seed_traffic(&r);
+        let mv = Rebalancer::new().tick(&r, &loads).expect("imbalance moves");
+        assert_eq!(mv.class, class(1, thin), "raw traffic picks the thin class");
+
+        // Cost-weighted rule: one wide job is predicted to cost far more
+        // queue time than ten thin ones, so the wide class moves.
+        let cm = Arc::new(ServeCostModel::new(OverheadParams::paper_2022(), 4));
+        let r = Router::new(4);
+        seed_traffic(&r);
+        let mut reb = Rebalancer::new().with_cost_model(Some(Arc::clone(&cm)));
+        let mv = reb.tick(&r, &loads).expect("imbalance moves");
+        assert_eq!(mv.class, class(1, wide), "predicted cost outweighs raw traffic");
+
+        // Churn gate: a marginal win is not worth an epoch swap — one
+        // request across a 5000µs gap is under CHURN_COST_US.
+        let r = Router::new(4);
+        r.note_request(&TraceKind::Sort { n: 1usize << wide });
+        let mut loads = vec![LaneLoad::default(); 4];
+        loads[3] = LaneLoad { p90_us: Some(5_000.0), samples: 8, queued: 0 };
+        let mut reb = Rebalancer::new().with_cost_model(Some(cm));
+        assert!(reb.tick(&r, &loads).is_none(), "benefit 5000µs < churn cost");
         assert_eq!(r.load().epoch(), 0);
     }
 

@@ -75,9 +75,11 @@
 
 use super::admission::{Governor, SloTable};
 use super::cache::{self, ResultCache};
+use super::costmodel::ServeCostModel;
 use super::lanes::{Envelope, LanePool, ShapeClass};
 use super::routing::{LaneLoad, RebalanceMode, Rebalancer, Router};
 use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
+use crate::overhead::OverheadParams;
 use crate::workload::traces::TraceKind;
 use anyhow::Result;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -104,6 +106,12 @@ struct Shared {
     /// when disabled — every request then takes exactly the pre-cache
     /// path, byte for byte.
     cache: Option<ResultCache>,
+    /// The serving cost model (`--cost-model on`): dispatchers consult
+    /// it for the serial-inline crossover and feed it observed service
+    /// times; the governor and rebalancer hold their own `Arc` clones.
+    /// `None` when disabled — every decision then takes exactly the
+    /// pre-cost-model path, byte for byte.
+    cost: Option<Arc<ServeCostModel>>,
     telemetry: Mutex<Telemetry>,
     next_id: AtomicU64,
     /// Set by `DRAIN`: admission answers `ERR DRAINING` from then on.
@@ -153,6 +161,9 @@ impl Server {
             slo.set(*class, *us);
         }
         let router = Arc::new(Router::new(lane_count));
+        let cost = cfg
+            .cost_model
+            .then(|| Arc::new(ServeCostModel::new(OverheadParams::paper_2022(), cfg.threads.max(1))));
         let shared = Arc::new(Shared {
             lanes: LanePool::with_router(Arc::clone(&router), cfg.queue_depth, cfg.steal),
             router,
@@ -161,10 +172,14 @@ impl Server {
             governor: Governor::new(cfg.admission, slo, cfg.admission_window_ms, lane_count)
                 // The rebalancer reads the governor's wait windows, so
                 // keep them populated even under fixed admission.
-                .with_recording(cfg.rebalance == RebalanceMode::Adaptive),
+                .with_recording(cfg.rebalance == RebalanceMode::Adaptive)
+                // Predictive admission (adaptive mode only): shed on
+                // forecast queue wait before the measured p90 degrades.
+                .with_cost_model(cost.clone()),
             cache: cfg
                 .cache
                 .then(|| ResultCache::new(lane_count, cfg.cache_entries, cfg.cache_bytes)),
+            cost,
             telemetry: Mutex::new(telemetry),
             next_id: AtomicU64::new(1),
             draining: AtomicBool::new(false),
@@ -265,7 +280,9 @@ impl Server {
 /// at most one move per tick, and pre-open the new epoch's telemetry
 /// table so per-lane series split regimes cleanly.
 fn rebalance_loop(shared: &Shared, window: Duration) {
-    let mut rebalancer = Rebalancer::new();
+    // With the cost model attached, candidate classes are weighed by
+    // predicted per-job cost and marginal moves are churn-gated.
+    let mut rebalancer = Rebalancer::new().with_cost_model(shared.cost.clone());
     let poll = Duration::from_millis(10).min(window);
     let mut elapsed = Duration::ZERO;
     loop {
@@ -362,8 +379,18 @@ fn execute_one(coord: &Coordinator, shared: &Shared, env: Envelope) {
     let admit_lane = env.lane;
     let admit_epoch = env.epoch;
     shared.governor.observe(admit_lane, queue_us);
+    // Serve-time crossover (`--cost-model on`): a job the model predicts
+    // below the serial/parallel crossover runs serially right here on
+    // the lane thread — the fork-join machinery (and its α/β/γ/δ
+    // overhead) is skipped entirely. Checksums are bit-identical to
+    // pooled execution, so the reply differs only in `engine=`.
+    let inline = shared.cost.as_ref().is_some_and(|cm| cm.should_inline(&env.job.kind));
     let executed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        coord.execute_job(&env.job)
+        if inline {
+            coord.execute_job_inline(&env.job)
+        } else {
+            coord.execute_job(&env.job)
+        }
     }))
     .ok();
     let panicked = executed.is_none();
@@ -385,6 +412,18 @@ fn execute_one(coord: &Coordinator, shared: &Shared, env: Envelope) {
         }
     });
     r.queue_us = queue_us;
+    // Close the feedback loop: every completed execution (any engine)
+    // refreshes the class's service-time EWMA, pulling future inline /
+    // admission / rebalance predictions toward what this machine
+    // actually measures.
+    if !panicked {
+        if let Some(cm) = &shared.cost {
+            cm.observe(&env.job.kind, r.service_us);
+            if r.engine == RoutedEngine::SerialInline {
+                cm.note_inline(&env.job.kind);
+            }
+        }
+    }
     {
         let mut t = telemetry_lock(shared);
         if panicked {
@@ -479,6 +518,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             let mut block = snapshot.render();
             block.push_str(&queue_line(shared));
             block.push_str(&cache_block(shared));
+            block.push_str(&cost_model_block(shared));
             block.push_str(&routing_block(shared));
             Response::Block(block)
         }
@@ -500,6 +540,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             block.push_str(&snapshot.render());
             block.push_str(&queue_line(shared));
             block.push_str(&cache_block(shared));
+            block.push_str(&cost_model_block(shared));
             block.push_str(&routing_block(shared));
             block.push_str(&format!(
                 "drained: admitted={} finished={}\n",
@@ -655,6 +696,14 @@ fn cache_block(shared: &Shared) -> String {
     shared.cache.as_ref().map_or_else(String::new, ResultCache::render)
 }
 
+/// The cost-model table appended to STATS/DRAIN blocks: per-class
+/// predicted vs observed service time, bias, and inline-serial counts,
+/// plus the crossover trailer. Empty with `--cost-model off`, keeping
+/// those blocks byte-identical to a cost-model-less server.
+fn cost_model_block(shared: &Shared) -> String {
+    shared.cost.as_ref().map_or_else(String::new, |c| c.render())
+}
+
 /// The routing table appended to STATS/DRAIN blocks: per-class lane
 /// assignment (vs the seed lane) with request counts, plus the
 /// `routing: epoch=<e> moves=<m>` trailer. Rendered only under
@@ -799,6 +848,41 @@ mod tests {
             "routing trailer missing: {out:?}"
         );
         assert!(out.iter().any(|l| l.contains("sort/2^7")), "per-class row missing: {out:?}");
+    }
+
+    #[test]
+    fn cost_model_serves_small_jobs_inline_with_identical_checksums() {
+        let run = |cost_model: bool| {
+            let server = Server::bind("127.0.0.1:0").unwrap();
+            let addr = server.local_addr();
+            let cfg = CoordinatorCfg { threads: 2, cost_model, ..Default::default() };
+            let h = std::thread::spawn(move || server.serve(cfg, Some(1)).unwrap());
+            let mut conn = TcpStream::connect(addr).unwrap();
+            for l in ["SORT 300 7", "MATMUL 32 9", "STATS", "QUIT"] {
+                writeln!(conn, "{l}").unwrap();
+            }
+            conn.flush().unwrap();
+            let out: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+            h.join().unwrap();
+            out
+        };
+        let on = run(true);
+        let off = run(false);
+        // Both shapes sit below the predicted crossover: served inline.
+        assert!(on[0].contains("engine=serial-inline"), "{on:?}");
+        assert!(on[1].contains("engine=serial-inline"), "{on:?}");
+        assert!(!off.iter().any(|l| l.contains("serial-inline")), "{off:?}");
+        // Inline execution is the same arithmetic on the same seed.
+        let checksum = |s: &str| {
+            s.split_whitespace().find(|t| t.starts_with("checksum=")).unwrap().to_string()
+        };
+        assert_eq!(checksum(&on[0]), checksum(&off[0]), "inline checksum matches pooled");
+        assert_eq!(checksum(&on[1]), checksum(&off[1]));
+        // STATS gains the cost-model table + trailer only when on.
+        assert!(on.iter().any(|l| l.contains("cost model (per shape class)")), "{on:?}");
+        assert!(on.iter().any(|l| l.starts_with("cost model: cores=2 crossover")), "{on:?}");
+        assert!(on.iter().any(|l| l.contains("inline_serial=2")), "{on:?}");
+        assert!(!off.iter().any(|l| l.contains("cost model")), "off is byte-identical: {off:?}");
     }
 
     #[test]

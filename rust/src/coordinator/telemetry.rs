@@ -153,6 +153,11 @@ impl Telemetry {
         } else {
             self.failed += 1;
         }
+        if r.engine == RoutedEngine::SerialInline {
+            // Fork-join overhead *avoided*: the cost model ran this job
+            // serially on the lane thread instead of paying α/β/γ/δ.
+            self.serving_ledger.inline_serial += 1;
+        }
         push_sample(self.per_engine.entry(r.engine.name()).or_default(), r.service_us);
         let shape = if self.per_shape.contains_key(&r.shape_key) || self.per_shape.len() < SHAPE_CAP
         {
@@ -485,6 +490,7 @@ impl Telemetry {
             || self.serving_ledger.queue_ns > 0
             || self.serving_ledger.sheds > 0
             || self.serving_ledger.cache_hits > 0
+            || self.serving_ledger.inline_serial > 0
         {
             out.push_str(&format!("serving ledger: {}\n", self.serving_ledger.summary()));
         }
@@ -666,6 +672,19 @@ mod tests {
         let s = t.render();
         assert!(s.contains("engine:cache"), "{s}");
         assert!(s.contains("cache_hits=2"), "ledger line carries the hits: {s}");
+    }
+
+    #[test]
+    fn inline_serial_results_land_in_the_ledger() {
+        let mut t = Telemetry::default();
+        t.record(&res(RoutedEngine::SerialInline, 90.0, true));
+        t.record(&res(RoutedEngine::SerialInline, 110.0, true));
+        t.record(&res(RoutedEngine::CpuParallel, 500.0, true));
+        assert_eq!(t.serving_ledger.inline_serial, 2);
+        assert_eq!(t.engine_count(RoutedEngine::SerialInline), 2);
+        let s = t.render();
+        assert!(s.contains("engine:serial-inline"), "{s}");
+        assert!(s.contains("inline_serial=2"), "ledger line carries the count: {s}");
     }
 
     #[test]

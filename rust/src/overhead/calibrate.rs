@@ -12,6 +12,7 @@
 //! DESIGN.md §Substitutions.
 
 use super::model::OverheadParams;
+use crate::pool::metrics::MetricsSnapshot;
 use crate::pool::ThreadPool;
 use crate::stats;
 use crate::util::timer::Stopwatch;
@@ -41,6 +42,11 @@ impl Calibration {
     }
 
     /// Probe the host. `budget_ms` bounds total probing time.
+    #[deprecated(
+        since = "0.7.0",
+        note = "positional-arg entry point; use `Calibration::with_fallback` (sane-checked) \
+                or `Calibration::from_metrics` (recalibrate from measured pool metrics)"
+    )]
     pub fn probe(budget_ms: u64) -> Self {
         let mut cal = Self::paper_defaults();
         cal.matmul_op_ns = probe_matmul_op_ns();
@@ -52,10 +58,46 @@ impl Calibration {
         cal
     }
 
+    /// Recalibrate the overhead constants from a *measured* pool-metrics
+    /// delta — the wall-mode bench path: run real work, snapshot the pool
+    /// before/after, and rescale the paper constants by the contention
+    /// the run actually exhibited. Deterministic for a given snapshot
+    /// (no wall clock, no probes), so virtual and wall trajectories stay
+    /// comparable:
+    ///
+    /// * α is inflated by the overflow-inline fraction — tasks executed
+    ///   inline because a deque was full mean spawning cost more than
+    ///   the uncontended constant assumes;
+    /// * γ is inflated by the failed-steal ratio — thieves that probe
+    ///   empty deques are inter-core traffic the per-message constant
+    ///   never sees;
+    /// * β and δ have no event-count analogue in the snapshot and keep
+    ///   their calibrated values.
+    pub fn from_metrics(delta: &MetricsSnapshot) -> OverheadParams {
+        let base = OverheadParams::paper_2022();
+        let spawn_contention = if delta.spawns > 0 {
+            delta.overflow_inline as f64 / delta.spawns as f64
+        } else {
+            0.0
+        };
+        let steal_contention = if delta.steals + delta.failed_steals > 0 {
+            delta.failed_steals as f64 / (delta.steals + delta.failed_steals) as f64
+        } else {
+            0.0
+        };
+        OverheadParams {
+            alpha_spawn_ns: base.alpha_spawn_ns * (1.0 + spawn_contention),
+            beta_sync_ns: base.beta_sync_ns,
+            gamma_msg_ns: base.gamma_msg_ns * (1.0 + steal_contention),
+            delta_byte_ns: base.delta_byte_ns,
+        }
+    }
+
     /// Probe, but fall back to paper overhead constants when the host fit
     /// is degenerate (negative or absurd coefficients — typical on a
     /// 1-core container where "parallel" probes never truly overlap).
     pub fn with_fallback(budget_ms: u64) -> Self {
+        #[allow(deprecated)] // sane-checked wrapper over the raw probe
         let mut cal = Self::probe(budget_ms);
         let p = cal.params;
         let sane = p.alpha_spawn_ns > 0.0
@@ -206,6 +248,35 @@ mod tests {
     fn copy_probe_positive() {
         let d = probe_copy_byte_ns();
         assert!(d > 0.0 && d < 100.0, "delta = {d}ns/B");
+    }
+
+    #[test]
+    fn from_metrics_uncontended_run_keeps_paper_constants() {
+        let quiet = MetricsSnapshot { spawns: 100, executed: 100, ..Default::default() };
+        assert_eq!(Calibration::from_metrics(&quiet), OverheadParams::paper_2022());
+        // A zero delta (no parallel work measured) is also the baseline.
+        assert_eq!(
+            Calibration::from_metrics(&MetricsSnapshot::default()),
+            OverheadParams::paper_2022()
+        );
+    }
+
+    #[test]
+    fn from_metrics_contention_inflates_alpha_and_gamma() {
+        let base = OverheadParams::paper_2022();
+        let contended = MetricsSnapshot {
+            spawns: 100,
+            executed: 150,
+            overflow_inline: 50, // half the spawns overflowed inline
+            steals: 10,
+            failed_steals: 30, // 75% of steal attempts found nothing
+            ..Default::default()
+        };
+        let p = Calibration::from_metrics(&contended);
+        assert!((p.alpha_spawn_ns - base.alpha_spawn_ns * 1.5).abs() < 1e-9);
+        assert!((p.gamma_msg_ns - base.gamma_msg_ns * 1.75).abs() < 1e-9);
+        assert_eq!(p.beta_sync_ns, base.beta_sync_ns, "β has no snapshot analogue");
+        assert_eq!(p.delta_byte_ns, base.delta_byte_ns, "δ has no snapshot analogue");
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! The consumable cost-model API: the paper's overhead model packaged
+//! for *callers that schedule work*, not just for offline analysis.
+//!
+//! Historically the analytic model lived as free functions in
+//! [`model`](super::model) ("calibrate offline, never read again"): the
+//! bench sweep and the per-region [`Manager`](super::manager::Manager)
+//! called them directly, and the serving layer consulted nothing. This
+//! module collapses that surface into two consumables:
+//!
+//! * [`CostModel`] + [`StaticCostModel`] — the trait a scheduling
+//!   decision point programs against, with the calibrated-parameter
+//!   closed-form evaluation as the canonical implementation. The static
+//!   impl delegates to the `model` free functions, so its numbers are
+//!   bit-identical to the historical call sites (the committed
+//!   `BENCH_*.json` baselines gate this in CI).
+//! * [`CostTable`] — a slot-indexed table of per-workload-class costs
+//!   refreshed *online*: each completed execution feeds an EWMA of the
+//!   observed service time and a prediction-bias correction (the same
+//!   0.7/0.3 gain and 0.25–4.0 clamp as `Manager::observe`). The serving
+//!   layer maps its `ShapeClass`es onto slots; this module stays
+//!   layering-clean by knowing nothing about shape classes.
+//!
+//! The serving-side wiring (serve-time serial-inline crossover,
+//! cost-weighted rebalancing, predictive admission) lives in
+//! `coordinator/costmodel.rs`; this module owns the arithmetic.
+
+use super::model::{self, OverheadParams, WorkEstimate};
+use std::sync::Mutex;
+
+/// EWMA retention for online refreshes (matches `Manager::observe`).
+const EWMA_KEEP: f64 = 0.7;
+/// EWMA gain for the newest observation.
+const EWMA_GAIN: f64 = 0.3;
+/// Bias-ratio clamp: one absurd sample cannot destabilize the policy.
+const BIAS_CLAMP: (f64, f64) = (0.25, 4.0);
+
+/// A queryable cost model: everything a scheduling decision point needs
+/// to price serial vs parallel execution of an estimated region.
+///
+/// Object-safe, so serving components can hold `&dyn CostModel` without
+/// caring whether the numbers are static (paper calibration) or
+/// bias-corrected online estimates.
+pub trait CostModel {
+    /// The calibrated per-event overhead constants behind the predictions.
+    fn params(&self) -> &OverheadParams;
+
+    /// Predicted serial runtime for `est`, ns.
+    fn predict_serial_ns(&self, est: &WorkEstimate) -> f64;
+
+    /// Predicted best-grain parallel runtime for `est` on `cores` cores:
+    /// `(tasks, ns)` at the canonical task-sweep bound (`64 × cores`,
+    /// the same bound the bench sweep and its Python gate mirror use).
+    fn predict_parallel_ns(&self, est: &WorkEstimate, cores: usize) -> (usize, f64);
+
+    /// Smallest candidate size whose parallel prediction beats serial,
+    /// if any (`est_of` maps a size to its work estimate).
+    fn crossover(
+        &self,
+        cores: usize,
+        candidates: &[usize],
+        est_of: &dyn Fn(usize) -> WorkEstimate,
+    ) -> Option<usize> {
+        candidates.iter().copied().find(|&n| {
+            let est = est_of(n);
+            let (_, tp) = self.predict_parallel_ns(&est, cores);
+            tp < self.predict_serial_ns(&est)
+        })
+    }
+
+    /// Predicted fork-join overhead charge (the α/β/γ/δ sum alone) for
+    /// executing `est` at the best grain on `cores` cores, ns — the cost
+    /// a below-crossover serial-inline execution *avoids* paying.
+    fn overhead_ns(&self, est: &WorkEstimate, cores: usize) -> f64 {
+        let (tasks, _) = self.predict_parallel_ns(est, cores);
+        let p = cores.max(1);
+        let migrations = tasks as f64 * (p.saturating_sub(1)) as f64 / p as f64;
+        let bytes_moved = est.dist_bytes as f64 * (p.saturating_sub(1)) as f64 / p as f64;
+        let params = self.params();
+        params.alpha_spawn_ns * tasks as f64
+            + params.beta_sync_ns * tasks as f64
+            + params.gamma_msg_ns * migrations
+            + params.delta_byte_ns * bytes_moved
+    }
+}
+
+/// The calibrated closed-form model: a thin, allocation-free wrapper
+/// over the [`model`] free functions. This is what `paper_2022` params
+/// look like as a [`CostModel`] — deterministic, host-independent, and
+/// numerically identical to the historical direct calls (gate-checked
+/// via the committed bench baselines).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StaticCostModel {
+    params: OverheadParams,
+}
+
+impl StaticCostModel {
+    pub fn new(params: OverheadParams) -> Self {
+        StaticCostModel { params }
+    }
+
+    /// The paper-calibrated default.
+    pub fn paper_2022() -> Self {
+        Self::new(OverheadParams::paper_2022())
+    }
+
+    /// Best-grain search with an explicit task-count bound (the
+    /// [`Manager`](super::manager::Manager) grain guard needs a custom
+    /// bound; the trait method uses the canonical `64 × cores`).
+    pub fn best_grain(&self, est: &WorkEstimate, cores: usize, max_tasks: usize) -> (usize, f64) {
+        model::best_grain(&self.params, est, cores, max_tasks)
+    }
+}
+
+impl CostModel for StaticCostModel {
+    fn params(&self) -> &OverheadParams {
+        &self.params
+    }
+
+    fn predict_serial_ns(&self, est: &WorkEstimate) -> f64 {
+        model::predict_serial_ns(est)
+    }
+
+    fn predict_parallel_ns(&self, est: &WorkEstimate, cores: usize) -> (usize, f64) {
+        model::best_grain(&self.params, est, cores, 64 * cores)
+    }
+}
+
+/// One slot's online state: what the table has learned about a class.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassCost {
+    /// EWMA of observed service time, ns (0 until the first sample).
+    pub observed_ns: f64,
+    /// EWMA of observed/predicted ratio, applied as a multiplicative
+    /// correction to static parallel predictions (1.0 = model trusted).
+    pub bias: f64,
+    /// Executions observed for this slot.
+    pub samples: u64,
+    /// Executions this slot ran serial-inline (below predicted crossover).
+    pub inline_serial: u64,
+}
+
+impl Default for ClassCost {
+    fn default() -> Self {
+        ClassCost { observed_ns: 0.0, bias: 1.0, samples: 0, inline_serial: 0 }
+    }
+}
+
+/// A calibrated, per-class cost table refreshed online from observed
+/// timings — the "read it back at serve time" half of the redesign.
+///
+/// Slots are opaque indices: the caller owns the class → slot mapping
+/// (the serving layer uses its `ShapeClass` encoding), which keeps this
+/// module free of any serving-layer dependency. Each slot holds its own
+/// lock, so concurrent dispatchers observing different classes never
+/// contend.
+#[derive(Debug)]
+pub struct CostTable {
+    model: StaticCostModel,
+    cores: usize,
+    slots: Vec<Mutex<ClassCost>>,
+}
+
+impl CostTable {
+    pub fn new(slots: usize, params: OverheadParams, cores: usize) -> Self {
+        CostTable {
+            model: StaticCostModel::new(params),
+            cores: cores.max(1),
+            slots: (0..slots).map(|_| Mutex::new(ClassCost::default())).collect(),
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn cores(&self) -> usize {
+        self.cores
+    }
+
+    /// The static model the table layers its corrections over.
+    pub fn static_model(&self) -> &StaticCostModel {
+        &self.model
+    }
+
+    /// Feed back one completed execution: EWMA-refresh the observed
+    /// service time and, when the static model offered a prediction,
+    /// the bias correction. Degenerate inputs are ignored (a 0ns
+    /// "observation" is clock noise, not evidence).
+    pub fn observe(&self, slot: usize, predicted_ns: f64, actual_ns: f64) {
+        if actual_ns <= 0.0 {
+            return;
+        }
+        let mut c = self.slots[slot].lock().unwrap();
+        c.observed_ns = if c.samples == 0 {
+            actual_ns
+        } else {
+            EWMA_KEEP * c.observed_ns + EWMA_GAIN * actual_ns
+        };
+        c.samples += 1;
+        if predicted_ns > 0.0 {
+            let ratio = (actual_ns / predicted_ns).clamp(BIAS_CLAMP.0, BIAS_CLAMP.1);
+            c.bias = EWMA_KEEP * c.bias + EWMA_GAIN * ratio;
+        }
+    }
+
+    /// Record that a slot's job ran serial-inline on the lane thread.
+    pub fn note_inline(&self, slot: usize) {
+        self.slots[slot].lock().unwrap().inline_serial += 1;
+    }
+
+    /// Point-in-time copy of one slot.
+    pub fn snapshot(&self, slot: usize) -> ClassCost {
+        *self.slots[slot].lock().unwrap()
+    }
+
+    /// Bias-corrected parallel prediction for a slot: the static
+    /// best-grain time scaled by the slot's learned bias.
+    pub fn predict_parallel_ns(&self, slot: usize, est: &WorkEstimate) -> f64 {
+        let (_, tp) = self.model.predict_parallel_ns(est, self.cores);
+        tp * self.snapshot(slot).bias
+    }
+
+    /// Expected service time for a slot's jobs, ns: the observed EWMA
+    /// once samples exist, `None` before (predicting from zero evidence
+    /// is how admission governors cause outages).
+    pub fn expected_service_ns(&self, slot: usize) -> Option<f64> {
+        let c = self.snapshot(slot);
+        (c.samples > 0).then_some(c.observed_ns)
+    }
+
+    /// Total serial-inline executions across all slots.
+    pub fn inline_total(&self) -> u64 {
+        self.slots.iter().map(|s| s.lock().unwrap().inline_serial).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(work_ns: f64) -> WorkEstimate {
+        WorkEstimate::fully_parallel(work_ns, 0)
+    }
+
+    #[test]
+    fn static_model_matches_free_functions_exactly() {
+        let params = OverheadParams::paper_2022();
+        let cm = StaticCostModel::new(params);
+        for work in [1e4, 1e6, 1e8, 1e10] {
+            let e = est(work);
+            assert_eq!(cm.predict_serial_ns(&e), model::predict_serial_ns(&e));
+            assert_eq!(cm.predict_parallel_ns(&e, 4), model::best_grain(&params, &e, 4, 256));
+        }
+        let cands: Vec<usize> = (1..=64).map(|i| i * 50).collect();
+        let est_of = |n: usize| est(n as f64 * 10_000.0);
+        assert_eq!(
+            cm.crossover(4, &cands, &est_of),
+            model::crossover(&params, 4, &cands, est_of),
+            "trait crossover must reproduce the free-function crossover"
+        );
+    }
+
+    #[test]
+    fn overhead_ns_is_parallel_minus_critical_path() {
+        let cm = StaticCostModel::paper_2022();
+        let e = est(1e8);
+        let (tasks, tp) = cm.predict_parallel_ns(&e, 4);
+        let waves = tasks.div_ceil(4) as f64;
+        let critical = e.total_work_ns * waves / tasks as f64;
+        assert!((cm.overhead_ns(&e, 4) - (tp - critical)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn table_ewma_converges_after_step_change() {
+        let t = CostTable::new(4, OverheadParams::paper_2022(), 4);
+        // Regime 1: 100µs observed service time.
+        for _ in 0..20 {
+            t.observe(1, 0.0, 100_000.0);
+        }
+        assert!((t.expected_service_ns(1).unwrap() - 100_000.0).abs() < 1.0);
+        // Step change: the class suddenly costs 400µs.
+        for _ in 0..20 {
+            t.observe(1, 0.0, 400_000.0);
+        }
+        let after = t.expected_service_ns(1).unwrap();
+        assert!((after - 400_000.0).abs() < 4_000.0, "EWMA must converge: {after}");
+        // Other slots were never touched.
+        assert_eq!(t.expected_service_ns(0), None);
+    }
+
+    #[test]
+    fn table_bias_tracks_misprediction_with_clamp() {
+        let t = CostTable::new(2, OverheadParams::paper_2022(), 4);
+        for _ in 0..20 {
+            t.observe(0, 1000.0, 3000.0); // consistently 3× the prediction
+        }
+        let b = t.snapshot(0).bias;
+        assert!((b - 3.0).abs() < 0.1, "bias {b}");
+        t.observe(1, 1.0, 1e12); // absurd outlier: clamped to 4×
+        assert!(t.snapshot(1).bias <= EWMA_KEEP + EWMA_GAIN * BIAS_CLAMP.1 + 1e-12);
+        // Degenerate observations are ignored entirely.
+        t.observe(1, 1000.0, 0.0);
+        assert_eq!(t.snapshot(1).samples, 1);
+    }
+
+    #[test]
+    fn bias_scales_parallel_prediction() {
+        let t = CostTable::new(1, OverheadParams::paper_2022(), 4);
+        let e = est(1e8);
+        let base = t.predict_parallel_ns(0, &e);
+        for _ in 0..30 {
+            let (_, p) = t.static_model().predict_parallel_ns(&e, 4);
+            t.observe(0, p, p * 2.0);
+        }
+        let corrected = t.predict_parallel_ns(0, &e);
+        assert!(corrected > base * 1.8, "learned bias must inflate: {base} → {corrected}");
+    }
+
+    #[test]
+    fn inline_counts_accumulate_per_slot() {
+        let t = CostTable::new(3, OverheadParams::paper_2022(), 4);
+        t.note_inline(0);
+        t.note_inline(2);
+        t.note_inline(2);
+        assert_eq!(t.snapshot(0).inline_serial, 1);
+        assert_eq!(t.snapshot(2).inline_serial, 2);
+        assert_eq!(t.inline_total(), 3);
+    }
+}

@@ -36,6 +36,14 @@ pub struct Ledger {
     /// price, excluded from `total_events`, and rendered in summaries
     /// only when nonzero (a cache-less run reads exactly as before).
     pub cache_hits: u64,
+    /// Jobs the cost model ran serially inline on the lane thread
+    /// because their predicted size sat below the serial/parallel
+    /// crossover: fork-join overhead *avoided* rather than paid — the
+    /// paper's central trade-off, accounted in the same managed-away
+    /// vocabulary as `sheds`/`cache_hits` (unpriced by
+    /// `OverheadParams::charge`, excluded from `total_events`, rendered
+    /// only when nonzero so cost-model-off output stays byte-identical).
+    pub inline_serial: u64,
     /// Bytes moved across cores (δ).
     pub bytes: u64,
     /// Time spent waiting in a serving admission queue, ns. Measured (not
@@ -62,6 +70,7 @@ impl Ledger {
             steals: delta.steals,
             sheds: 0,
             cache_hits: 0,
+            inline_serial: 0,
             bytes: bytes_moved,
             queue_ns: 0,
             compute_ns: 0,
@@ -78,6 +87,7 @@ impl Ledger {
             steals: self.steals + other.steals,
             sheds: self.sheds + other.sheds,
             cache_hits: self.cache_hits + other.cache_hits,
+            inline_serial: self.inline_serial + other.inline_serial,
             bytes: self.bytes + other.bytes,
             queue_ns: self.queue_ns + other.queue_ns,
             compute_ns: self.compute_ns + other.compute_ns,
@@ -91,23 +101,30 @@ impl Ledger {
         self.spawns + self.syncs + self.messages
     }
 
-    /// Human-readable one-liner for reports. `cache_hits=` appears only
-    /// when nonzero, so runs without a result cache (the default) keep
-    /// their summary byte-for-byte unchanged.
+    /// Human-readable one-liner for reports. `cache_hits=` and
+    /// `inline_serial=` appear only when nonzero, so runs without a
+    /// result cache or cost model (the defaults) keep their summary
+    /// byte-for-byte unchanged.
     pub fn summary(&self) -> String {
         let cache = if self.cache_hits > 0 {
             format!(" cache_hits={}", self.cache_hits)
         } else {
             String::new()
         };
+        let inline = if self.inline_serial > 0 {
+            format!(" inline_serial={}", self.inline_serial)
+        } else {
+            String::new()
+        };
         format!(
-            "spawns={} syncs={} msgs={} steals={} sheds={}{} bytes={} queue={}µs compute={}µs idle={}µs",
+            "spawns={} syncs={} msgs={} steals={} sheds={}{}{} bytes={} queue={}µs compute={}µs idle={}µs",
             self.spawns,
             self.syncs,
             self.messages,
             self.steals,
             self.sheds,
             cache,
+            inline,
             self.bytes,
             self.queue_ns / 1_000,
             self.compute_ns / 1_000,
@@ -142,14 +159,18 @@ mod tests {
 
     #[test]
     fn merge_adds_fields() {
-        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, sheds: 9, cache_hits: 5, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
-        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, sheds: 90, cache_hits: 50, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
+        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, sheds: 9, cache_hits: 5, inline_serial: 2, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
+        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, sheds: 90, cache_hits: 50, inline_serial: 20, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
         let m = a.merged(&b);
         assert_eq!(
             m,
-            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, sheds: 99, cache_hits: 55, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
+            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, sheds: 99, cache_hits: 55, inline_serial: 22, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
         );
-        assert_eq!(m.total_events(), 66, "steals, sheds, and cache hits are not double-counted");
+        assert_eq!(
+            m.total_events(),
+            66,
+            "steals, sheds, cache hits, and inline-serial runs are not double-counted"
+        );
     }
 
     #[test]
@@ -171,5 +192,17 @@ mod tests {
         );
         let warm = Ledger { sheds: 3, cache_hits: 4, ..Default::default() };
         assert!(warm.summary().contains("sheds=3 cache_hits=4"), "{}", warm.summary());
+    }
+
+    #[test]
+    fn summary_shows_inline_serial_only_when_present() {
+        let off = Ledger { sheds: 1, ..Default::default() };
+        assert!(
+            !off.summary().contains("inline_serial"),
+            "cost-model-off summaries stay byte-identical: {}",
+            off.summary()
+        );
+        let on = Ledger { sheds: 1, cache_hits: 2, inline_serial: 7, ..Default::default() };
+        assert!(on.summary().contains("cache_hits=2 inline_serial=7"), "{}", on.summary());
     }
 }

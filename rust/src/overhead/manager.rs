@@ -9,7 +9,8 @@
 //!    against α/β/γ charges ("size of problem being solved should be
 //!    comparable to the efforts necessary for dividing the tasks").
 
-use super::model::{self, OverheadParams, WorkEstimate};
+use super::costmodel::{CostModel, StaticCostModel};
+use super::model::{OverheadParams, WorkEstimate};
 
 /// The manager's verdict for one region.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -53,16 +54,19 @@ impl Manager {
         Manager { params, cores: cores.max(1), min_task_work_ns: 1.0, margin: 1.0, bias: 1.0 }
     }
 
-    /// Decide how to execute a region with estimate `est`.
+    /// Decide how to execute a region with estimate `est`. The numbers
+    /// come from the calibrated [`StaticCostModel`] (the same arithmetic
+    /// the bench sweep and the serving layer's cost table consume).
     pub fn decide(&self, est: &WorkEstimate) -> Decision {
-        let serial_ns = model::predict_serial_ns(est);
+        let cost = StaticCostModel::new(self.params);
+        let serial_ns = cost.predict_serial_ns(est);
         if self.cores == 1 {
             return Decision::Serial { predicted_ns: serial_ns };
         }
         let max_tasks_by_grain =
             ((est.total_work_ns / self.min_task_work_ns).floor() as usize).max(1);
         let max_tasks = (64 * self.cores).min(max_tasks_by_grain.max(self.cores));
-        let (tasks, raw_parallel_ns) = model::best_grain(&self.params, est, self.cores, max_tasks);
+        let (tasks, raw_parallel_ns) = cost.best_grain(est, self.cores, max_tasks);
         let parallel_ns = raw_parallel_ns * self.bias;
         if parallel_ns * self.margin < serial_ns {
             Decision::Parallel {

@@ -8,6 +8,11 @@
 //! * [`ledger`] — per-run accounting of actual overhead events, filled in
 //!   by the pool's metrics or the simulator's schedule; reconciling ledger
 //!   vs model is a tested invariant.
+//! * [`costmodel`] — the consumable scheduling API over the model: the
+//!   [`CostModel`] trait (+ [`StaticCostModel`], the calibrated
+//!   closed-form impl) and the online per-class [`CostTable`] refreshed
+//!   from observed timings — what the serving layer consults at admit,
+//!   dispatch, and rebalance time.
 //! * [`calibrate`] — fits the model's constants from micro-benchmarks on
 //!   the real pool (spawn storms, barrier storms, copy ping-pong) and from
 //!   serial kernel timings; falls back to `OverheadParams::paper_2022()`.
@@ -20,10 +25,12 @@
 
 pub mod amdahl;
 pub mod calibrate;
+pub mod costmodel;
 pub mod ledger;
 pub mod manager;
 pub mod model;
 
+pub use costmodel::{ClassCost, CostModel, CostTable, StaticCostModel};
 pub use ledger::Ledger;
 pub use manager::{Decision, Manager};
 pub use model::{OverheadParams, WorkEstimate};

@@ -1,0 +1,109 @@
+//! Property/integration tests for the cost-model API: the static
+//! predictions must agree with the bench sweep's ground truth, the
+//! online EWMA must converge on regime changes, and serial-inline
+//! execution must be bit-identical to pooled execution.
+
+use ohm::bench::kernel::{self, Topic};
+use ohm::coordinator::{Coordinator, CoordinatorCfg, Job, RoutedEngine, ServeCostModel};
+use ohm::overhead::{CostModel, CostTable, OverheadParams, StaticCostModel};
+use ohm::workload::traces::TraceKind;
+
+/// The predicted serve-time crossover must match the crossover the
+/// bench sweep finds by evaluating every size: both answer "smallest n
+/// in the sweep where parallel beats serial" for the same params, so a
+/// drift between them means the CostModel API and the bench no longer
+/// price the same model.
+#[test]
+fn prop_crossover_matches_bench_virtual_sweep() {
+    let params = OverheadParams::paper_2022();
+    for topic in [Topic::Matmul, Topic::Sort] {
+        for cores in [2usize, 4, 8] {
+            let sizes = topic.default_sizes();
+            let doc = kernel::virtual_doc(topic, &sizes, cores, &params);
+            let cm = StaticCostModel::new(params);
+            let predicted = cm.crossover(cores, &sizes, &|n| topic.estimate(n));
+            assert_eq!(
+                predicted,
+                doc.crossover_n,
+                "{} @ {cores} cores: CostModel and bench sweep disagree",
+                topic.name()
+            );
+        }
+    }
+    // The paper's headline numbers at 4 cores stay pinned.
+    let cm = StaticCostModel::paper_2022();
+    assert_eq!(cm.crossover(4, &kernel::MATMUL_SIZES, &|n| Topic::Matmul.estimate(n)), Some(64));
+    assert_eq!(cm.crossover(4, &kernel::SORT_SIZES, &|n| Topic::Sort.estimate(n)), Some(100));
+}
+
+/// The online EWMA must track a synthetic step change in observed
+/// service time: after the regime shift, the expected-service estimate
+/// converges to the new level (within the EWMA's geometric tail) and
+/// the bias correction moves in the same direction.
+#[test]
+fn prop_ewma_converges_on_a_step_change() {
+    let table = CostTable::new(4, OverheadParams::paper_2022(), 4);
+    let predicted_ns = 100_000.0;
+    // Regime A: observations match the prediction exactly.
+    for _ in 0..50 {
+        table.observe(0, predicted_ns, 100_000.0);
+    }
+    let a = table.expected_service_ns(0).unwrap();
+    assert!((a - 100_000.0).abs() < 1.0, "steady state tracks exactly: {a}");
+    let bias_a = table.snapshot(0).bias;
+    assert!((bias_a - 1.0).abs() < 0.01, "unbiased when prediction is right: {bias_a}");
+    // Regime B: the true service time triples (contention appeared).
+    for _ in 0..50 {
+        table.observe(0, predicted_ns, 300_000.0);
+    }
+    let b = table.expected_service_ns(0).unwrap();
+    assert!(
+        (b - 300_000.0).abs() < 3_000.0,
+        "50 samples at gain 0.3 converge within 1%: {b}"
+    );
+    let bias_b = table.snapshot(0).bias;
+    assert!(bias_b > 2.9, "bias follows the slowdown: {bias_b}");
+    // Regime C: back to the modelled level — the estimate returns too
+    // (no ratchet; the model forgives as fast as it blames).
+    for _ in 0..50 {
+        table.observe(0, predicted_ns, 100_000.0);
+    }
+    let c = table.expected_service_ns(0).unwrap();
+    assert!((c - 100_000.0).abs() < 1_000.0, "recovery converges: {c}");
+}
+
+/// Serial-inline execution is the same arithmetic as pooled execution:
+/// for every below-crossover loadgen shape (and a couple above), the
+/// checksums must be bit-identical, because the reply's `engine=` tag is
+/// the *only* observable difference `--cost-model on` may introduce.
+#[test]
+fn prop_inline_serial_is_bit_identical_to_pooled() {
+    let coord = Coordinator::new(CoordinatorCfg { threads: 4, ..Default::default() }, None);
+    let cm = ServeCostModel::new(OverheadParams::paper_2022(), 4);
+    let kinds = [
+        TraceKind::Matmul { n: 24 },
+        TraceKind::Matmul { n: 48 },
+        TraceKind::Matmul { n: 128 },
+        TraceKind::Sort { n: 300 },
+        TraceKind::Sort { n: 999 },
+        TraceKind::Sort { n: 5000 },
+    ];
+    for (i, kind) in kinds.into_iter().enumerate() {
+        for seed in [7u64, 42, 1_000_003] {
+            let job = Job { id: i as u64, kind, seed, arrival_us: 0 };
+            let pooled = coord.execute_job(&job);
+            let inline = coord.execute_job_inline(&job);
+            assert!(pooled.ok && inline.ok, "{kind:?} seed {seed} must succeed");
+            assert_eq!(inline.engine, RoutedEngine::SerialInline);
+            assert_eq!(
+                pooled.checksum.to_bits(),
+                inline.checksum.to_bits(),
+                "{kind:?} seed {seed}: inline checksum must be bit-identical"
+            );
+        }
+    }
+    // And the serving model agrees the small loadgen shapes inline.
+    for kind in [TraceKind::Matmul { n: 24 }, TraceKind::Sort { n: 999 }] {
+        assert!(cm.should_inline(&kind), "{kind:?} sits below the 4-core crossover");
+    }
+}

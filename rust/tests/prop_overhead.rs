@@ -110,6 +110,7 @@ fn prop_charge_additive_over_merged_ledgers() {
             steals: 0,
             sheds: 0,
             cache_hits: 0,
+            inline_serial: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
@@ -133,6 +134,7 @@ fn prop_ideal_params_give_zero_charge() {
             steals: 0,
             sheds: 0,
             cache_hits: 0,
+            inline_serial: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
