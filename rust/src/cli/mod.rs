@@ -13,7 +13,7 @@
 //!            [--slo CLASS=US[,CLASS=US...]] [--admission-window-ms N]
 //!            [--rebalance off|adaptive] [--rebalance-window-ms N]
 //!            [--cache on|off] [--cache-entries N] [--cache-bytes N]
-//!            [--cost-model on|off] [--config F]]
+//!            [--cost-model on|off] [--faults SPEC] [--config F]]
 //!           # TCP front end: concurrent readers, per-shape-class dispatch
 //!           # lanes with work stealing, bounded per-lane admission queues
 //!           # (overflow → ERR BUSY), SLO-driven adaptive admission
@@ -41,8 +41,17 @@
 //!           # checksums against the serial engine, report
 //!           # client-observed latency p50/p90/p99
 //!           # (split hit-path vs miss-path when a result cache answers),
-//!           # goodput vs offered load under jittered BUSY/OVERLOADED
-//!           # retries, optionally DRAIN and save the final STATS
+//!           # goodput vs offered load under jittered retries (one
+//!           # retry policy keyed on the ERR taxonomy), optionally
+//!           # DRAIN and save the final STATS
+//! ohm chaos --matrix [--seed N] [--out FILE]
+//!           # deterministic fault×feature conformance sweep: each cell
+//!           # boots an in-process server with one injected fault armed
+//!           # (--faults spec) against a feature set (cache, adaptive
+//!           # rebalance, cost model), drives a seeded trace, then
+//!           # asserts admitted==finished, checksum bit-identity vs the
+//!           # serial reference, bounded drain exit, and regime-pure
+//!           # telemetry — see docs/CHAOS.md
 //! ohm bench [--json] [--topic matmul|sort|all] [--mode virtual|wall]
 //!           [--cores N] [--sizes N,N,...] [--out DIR]
 //!           # kernel perf trajectory: size sweep per topic, serial vs
@@ -61,7 +70,7 @@
 pub mod parser;
 
 use crate::config::ExperimentConfig;
-use crate::coordinator::{Coordinator, CoordinatorCfg};
+use crate::coordinator::{Coordinator, CoordinatorCfg, ErrCode};
 use crate::dla::matmul;
 use crate::exec::ExecCtx;
 use crate::overhead::calibrate::Calibration;
@@ -76,7 +85,7 @@ use parser::Args;
 use std::fmt::Write as _;
 use std::path::Path;
 
-const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|bench|calibrate|gantt|artifacts> [flags]
+const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|chaos|bench|calibrate|gantt|artifacts> [flags]
   experiment <id|all>   regenerate paper tables/figures (see DESIGN.md §5)
   matmul --n N          run one overhead-managed matmul
   sort --n N            run one overhead-managed quicksort
@@ -102,10 +111,13 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|bench|cali
                          predictive admission, cost-weighted rebalance;
                          STATS gains a cost-model table), --batch-max /
                          --batch-linger-us shape-batch formation, DRAIN
-                         protocol command for rolling restarts, --config F
+                         protocol command for rolling restarts, --faults
+                         SPEC deterministic fault injection (e.g.
+                         kill-lane=@3,drop-reply=0.1; off by default —
+                         grammar: docs/CHAOS.md), --config F
                          reads [serving] + [lanes] + [admission] +
                          [admission.slo] + [rebalance] + [cache] +
-                         [costmodel];
+                         [costmodel] + [faults];
                          protocol reference: docs/PROTOCOL.md)
   loadgen               drive a running --listen server with concurrent
                         clients and checksum verification (--addr HOST:PORT,
@@ -118,6 +130,13 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|bench|cali
                         prints client-side p50/p90/p99 — hit vs miss path
                         when cached — plus goodput vs offered load and
                         shed counts)
+  chaos                 deterministic fault-injection conformance matrix
+                        (--matrix sweeps the 6 fault kinds × base/full
+                        feature sets plus 2 no-fault baselines, each cell
+                        asserting admitted==finished, checksum
+                        bit-identity, bounded drain exit, and regime-pure
+                        telemetry; --seed N pins the schedule, --out FILE
+                        saves the per-cell report; docs/CHAOS.md)
   bench                 kernel perf sweep: serial vs best-grain parallel
                         with the α/β/γ/δ overhead breakdown and the
                         serial/parallel crossover size per topic
@@ -139,6 +158,7 @@ pub fn run(argv: &[String]) -> Result<String> {
         Some("sort") => cmd_sort(&args),
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
+        Some("chaos") => cmd_chaos(&args),
         Some("bench") => cmd_bench(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("gantt") => cmd_gantt(&args),
@@ -385,6 +405,13 @@ fn cmd_serve(args: &Args) -> Result<String> {
                 other => bail!("flag --cost-model: unknown mode {other:?} (on|off)"),
             };
         }
+        if let Some(v) = args.get("faults") {
+            // Validate at flag time: a typoed kind or trigger must fail
+            // before the listener binds, not at server start.
+            crate::coordinator::FaultPlan::parse(v)
+                .with_context(|| format!("flag --faults: bad spec {v:?} (see docs/CHAOS.md)"))?;
+            serving.faults = v.to_string();
+        }
         let threads = args.get_parsed::<usize>("threads")?.unwrap_or(4);
         let conns = args.get_parsed::<usize>("conns")?;
         let mut cfg = CoordinatorCfg { threads, ..Default::default() };
@@ -409,6 +436,9 @@ fn cmd_serve(args: &Args) -> Result<String> {
         }
         if cfg.cost_model {
             extras.push_str(", cost model on");
+        }
+        if cfg.faults != "off" {
+            extras.push_str(&format!(", faults {}", cfg.faults));
         }
         eprintln!(
             "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs), {}{})",
@@ -604,12 +634,13 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
                         // the wire.
                         let latency_us = sw.elapsed().as_nanos() as f64 / 1e3;
                         let reply = line.trim().to_string();
-                        // Retry the retryable rejects (PROTOCOL.md): the
-                        // soft SLO shed and the hard depth bound. ERR
-                        // DRAINING is terminal and everything else is a
-                        // real answer.
+                        // One retry policy, keyed on the wire error
+                        // taxonomy (PROTOCOL.md): only codes the server
+                        // classifies as retriable (BUSY, OVERLOADED) are
+                        // re-sent; DRAINING, FAULT, and MALFORMED are
+                        // terminal answers.
                         let retryable =
-                            reply.starts_with("ERR OVERLOADED") || reply.starts_with("ERR BUSY");
+                            ErrCode::classify(&reply).is_some_and(|code| code.retriable());
                         if retryable && attempt < retries {
                             attempt += 1;
                             // Jittered linear backoff in [base/2, base],
@@ -668,14 +699,16 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
                 if !reply.contains(want.as_str()) {
                     problems.push(format!("client {c} req {k}: got {reply:?}, want {want}"));
                 }
-            } else if reply.starts_with("ERR BUSY") {
-                busy += 1;
-            } else if reply.starts_with("ERR OVERLOADED") {
-                // Adaptive-admission shed: expected under overload, never
-                // a protocol failure.
-                shed += 1;
             } else {
-                problems.push(format!("client {c} req {k}: unexpected reply {reply:?}"));
+                // Tally through the same taxonomy the retry loop used:
+                // the two retriable rejects are load signals (expected
+                // under overload, never a protocol failure); every other
+                // code — and anything unclassifiable — is a problem.
+                match ErrCode::classify(reply) {
+                    Some(ErrCode::Busy) => busy += 1,
+                    Some(ErrCode::Overloaded) => shed += 1,
+                    _ => problems.push(format!("client {c} req {k}: unexpected reply {reply:?}")),
+                }
             }
         }
     }
@@ -784,6 +817,318 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
         }
     }
     Ok(text)
+}
+
+/// Requests each chaos-matrix cell drives through its server. Small and
+/// sequential on purpose: every fault trigger below is an `@N` one-shot
+/// keyed to a deterministic opportunity count, and a sequential trace
+/// keeps those counts reproducible run over run.
+const CHAOS_REQS: usize = 12;
+
+/// One matrix cell's client-side accounting. Every offered request ends
+/// in exactly one bucket, so `ok + errs + drops == CHAOS_REQS` is a
+/// checkable conservation law per cell.
+struct ChaosOutcome {
+    /// `OK` replies (each verified bit-identical to the serial engine).
+    ok: usize,
+    /// Classified fatal `ERR` replies (DRAINING / FAULT), plus retriable
+    /// rejects that exhausted the retry budget.
+    errs: usize,
+    /// Replies lost to an injected wedge or drop: EOF or a half-written
+    /// line. The request may have executed server-side, so these are
+    /// never re-sent (exactly-once from the client's side).
+    drops: usize,
+    /// Total injections the server's DRAIN block reported.
+    injected: u64,
+}
+
+/// The chaos/conformance scenario matrix (`ohm chaos --matrix`): sweep
+/// every fault kind across a minimal and a fully-featured server config
+/// (plus two no-fault baseline cells), and assert in every cell that the
+/// serving stack's standing invariants hold *under* the injected fault:
+///
+/// - **admitted == finished** in the drained trailer (nothing admitted
+///   is ever lost, even when a dispatcher is killed mid-flight);
+/// - **checksum bit-identity**: every `OK` reply matches the serial
+///   reference engine exactly;
+/// - **exactly-once**: dropped/wedged replies are counted, not re-sent,
+///   and the drain accounting must still close;
+/// - **bounded exit**: the server thread ends within 30s of `DRAIN`;
+/// - **no regime-mixed telemetry**: lane tables are uniformly
+///   epoch-titled or uniformly not.
+///
+/// Determinism: the fault schedule, workload seeds, and request order
+/// all derive from `--seed` (default 42), so a cell's verdict is
+/// reproducible. `--out FILE` saves the per-cell report that CI uploads.
+fn cmd_chaos(args: &Args) -> Result<String> {
+    if !args.has("matrix") {
+        bail!("chaos needs --matrix (the fault × feature scenario sweep; see docs/CHAOS.md)");
+    }
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(42);
+    let out_path = args.get("out").map(|s| s.to_string());
+
+    // Per-kind one-shot triggers, staggered so each fault lands mid-trace
+    // at a different point. `@N` counts *opportunities* (see faults.rs),
+    // which a sequential trace makes deterministic: dispatcher loop
+    // entries for kill-lane/stall, reply lines for wedge/drop, cache
+    // miss-leaderships for abort-flight, stolen batches for delay-steal.
+    const FAULT_CELLS: &[(&str, &str)] = &[
+        ("kill-lane", "@4"),
+        ("wedge-client", "@3"),
+        ("stall-dispatcher", "@2"),
+        ("drop-reply", "@5"),
+        ("abort-flight", "@2"),
+        ("delay-steal", "@1"),
+    ];
+
+    // The two feature sets every fault is crossed with. `base` is the
+    // serving layer with every optional subsystem off; `full` turns on
+    // the warm cache, adaptive rebalancing, the cost model, and adaptive
+    // admission (SLO set sky-high so the governor never sheds — the
+    // matrix tests fault handling, not overload handling).
+    let base = CoordinatorCfg {
+        threads: 1,
+        serve_threads: 2,
+        lanes: 2,
+        steal: true,
+        ..Default::default()
+    };
+    let full = CoordinatorCfg {
+        threads: 1,
+        serve_threads: 2,
+        lanes: 4,
+        steal: true,
+        cache: true,
+        cache_entries: 64,
+        cache_bytes: 1 << 20,
+        rebalance: crate::coordinator::RebalanceMode::Adaptive,
+        rebalance_window_ms: 50,
+        cost_model: true,
+        admission: crate::coordinator::AdmissionMode::Adaptive,
+        slo_p90_us: 1e9,
+        ..Default::default()
+    };
+    let feature_sets = [("base", base), ("full", full)];
+
+    let mut cells: Vec<(String, String, CoordinatorCfg)> = Vec::new();
+    for (fname, cfg) in &feature_sets {
+        cells.push(("none".to_string(), fname.to_string(), cfg.clone()));
+    }
+    for (kind, trigger) in FAULT_CELLS {
+        for (fname, cfg) in &feature_sets {
+            let mut armed = cfg.clone();
+            armed.faults = format!("seed={seed},{kind}={trigger}");
+            cells.push((kind.to_string(), fname.to_string(), armed));
+        }
+    }
+
+    let mut report =
+        format!("chaos matrix: {} cells x {CHAOS_REQS} reqs, seed {seed}\n", cells.len());
+    let mut green = 0usize;
+    for (i, (fault, features, cfg)) in cells.iter().enumerate() {
+        // Distinct workload seeds per cell so a cross-cell cache or
+        // batching artifact can't mask a divergence.
+        let wseed = seed.wrapping_mul(10_000).wrapping_add(i as u64 * 100);
+        match chaos_cell(cfg, wseed) {
+            Ok(o) => {
+                green += 1;
+                writeln!(
+                    report,
+                    "cell {i:>2} fault={fault:<16} features={features:<4} ok={:<2} err={:<2} drop={:<2} injected={} verdict=PASS",
+                    o.ok, o.errs, o.drops, o.injected
+                )
+                .unwrap();
+            }
+            Err(e) => {
+                writeln!(
+                    report,
+                    "cell {i:>2} fault={fault:<16} features={features:<4} verdict=FAIL ({e:#})"
+                )
+                .unwrap();
+            }
+        }
+    }
+    writeln!(report, "chaos matrix: {green}/{} cells green (seed {seed})", cells.len()).unwrap();
+    // Write the report before deciding pass/fail: a red matrix must
+    // still leave the per-cell evidence on disk for the CI artifact.
+    if let Some(path) = &out_path {
+        std::fs::write(path, &report)
+            .with_context(|| format!("writing chaos report to {path}"))?;
+    }
+    if green < cells.len() {
+        bail!("chaos matrix: {} cells failed\n{report}", cells.len() - green);
+    }
+    Ok(report)
+}
+
+/// One matrix cell: boot an in-process server under `cfg`, drive
+/// `CHAOS_REQS` sequential requests (a fresh connection per request, so
+/// a wedged or dropped reply poisons only its own connection), then
+/// `DRAIN` and check every invariant. Returns the cell's accounting on
+/// success; any violated invariant is an `Err` carrying the evidence.
+fn chaos_cell(cfg: &CoordinatorCfg, wseed: u64) -> Result<ChaosOutcome> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    // The bit-identity oracle: the serial engine's checksum for every
+    // request in the trace, computed before the server exists.
+    let mut reference =
+        Coordinator::new(CoordinatorCfg { threads: 1, ..Default::default() }, None);
+    let expected: Vec<String> = (0..CHAOS_REQS)
+        .map(|k| {
+            let (cmd, n) = LOADGEN_SHAPES[k % LOADGEN_SHAPES.len()];
+            let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
+            let r = reference.submit(kind, wseed.wrapping_add(k as u64));
+            format!("checksum={:.4}", r.checksum)
+        })
+        .collect();
+
+    let server = crate::coordinator::server::Server::bind("127.0.0.1:0")?;
+    let addr = server.local_addr();
+    let serve_cfg = cfg.clone();
+    let (done_tx, done_rx) = std::sync::mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let result = server.serve(serve_cfg, None);
+        let _ = done_tx.send(result);
+    });
+
+    let mut ok = 0usize;
+    let mut errs = 0usize;
+    let mut drops = 0usize;
+    let mut drained_block = String::new();
+    let drive = (|| -> Result<()> {
+        for k in 0..CHAOS_REQS {
+            let (cmd, n) = LOADGEN_SHAPES[k % LOADGEN_SHAPES.len()];
+            let rseed = wseed.wrapping_add(k as u64);
+            let mut attempts = 0usize;
+            loop {
+                let conn = TcpStream::connect(addr)?;
+                conn.set_read_timeout(Some(Duration::from_secs(10)))?;
+                let mut out = conn.try_clone()?;
+                let mut reader = BufReader::new(conn);
+                writeln!(out, "{cmd} {n} {rseed}")?;
+                out.flush()?;
+                let mut line = String::new();
+                let got = reader.read_line(&mut line)?;
+                if got == 0 || !line.ends_with('\n') {
+                    // EOF (drop-reply) or a half-written line then EOF
+                    // (wedge-client). The request may well have executed
+                    // server-side, so re-sending would break exactly-once
+                    // — count the loss and move on.
+                    drops += 1;
+                    break;
+                }
+                let reply = line.trim();
+                if reply.starts_with("OK ") {
+                    if !reply.contains(expected[k].as_str()) {
+                        bail!(
+                            "req {k}: checksum divergence: got {reply:?}, want {}",
+                            expected[k]
+                        );
+                    }
+                    ok += 1;
+                    break;
+                }
+                match ErrCode::classify(reply) {
+                    // Retriable rejects were never executed, so a re-send
+                    // is safe; past the budget they count as errors.
+                    Some(code) if code.retriable() && attempts < 3 => {
+                        attempts += 1;
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Some(_) => {
+                        errs += 1;
+                        break;
+                    }
+                    None => bail!("req {k}: reply outside the error taxonomy: {reply:?}"),
+                }
+            }
+        }
+
+        // DRAIN on a fresh connection; its block carries the trailer and
+        // telemetry every remaining invariant is read from.
+        let conn = TcpStream::connect(addr)?;
+        conn.set_read_timeout(Some(Duration::from_secs(20)))?;
+        let mut out = conn.try_clone()?;
+        let mut reader = BufReader::new(conn);
+        writeln!(out, "DRAIN")?;
+        out.flush()?;
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                bail!("server closed mid-DRAIN:\n{drained_block}");
+            }
+            if line.trim() == "." {
+                break;
+            }
+            drained_block.push_str(&line);
+        }
+        if !drained_block.starts_with("DRAINED") {
+            bail!("unexpected DRAIN response:\n{drained_block}");
+        }
+
+        // Invariant: nothing admitted was lost.
+        let trailer = drained_block
+            .lines()
+            .find(|l| l.starts_with("drained: admitted="))
+            .context("DRAIN block has no drained trailer")?;
+        let counts: Vec<u64> = trailer
+            .split(|ch: char| !ch.is_ascii_digit())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().expect("digit runs parse"))
+            .collect();
+        if counts.len() != 2 || counts[0] != counts[1] {
+            bail!("admitted != finished: {trailer:?}");
+        }
+
+        // Invariant: no regime-mixed telemetry — the lane tables in one
+        // STATS snapshot are either all epoch-titled or all plain.
+        let lane_titles: Vec<&str> =
+            drained_block.lines().filter(|l| l.contains("dispatch lanes")).collect();
+        let epoch_titled =
+            lane_titles.iter().filter(|l| l.contains("dispatch lanes (epoch")).count();
+        if epoch_titled != 0 && epoch_titled != lane_titles.len() {
+            bail!("regime-mixed lane telemetry:\n{drained_block}");
+        }
+
+        // Invariant: the client-side accounting closes.
+        if ok + errs + drops != CHAOS_REQS {
+            bail!("accounting leak: ok={ok} errs={errs} drops={drops} != {CHAOS_REQS} offered");
+        }
+        Ok(())
+    })();
+
+    // If the drive failed before its DRAIN, send one best-effort DRAIN so
+    // the serve thread still exits and the bounded-exit check below can
+    // report the *original* failure instead of hanging.
+    if drive.is_err() {
+        let _ = (|| -> Result<()> {
+            let mut conn = TcpStream::connect(addr)?;
+            writeln!(conn, "DRAIN")?;
+            conn.flush()?;
+            Ok(())
+        })();
+    }
+
+    // Invariant: bounded exit — the serve thread must end shortly after
+    // the drain, injected faults or not.
+    let serve_result = done_rx.recv_timeout(Duration::from_secs(30));
+    let _ = handle.join();
+    drive?;
+    match serve_result {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => bail!("serve() returned an error: {e:#}"),
+        Err(_) => bail!("server did not exit within 30s of DRAIN"),
+    }
+
+    let injected = drained_block
+        .lines()
+        .find(|l| l.starts_with("faults: spec="))
+        .and_then(|l| l.rsplit("injected=").next())
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0);
+    Ok(ChaosOutcome { ok, errs, drops, injected })
 }
 
 /// Kernel perf trajectory: per-topic size sweep of serial vs best-grain
@@ -1146,6 +1491,21 @@ mod tests {
         assert!(out.contains("cache hit-path latency (µs): p50="), "{out}");
         assert!(out.contains("cache miss-path latency (µs): p50="), "{out}");
         assert!(out.contains("drain: clean"), "{out}");
+    }
+
+    #[test]
+    fn serve_listen_rejects_bad_fault_specs_before_binding() {
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--faults", "nuke-it=@1"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--faults", "kill-lane=@0"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--faults", "kill-lane"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--faults", "drop-reply=1.5"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--faults", "seed=7"]).is_err());
+    }
+
+    #[test]
+    fn chaos_requires_matrix_and_a_parsable_seed() {
+        assert!(call(&["chaos"]).is_err());
+        assert!(call(&["chaos", "--matrix", "--seed", "x"]).is_err());
     }
 
     #[test]

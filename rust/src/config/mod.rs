@@ -263,6 +263,11 @@ pub struct ServingConfig {
     /// admission, and cost-weighted rebalancing. Default off, which
     /// preserves pre-cost-model serving behaviour bit-for-bit.
     pub cost_model: bool,
+    /// Fault-injection spec (`[faults] spec = "..."`), validated by
+    /// [`FaultPlan::parse`](crate::coordinator::FaultPlan::parse).
+    /// `"off"` by default, which disarms injection and preserves
+    /// pre-harness serving behaviour bit-for-bit.
+    pub faults: String,
 }
 
 impl Default for ServingConfig {
@@ -287,6 +292,7 @@ impl Default for ServingConfig {
             cache_entries: c.cache_entries,
             cache_bytes: c.cache_bytes,
             cost_model: c.cost_model,
+            faults: c.faults,
         }
     }
 }
@@ -403,6 +409,16 @@ impl ServingConfig {
                 cfg.cost_model = v.as_bool().context("costmodel enabled")?;
             }
         }
+        if let Some(sec) = t.get("faults") {
+            if let Some(v) = sec.get("spec") {
+                let spec = v.as_str().context("faults spec")?;
+                // Validate eagerly: a typoed kind or trigger must fail at
+                // load, not at server start.
+                crate::coordinator::FaultPlan::parse(spec)
+                    .with_context(|| format!("[faults] spec = {spec:?}"))?;
+                cfg.faults = spec.to_string();
+            }
+        }
         Ok(cfg)
     }
 
@@ -424,6 +440,7 @@ impl ServingConfig {
         cfg.cache_entries = self.cache_entries;
         cfg.cache_bytes = self.cache_bytes;
         cfg.cost_model = self.cost_model;
+        cfg.faults = self.faults.clone();
     }
 }
 
@@ -532,6 +549,8 @@ flag = true
         assert!(!s.cache, "the result cache defaults to off");
         assert_eq!(s.cost_model, c.cost_model);
         assert!(!s.cost_model, "the cost model defaults to off");
+        assert_eq!(s.faults, c.faults);
+        assert_eq!(s.faults, "off", "fault injection defaults to off");
         assert_eq!(
             (s.rebalance, s.rebalance_window_ms, s.slo_overrides.clone()),
             (c.rebalance, c.rebalance_window_ms, c.slo_overrides.clone()),
@@ -634,6 +653,29 @@ flag = true
         // Non-bool values are config errors, not silent defaults.
         let t = parse("[costmodel]\nenabled = 1\n").unwrap();
         assert!(ServingConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn faults_section_overrides_and_applies() {
+        let t = parse("[faults]\nspec = \"seed=7,kill-lane=@2,drop-reply=0.25\"\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.faults, "seed=7,kill-lane=@2,drop-reply=0.25");
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert_eq!(coord.faults, "seed=7,kill-lane=@2,drop-reply=0.25");
+        // A bad spec is a config error at load, not at server start.
+        for bad in [
+            "[faults]\nspec = \"nuke-it=@1\"\n",
+            "[faults]\nspec = \"kill-lane=@0\"\n",
+            "[faults]\nspec = \"seed=42\"\n",
+            "[faults]\nspec = 3\n",
+        ] {
+            let t = parse(bad).unwrap();
+            assert!(ServingConfig::from_table(&t).is_err(), "must reject {bad:?}");
+        }
+        // "off" round-trips as the disarmed default.
+        let t = parse("[faults]\nspec = \"off\"\n").unwrap();
+        assert_eq!(ServingConfig::from_table(&t).unwrap().faults, "off");
     }
 
     #[test]

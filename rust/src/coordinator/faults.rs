@@ -1,0 +1,470 @@
+//! Deterministic fault injection and the wire error taxonomy.
+//!
+//! The paper's thesis is that parallelism overheads must be managed at
+//! the root or they surface at execution time — and the nastiest place
+//! they surface is during *compound* failure: a lane dying mid-flight
+//! while a client wedges and a drain races a rebalance. This module
+//! makes those failures reproducible:
+//!
+//! * [`FaultPlan`] — a seeded schedule of injected faults, armed via
+//!   `--faults <spec>` (or `[faults]` in a serving config), off by
+//!   default. Each injection site in the serving stack asks
+//!   [`FaultPlan::should_fire`] before proceeding; the plan decides
+//!   deterministically (exact Nth-opportunity triggers) or
+//!   pseudo-randomly (seeded per-opportunity rates, PCG32). A disarmed
+//!   plan leaves the serving output byte-identical to a build without
+//!   this module — hooks render nothing and count nothing.
+//! * [`FaultKind`] — the six injected failure modes.
+//! * [`ErrCode`] — the wire error taxonomy. Every `ERR` line the server
+//!   can emit classifies into exactly one code with a fixed
+//!   retriable/fatal verdict, so clients need one retry policy instead
+//!   of per-string special cases. The taxonomy classifies the existing
+//!   wire strings; it does not change them (`--faults off` output stays
+//!   byte-identical across versions).
+//!
+//! Injected faults are never silent: every firing is recorded as a
+//! fault event in telemetry and lands in the serving [`Ledger`]'s
+//! `faults` counter, so the overhead they cause is attributed in the
+//! same books as every other source.
+//!
+//! [`Ledger`]: crate::overhead::Ledger
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::report::table::AsciiTable;
+use crate::util::Pcg32;
+
+/// The injected failure modes, one per serving-stack layer boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic a dispatcher lane thread at its next batch opportunity.
+    /// Exercises the lane-loop recovery path: the queue closes, queued
+    /// envelopes are reject-drained (so `admitted == finished` holds),
+    /// and blocked readers get `ERR internal dispatcher unavailable`.
+    KillLane,
+    /// Wedge a client connection: write half of one reply line, flush,
+    /// stall briefly, then close without the rest. The client sees a
+    /// truncated line and EOF — the classic half-written-then-silent
+    /// peer.
+    WedgeClient,
+    /// Stall the dispatcher between obtaining a batch and executing it,
+    /// inflating queue waits behind it (scheduling overhead surfaced).
+    StallDispatcher,
+    /// Drop a reply before it reaches the socket: the request executed
+    /// exactly once, but the client never hears about it and the
+    /// connection closes.
+    DropReply,
+    /// Abort a single-flight leader right after registration: followers
+    /// coalesced onto it wake and retry as their own leaders.
+    AbortFlight,
+    /// Delay a stolen batch before execution, stretching the cross-lane
+    /// migration window.
+    DelaySteal,
+}
+
+impl FaultKind {
+    /// All kinds, in spec/report order. Index = the kind's slot in the
+    /// plan's counter arrays.
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::KillLane,
+        FaultKind::WedgeClient,
+        FaultKind::StallDispatcher,
+        FaultKind::DropReply,
+        FaultKind::AbortFlight,
+        FaultKind::DelaySteal,
+    ];
+
+    /// The spec name, as written in `--faults` and rendered in STATS.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::KillLane => "kill-lane",
+            FaultKind::WedgeClient => "wedge-client",
+            FaultKind::StallDispatcher => "stall-dispatcher",
+            FaultKind::DropReply => "drop-reply",
+            FaultKind::AbortFlight => "abort-flight",
+            FaultKind::DelaySteal => "delay-steal",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        FaultKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+/// When a rule fires at its injection site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Trigger {
+    /// Fire exactly once, on the Nth opportunity (1-based).
+    At(u64),
+    /// Fire on each opportunity with probability `p`, decided by a
+    /// PCG32 stream keyed on (plan seed, kind, opportunity index) — so
+    /// the schedule replays bit-identically from the seed regardless of
+    /// thread interleaving between *different* kinds.
+    Rate(f64),
+}
+
+/// A seeded fault schedule. Constructed once at server start from the
+/// `--faults` spec; injection sites share it behind the server's
+/// `Arc<Shared>` and ask [`should_fire`](FaultPlan::should_fire) at
+/// each opportunity. Counters are atomics so sites never contend on a
+/// lock in the hot path.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: String,
+    seed: u64,
+    rules: [Option<Trigger>; 6],
+    /// Opportunities seen per kind (every `should_fire` call on a kind
+    /// that has a rule).
+    sites: [AtomicU64; 6],
+    /// Faults actually injected per kind.
+    fired: [AtomicU64; 6],
+}
+
+/// Default PRNG seed when the spec doesn't carry `seed=`.
+pub const DEFAULT_FAULT_SEED: u64 = 42;
+
+impl FaultPlan {
+    /// Parse a `--faults` spec. Grammar (comma-separated, no spaces):
+    ///
+    /// ```text
+    /// off
+    /// [seed=N,]kind=@K[,kind=@K|kind=P ...]
+    /// ```
+    ///
+    /// where `kind` is one of the [`FaultKind`] names, `@K` fires
+    /// exactly on the K-th opportunity (1-based), and `P` in `(0, 1]`
+    /// fires with that probability per opportunity. `off` (the default)
+    /// returns `Ok(None)`: no plan, no hooks, no output.
+    pub fn parse(spec: &str) -> Result<Option<FaultPlan>> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "off" {
+            return Ok(None);
+        }
+        let mut seed = DEFAULT_FAULT_SEED;
+        let mut rules: [Option<Trigger>; 6] = [None; 6];
+        for item in spec.split(',') {
+            let Some((key, val)) = item.split_once('=') else {
+                bail!("fault spec item {item:?} is not key=value (spec {spec:?})");
+            };
+            if key == "seed" {
+                seed = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault seed {val:?} is not a u64"))?;
+                continue;
+            }
+            let Some(kind) = FaultKind::parse(key) else {
+                bail!(
+                    "unknown fault kind {key:?}; expected one of {}",
+                    FaultKind::ALL.map(|k| k.name()).join(", ")
+                );
+            };
+            if rules[kind.idx()].is_some() {
+                bail!("duplicate fault kind {key:?} in spec {spec:?}");
+            }
+            let trigger = if let Some(n) = val.strip_prefix('@') {
+                let n: u64 = n
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault trigger {val:?} needs @N with N ≥ 1"))?;
+                if n == 0 {
+                    bail!("fault trigger @0 never fires; opportunities are 1-based");
+                }
+                Trigger::At(n)
+            } else {
+                let p: f64 = val
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault rate {val:?} is not a probability"))?;
+                if !(p > 0.0 && p <= 1.0) {
+                    bail!("fault rate {val:?} must be in (0, 1]");
+                }
+                Trigger::Rate(p)
+            };
+            rules[kind.idx()] = Some(trigger);
+        }
+        if rules.iter().all(|r| r.is_none()) {
+            bail!("fault spec {spec:?} sets a seed but no fault kinds");
+        }
+        Ok(Some(FaultPlan {
+            spec: spec.to_string(),
+            seed,
+            rules,
+            sites: std::array::from_fn(|_| AtomicU64::new(0)),
+            fired: std::array::from_fn(|_| AtomicU64::new(0)),
+        }))
+    }
+
+    /// Should this opportunity for `kind` inject its fault? Counts the
+    /// opportunity and decides per the kind's trigger. Kinds with no
+    /// rule always answer `false` without counting — a plan armed for
+    /// `kill-lane` leaves every other site untouched.
+    pub fn should_fire(&self, kind: FaultKind) -> bool {
+        let i = kind.idx();
+        let Some(rule) = self.rules[i] else {
+            return false;
+        };
+        let n = self.sites[i].fetch_add(1, Ordering::Relaxed) + 1;
+        let fire = match rule {
+            Trigger::At(k) => n == k,
+            Trigger::Rate(p) => {
+                // Key the stream on (seed, kind, opportunity) so the
+                // verdict for opportunity n is a pure function of the
+                // spec — independent of scheduling order across kinds.
+                let key = self
+                    .seed
+                    ^ ((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)).wrapping_add(n);
+                Pcg32::new(key).f64() < p
+            }
+        };
+        if fire {
+            self.fired[i].fetch_add(1, Ordering::Relaxed);
+        }
+        fire
+    }
+
+    /// The spec string this plan was parsed from.
+    pub fn spec(&self) -> &str {
+        &self.spec
+    }
+
+    /// Faults injected so far for one kind.
+    pub fn fired(&self, kind: FaultKind) -> u64 {
+        self.fired[kind.idx()].load(Ordering::Relaxed)
+    }
+
+    /// Total faults injected so far, across kinds.
+    pub fn fired_total(&self) -> u64 {
+        self.fired.iter().map(|f| f.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Render the fault-injection table for STATS/DRAIN. Only called
+    /// when a plan is armed — a disarmed server renders nothing, which
+    /// is what keeps `--faults off` output byte-identical to builds
+    /// that predate fault injection.
+    pub fn render(&self) -> String {
+        let mut t = AsciiTable::new(
+            "fault injection (deterministic, seeded)",
+            &["kind", "trigger", "opportunities", "injected"],
+        );
+        for kind in FaultKind::ALL {
+            let Some(rule) = self.rules[kind.idx()] else {
+                continue;
+            };
+            let trigger = match rule {
+                Trigger::At(k) => format!("@{k}"),
+                Trigger::Rate(p) => format!("p={p}"),
+            };
+            t.row(vec![
+                kind.name().to_string(),
+                trigger,
+                self.sites[kind.idx()].load(Ordering::Relaxed).to_string(),
+                self.fired(kind).to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "faults: spec={} seed={} injected={}\n",
+            self.spec,
+            self.seed,
+            self.fired_total()
+        ));
+        out
+    }
+}
+
+/// The wire error taxonomy: every `ERR` line the server can emit maps
+/// to exactly one code with a fixed retriable/fatal verdict. This is a
+/// *classification* of the existing wire strings, not a new wire format
+/// — the strings themselves are frozen by the byte-identity conformance
+/// tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Hard admission rejection: the routed lane's queue is at its
+    /// depth bound. Transient by construction — retriable.
+    Busy,
+    /// Soft admission rejection from the adaptive governor: predicted
+    /// queue wait would blow the SLO. Transient — retriable.
+    Overloaded,
+    /// The server is draining; it will never accept this request.
+    /// Fatal — go elsewhere.
+    Draining,
+    /// The serving stack itself failed (dead dispatcher, engine panic,
+    /// injected fault). Fatal: retrying against a dead lane just spins.
+    Fault,
+    /// The request never made sense (unknown command, bad argument,
+    /// empty line). Fatal: resending the same bytes cannot help.
+    Malformed,
+}
+
+impl ErrCode {
+    /// The canonical code token, as documented in PROTOCOL.md.
+    pub fn code(self) -> &'static str {
+        match self {
+            ErrCode::Busy => "BUSY",
+            ErrCode::Overloaded => "OVERLOADED",
+            ErrCode::Draining => "DRAINING",
+            ErrCode::Fault => "FAULT",
+            ErrCode::Malformed => "MALFORMED",
+        }
+    }
+
+    /// Whether a client should retry with backoff (`true`) or give up
+    /// (`false`). The whole point of the taxonomy: one policy, keyed on
+    /// the code, instead of per-string special cases.
+    pub fn retriable(self) -> bool {
+        matches!(self, ErrCode::Busy | ErrCode::Overloaded)
+    }
+
+    /// Classify a wire reply line. Returns `None` for non-error lines
+    /// (`OK …`, `PONG`, …). Recognises both the token-first forms
+    /// (`ERR BUSY …`) and the legacy prose forms the server still emits
+    /// (`ERR internal dispatcher unavailable`, `ERR MATMUL needs n
+    /// in …`, `ERR unknown command …`).
+    pub fn classify(reply: &str) -> Option<ErrCode> {
+        let rest = reply.strip_prefix("ERR ")?;
+        let first = rest.split_whitespace().next().unwrap_or("");
+        match first {
+            "BUSY" => Some(ErrCode::Busy),
+            "OVERLOADED" => Some(ErrCode::Overloaded),
+            "DRAINING" => Some(ErrCode::Draining),
+            "FAULT" => Some(ErrCode::Fault),
+            "MALFORMED" => Some(ErrCode::Malformed),
+            // Legacy prose forms, frozen on the wire by the conformance
+            // tests but classified here so clients get one policy.
+            "internal" => Some(ErrCode::Fault),
+            "unknown" | "empty" => Some(ErrCode::Malformed),
+            _ => {
+                if rest.contains("needs n in") {
+                    Some(ErrCode::Malformed)
+                } else if rest.contains("failed on engine") {
+                    Some(ErrCode::Fault)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_and_empty_specs_disarm() {
+        assert!(FaultPlan::parse("off").unwrap().is_none());
+        assert!(FaultPlan::parse("").unwrap().is_none());
+        assert!(FaultPlan::parse("  off  ").unwrap().is_none());
+    }
+
+    #[test]
+    fn at_trigger_fires_exactly_once_on_the_nth_opportunity() {
+        let plan = FaultPlan::parse("kill-lane=@3").unwrap().unwrap();
+        let fires: Vec<bool> =
+            (0..6).map(|_| plan.should_fire(FaultKind::KillLane)).collect();
+        assert_eq!(fires, vec![false, false, true, false, false, false]);
+        assert_eq!(plan.fired(FaultKind::KillLane), 1);
+        assert_eq!(plan.fired_total(), 1);
+    }
+
+    #[test]
+    fn unruled_kinds_never_fire_or_count() {
+        let plan = FaultPlan::parse("kill-lane=@1").unwrap().unwrap();
+        assert!(!plan.should_fire(FaultKind::DropReply));
+        assert_eq!(plan.fired(FaultKind::DropReply), 0);
+        let s = plan.render();
+        assert!(s.contains("kill-lane"), "{s}");
+        assert!(!s.contains("drop-reply"), "unruled kinds stay out of the table: {s}");
+    }
+
+    #[test]
+    fn rate_trigger_replays_bit_identically_from_the_seed() {
+        let a = FaultPlan::parse("seed=7,drop-reply=0.5").unwrap().unwrap();
+        let b = FaultPlan::parse("seed=7,drop-reply=0.5").unwrap().unwrap();
+        let sa: Vec<bool> = (0..64).map(|_| a.should_fire(FaultKind::DropReply)).collect();
+        let sb: Vec<bool> = (0..64).map(|_| b.should_fire(FaultKind::DropReply)).collect();
+        assert_eq!(sa, sb);
+        assert!(sa.iter().any(|&f| f), "p=0.5 over 64 opportunities must fire");
+        assert!(sa.iter().any(|&f| !f), "and must also skip");
+        let c = FaultPlan::parse("seed=8,drop-reply=0.5").unwrap().unwrap();
+        let sc: Vec<bool> = (0..64).map(|_| c.should_fire(FaultKind::DropReply)).collect();
+        assert_ne!(sa, sc, "a different seed gives a different schedule");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        for bad in [
+            "kill-lane",            // not key=value
+            "nuke-it=@1",           // unknown kind
+            "kill-lane=@0",         // 1-based
+            "kill-lane=1.5",        // rate out of range
+            "kill-lane=0",          // rate must be > 0
+            "seed=42",              // seed with no kinds
+            "seed=x,kill-lane=@1",  // unparseable seed
+            "kill-lane=@1,kill-lane=@2", // duplicate kind
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec {bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn render_carries_spec_seed_and_counts() {
+        let plan = FaultPlan::parse("seed=9,wedge-client=@2").unwrap().unwrap();
+        plan.should_fire(FaultKind::WedgeClient);
+        plan.should_fire(FaultKind::WedgeClient);
+        let s = plan.render();
+        assert!(s.contains("fault injection"), "{s}");
+        assert!(s.contains("wedge-client"), "{s}");
+        assert!(s.contains("@2"), "{s}");
+        assert!(s.contains("faults: spec=seed=9,wedge-client=@2 seed=9 injected=1"), "{s}");
+    }
+
+    #[test]
+    fn classify_covers_every_wire_error_the_server_emits() {
+        let cases = [
+            ("ERR BUSY lane 0 full (depth 64)", Some(ErrCode::Busy)),
+            ("ERR OVERLOADED p90=1234 slo=1000", Some(ErrCode::Overloaded)),
+            ("ERR DRAINING SORT rejected: server is draining", Some(ErrCode::Draining)),
+            ("ERR FAULT injected: lane killed", Some(ErrCode::Fault)),
+            ("ERR MALFORMED", Some(ErrCode::Malformed)),
+            ("ERR internal dispatcher unavailable", Some(ErrCode::Fault)),
+            ("ERR MATMUL needs n in 1..=4096", Some(ErrCode::Malformed)),
+            ("ERR SORT needs n in 1..=4096", Some(ErrCode::Malformed)),
+            ("ERR unknown command \"FROB\"", Some(ErrCode::Malformed)),
+            ("ERR empty request", Some(ErrCode::Malformed)),
+            ("ERR SORT n=100 failed on engine cpu-serial", Some(ErrCode::Fault)),
+            ("OK MATMUL n=24 engine=xla us=1.0 queue_us=0.5 checksum=1.0000", None),
+            ("PONG", None),
+            ("DRAINED", None),
+        ];
+        for (line, want) in cases {
+            assert_eq!(ErrCode::classify(line), want, "line {line:?}");
+        }
+    }
+
+    #[test]
+    fn retriable_verdicts_are_pinned() {
+        assert!(ErrCode::Busy.retriable());
+        assert!(ErrCode::Overloaded.retriable());
+        assert!(!ErrCode::Draining.retriable());
+        assert!(!ErrCode::Fault.retriable());
+        assert!(!ErrCode::Malformed.retriable());
+    }
+
+    #[test]
+    fn codes_render_their_wire_tokens() {
+        for (code, tok) in [
+            (ErrCode::Busy, "BUSY"),
+            (ErrCode::Overloaded, "OVERLOADED"),
+            (ErrCode::Draining, "DRAINING"),
+            (ErrCode::Fault, "FAULT"),
+            (ErrCode::Malformed, "MALFORMED"),
+        ] {
+            assert_eq!(code.code(), tok);
+        }
+    }
+}

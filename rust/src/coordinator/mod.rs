@@ -48,6 +48,7 @@
 pub mod admission;
 pub mod cache;
 pub mod costmodel;
+pub mod faults;
 pub mod job;
 pub mod lanes;
 pub mod queue;
@@ -58,6 +59,7 @@ pub mod telemetry;
 pub use admission::{AdmissionMode, Governor, SloTable};
 pub use cache::ResultCache;
 pub use costmodel::ServeCostModel;
+pub use faults::{ErrCode, FaultKind, FaultPlan};
 pub use job::{Job, JobResult, RoutedEngine};
 pub use lanes::{LanePool, ShapeClass};
 pub use queue::BoundedQueue;
@@ -145,6 +147,12 @@ pub struct CoordinatorCfg {
     /// (`engine=serial-inline`), the adaptive governor sheds on predicted
     /// queue wait, and the rebalancer weighs classes by predicted cost.
     pub cost_model: bool,
+    /// Serving layer: fault-injection spec (`--faults <spec>` /
+    /// `[faults]` config), parsed by [`faults::FaultPlan::parse`].
+    /// `"off"` (the default) disarms injection entirely — replies,
+    /// STATS, and DRAIN output are byte-for-byte what they were before
+    /// the fault harness existed.
+    pub faults: String,
 }
 
 impl Default for CoordinatorCfg {
@@ -169,6 +177,7 @@ impl Default for CoordinatorCfg {
             cache_entries: 4096,
             cache_bytes: 4 * 1024 * 1024,
             cost_model: false,
+            faults: "off".to_string(),
         }
     }
 }

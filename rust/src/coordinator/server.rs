@@ -76,6 +76,7 @@
 use super::admission::{Governor, SloTable};
 use super::cache::{self, ResultCache};
 use super::costmodel::ServeCostModel;
+use super::faults::{FaultKind, FaultPlan};
 use super::lanes::{Envelope, LanePool, ShapeClass};
 use super::routing::{LaneLoad, RebalanceMode, Rebalancer, Router};
 use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
@@ -112,6 +113,11 @@ struct Shared {
     /// `None` when disabled — every decision then takes exactly the
     /// pre-cost-model path, byte for byte.
     cost: Option<Arc<ServeCostModel>>,
+    /// The deterministic fault-injection plan (`--faults <spec>`).
+    /// `None` when disarmed (the default) — every hook below then takes
+    /// exactly the pre-harness path: no counting, no extra output, so
+    /// replies, STATS, and DRAIN stay byte-identical.
+    faults: Option<FaultPlan>,
     telemetry: Mutex<Telemetry>,
     next_id: AtomicU64,
     /// Set by `DRAIN`: admission answers `ERR DRAINING` from then on.
@@ -180,6 +186,7 @@ impl Server {
                 .cache
                 .then(|| ResultCache::new(lane_count, cfg.cache_entries, cfg.cache_bytes)),
             cost,
+            faults: FaultPlan::parse(&cfg.faults)?,
             telemetry: Mutex::new(telemetry),
             next_id: AtomicU64::new(1),
             draining: AtomicBool::new(false),
@@ -351,12 +358,39 @@ fn lane_dispatch(lane: usize, shared: &Shared, cfg: &CoordinatorCfg) {
     let runtime = crate::runtime::Runtime::load(&crate::runtime::Runtime::default_dir()).ok();
     let coord = Coordinator::new(cfg.clone(), runtime);
     let linger = Duration::from_micros(cfg.batch_linger_us);
-    while let Some(batch) = shared.lanes.next_batch(lane, cfg.batch_max, linger) {
+    loop {
+        // kill-lane fires *before* the next pop, never after: an
+        // injected panic here strands no popped-but-unfinished
+        // envelope, so `lane_loop`'s reject-drain keeps
+        // admitted == finished exact. One opportunity per batch cycle.
+        if let Some(plan) = &shared.faults {
+            if plan.should_fire(FaultKind::KillLane) {
+                telemetry_lock(shared).record_fault();
+                panic!("injected fault: kill-lane {lane}");
+            }
+        }
+        let Some(batch) = shared.lanes.next_batch(lane, cfg.batch_max, linger) else {
+            break;
+        };
         // Batches are shape-pure runs from one queue, so every envelope
         // in a run shares its admitted epoch except across the instant
         // of a swap; attribute the batch to its head's epoch.
         let epoch = batch.envelopes[0].epoch;
         telemetry_lock(shared).record_lane_batch(lane, epoch, batch.envelopes.len(), batch.stolen);
+        if let Some(plan) = &shared.faults {
+            // stall-dispatcher holds a popped batch hostage: queue wait
+            // inflates behind it — scheduling overhead, surfaced.
+            if plan.should_fire(FaultKind::StallDispatcher) {
+                telemetry_lock(shared).record_fault();
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            // delay-steal stretches the cross-lane migration window of a
+            // stolen batch (only stolen batches are opportunities).
+            if batch.stolen && plan.should_fire(FaultKind::DelaySteal) {
+                telemetry_lock(shared).record_fault();
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
         for env in batch.envelopes {
             execute_one(&coord, shared, env);
         }
@@ -460,7 +494,29 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
                 let response = respond(shared, line.trim());
                 line.clear();
                 match response {
-                    Response::Line(s) => writeln!(out, "{s}")?,
+                    Response::Line(s) => {
+                        if let Some(plan) = &shared.faults {
+                            // wedge-client: half a reply line, a flush so
+                            // it reaches the wire, a stall, then close —
+                            // the peer sees a truncated line and EOF.
+                            if plan.should_fire(FaultKind::WedgeClient) {
+                                telemetry_lock(shared).record_fault();
+                                let bytes = s.as_bytes();
+                                out.write_all(&bytes[..bytes.len() / 2])?;
+                                out.flush()?;
+                                std::thread::sleep(Duration::from_millis(50));
+                                break;
+                            }
+                            // drop-reply: the request executed (exactly
+                            // once), but its reply never reaches the
+                            // socket — the connection just closes.
+                            if plan.should_fire(FaultKind::DropReply) {
+                                telemetry_lock(shared).record_fault();
+                                break;
+                            }
+                        }
+                        writeln!(out, "{s}")?
+                    }
                     Response::Block(s) => {
                         for l in s.lines() {
                             writeln!(out, "{l}")?;
@@ -520,6 +576,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             block.push_str(&cache_block(shared));
             block.push_str(&cost_model_block(shared));
             block.push_str(&routing_block(shared));
+            block.push_str(&faults_block(shared));
             Response::Block(block)
         }
         Some("DRAIN") => {
@@ -542,6 +599,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             block.push_str(&cache_block(shared));
             block.push_str(&cost_model_block(shared));
             block.push_str(&routing_block(shared));
+            block.push_str(&faults_block(shared));
             block.push_str(&format!(
                 "drained: admitted={} finished={}\n",
                 shared.admitted.load(Ordering::SeqCst),
@@ -601,6 +659,17 @@ fn respond(shared: &Shared, line: &str) -> Response {
                         ));
                     }
                     cache::Lookup::Miss(f) => flight = Some(f),
+                }
+            }
+            // abort-flight: give up the just-won single-flight
+            // leadership before execution. Followers coalesced onto this
+            // flight wake and retry as their own leaders; the request
+            // itself still executes and replies normally — only the
+            // cache fill is lost. One opportunity per won leadership.
+            if let Some(plan) = &shared.faults {
+                if flight.is_some() && plan.should_fire(FaultKind::AbortFlight) {
+                    telemetry_lock(shared).record_fault();
+                    drop(flight.take());
                 }
             }
             // Route under the current epoch (and register demand with
@@ -715,6 +784,14 @@ fn routing_block(shared: &Shared) -> String {
         RebalanceMode::Off => String::new(),
         RebalanceMode::Adaptive => shared.router.render(),
     }
+}
+
+/// The fault-injection table appended to STATS/DRAIN blocks: per-kind
+/// trigger, opportunity, and injection counts, plus the `faults:
+/// spec=… injected=…` trailer. Empty with `--faults off`, keeping those
+/// blocks byte-identical to a server without the fault harness.
+fn faults_block(shared: &Shared) -> String {
+    shared.faults.as_ref().map_or_else(String::new, FaultPlan::render)
 }
 
 /// The occupancy line appended to STATS/DRAIN blocks.
@@ -883,6 +960,147 @@ mod tests {
         assert!(on.iter().any(|l| l.starts_with("cost model: cores=2 crossover")), "{on:?}");
         assert!(on.iter().any(|l| l.contains("inline_serial=2")), "{on:?}");
         assert!(!off.iter().any(|l| l.contains("cost model")), "off is byte-identical: {off:?}");
+    }
+
+    /// Like `roundtrip`, but with an explicit config (fault specs etc.)
+    /// and an explicit connection budget.
+    fn roundtrip_cfg(cfg: CoordinatorCfg, conns: &[&[&str]]) -> Vec<Vec<String>> {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let n = conns.len();
+        let h = std::thread::spawn(move || server.serve(cfg, Some(n)).unwrap());
+        let mut all = Vec::new();
+        for lines in conns {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            for l in *lines {
+                writeln!(conn, "{l}").unwrap();
+            }
+            conn.flush().unwrap();
+            let out: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+            all.push(out);
+        }
+        h.join().unwrap();
+        all
+    }
+
+    #[test]
+    fn injected_lane_kill_answers_internal_error_and_drains_clean() {
+        // kill-lane=@1: the single dispatcher panics at its first batch
+        // opportunity, before any pop — so no job ever executes and
+        // every admission answers the internal error. The request may
+        // race the panic into the still-open queue (recovery then pops
+        // it as finished) or find it closed (admission rolls back), so
+        // the drain balances at 1/1 or 0/0 — never apart.
+        let cfg = CoordinatorCfg {
+            threads: 1,
+            lanes: 1,
+            faults: "kill-lane=@1".to_string(),
+            ..Default::default()
+        };
+        let out = &roundtrip_cfg(cfg, &[&["SORT 200 1", "STATS", "DRAIN", "QUIT"]])[0];
+        assert_eq!(out[0], "ERR internal dispatcher unavailable", "{out:?}");
+        assert!(out.iter().any(|l| l.contains("fault injection")), "{out:?}");
+        assert!(out.iter().any(|l| l.contains("kill-lane")), "{out:?}");
+        assert!(out.iter().any(|l| l.contains("faults=1")), "ledger carries the fault: {out:?}");
+        assert!(
+            out.iter().any(|l| l.starts_with("faults: spec=kill-lane=@1 seed=42 injected=1")),
+            "{out:?}"
+        );
+        let drained = out
+            .iter()
+            .find(|l| l.starts_with("drained: admitted="))
+            .unwrap_or_else(|| panic!("no drained trailer: {out:?}"));
+        let nums: Vec<&str> = drained.split('=').collect();
+        let admitted: u64 = nums[1].split_whitespace().next().unwrap().parse().unwrap();
+        let finished: u64 = nums[2].trim().parse().unwrap();
+        assert_eq!(admitted, finished, "{out:?}");
+    }
+
+    #[test]
+    fn dropped_reply_closes_the_connection_after_exactly_once_execution() {
+        let cfg = CoordinatorCfg {
+            threads: 1,
+            lanes: 1,
+            faults: "drop-reply=@1".to_string(),
+            ..Default::default()
+        };
+        let out = roundtrip_cfg(cfg, &[&["SORT 200 1"], &["DRAIN", "QUIT"]]);
+        assert!(out[0].is_empty(), "the reply was dropped, the conn closed: {:?}", out[0]);
+        // The job still executed exactly once: the drain balances at 1/1.
+        assert!(
+            out[1].iter().any(|l| l.starts_with("drained: admitted=1 finished=1")),
+            "{:?}",
+            out[1]
+        );
+        assert!(out[1].iter().any(|l| l.contains("drop-reply")), "{:?}", out[1]);
+    }
+
+    #[test]
+    fn wedged_client_sees_half_a_line_then_eof() {
+        use std::io::Read;
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let cfg = CoordinatorCfg {
+            threads: 1,
+            lanes: 1,
+            faults: "wedge-client=@1".to_string(),
+            ..Default::default()
+        };
+        let h = std::thread::spawn(move || server.serve(cfg, Some(2)).unwrap());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        writeln!(conn, "SORT 200 1").unwrap();
+        conn.flush().unwrap();
+        let mut got = String::new();
+        conn.read_to_string(&mut got).unwrap();
+        assert!(got.starts_with("OK SORT"), "the half that arrived is a reply prefix: {got:?}");
+        assert!(!got.contains('\n'), "never a complete line: {got:?}");
+        assert!(!got.contains("checksum="), "the tail was withheld: {got:?}");
+        drop(conn);
+        let mut conn = TcpStream::connect(addr).unwrap();
+        for l in ["DRAIN", "QUIT"] {
+            writeln!(conn, "{l}").unwrap();
+        }
+        conn.flush().unwrap();
+        let out: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+        h.join().unwrap();
+        assert!(
+            out.iter().any(|l| l.starts_with("drained: admitted=1 finished=1")),
+            "the wedged request still executed exactly once: {out:?}"
+        );
+    }
+
+    #[test]
+    fn aborted_single_flight_leader_still_replies_but_skips_the_fill() {
+        let cfg = CoordinatorCfg {
+            threads: 1,
+            lanes: 1,
+            cache: true,
+            faults: "abort-flight=@1".to_string(),
+            ..Default::default()
+        };
+        let out =
+            &roundtrip_cfg(cfg, &[&["SORT 300 7", "SORT 300 7", "SORT 300 7", "QUIT"]])[0];
+        assert!(out[0].starts_with("OK SORT n=300"), "{out:?}");
+        assert!(!out[0].contains("engine=cache"), "cold run executes: {out:?}");
+        assert!(
+            !out[1].contains("engine=cache"),
+            "the aborted flight filled nothing, so the repeat re-executes: {out:?}"
+        );
+        assert!(out[2].contains("engine=cache"), "the second leader's fill serves this: {out:?}");
+        let checksum = |s: &str| {
+            s.split_whitespace().find(|t| t.starts_with("checksum=")).unwrap().to_string()
+        };
+        assert_eq!(checksum(&out[0]), checksum(&out[1]), "{out:?}");
+        assert_eq!(checksum(&out[1]), checksum(&out[2]), "{out:?}");
+    }
+
+    #[test]
+    fn faults_off_stats_and_drain_render_no_fault_output() {
+        let out = roundtrip(&["SORT 200 1", "STATS", "DRAIN"]);
+        assert!(
+            !out.iter().any(|l| l.contains("fault") || l.contains("FAULT")),
+            "a disarmed harness leaves no trace: {out:?}"
+        );
     }
 
     #[test]

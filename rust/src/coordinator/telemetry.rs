@@ -218,6 +218,15 @@ impl Telemetry {
         }
     }
 
+    /// Record one injected fault (the `--faults` harness firing). Lands
+    /// in the serving ledger so deliberately-caused failure overhead is
+    /// attributed in the same books as every other source — never
+    /// mysterious. The fault-injection table itself is rendered by the
+    /// server from the live [`FaultPlan`](crate::coordinator::FaultPlan).
+    pub fn record_fault(&mut self) {
+        self.serving_ledger.faults += 1;
+    }
+
     /// Size the per-lane counters (called once at server start): one
     /// epoch-0 table of `n` lanes.
     pub fn init_lanes(&mut self, n: usize) {
@@ -491,6 +500,7 @@ impl Telemetry {
             || self.serving_ledger.sheds > 0
             || self.serving_ledger.cache_hits > 0
             || self.serving_ledger.inline_serial > 0
+            || self.serving_ledger.faults > 0
         {
             out.push_str(&format!("serving ledger: {}\n", self.serving_ledger.summary()));
         }
@@ -685,6 +695,18 @@ mod tests {
         let s = t.render();
         assert!(s.contains("engine:serial-inline"), "{s}");
         assert!(s.contains("inline_serial=2"), "ledger line carries the count: {s}");
+    }
+
+    #[test]
+    fn injected_faults_land_in_the_ledger_and_gate_its_line() {
+        let mut t = Telemetry::default();
+        assert!(!t.render().contains("serving ledger:"), "quiet telemetry renders no ledger");
+        t.record_fault();
+        t.record_fault();
+        assert_eq!(t.serving_ledger.faults, 2);
+        let s = t.render();
+        assert!(s.contains("serving ledger:"), "faults alone surface the ledger line: {s}");
+        assert!(s.contains("faults=2"), "{s}");
     }
 
     #[test]

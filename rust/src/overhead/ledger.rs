@@ -44,6 +44,14 @@ pub struct Ledger {
     /// `OverheadParams::charge`, excluded from `total_events`, rendered
     /// only when nonzero so cost-model-off output stays byte-identical).
     pub inline_serial: u64,
+    /// Faults injected by the deterministic fault harness (`--faults`):
+    /// lane kills, wedged clients, dropped replies, stalled dispatch.
+    /// Injected failure is overhead *deliberately caused*, so it is
+    /// attributed in the same books — but like `sheds` it is
+    /// bookkeeping `OverheadParams::charge` does not price, excluded
+    /// from `total_events`, and rendered only when nonzero (a
+    /// faults-off run reads exactly as before).
+    pub faults: u64,
     /// Bytes moved across cores (δ).
     pub bytes: u64,
     /// Time spent waiting in a serving admission queue, ns. Measured (not
@@ -71,6 +79,7 @@ impl Ledger {
             sheds: 0,
             cache_hits: 0,
             inline_serial: 0,
+            faults: 0,
             bytes: bytes_moved,
             queue_ns: 0,
             compute_ns: 0,
@@ -88,6 +97,7 @@ impl Ledger {
             sheds: self.sheds + other.sheds,
             cache_hits: self.cache_hits + other.cache_hits,
             inline_serial: self.inline_serial + other.inline_serial,
+            faults: self.faults + other.faults,
             bytes: self.bytes + other.bytes,
             queue_ns: self.queue_ns + other.queue_ns,
             compute_ns: self.compute_ns + other.compute_ns,
@@ -116,8 +126,13 @@ impl Ledger {
         } else {
             String::new()
         };
+        let faults = if self.faults > 0 {
+            format!(" faults={}", self.faults)
+        } else {
+            String::new()
+        };
         format!(
-            "spawns={} syncs={} msgs={} steals={} sheds={}{}{} bytes={} queue={}µs compute={}µs idle={}µs",
+            "spawns={} syncs={} msgs={} steals={} sheds={}{}{}{} bytes={} queue={}µs compute={}µs idle={}µs",
             self.spawns,
             self.syncs,
             self.messages,
@@ -125,6 +140,7 @@ impl Ledger {
             self.sheds,
             cache,
             inline,
+            faults,
             self.bytes,
             self.queue_ns / 1_000,
             self.compute_ns / 1_000,
@@ -159,17 +175,17 @@ mod tests {
 
     #[test]
     fn merge_adds_fields() {
-        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, sheds: 9, cache_hits: 5, inline_serial: 2, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
-        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, sheds: 90, cache_hits: 50, inline_serial: 20, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
+        let a = Ledger { spawns: 1, syncs: 2, messages: 3, steals: 8, sheds: 9, cache_hits: 5, inline_serial: 2, faults: 1, bytes: 4, queue_ns: 7, compute_ns: 5, idle_ns: 6 };
+        let b = Ledger { spawns: 10, syncs: 20, messages: 30, steals: 80, sheds: 90, cache_hits: 50, inline_serial: 20, faults: 10, bytes: 40, queue_ns: 70, compute_ns: 50, idle_ns: 60 };
         let m = a.merged(&b);
         assert_eq!(
             m,
-            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, sheds: 99, cache_hits: 55, inline_serial: 22, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
+            Ledger { spawns: 11, syncs: 22, messages: 33, steals: 88, sheds: 99, cache_hits: 55, inline_serial: 22, faults: 11, bytes: 44, queue_ns: 77, compute_ns: 55, idle_ns: 66 }
         );
         assert_eq!(
             m.total_events(),
             66,
-            "steals, sheds, cache hits, and inline-serial runs are not double-counted"
+            "steals, sheds, cache hits, inline-serial runs, and faults are not double-counted"
         );
     }
 
@@ -204,5 +220,17 @@ mod tests {
         );
         let on = Ledger { sheds: 1, cache_hits: 2, inline_serial: 7, ..Default::default() };
         assert!(on.summary().contains("cache_hits=2 inline_serial=7"), "{}", on.summary());
+    }
+
+    #[test]
+    fn summary_shows_faults_only_when_present() {
+        let clean = Ledger { sheds: 1, ..Default::default() };
+        assert!(
+            !clean.summary().contains("faults"),
+            "faults-off summaries stay byte-identical: {}",
+            clean.summary()
+        );
+        let chaotic = Ledger { sheds: 1, inline_serial: 2, faults: 3, ..Default::default() };
+        assert!(chaotic.summary().contains("inline_serial=2 faults=3"), "{}", chaotic.summary());
     }
 }

@@ -328,6 +328,7 @@ impl Machine {
                 sheds: 0,
                 cache_hits: 0,
                 inline_serial: 0,
+                faults: 0,
                 bytes: bytes_moved,
                 queue_ns: 0,
                 compute_ns: compute as u64,

@@ -1,0 +1,220 @@
+//! Property and conformance tests for the wire error taxonomy and the
+//! deterministic fault plan.
+//!
+//! Two contracts are frozen here. First, every error string the server
+//! has ever put on the wire classifies into exactly one `ERR <CODE>`
+//! taxonomy bucket with a pinned retriable/fatal verdict (PROTOCOL.md
+//! "Error taxonomy") — the literals themselves are frozen, the taxonomy
+//! is a classification layer on top. Second, `--faults off` must leave
+//! the serving surface untouched: a disarmed plan parses to `None`,
+//! renders nothing, and a live server's STATS/DRAIN output carries no
+//! fault output of any kind, while an armed plan's schedule is a pure
+//! function of (seed, kind, opportunity index).
+
+mod common;
+
+use common::fetch_stats;
+use ohm::coordinator::server::Server;
+use ohm::coordinator::{Coordinator, CoordinatorCfg, ErrCode, FaultKind, FaultPlan};
+use ohm::prop::{ensure, forall, Config};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+#[test]
+fn every_wire_error_literal_classifies_into_the_taxonomy() {
+    // The exact strings server.rs emits today (frozen on the wire by the
+    // serving conformance suites), each with its taxonomy bucket.
+    let legacy: &[(&str, ErrCode)] = &[
+        ("ERR BUSY lane 2 full (depth 64)", ErrCode::Busy),
+        ("ERR OVERLOADED p90=2212 slo=1500", ErrCode::Overloaded),
+        ("ERR DRAINING MATMUL rejected: server is draining", ErrCode::Draining),
+        ("ERR internal dispatcher unavailable", ErrCode::Fault),
+        ("ERR MATMUL n=24 failed on engine threaded", ErrCode::Fault),
+        ("ERR MATMUL needs n in 1..=4096", ErrCode::Malformed),
+        ("ERR unknown command \"PLEASE\"", ErrCode::Malformed),
+        ("ERR empty request", ErrCode::Malformed),
+    ];
+    for (wire, want) in legacy {
+        assert_eq!(ErrCode::classify(wire), Some(*want), "legacy literal {wire:?}");
+    }
+    // Canonical `ERR <CODE> detail` forms round-trip through their own
+    // token, whatever detail text follows.
+    for code in
+        [ErrCode::Busy, ErrCode::Overloaded, ErrCode::Draining, ErrCode::Fault, ErrCode::Malformed]
+    {
+        let wire = format!("ERR {} some detail text", code.code());
+        assert_eq!(ErrCode::classify(&wire), Some(code), "{wire}");
+    }
+    // Non-errors and novel prose stay outside the taxonomy — a client
+    // must treat them as protocol failures, not guess.
+    assert_eq!(ErrCode::classify("OK MATMUL n=24 checksum=1.0 engine=serial"), None);
+    assert_eq!(ErrCode::classify("DRAINED"), None);
+    assert_eq!(ErrCode::classify("ERR something novel entirely"), None);
+}
+
+#[test]
+fn retriable_fatal_split_is_pinned() {
+    // Only the two load rejects may be re-sent: they are emitted before
+    // the job executes. Everything else is a terminal answer; re-sending
+    // after a FAULT could double-execute.
+    assert!(ErrCode::Busy.retriable());
+    assert!(ErrCode::Overloaded.retriable());
+    assert!(!ErrCode::Draining.retriable());
+    assert!(!ErrCode::Fault.retriable());
+    assert!(!ErrCode::Malformed.retriable());
+}
+
+#[test]
+fn prop_at_triggers_fire_exactly_once_whatever_the_seed() {
+    forall(Config::default().cases(60), "@k fires on the k-th opportunity only", |g| {
+        let k = 1 + g.usize_in(1..50) as u64;
+        let seed = g.u64();
+        let plan = FaultPlan::parse(&format!("seed={seed},stall-dispatcher=@{k}"))
+            .expect("valid spec")
+            .expect("armed plan");
+        let mut fired_at = None;
+        for i in 1..=100u64 {
+            if plan.should_fire(FaultKind::StallDispatcher) {
+                ensure(fired_at.is_none(), || format!("@{k} fired twice (again at {i})"))?;
+                fired_at = Some(i);
+            }
+        }
+        ensure(fired_at == Some(k), || format!("@{k} fired at {fired_at:?} (seed {seed})"))
+    });
+}
+
+#[test]
+fn prop_rate_schedules_replay_bit_identically_from_the_seed() {
+    forall(Config::default().cases(40), "rate plan is a pure function of (seed, idx)", |g| {
+        let seed = g.u64();
+        let p = 0.05 + 0.9 * g.f64_unit();
+        let spec = format!("seed={seed},drop-reply={p}");
+        let a = FaultPlan::parse(&spec).expect("valid spec").expect("armed");
+        let b = FaultPlan::parse(&spec).expect("valid spec").expect("armed");
+        for i in 0..200 {
+            let fa = a.should_fire(FaultKind::DropReply);
+            let fb = b.should_fire(FaultKind::DropReply);
+            ensure(fa == fb, || format!("divergence at opportunity {i} (seed {seed}, p {p})"))?;
+        }
+        ensure(a.fired(FaultKind::DropReply) == b.fired(FaultKind::DropReply), || {
+            "fired counts diverged".to_string()
+        })
+    });
+}
+
+#[test]
+fn malformed_specs_are_rejected_and_off_disarms() {
+    for bad in [
+        "kill-lane",
+        "kill-lane=@0",
+        "kill-lane=0",
+        "kill-lane=1.5",
+        "kill-lane=-0.5",
+        "nuke-the-site=@1",
+        "seed=5",
+        "seed=x,kill-lane=@1",
+        "kill-lane=@1,kill-lane=@2",
+        "=@1",
+    ] {
+        assert!(FaultPlan::parse(bad).is_err(), "accepted bad spec {bad:?}");
+    }
+    assert!(FaultPlan::parse("off").unwrap().is_none());
+    assert!(FaultPlan::parse("").unwrap().is_none());
+    // Every kind is spellable in one spec.
+    let all = "kill-lane=@1,wedge-client=@2,stall-dispatcher=@3,drop-reply=0.5,abort-flight=@4,delay-steal=0.25";
+    assert!(FaultPlan::parse(all).unwrap().is_some());
+}
+
+/// Issue `DRAIN` on a fresh connection and return its block.
+fn drain_block(addr: SocketAddr) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(out, "DRAIN").unwrap();
+    out.flush().unwrap();
+    let mut block = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "server closed mid-DRAIN:\n{block}");
+        if line.trim() == "." {
+            break;
+        }
+        block.push_str(&line);
+    }
+    block
+}
+
+/// Send one request on its own connection and return the reply.
+fn one_request(addr: SocketAddr, line: &str) -> String {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(out, "{line}").unwrap();
+    out.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    reply.trim().to_string()
+}
+
+#[test]
+fn faults_off_serving_output_is_fault_free() {
+    // The default config IS --faults off; the conformance claim is that
+    // the fault subsystem leaves zero trace on the wire when disarmed —
+    // STATS and DRAIN render exactly the pre-fault-harness surface.
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg { threads: 1, ..Default::default() };
+    assert_eq!(cfg.faults, "off", "the default must be disarmed");
+    let h = std::thread::spawn(move || server.serve(cfg, None).unwrap());
+
+    let mut reference =
+        Coordinator::new(CoordinatorCfg { threads: 1, ..Default::default() }, None);
+    let want = format!(
+        "checksum={:.4}",
+        reference.submit(ohm::workload::traces::TraceKind::Sort { n: 300 }, 5).checksum
+    );
+    let reply = one_request(addr, "SORT 300 5");
+    assert!(reply.starts_with("OK ") && reply.contains(&want), "{reply}");
+
+    let stats = fetch_stats(addr);
+    let drained = drain_block(addr);
+    h.join().unwrap();
+    for (name, block) in [("STATS", &stats), ("DRAIN", &drained)] {
+        for marker in ["fault injection", "faults:", "faults=", "FAULT"] {
+            assert!(
+                !block.contains(marker),
+                "disarmed server leaked {marker:?} into {name}:\n{block}"
+            );
+        }
+    }
+}
+
+#[test]
+fn armed_plan_renders_its_table_even_before_any_injection() {
+    // delay-steal with a single un-stolen request never fires, so the
+    // serving behaviour is untouched — but an armed server must say so
+    // on STATS/DRAIN: the operator can always tell a chaos run from a
+    // production run.
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg {
+        threads: 1,
+        faults: "seed=7,delay-steal=@1".to_string(),
+        ..Default::default()
+    };
+    let h = std::thread::spawn(move || server.serve(cfg, None).unwrap());
+
+    let reply = one_request(addr, "SORT 300 5");
+    assert!(reply.starts_with("OK "), "{reply}");
+
+    let stats = fetch_stats(addr);
+    let drained = drain_block(addr);
+    h.join().unwrap();
+    for block in [&stats, &drained] {
+        assert!(block.contains("fault injection (deterministic, seeded)"), "{block}");
+        assert!(
+            block.contains("faults: spec=seed=7,delay-steal=@1 seed=7 injected=0"),
+            "{block}"
+        );
+    }
+}

@@ -111,6 +111,7 @@ fn prop_charge_additive_over_merged_ledgers() {
             sheds: 0,
             cache_hits: 0,
             inline_serial: 0,
+            faults: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
@@ -135,6 +136,7 @@ fn prop_ideal_params_give_zero_charge() {
             sheds: 0,
             cache_hits: 0,
             inline_serial: 0,
+            faults: 0,
             bytes: g.u64() % 1_000_000,
             queue_ns: 0,
             compute_ns: 0,
