@@ -1,0 +1,493 @@
+"""Analyzer conformance: each pass proves it fires on bad input and
+stays quiet on good input, over inline Rust fixture snippets.
+
+These tests pin the *analysis semantics* — lock scoping rules, the
+condvar exception, wildcard literal matching, suppression grammar — so
+the passes can be refactored without silently losing a detector. The
+final test runs the real driver over the real repo: the committed
+baselines and suppressions must keep `--check` green.
+"""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "tools"))
+
+from analyze import atomics, conformance, ledger, lexer, locks, modules, report  # noqa: E402
+
+
+def make_repo(tmp_path, files):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return tmp_path
+
+
+def ids(res):
+    return [f.id for f in res.findings]
+
+
+# ---------------------------------------------------------------- lexer
+
+
+def test_nested_block_comments_strip_fully():
+    src = "a /* outer /* inner */ still comment */ b"
+    assert lexer.strip_comments(src).split() == ["a", "b"]
+
+
+def test_line_comment_inside_string_is_not_a_comment():
+    src = 'let url = "http://x"; // real comment\nlet s = "// not a comment";'
+    out = lexer.strip_comments(src)
+    assert '"http://x"' in out
+    assert '"// not a comment"' in out
+    assert "real comment" not in out
+
+
+def test_raw_strings_and_char_literals_survive():
+    src = 'let r = r#"raw " with // stuff"#;\nlet c = \'/\'; let l: &\'static str = "x";'
+    out = lexer.strip_comments(src)
+    assert 'raw " with // stuff' in out
+    assert "'static" in out  # lifetime not eaten as a char literal
+
+
+def test_string_literals_extracts_values_and_lines():
+    lits = lexer.string_literals('let a = "one";\nlet b = "two\\n";')
+    assert [(l.value, l.line) for l in lits] == [("one", 1), ("two\n", 2)]
+
+
+def test_strip_test_blocks_removes_cfg_test_mod():
+    src = 'fn real() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let x = "inside"; }\n}\n'
+    out = lexer.strip_test_blocks(src)
+    assert "real" in out and "inside" not in out
+
+
+# -------------------------------------------------------------- symbols
+
+
+SYMBOL_TREE = {
+    "rust/src/lib.rs": "pub mod a;\npub mod b;\n",
+    "rust/src/a.rs": """
+        pub struct Widget;
+        pub enum Color { Red, Green }
+        pub fn make() {}
+    """,
+    "rust/src/b.rs": """
+        pub use crate::a::Widget;
+        use crate::a::Color::Red;
+        use crate::a::{make, Color};
+    """,
+}
+
+
+def test_symbols_clean_tree_resolves(tmp_path):
+    repo = make_repo(tmp_path, SYMBOL_TREE)
+    res = modules.run(repo)
+    assert ids(res) == []
+    assert res.stats["uses_checked"] >= 3
+
+
+def test_symbols_missing_item_and_bad_variant_fail(tmp_path):
+    bad = dict(SYMBOL_TREE)
+    bad["rust/src/b.rs"] = """
+        use crate::a::Gadget;
+        use crate::a::Color::Blue;
+    """
+    repo = make_repo(tmp_path, bad)
+    res = modules.run(repo)
+    found = ids(res)
+    assert any("Gadget" in i for i in found)
+    assert any("Blue" in i for i in found), "enum variants are item-grade"
+
+
+def test_symbols_reexport_chain_is_verified(tmp_path):
+    repo = make_repo(
+        tmp_path,
+        {
+            "rust/src/lib.rs": "pub mod a;\npub mod b;\npub mod c;\n",
+            "rust/src/a.rs": "pub struct Real;\n",
+            # b re-exports something a does NOT define: importing it
+            # through the chain must fail, not be trusted at the leaf.
+            "rust/src/b.rs": "pub use crate::a::Phantom;\n",
+            "rust/src/c.rs": "use crate::b::Phantom;\n",
+        },
+    )
+    res = modules.run(repo)
+    assert any("Phantom" in i for i in ids(res))
+
+
+# ---------------------------------------------------------------- locks
+
+
+def locks_run(tmp_path, body, extra=""):
+    repo = make_repo(
+        tmp_path,
+        {
+            "rust/src/lib.rs": textwrap.dedent(
+                """
+                use std::sync::Mutex;
+                pub struct S { a: Mutex<u32>, b: Mutex<u32> }
+                """
+            )
+            + textwrap.dedent(body)
+            + textwrap.dedent(extra)
+        },
+    )
+    return locks.run(repo)
+
+
+def test_locks_guard_across_send_detected(tmp_path):
+    res = locks_run(
+        tmp_path,
+        """
+        impl S {
+            fn f(&self, tx: &std::sync::mpsc::Sender<u32>) {
+                let g = self.a.lock().unwrap();
+                tx.send(*g).unwrap();
+            }
+        }
+        """,
+    )
+    assert any("guard-across-blocking" in i and "send" in i for i in ids(res))
+
+
+def test_locks_guard_released_by_scope_and_drop(tmp_path):
+    res = locks_run(
+        tmp_path,
+        """
+        impl S {
+            fn scoped(&self, tx: &std::sync::mpsc::Sender<u32>) {
+                let v = { let g = self.a.lock().unwrap(); *g };
+                tx.send(v).unwrap();
+            }
+            fn dropped(&self, tx: &std::sync::mpsc::Sender<u32>) {
+                let g = self.a.lock().unwrap();
+                drop(g);
+                tx.send(1).unwrap();
+            }
+            fn derived(&self, tx: &std::sync::mpsc::Sender<u32>) {
+                let v = self.a.lock().unwrap().wrapping_add(1);
+                tx.send(v).unwrap();
+            }
+        }
+        """,
+    )
+    assert ids(res) == [], "scope exit, drop(), and derived-value chains all release"
+
+
+def test_locks_condvar_wait_with_held_guard_is_exempt(tmp_path):
+    res = locks_run(
+        tmp_path,
+        """
+        pub struct Q { mu: Mutex<u32>, cv: std::sync::Condvar }
+        impl Q {
+            fn wait_nonzero(&self) {
+                let mut g = self.mu.lock().unwrap();
+                while *g == 0 {
+                    g = self.cv.wait(g).unwrap();
+                }
+            }
+        }
+        """,
+    )
+    assert ids(res) == []
+
+
+def test_locks_order_cycle_detected(tmp_path):
+    res = locks_run(
+        tmp_path,
+        """
+        impl S {
+            fn ab(&self) {
+                let g = self.a.lock().unwrap();
+                let h = self.b.lock().unwrap();
+            }
+            fn ba(&self) {
+                let h = self.b.lock().unwrap();
+                let g = self.a.lock().unwrap();
+            }
+        }
+        """,
+    )
+    assert any("lock-order-cycle" in i for i in ids(res))
+
+
+def test_locks_consistent_order_is_clean(tmp_path):
+    res = locks_run(
+        tmp_path,
+        """
+        impl S {
+            fn ab(&self) {
+                let g = self.a.lock().unwrap();
+                let h = self.b.lock().unwrap();
+            }
+            fn ab2(&self) {
+                let g = self.a.lock().unwrap();
+                let h = self.b.lock().unwrap();
+            }
+        }
+        """,
+    )
+    assert ids(res) == []
+
+
+def test_locks_double_acquire_detected(tmp_path):
+    res = locks_run(
+        tmp_path,
+        """
+        impl S {
+            fn f(&self) {
+                let g = self.a.lock().unwrap();
+                let h = self.a.lock().unwrap();
+            }
+        }
+        """,
+    )
+    assert any("double-acquire" in i for i in ids(res))
+
+
+def test_locks_guard_returning_helper_counts_as_acquisition(tmp_path):
+    res = locks_run(
+        tmp_path,
+        """
+        impl S {
+            fn a_guard(&self) -> std::sync::MutexGuard<'_, u32> {
+                self.a.lock().unwrap()
+            }
+            fn f(&self, tx: &std::sync::mpsc::Sender<u32>) {
+                let g = self.a_guard();
+                tx.send(*g).unwrap();
+            }
+        }
+        """,
+    )
+    assert any("guard-across-blocking" in i and ":f:" in i for i in ids(res))
+
+
+# -------------------------------------------------------------- atomics
+
+
+ATOMIC_SRC = {
+    "rust/src/lib.rs": """
+        use std::sync::atomic::{AtomicU64, Ordering};
+        pub fn bump(c: &AtomicU64) {
+            c.fetch_add(1, Ordering::Relaxed);
+            c.load(Ordering::Acquire);
+        }
+    """
+}
+
+
+def test_atomics_bless_then_clean(tmp_path):
+    repo = make_repo(tmp_path, ATOMIC_SRC)
+    baselines = repo / "tools" / "baselines"
+    baselines.mkdir(parents=True)
+    inv = atomics.inventory(repo)
+    (baselines / atomics.BASELINE_NAME).write_text(atomics.render_baseline(inv))
+    assert ids(atomics.run(repo)) == []
+
+
+def test_atomics_drift_fails(tmp_path):
+    repo = make_repo(tmp_path, ATOMIC_SRC)
+    baselines = repo / "tools" / "baselines"
+    baselines.mkdir(parents=True)
+    inv = atomics.inventory(repo)
+    (baselines / atomics.BASELINE_NAME).write_text(atomics.render_baseline(inv))
+    # A new Relaxed site appears without a re-bless.
+    lib = repo / "rust" / "src" / "lib.rs"
+    lib.write_text(lib.read_text() + "\npub fn sneak(c: &AtomicU64) { c.store(0, Ordering::Relaxed); }\n")
+    res = atomics.run(repo)
+    assert any(i.startswith("atomics:drift:lib.rs") for i in ids(res))
+    # cmp::Ordering variants are not atomics.
+    lib.write_text(lib.read_text() + "\npub fn cmpish() -> std::cmp::Ordering { std::cmp::Ordering::Less }\n")
+    assert atomics.inventory(repo)["lib.rs"] == inv["lib.rs"] | {"Relaxed": 2}
+
+
+# ---------------------------------------------------------- conformance
+
+
+CONFORMANCE_REPO = {
+    "rust/src/coordinator/server.rs": r'''
+    fn respond() {
+        let r = format!("ERR BUSY lane {lane} full (depth {d})");
+        let t = "queue: len={} max={}\n";
+    }
+    ''',
+    "rust/src/coordinator/faults.rs": """
+    pub enum ErrCode { Busy }
+    impl ErrCode {
+        pub fn name(&self) -> &'static str {
+            match self { ErrCode::Busy => "BUSY" }
+        }
+        pub fn retriable(&self) -> bool {
+            matches!(self, ErrCode::Busy)
+        }
+    }
+    """,
+    "rust/src/cli/mod.rs": """
+    fn cmd_serve(args: &Args) {
+        let d = args.get_parsed::<usize>("queue-depth");
+    }
+    """,
+    "rust/src/config/mod.rs": """
+    fn from_table(t: &Table) {
+        if let Some(sec) = t.get("serving") {
+            let v = sec.get("queue_depth");
+        }
+    }
+    """,
+    "docs/PROTOCOL.md": """
+    ```text
+    ERR BUSY lane <l> full (depth <d>)
+    queue: len=<l> max=<m>
+    ```
+    | code | retriable |
+    |------|-----------|
+    | BUSY | yes       |
+    """,
+    "README.md": "Use `--queue-depth N` and `[serving]` with `queue_depth`.\n",
+}
+
+
+def test_conformance_clean_fixture_passes(tmp_path):
+    repo = make_repo(tmp_path, CONFORMANCE_REPO)
+    assert ids(conformance.run(repo)) == []
+
+
+def test_conformance_protocol_drift_fails(tmp_path):
+    files = dict(CONFORMANCE_REPO)
+    files["docs/PROTOCOL.md"] = files["docs/PROTOCOL.md"].replace(
+        "ERR BUSY lane <l> full (depth <d>)\n", ""
+    )
+    repo = make_repo(tmp_path, files)
+    res = conformance.run(repo)
+    assert any("undocumented-wire-literal" in i and "ERR-BUSY" in i for i in ids(res))
+
+
+def test_conformance_retriable_mismatch_fails(tmp_path):
+    files = dict(CONFORMANCE_REPO)
+    files["docs/PROTOCOL.md"] = files["docs/PROTOCOL.md"].replace("| BUSY | yes", "| BUSY | no")
+    repo = make_repo(tmp_path, files)
+    res = conformance.run(repo)
+    assert "conformance:taxonomy-retriable-mismatch:BUSY" in ids(res)
+
+
+def test_conformance_undocumented_flag_and_config_fail(tmp_path):
+    files = dict(CONFORMANCE_REPO)
+    files["README.md"] = "nothing documented here\n"
+    repo = make_repo(tmp_path, files)
+    found = ids(conformance.run(repo))
+    assert "conformance:undocumented-flag:cmd_serve:--queue-depth" in found
+    assert "conformance:undocumented-config:[serving]" in found
+    assert "conformance:undocumented-config:queue_depth" in found
+
+
+def test_conformance_test_module_literals_are_ignored(tmp_path):
+    files = dict(CONFORMANCE_REPO)
+    files["rust/src/coordinator/server.rs"] += """
+    #[cfg(test)]
+    mod tests {
+        fn t() { let fake = "ERR IMAGINARY not on the wire"; }
+    }
+    """
+    repo = make_repo(tmp_path, files)
+    assert ids(conformance.run(repo)) == []
+
+
+# --------------------------------------------------------------- ledger
+
+
+LEDGER_STRUCT = """
+pub struct Ledger {
+    pub spawns: u64,
+    pub syncs: u64,
+}
+"""
+
+
+def ledger_repo(tmp_path, use_site):
+    return make_repo(
+        tmp_path,
+        {
+            "rust/src/overhead/ledger.rs": LEDGER_STRUCT,
+            "rust/src/sim.rs": use_site,
+        },
+    )
+
+
+def test_ledger_full_literal_passes(tmp_path):
+    repo = ledger_repo(tmp_path, "fn f() -> Ledger { Ledger { spawns: 0, syncs: 1 } }\n")
+    assert ids(ledger.run(repo)) == []
+
+
+def test_ledger_missing_field_and_spread_fail(tmp_path):
+    repo = ledger_repo(
+        tmp_path,
+        """
+        fn f() -> Ledger { Ledger { spawns: 0 } }
+        fn g() -> Ledger { Ledger { spawns: 0, ..Default::default() } }
+        """,
+    )
+    found = ids(ledger.run(repo))
+    assert any(i.startswith("ledger:missing-fields:sim.rs") for i in found)
+    assert any(i.startswith("ledger:spread:sim.rs") for i in found)
+
+
+def test_ledger_patterns_and_tests_exempt(tmp_path):
+    repo = ledger_repo(
+        tmp_path,
+        """
+        fn f(l: Ledger) -> u64 {
+            let Ledger { spawns, .. } = l;
+            spawns
+        }
+        #[cfg(test)]
+        mod tests {
+            fn t() -> Ledger { Ledger { spawns: 1, ..Default::default() } }
+        }
+        """,
+    )
+    assert ids(ledger.run(repo)) == []
+
+
+# --------------------------------------------------- suppressions/report
+
+
+def test_suppression_requires_reason():
+    with pytest.raises(report.SuppressionError):
+        report.parse_suppressions("locks:some-id\n")
+
+
+def test_suppression_honored_and_stale_warned():
+    res = report.PassResult("locks")
+    res.finding("locks:x", "boom")
+    active, suppressed, stale = report.apply_suppressions(
+        [res], {"locks:x": "deliberate", "locks:gone": "fixed long ago"}
+    )
+    assert active == [] and len(suppressed) == 1 and stale == ["locks:gone"]
+
+
+# ---------------------------------------------------------- real driver
+
+
+def test_driver_check_is_green_on_this_repo():
+    """The committed baselines + suppressions keep the real tree green.
+
+    This is the acceptance pin: all five passes, ≥70 modules, exit 0.
+    """
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "ohm_analyze.py"), "--check"],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "pass symbols" in proc.stdout
+    modules_line = next(l for l in proc.stdout.splitlines() if "modules=" in l)
+    count = int(modules_line.split("modules=")[1].split()[0])
+    assert count >= 70

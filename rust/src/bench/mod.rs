@@ -55,6 +55,12 @@ pub struct Runner {
     records: Vec<Record>,
 }
 
+impl std::fmt::Debug for Runner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runner").finish_non_exhaustive()
+    }
+}
+
 impl Runner {
     pub fn new(bench_name: &str) -> Self {
         eprintln!("== bench: {bench_name}");

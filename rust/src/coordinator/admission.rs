@@ -221,6 +221,12 @@ pub struct Governor {
     lanes: Vec<Mutex<LaneWindow>>,
 }
 
+impl std::fmt::Debug for Governor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Governor").finish_non_exhaustive()
+    }
+}
+
 impl Governor {
     /// `window_ms` is the rolling half-window length (clamped ≥ 1 ms).
     pub fn new(mode: AdmissionMode, slo: SloTable, window_ms: u64, lanes: usize) -> Governor {

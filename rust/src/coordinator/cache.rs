@@ -73,6 +73,15 @@ pub enum Lookup<'a> {
     Miss(Flight<'a>),
 }
 
+impl std::fmt::Debug for Lookup<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Lookup::Hit(_) => f.write_str("Hit(..)"),
+            Lookup::Miss(_) => f.write_str("Miss(..)"),
+        }
+    }
+}
+
 /// Rendezvous cell between a single-flight leader and its followers.
 /// `None` outcome means the leader aborted (followers retry).
 struct FlightCell {
@@ -112,6 +121,12 @@ pub struct Flight<'a> {
     key: CacheKey,
     cell: Arc<FlightCell>,
     settled: bool,
+}
+
+impl std::fmt::Debug for Flight<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Flight").finish_non_exhaustive()
+    }
 }
 
 impl Flight<'_> {
@@ -293,6 +308,12 @@ pub struct ResultCache {
     /// Per-shard byte budget (global `--cache-bytes` split evenly,
     /// minimum one entry's footprint).
     shard_bytes: u64,
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultCache").finish_non_exhaustive()
+    }
 }
 
 impl ResultCache {

@@ -40,6 +40,12 @@ pub struct ServeCostModel {
     table: CostTable,
 }
 
+impl std::fmt::Debug for ServeCostModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeCostModel").finish_non_exhaustive()
+    }
+}
+
 /// The work estimate the serving layer prices a job kind at — the same
 /// estimates [`Coordinator::route`](super::Coordinator::route) feeds the
 /// per-region manager, so serve-time and execute-time decisions price

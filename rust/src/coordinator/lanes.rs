@@ -159,6 +159,12 @@ pub struct LanePool {
     steal: bool,
 }
 
+impl std::fmt::Debug for LanePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LanePool").finish_non_exhaustive()
+    }
+}
+
 impl LanePool {
     /// `lanes` queues (min 1) of `depth` each; `steal` enables the idle
     /// lane fallback. Routing stays pinned to the epoch-0 seed table —

@@ -195,6 +195,12 @@ pub struct Coordinator {
     next_id: u64,
 }
 
+impl std::fmt::Debug for Coordinator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Coordinator").finish_non_exhaustive()
+    }
+}
+
 impl Coordinator {
     /// Build with an optional XLA runtime (None ⇒ CPU-only routing).
     pub fn new(cfg: CoordinatorCfg, runtime: Option<Runtime>) -> Coordinator {

@@ -51,6 +51,12 @@ pub struct BoundedQueue<T> {
     not_empty: Condvar,
 }
 
+impl<T> std::fmt::Debug for BoundedQueue<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("BoundedQueue").finish_non_exhaustive()
+    }
+}
+
 struct Inner<T> {
     items: VecDeque<T>,
     depth: usize,

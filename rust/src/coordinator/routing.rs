@@ -227,6 +227,12 @@ pub struct Router {
     traffic: Vec<AtomicU64>,
 }
 
+impl std::fmt::Debug for Router {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Router").finish_non_exhaustive()
+    }
+}
+
 impl Router {
     pub fn new(lanes: usize) -> Router {
         Router {
@@ -383,6 +389,12 @@ pub struct Rebalancer {
     /// raw traffic, and a move must clear [`CHURN_COST_US`]. `None`
     /// keeps the traffic-delta greedy rule decision-for-decision.
     cost: Option<Arc<ServeCostModel>>,
+}
+
+impl std::fmt::Debug for Rebalancer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Rebalancer").finish_non_exhaustive()
+    }
 }
 
 impl Default for Rebalancer {

@@ -139,6 +139,12 @@ pub struct Server {
     listener: TcpListener,
 }
 
+impl std::fmt::Debug for Server {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Server").finish_non_exhaustive()
+    }
+}
+
 impl Server {
     /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
     pub fn bind(addr: &str) -> Result<Server> {

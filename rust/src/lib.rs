@@ -58,6 +58,16 @@
 //! println!("virtual time: {} µs, spawns: {}", rep.time_us(), rep.ledger.spawns);
 //! ```
 
+// Lint wall. The CI lint job runs clippy with `-D warnings`, which
+// elevates these to errors there: every public type is debuggable
+// (operational types get manual `finish_non_exhaustive()` impls — their
+// fields are locks, cells, and closures), unsafe operations stay
+// explicit even inside `unsafe fn`, and identifiers stay ASCII.
+#![warn(missing_debug_implementations)]
+#![warn(unsafe_op_in_unsafe_fn)]
+#![deny(non_ascii_idents)]
+#![deny(macro_use_extern_crate)]
+
 pub mod util;
 pub mod stats;
 pub mod workload;

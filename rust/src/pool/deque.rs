@@ -24,6 +24,12 @@ pub struct Deque {
     mask: isize,
 }
 
+impl std::fmt::Debug for Deque {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Deque").finish_non_exhaustive()
+    }
+}
+
 // SAFETY: JobRef slots are only read/written under the Chase-Lev protocol;
 // JobRef itself is Send.
 unsafe impl Send for Deque {}
@@ -33,6 +39,16 @@ pub enum Steal {
     Empty,
     Retry,
     Success(JobRef),
+}
+
+impl std::fmt::Debug for Steal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Steal::Empty => f.write_str("Empty"),
+            Steal::Retry => f.write_str("Retry"),
+            Steal::Success(_) => f.write_str("Success(..)"),
+        }
+    }
 }
 
 impl Deque {

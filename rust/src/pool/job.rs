@@ -17,6 +17,12 @@ pub struct JobRef {
     exec: unsafe fn(*const ()),
 }
 
+impl std::fmt::Debug for JobRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobRef").finish_non_exhaustive()
+    }
+}
+
 unsafe impl Send for JobRef {}
 
 impl JobRef {
@@ -60,6 +66,12 @@ pub struct StackJob<F, R> {
     /// the fork transparently.
     panic_payload: UnsafeCell<Option<Box<dyn Any + Send>>>,
     pub latch: Latch,
+}
+
+impl<F, R> std::fmt::Debug for StackJob<F, R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StackJob").finish_non_exhaustive()
+    }
 }
 
 // SAFETY: access to `f`/`result` is ordered by the latch protocol.
@@ -114,6 +126,12 @@ pub struct HeapJob {
     f: Option<Box<dyn FnOnce() + Send>>,
 }
 
+impl std::fmt::Debug for HeapJob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HeapJob").finish_non_exhaustive()
+    }
+}
+
 impl HeapJob {
     /// Box the closure and return an erased, self-freeing JobRef.
     ///
@@ -144,6 +162,12 @@ pub mod tests_support {
     /// A pinned payload whose execution bumps a shared counter.
     pub struct CountPayload {
         hits: Arc<AtomicUsize>,
+    }
+
+    impl std::fmt::Debug for CountPayload {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("CountPayload").finish_non_exhaustive()
+        }
     }
 
     impl CountPayload {

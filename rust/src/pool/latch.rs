@@ -20,6 +20,12 @@ pub struct Latch {
     cv: Condvar,
 }
 
+impl std::fmt::Debug for Latch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Latch").finish_non_exhaustive()
+    }
+}
+
 impl Default for Latch {
     fn default() -> Self {
         Self::new()
@@ -58,6 +64,12 @@ pub struct CountLatch {
     count: AtomicUsize,
     mu: Mutex<()>,
     cv: Condvar,
+}
+
+impl std::fmt::Debug for CountLatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CountLatch").finish_non_exhaustive()
+    }
 }
 
 impl Default for CountLatch {

@@ -126,6 +126,12 @@ pub struct ThreadPool {
     threads: usize,
 }
 
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").finish_non_exhaustive()
+    }
+}
+
 impl ThreadPool {
     /// Create a pool with `threads` workers (≥ 1).
     pub fn new(threads: usize) -> Self {
@@ -339,6 +345,12 @@ pub struct Scope<'scope> {
     latch: CountLatch,
     panicked: AtomicBool,
     _marker: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl std::fmt::Debug for Scope<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scope").finish_non_exhaustive()
+    }
 }
 
 impl<'scope> Scope<'scope> {

@@ -56,6 +56,12 @@ pub struct Gen {
     scale: f64,
 }
 
+impl std::fmt::Debug for Gen {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Gen").finish_non_exhaustive()
+    }
+}
+
 impl Gen {
     fn new(seed: u64, scale: f64) -> Self {
         Gen { rng: Pcg32::new(seed), scale }

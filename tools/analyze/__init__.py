@@ -1,0 +1,26 @@
+"""OHM static-analysis suite: toolchain-free passes over the Rust tree.
+
+The build container has no Rust toolchain, so `tools/ohm_analyze.py` is
+the mechanical half of a compile-and-review triage. Five passes:
+
+* ``symbols``     — item-grade `use` resolution (fns/structs/enums/variants
+                    through `pub use` chains), the successor of
+                    `tools/static_check.py`'s module-grade check.
+* ``locks``       — Mutex/RwLock acquisition graphs per function:
+                    lock-order cycles (deadlock candidates) and guards
+                    held across blocking calls.
+* ``atomics``     — every `Ordering::` site diffed against the committed
+                    baseline `tools/baselines/atomics.txt`.
+* ``conformance`` — frozen wire literals (`ERR`/`OK`/STATS tables/
+                    trailers) vs `docs/PROTOCOL.md`, the `ErrCode`
+                    taxonomy, and CLI flags / `[config]` keys vs README.
+* ``ledger``      — every non-test `Ledger { .. }` construction names
+                    all fields (full-literal convention).
+
+Shared infrastructure lives here: `lexer` (comment/string-aware Rust
+scanning), `report` (findings, suppressions, JSON emission).
+"""
+
+from . import lexer, report  # noqa: F401
+
+PASSES = ("symbols", "locks", "atomics", "conformance", "ledger")

@@ -1,0 +1,110 @@
+"""Pass 3 — atomics audit: every `Ordering::` site vs a committed baseline.
+
+Memory-ordering choices are the one thing this crate cannot test
+without a compiler *or* a weak-memory model checker, so the policy is
+review-by-diff: `tools/baselines/atomics.txt` records, per file, how
+many sites use each `atomic::Ordering` variant. A new `Relaxed` (or a
+`SeqCst` quietly downgraded) changes the counts and fails `--check`
+until the baseline is re-blessed — making every memory-ordering change
+an explicit, reviewed hunk in the PR that introduces it.
+
+Counts are per-variant per-file, not per-line, so moving code around a
+file doesn't churn the baseline; only adding/removing/retargeting a
+site does. `std::cmp::Ordering` (Less/Equal/Greater) is excluded.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from . import lexer
+from .report import PassResult
+
+# The five memory orderings; cmp::Ordering's variants never collide.
+ATOMIC_VARIANTS = ("Relaxed", "Acquire", "Release", "AcqRel", "SeqCst")
+SITE_RE = re.compile(r"\bOrdering::(" + "|".join(ATOMIC_VARIANTS) + r")\b")
+
+BASELINE_NAME = "atomics.txt"
+
+
+def inventory(repo: Path, src_root: str = "rust/src") -> dict[str, dict[str, int]]:
+    """{relative file: {variant: count}} for every file with sites."""
+    root = repo / src_root
+    out: dict[str, dict[str, int]] = {}
+    for f in sorted(root.rglob("*.rs")):
+        text = lexer.strip_comments(f.read_text(), blank_strings=True)
+        counts: dict[str, int] = {}
+        for m in SITE_RE.finditer(text):
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+        if counts:
+            out[str(f.relative_to(root))] = counts
+    return out
+
+
+def render_baseline(inv: dict[str, dict[str, int]]) -> str:
+    lines = [
+        "# atomics baseline — per-file `Ordering::` site counts.",
+        "# Regenerate deliberately with: python3 tools/ohm_analyze.py --bless",
+        "# (any drift from this file fails `--check`; see docs/STATIC_ANALYSIS.md)",
+    ]
+    for file in sorted(inv):
+        counts = inv[file]
+        cells = " ".join(
+            f"{v}={counts[v]}" for v in ATOMIC_VARIANTS if v in counts
+        )
+        lines.append(f"{file} {cells}")
+    return "\n".join(lines) + "\n"
+
+
+def parse_baseline(text: str) -> dict[str, dict[str, int]]:
+    out: dict[str, dict[str, int]] = {}
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        file, cells = parts[0], parts[1:]
+        counts: dict[str, int] = {}
+        for cell in cells:
+            variant, _, n = cell.partition("=")
+            if variant in ATOMIC_VARIANTS and n.isdigit():
+                counts[variant] = int(n)
+        out[file] = counts
+    return out
+
+
+def run(repo: Path, src_root: str = "rust/src", baselines: Path | None = None) -> PassResult:
+    res = PassResult("atomics")
+    inv = inventory(repo, src_root)
+    baseline_path = (baselines or repo / "tools" / "baselines") / BASELINE_NAME
+    total = sum(sum(c.values()) for c in inv.values())
+    res.stats = {
+        "files_with_sites": len(inv),
+        "total_sites": total,
+        "baseline": str(baseline_path),
+    }
+    if not baseline_path.exists():
+        res.finding(
+            "atomics:missing-baseline",
+            f"{baseline_path} does not exist — run `python3 tools/ohm_analyze.py --bless`",
+        )
+        return res
+    committed = parse_baseline(baseline_path.read_text())
+    for file in sorted(set(inv) | set(committed)):
+        got = inv.get(file, {})
+        want = committed.get(file, {})
+        if got == want:
+            continue
+
+        def fmt(c: dict[str, int]) -> str:
+            return (
+                " ".join(f"{v}={c[v]}" for v in ATOMIC_VARIANTS if v in c) or "none"
+            )
+
+        res.finding(
+            f"atomics:drift:{file}",
+            f"Ordering sites changed: baseline [{fmt(want)}] vs source [{fmt(got)}] "
+            "— review the memory-ordering change, then re-bless",
+            file=f"{src_root}/{file}",
+        )
+    return res

@@ -1,0 +1,347 @@
+"""Pass 4 — wire/doc conformance: source vs PROTOCOL.md vs README.
+
+`docs/PROTOCOL.md` is normative ("frozen literals"), so drift between
+the strings the coordinator actually emits and the strings the doc
+promises is a correctness bug, not a docs nit. Four sub-checks:
+
+* **wire literals** — every reply string in `rust/src/coordinator/`
+  starting `ERR `/`OK ` (plus the bare `PONG`/`BYE`/`DRAINED` tokens)
+  must match a line of PROTOCOL.md;
+* **STATS surface** — every `AsciiTable::new(..)` title and every
+  `key=value`-style trailer format string must appear in PROTOCOL.md's
+  STATS section;
+* **error taxonomy** — `ErrCode` names and their `retriable()` bits in
+  `faults.rs` must agree with the PROTOCOL.md taxonomy table, both
+  directions;
+* **CLI/config surface** — every flag read by the documented commands
+  (serve/loadgen/bench/chaos) must appear in the README as `--flag`,
+  every `--flag` the README mentions must exist in some command, and
+  every `[section]`/key the config parser reads must appear in the
+  README.
+
+Matching is placeholder-insensitive: `{}`/`{x:.1}` in format strings
+and `<n>`/`..`/`…` in docs all normalize to a wildcard token, then the
+source token sequence must appear contiguously in some doc line. This
+makes the check robust to value spelling while still failing when a
+literal word, key name, or field order changes.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from . import lexer
+from .report import PassResult
+
+# Commands whose flag surface the README documents. The experiment/
+# debug commands (matmul, sort, gantt, …) are deliberately undocumented
+# developer tools.
+DOCUMENTED_CMDS = ("cmd_serve", "cmd_loadgen", "cmd_bench", "cmd_chaos")
+
+FLAG_ACCESS_RE = re.compile(r"args\s*\.\s*(?:get|has|get_parsed::<[^>]+>)\s*\(\s*\"([a-z0-9-]+)\"")
+FN_RE = re.compile(r"^\s*(?:pub\s+)?fn\s+(\w+)")
+SECTION_RE = re.compile(r"\bt\s*\.\s*get\s*\(\s*\"([a-z.]+)\"")
+KEY_RE = re.compile(r"\bsec\s*\.\s*get\s*\(\s*\"([a-z_]+)\"")
+ERRCODE_NAME_RE = re.compile(r"ErrCode::(\w+)\s*=>\s*\"([A-Z]+)\"")
+DOC_FLAG_RE = re.compile(r"--([a-z][a-z0-9-]*)")
+
+
+def norm_tokens(s: str) -> list[str]:
+    """Normalize a format string or doc line to wildcard tokens."""
+    s = s.strip().replace("`", "")
+    s = re.sub(r"\{[^{}]*\}", "*", s)  # Rust format placeholders
+    s = re.sub(r"<[^<>]*>", "*", s)  # doc placeholders
+    s = s.replace("…", "*")
+    s = re.sub(r"(?<![.\d])\.\.\.?(?![.\d=])", "*", s)  # doc ellipses, not 1..=N
+    toks = []
+    for t in s.split():
+        t = re.sub(r"\*+", "*", t)
+        # A wildcard wearing only punctuation — `(*)`, `*,` — is a wildcard.
+        if t.strip("()[]{},;:") in ("*", ""):
+            t = "*"
+        if t == "*" and toks and toks[-1] == "*":
+            continue
+        toks.append(t)
+    return toks
+
+
+def _tok_eq(a: str, b: str) -> bool:
+    """Token equality where `*` inside either token matches any run."""
+    if a == b or a == "*" or b == "*":
+        return True
+
+    def glob(pat: str, s: str) -> bool:
+        if "*" not in pat:
+            return False
+        rx = re.escape(pat).replace(r"\*", ".*")
+        return re.fullmatch(rx, s) is not None
+
+    return glob(a, b) or glob(b, a)
+
+
+def _contains_seq(doc_lines: list[list[str]], needle: list[str]) -> bool:
+    """Does the needle appear contiguously in some doc line?
+
+    A doc line whose *last* token is a bare `*` (an ellipsis) absorbs
+    any number of trailing needle tokens — `ERR DRAINING <CMD>
+    rejected: ...` covers the full emitted sentence.
+    """
+    if not needle:
+        return True
+    for line in doc_lines:
+        tail_open = bool(line) and line[-1] == "*"
+        for start in range(len(line)):
+            n = len(line) - start
+            if n >= len(needle):
+                if all(
+                    _tok_eq(needle[i], line[start + i]) for i in range(len(needle))
+                ):
+                    return True
+            elif tail_open and n >= 2:
+                # The ellipsis absorbs the needle's tail, but every doc
+                # token before it must have matched a real needle token.
+                if all(_tok_eq(needle[i], line[start + i]) for i in range(n - 1)):
+                    return True
+    return False
+
+
+def _slug(tokens: list[str], n: int = 5) -> str:
+    raw = "-".join(tokens[:n])
+    return re.sub(r"[^A-Za-z0-9_=().%-]", "_", raw)
+
+
+def _wire_literals(coord: Path) -> list[tuple[Path, int, str]]:
+    """Reply/trailer/table-title format strings the coordinator emits.
+
+    Unit-test modules are stripped first (assert messages and fixture
+    replies are not the wire surface); trailer candidates must be
+    newline-terminated (that's how every STATS trailer is emitted —
+    it excludes eprintln!/panic! message text, whose `\\n` lives in the
+    macro, not the literal).
+    """
+    out: list[tuple[Path, int, str]] = []
+    for f in sorted(coord.rglob("*.rs")):
+        text = lexer.strip_test_blocks(f.read_text())
+        for lit in lexer.string_literals(text):
+            v = lit.value.rstrip("\n")
+            if not v:
+                continue
+            is_reply = (
+                (v.startswith(("ERR ", "OK ")) and len(v.split()) >= 2)
+                or v in ("PONG", "BYE", "DRAINED")
+            )
+            is_trailer = lit.value.endswith("\n") and (
+                "={" in v or re.match(r"^[a-z][a-z_ ]*(?: \([^)]*\))?: .*\{", v)
+            )
+            if is_reply or is_trailer:
+                out.append((f, lit.line, v))
+        # Table titles: inline literal, format!-built, or bound to a
+        # variable first (`let title = if … { format!("… epoch {}") } …;
+        # AsciiTable::new(&title, …)`) — chase the binding so the
+        # epoch-suffixed title variants are frozen too.
+        stripped = lexer.strip_comments(text)
+        for m in re.finditer(
+            r"AsciiTable::new\(\s*(?:&?format!\(\s*)?\"((?:[^\"\\]|\\.)*)\"", stripped
+        ):
+            line = stripped[: m.start()].count("\n") + 1
+            out.append((f, line, m.group(1)))
+        for m in re.finditer(r"AsciiTable::new\(\s*&?(\w+)\s*,", stripped):
+            var = m.group(1)
+            let_pos = stripped.rfind(f"let {var}", 0, m.start())
+            if let_pos == -1:
+                continue
+            for lm in re.finditer(r"\"((?:[^\"\\]|\\.)*)\"", stripped[let_pos : m.start()]):
+                if len(lm.group(1).split()) >= 2:
+                    line = stripped[: let_pos + lm.start()].count("\n") + 1
+                    out.append((f, line, lm.group(1)))
+    # Dedup identical (file, literal) pairs — the same format string can
+    # be both collected as a literal and as a table title.
+    seen: set[tuple[str, str]] = set()
+    uniq = []
+    for f, line, v in out:
+        if (str(f), v) in seen:
+            continue
+        seen.add((str(f), v))
+        uniq.append((f, line, v))
+    return uniq
+
+
+def _check_wire(repo: Path, res: PassResult, doc_lines: list[list[str]]) -> int:
+    coord = repo / "rust" / "src" / "coordinator"
+    lits = _wire_literals(coord)
+    for f, line, v in lits:
+        for part in v.split("\n"):
+            toks = norm_tokens(part)
+            if not toks:
+                continue
+            if not _contains_seq(doc_lines, toks):
+                res.finding(
+                    f"conformance:undocumented-wire-literal:{f.name}:{_slug(toks)}",
+                    f"emitted format {part!r} has no matching line in docs/PROTOCOL.md",
+                    file=str(f),
+                    line=line,
+                )
+    return len(lits)
+
+
+def _doc_taxonomy(doc_text: str) -> dict[str, bool]:
+    """PROTOCOL.md taxonomy table rows: {CODE: retriable}."""
+    out: dict[str, bool] = {}
+    for line in doc_text.splitlines():
+        if not line.strip().startswith("|"):
+            continue
+        cells = [c.strip().strip("`") for c in line.strip().strip("|").split("|")]
+        if len(cells) < 2 or not re.fullmatch(r"[A-Z]{3,}", cells[0]):
+            continue
+        flag = next((c for c in cells[1:] if c.lower() in ("yes", "no")), None)
+        if flag is not None:
+            out[cells[0]] = flag.lower() == "yes"
+    return out
+
+
+def _check_taxonomy(repo: Path, res: PassResult, doc_text: str) -> int:
+    faults = repo / "rust" / "src" / "coordinator" / "faults.rs"
+    text = lexer.strip_comments(faults.read_text())
+    names = dict(ERRCODE_NAME_RE.findall(text))  # variant -> wire name
+    retriable: set[str] = set()
+    m = re.search(r"fn retriable.*?matches!\(\s*self\s*,([^)]*)\)", text, re.S)
+    if m:
+        retriable = {v for v in re.findall(r"ErrCode::(\w+)", m.group(1))}
+    src = {wire: (variant in retriable) for variant, wire in names.items()}
+    doc = _doc_taxonomy(doc_text)
+    for code in sorted(src):
+        if code not in doc:
+            res.finding(
+                f"conformance:taxonomy-missing-from-doc:{code}",
+                f"ErrCode `{code}` (faults.rs) has no row in the PROTOCOL.md taxonomy table",
+                file=str(faults),
+            )
+        elif doc[code] != src[code]:
+            res.finding(
+                f"conformance:taxonomy-retriable-mismatch:{code}",
+                f"`{code}` retriable={src[code]} in faults.rs but "
+                f"{doc[code]} in PROTOCOL.md",
+                file=str(faults),
+            )
+    for code in sorted(doc):
+        if code not in src:
+            res.finding(
+                f"conformance:taxonomy-missing-from-source:{code}",
+                f"PROTOCOL.md taxonomy row `{code}` has no ErrCode in faults.rs",
+                file="docs/PROTOCOL.md",
+            )
+    return len(src)
+
+
+def _cmd_flags(repo: Path) -> dict[str, set[str]]:
+    """{cmd_* fn: flags accessed} over the CLI module.
+
+    Scans the whole text (an accessor chain may break across lines:
+    ``let addr = args\\n    .get("addr")``) and attributes each access
+    to the innermost preceding `fn`.
+    """
+    cli = repo / "rust" / "src" / "cli" / "mod.rs"
+    text = lexer.strip_comments(cli.read_text())
+    fn_starts: list[tuple[int, str]] = []  # (char offset, fn name)
+    offset = 0
+    for line in text.split("\n"):
+        fm = FN_RE.match(line)
+        if fm:
+            fn_starts.append((offset, fm.group(1)))
+        offset += len(line) + 1
+    out: dict[str, set[str]] = {}
+    for m in FLAG_ACCESS_RE.finditer(text):
+        cur = "<top>"
+        for off, name in fn_starts:
+            if off > m.start():
+                break
+            cur = name
+        out.setdefault(cur, set()).add(m.group(1))
+    return out
+
+
+def _check_cli(repo: Path, res: PassResult, readme: str) -> int:
+    flags = _cmd_flags(repo)
+    # Skip lines invoking other tools: `cargo build --locked` flags are
+    # cargo's, `python3 tools/ohm_analyze.py --check` flags are the
+    # analyzer's — neither documents the ohm CLI.
+    doc_flags = {
+        m.group(1)
+        for line in readme.splitlines()
+        if "cargo" not in line and "python3" not in line
+        for m in DOC_FLAG_RE.finditer(line)
+    }
+    checked = 0
+    for cmd in DOCUMENTED_CMDS:
+        for flag in sorted(flags.get(cmd, ())):
+            checked += 1
+            if flag not in doc_flags:
+                res.finding(
+                    f"conformance:undocumented-flag:{cmd}:--{flag}",
+                    f"`{cmd}` reads `--{flag}` but README never mentions it",
+                    file="rust/src/cli/mod.rs",
+                )
+    all_flags = {f for s in flags.values() for f in s}
+    for flag in sorted(doc_flags):
+        if flag not in all_flags:
+            res.finding(
+                f"conformance:unknown-doc-flag:--{flag}",
+                f"README documents `--{flag}` but no command reads it",
+                file="README.md",
+            )
+    return checked
+
+
+def _check_config(repo: Path, res: PassResult, readme: str) -> int:
+    cfg = repo / "rust" / "src" / "config" / "mod.rs"
+    text = lexer.strip_comments(cfg.read_text())
+    sections = sorted(set(SECTION_RE.findall(text)))
+    keys = sorted(set(KEY_RE.findall(text)))
+    for s in sections:
+        if f"[{s}]" not in readme:
+            res.finding(
+                f"conformance:undocumented-config:[{s}]",
+                f"config section `[{s}]` is parsed but README never shows it",
+                file=str(cfg),
+            )
+    for k in keys:
+        if not re.search(rf"\b{re.escape(k)}\b", readme):
+            res.finding(
+                f"conformance:undocumented-config:{k}",
+                f"config key `{k}` is parsed but README never mentions it",
+                file=str(cfg),
+            )
+    return len(sections) + len(keys)
+
+
+def run(repo: Path, src_root: str = "rust/src") -> PassResult:
+    res = PassResult("conformance")
+    protocol = repo / "docs" / "PROTOCOL.md"
+    readme_p = repo / "README.md"
+    if not protocol.exists() or not readme_p.exists():
+        res.finding(
+            "conformance:missing-doc",
+            f"missing {'docs/PROTOCOL.md' if not protocol.exists() else 'README.md'}",
+        )
+        return res
+    doc_text = protocol.read_text()
+    doc_lines = []
+    for line in doc_text.splitlines():
+        if not line.strip():
+            continue
+        doc_lines.append(norm_tokens(line))
+        if " ; " in line:  # PROTOCOL code fences annotate literals with `; …`
+            doc_lines.append(norm_tokens(line.split(" ; ")[0]))
+    readme = readme_p.read_text()
+
+    wire = _check_wire(repo, res, doc_lines)
+    codes = _check_taxonomy(repo, res, doc_text)
+    cli = _check_cli(repo, res, readme)
+    cfgn = _check_config(repo, res, readme)
+    res.stats = {
+        "wire_literals": wire,
+        "taxonomy_codes": codes,
+        "cli_flags_checked": cli,
+        "config_names_checked": cfgn,
+    }
+    return res

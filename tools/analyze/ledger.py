@@ -1,0 +1,104 @@
+"""Pass 5 — Ledger full-literal audit.
+
+The overhead `Ledger` is the paper's accounting spine: every overhead
+category the model distinguishes is a field, and the repo's convention
+(enforced by hand since PR 1) is that *production* construction sites
+write the full literal — all fields named, no `..Default::default()` —
+so that adding a category forces every producer to decide its value
+instead of silently zeroing it. This pass mechanizes the convention:
+
+* the field list is read from the `struct Ledger` declaration itself
+  (never hard-coded, so adding a field tightens the audit for free);
+* every `Ledger { … }` *expression* in non-test code must name every
+  field and use no `..base` spread;
+* `#[cfg(test)]` modules are exempt (tests legitimately use
+  `..Default::default()` to pin just the fields under test), as are
+  struct *patterns* (`let Ledger { spawns, .. } = x`, `Ledger { .. } =>`).
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from . import lexer
+from .report import PassResult
+
+STRUCT_RE = re.compile(r"pub\s+struct\s+Ledger\s*\{(.*?)\n\}", re.S)
+FIELD_RE = re.compile(r"^\s*pub\s+(\w+)\s*:", re.M)
+SITE_RE = re.compile(r"\bLedger\s*\{")
+
+
+def declared_fields(repo: Path) -> list[str]:
+    src = (repo / "rust" / "src" / "overhead" / "ledger.rs").read_text()
+    m = STRUCT_RE.search(lexer.strip_comments(src))
+    if not m:
+        return []
+    return FIELD_RE.findall(m.group(1))
+
+
+def _literal_region(text: str, start: int) -> str:
+    """The `{…}` region opening at text[start] (balanced braces)."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "{":
+            depth += 1
+        elif text[i] == "}":
+            depth -= 1
+            if depth == 0:
+                return text[start : i + 1]
+    return text[start:]
+
+
+def _is_pattern(text: str, site_start: int, region_end: int) -> bool:
+    """Struct *pattern* (destructuring) or declaration, not a construction."""
+    before = text[max(0, site_start - 80) : site_start]
+    if re.search(r"\b(?:struct|enum|union)\s+$", before):
+        return True
+    if re.search(r"\b(let|if\s+let|while\s+let)\s+[\w:&\s]*$", before):
+        return True
+    after = text[region_end : region_end + 20]
+    return bool(re.match(r"\s*=>", after)) or bool(re.match(r"\s*=[^=]", after))
+
+
+def run(repo: Path, src_root: str = "rust/src") -> PassResult:
+    res = PassResult("ledger")
+    fields = declared_fields(repo)
+    if not fields:
+        res.finding(
+            "ledger:no-struct",
+            "could not parse `pub struct Ledger` fields from rust/src/overhead/ledger.rs",
+        )
+        return res
+    root = repo / src_root
+    sites = 0
+    for f in sorted(root.rglob("*.rs")):
+        text = lexer.strip_test_blocks(f.read_text())
+        for m in SITE_RE.finditer(text):
+            brace = m.end() - 1
+            region = _literal_region(text, brace)
+            if _is_pattern(text, m.start(), brace + len(region)):
+                continue
+            sites += 1
+            line = text[: m.start()].count("\n") + 1
+            # Lookahead terminator: adjacent `a: x, b: y` fields must not
+            # consume each other's separating comma.
+            named = set(re.findall(r"[{,]\s*(\w+)\s*(?=[:,}])", region))
+            if ".." in region:
+                res.finding(
+                    f"ledger:spread:{f.name}:L{line}",
+                    "`Ledger { .. }` spread in production code — name every "
+                    "field so new overhead categories can't silently zero",
+                    file=str(f),
+                    line=line,
+                )
+                continue
+            missing = [fl for fl in fields if fl not in named]
+            if missing:
+                res.finding(
+                    f"ledger:missing-fields:{f.name}:L{line}",
+                    f"Ledger literal missing fields: {', '.join(missing)}",
+                    file=str(f),
+                    line=line,
+                )
+    res.stats = {"fields": fields, "construction_sites": sites}
+    return res

@@ -1,0 +1,229 @@
+"""Comment- and string-aware Rust source scanning.
+
+The old `tools/static_check.py` stripped comments with a non-nested
+`/* */` regex and split lines on `//` unconditionally — so Rust's
+*nested* block comments leaked code back in, and a `//` inside a string
+literal (`"http://x"`, `"// not a comment"`) truncated the line. This
+module is the fixed lexer, shared by every analysis pass.
+
+The scanner is a single character walk tracking four states: code,
+`// line` comment, `/* block */` comment (with nesting depth), and
+string literals (plain, raw `r#".."#`, char, byte). Strings survive
+stripping (their bytes are kept, so wire-literal extraction still
+works); comments are replaced by spaces so byte offsets and line
+numbers stay stable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class StringLit:
+    """A string literal found in source: contents + location."""
+
+    value: str  # unescaped-enough: raw bytes between the quotes
+    line: int  # 1-based line of the opening quote
+
+
+def _is_char_literal(text: str, i: int) -> bool:
+    """Is the `'` at `text[i]` a char literal (vs a lifetime `'a`)?
+
+    A char literal closes with a `'` after one char or an escape;
+    lifetimes never close. Lookahead is bounded and cheap.
+    """
+    n = len(text)
+    if i + 1 >= n:
+        return False
+    if text[i + 1] == "\\":  # '\n', '\'', '\u{..}'
+        return True
+    # 'x' — one char then a closing quote.
+    return i + 2 < n and text[i + 2] == "'"
+
+
+def strip_comments(text: str, blank_strings: bool = False) -> str:
+    """Remove comments, preserving line structure and string literals.
+
+    Nested ``/* /* */ */`` blocks strip fully; ``//`` inside a string
+    is literal text, not a comment. With ``blank_strings=True`` string
+    *contents* are replaced by spaces too (handy for structural passes
+    that must not match keywords inside literals); the quotes remain so
+    expression shape survives.
+    """
+    out: list[str] = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        if c == "/" and i + 1 < n and text[i + 1] == "/":
+            while i < n and text[i] != "\n":
+                i += 1
+            continue
+        if c == "/" and i + 1 < n and text[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth:
+                if text[i] == "/" and i + 1 < n and text[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif text[i] == "*" and i + 1 < n and text[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if text[i] == "\n":
+                        out.append("\n")
+                    i += 1
+            continue
+        if c == "r" and i + 1 < n and text[i + 1] in "\"#":
+            # Raw string r"..." / r#"..."# / r##"..."## — no escapes.
+            j = i + 1
+            hashes = 0
+            while j < n and text[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and text[j] == '"':
+                close = '"' + "#" * hashes
+                end = text.find(close, j + 1)
+                end = n if end == -1 else end + len(close)
+                seg = text[i:end]
+                out.append(_blank_keep_lines(seg) if blank_strings else seg)
+                i = end
+                continue
+        if c == '"' or (c == "b" and i + 1 < n and text[i + 1] == '"'):
+            start = i
+            i += 2 if c == "b" else 1
+            while i < n:
+                if text[i] == "\\":
+                    i += 2
+                    continue
+                if text[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            seg = text[start:i]
+            out.append(_blank_keep_lines(seg) if blank_strings else seg)
+            continue
+        if c == "'" and _is_char_literal(text, i):
+            start = i
+            i += 1
+            while i < n:
+                if text[i] == "\\":
+                    i += 2
+                    continue
+                if text[i] == "'":
+                    i += 1
+                    break
+                i += 1
+            out.append(text[start:i])
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def _blank_keep_lines(seg: str) -> str:
+    """Blank a literal's contents but keep its quotes and newlines."""
+    if not seg:
+        return seg
+    body = "".join("\n" if ch == "\n" else " " for ch in seg[1:-1])
+    return seg[0] + body + seg[-1]
+
+
+def string_literals(text: str) -> list[StringLit]:
+    """Every plain/raw string literal in `text`, with comments ignored.
+
+    Escapes for the sequences that matter to wire-format matching
+    (``\\n``, ``\\t``, ``\\\"``, ``\\\\``) are decoded; exotic escapes
+    are left as-is.
+    """
+    stripped = strip_comments(text)
+    lits: list[StringLit] = []
+    i, n, line = 0, len(stripped), 1
+    while i < n:
+        c = stripped[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c == "r" and i + 1 < n and stripped[i + 1] in "\"#":
+            j = i + 1
+            hashes = 0
+            while j < n and stripped[j] == "#":
+                hashes += 1
+                j += 1
+            if j < n and stripped[j] == '"':
+                close = '"' + "#" * hashes
+                end = stripped.find(close, j + 1)
+                if end == -1:
+                    break
+                raw = stripped[j + 1 : end]
+                lits.append(StringLit(raw, line))
+                line += raw.count("\n")
+                i = end + len(close)
+                continue
+        if c == '"':
+            j = i + 1
+            buf: list[str] = []
+            while j < n:
+                ch = stripped[j]
+                if ch == "\\" and j + 1 < n:
+                    nxt = stripped[j + 1]
+                    buf.append({"n": "\n", "t": "\t", '"': '"', "\\": "\\"}.get(nxt, "\\" + nxt))
+                    j += 2
+                    continue
+                if ch == '"':
+                    break
+                buf.append(ch)
+                j += 1
+            value = "".join(buf)
+            lits.append(StringLit(value, line))
+            line += value.count("\n")
+            i = j + 1
+            continue
+        if c == "'" and _is_char_literal(stripped, i):
+            i += 1
+            while i < n:
+                if stripped[i] == "\\":
+                    i += 2
+                    continue
+                if stripped[i] == "'":
+                    i += 1
+                    break
+                i += 1
+            continue
+        i += 1
+    return lits
+
+
+def strip_test_blocks(text: str) -> str:
+    """Blank out `#[cfg(test)] mod … { … }` bodies, keeping line count.
+
+    Structural passes that audit *production* conventions (the Ledger
+    full-literal rule) skip unit-test modules, where `..Default::
+    default()` shorthand is the deliberate idiom.
+    """
+    stripped = strip_comments(text, blank_strings=True)
+    lines = text.split("\n")
+    slines = stripped.split("\n")
+    out = list(lines)
+    i = 0
+    while i < len(slines):
+        if "#[cfg(test)]" in slines[i]:
+            # Find the `mod` line (same or following), then its block.
+            j = i
+            while j < len(slines) and "{" not in slines[j]:
+                j += 1
+            if j == len(slines):
+                break
+            depth = 0
+            k = j
+            while k < len(slines):
+                depth += slines[k].count("{") - slines[k].count("}")
+                if depth <= 0 and k >= j:
+                    break
+                k += 1
+            for m in range(i, min(k + 1, len(out))):
+                out[m] = ""
+            i = k + 1
+        else:
+            i += 1
+    return "\n".join(out)

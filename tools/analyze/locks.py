@@ -1,0 +1,366 @@
+"""Pass 2 — lock discipline: acquisition order and blocking-while-locked.
+
+Per function, track which Mutex/RwLock guards are live line by line:
+
+* a ``let g = <lock>.lock().unwrap…`` binding holds to the end of its
+  enclosing brace block (or an explicit ``drop(g)``);
+* a non-bound acquisition (``*x.lock().unwrap() += 1``) holds for that
+  statement only;
+* a binding whose chain continues past the guard-preserving suffixes
+  (``.unwrap()``, ``.expect(…)``, ``.unwrap_or_else(|p| p.into_inner())``,
+  ``?``) binds the *derived value*, not the guard — ``let n =
+  q.lock().unwrap().len();`` holds nothing afterwards;
+* helpers whose return type names ``MutexGuard``/``RwLock*Guard``
+  (``telemetry_lock``, ``Governor::lane``, ``ResultCache::lock``) count
+  as acquisitions of the lock their body takes.
+
+While a guard is live, two things are findings: acquiring another lock
+adds a directed edge (cycles across the whole crate = deadlock
+candidates; re-acquiring the *same* lock = immediate self-deadlock),
+and hitting a blocking call (channel send/recv, join, socket
+write/flush, accept, sleep, bare ``.wait()``) is a stall risk.
+``Condvar::wait(g)``/``wait_timeout(g, …)`` taking a live guard as the
+argument is the sanctioned exception — the guard is released inside the
+wait and reacquired on wake.
+
+Lock identity is ``<file-stem>.<field>`` (the last identifier in the
+receiver chain), which is per-type, not per-instance: two *sibling*
+instances locked in a fixed order (e.g. hand-over-hand over
+``lanes[i]``) would alias. Nothing in the crate does that today; if it
+ever does, suppress with a reason.
+
+Production code only: ``#[cfg(test)]`` modules are stripped first —
+test fixtures use method names (``ShapeClass::lane``) that alias guard
+helpers, and the real lock discipline is exercised through the
+production functions the tests call anyway.
+
+Known limits: analysis is intra-function plus guard-returning helpers —
+a callee that locks internally is invisible to the caller's held-set;
+statements are line-granular, so a chain split across lines is seen
+line by line.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+from . import lexer
+from .report import PassResult
+
+FN_RE = re.compile(
+    r"^\s*(?:pub(?:\([^)]*\))?\s+)?(?:unsafe\s+)?(?:async\s+)?(?:const\s+)?fn\s+(\w+)"
+)
+FIELD_LOCK_RE = re.compile(r"\b(\w+)\s*:\s*(?:[\w:]+::)?(Mutex|RwLock)\s*<")
+LOCAL_LOCK_RE = re.compile(r"\blet\s+(?:mut\s+)?(\w+)\s*=\s*(?:Arc::new\(\s*)?(?:[\w:]+::)?(Mutex|RwLock)::new")
+ACQ_RE = re.compile(r"([A-Za-z_][\w\.\[\]\(\)]*?)\.(lock|read|write)\s*\(\s*\)")
+GUARD_TYPE_RE = re.compile(r"->[^{;]*?\b(MutexGuard|RwLockReadGuard|RwLockWriteGuard)\b")
+LET_RE = re.compile(r"^\s*let\s+(?:mut\s+)?\(?\s*(?:mut\s+)?(\w+)")
+DROP_RE = re.compile(r"\bdrop\s*\(\s*(\w+)\s*\)")
+WAIT_RE = re.compile(r"\.wait(?:_timeout|_while|_timeout_while)?\s*\(([^)]*)")
+
+# Guard-preserving suffixes: the value after these is still the guard.
+PRESERVE_RE = re.compile(
+    r"^(?:\.unwrap\(\)|\.expect\([^)]*\)|\.unwrap_or_else\(\|\w+\|\s*\w+\.into_inner\(\)\)|\?)"
+)
+
+BLOCKING = (
+    (".send(", "send"),
+    (".recv(", "recv"),
+    (".recv_timeout(", "recv_timeout"),
+    (".join()", "join"),
+    ("thread::sleep", "sleep"),
+    (".write_all(", "write_all"),
+    (".flush()", "flush"),
+    (".read_line(", "read_line"),
+    (".read_to_string(", "read_to_string"),
+    (".read_exact(", "read_exact"),
+    (".accept()", "accept"),
+    ("TcpStream::connect", "connect"),
+)
+
+
+@dataclass
+class Guard:
+    name: str  # binding name, or "<tmp>" for statement-scope
+    lock: str  # lock id: "<file-stem>.<field>"
+    depth: int  # brace depth at binding; released when depth < this
+    line: int
+
+
+@dataclass
+class Edge:
+    held: str
+    acquired: str
+    file: str
+    fn: str
+    line: int
+
+
+def _receiver_ident(recv: str) -> str:
+    """Last plain identifier in a receiver chain: `self.shards[s].state` → state."""
+    recv = re.sub(r"\[[^\]]*\]|\([^()]*\)", "", recv)
+    ids = re.findall(r"[A-Za-z_]\w*", recv)
+    return ids[-1] if ids else ""
+
+
+def _collect_lock_fields(files: list[Path]) -> tuple[set[str], set[str]]:
+    """All field/local names of Mutex (resp. RwLock) type, crate-wide."""
+    mutexes: set[str] = set()
+    rwlocks: set[str] = set()
+    for f in files:
+        text = lexer.strip_comments(
+            lexer.strip_test_blocks(f.read_text()), blank_strings=True
+        )
+        for m in FIELD_LOCK_RE.finditer(text):
+            (mutexes if m.group(2) == "Mutex" else rwlocks).add(m.group(1))
+        for m in LOCAL_LOCK_RE.finditer(text):
+            (mutexes if m.group(2) == "Mutex" else rwlocks).add(m.group(1))
+    return mutexes, rwlocks
+
+
+def _collect_guard_helpers(files: list[Path]) -> dict[str, str]:
+    """fn name → lock id, for fns returning a guard type.
+
+    The helper's lock id comes from the first raw acquisition in its
+    body (``fn lane(&self) -> MutexGuard<_> { self.lanes[l].lock()… }``
+    → ``admission.lanes``); falls back to ``<stem>.<fn-name>``.
+    """
+    helpers: dict[str, str] = {}
+    for f in files:
+        text = lexer.strip_comments(
+            lexer.strip_test_blocks(f.read_text()), blank_strings=True
+        )
+        lines = text.split("\n")
+        i = 0
+        while i < len(lines):
+            fm = FN_RE.match(lines[i])
+            if not fm:
+                i += 1
+                continue
+            # Join the signature up to the body `{` (or decl `;`).
+            sig = lines[i]
+            j = i
+            while "{" not in sig and ";" not in sig and j + 1 < len(lines):
+                j += 1
+                sig += " " + lines[j]
+            if GUARD_TYPE_RE.search(sig) and "{" in sig:
+                # Scan the body (to brace balance) for an acquisition.
+                depth = 0
+                lock_id = f.stem + "." + fm.group(1)
+                for k in range(i, len(lines)):
+                    am = ACQ_RE.search(lines[k])
+                    if am and k >= j:
+                        lock_id = f.stem + "." + _receiver_ident(am.group(1))
+                        break
+                    depth += lines[k].count("{") - lines[k].count("}")
+                    if k >= j and depth <= 0:
+                        break
+                helpers[fm.group(1)] = lock_id
+            i = j + 1
+    return helpers
+
+
+def _acquisitions(
+    line: str, stem: str, mutexes: set[str], rwlocks: set[str], helpers: dict[str, str]
+) -> list[tuple[str, int]]:
+    """Lock ids acquired on this line, with the match end offset."""
+    out: list[tuple[str, int]] = []
+    for m in ACQ_RE.finditer(line):
+        ident = _receiver_ident(m.group(1))
+        kind = m.group(2)
+        if kind == "lock":
+            # `.lock()` is Mutex-specific in this crate; accept even
+            # receivers we couldn't type (locals holding Arc<Mutex<_>>),
+            # but skip stdio handles.
+            if ident in ("stdout", "stderr", "stdin"):
+                continue
+            out.append((stem + "." + ident, m.end()))
+        elif ident in rwlocks:
+            out.append((stem + "." + ident, m.end()))
+    if not FN_RE.match(line):  # don't read a helper's own `fn` line as a call
+        for name, lock_id in helpers.items():
+            for m in re.finditer(r"(?<![\w])(?:\.\s*)?" + re.escape(name) + r"\s*\(", line):
+                # Raw `.lock()` already matched above; the cache helper
+                # shares the name `lock` but always takes an argument.
+                after = line[m.end() :].lstrip()
+                if name == "lock" and after.startswith(")"):
+                    continue
+                # Report the position *after* the call's closing paren, so
+                # chain checks see `telemetry_lock(shared).clone()` as a
+                # derived value, not a guard binding.
+                pdepth, end = 1, m.end()
+                while end < len(line) and pdepth:
+                    pdepth += {"(": 1, ")": -1}.get(line[end], 0)
+                    end += 1
+                out.append((lock_id, end))
+    return out
+
+
+def _binds_guard(line: str, acq_end: int) -> str | None:
+    """If this acquisition's value is let-bound *as a guard*, the name."""
+    lm = LET_RE.match(line)
+    if not lm:
+        return None
+    rest = line[acq_end:]
+    while True:
+        pm = PRESERVE_RE.match(rest)
+        if not pm:
+            break
+        rest = rest[pm.end() :]
+    rest = rest.strip()
+    if rest.startswith("."):
+        return None  # chain continues: derived value, guard dropped at `;`
+    return lm.group(1)
+
+
+def run(repo: Path, src_root: str = "rust/src") -> PassResult:
+    res = PassResult("locks")
+    root = repo / src_root
+    files = sorted(root.rglob("*.rs"))
+    mutexes, rwlocks = _collect_lock_fields(files)
+    helpers = _collect_guard_helpers(files)
+
+    edges: list[Edge] = []
+    fns_scanned = 0
+    acq_sites = 0
+
+    for f in files:
+        stem = f.stem if f.stem != "mod" else f.parent.name
+        text = lexer.strip_comments(
+            lexer.strip_test_blocks(f.read_text()), blank_strings=True
+        )
+        lines = text.split("\n")
+        depth = 0
+        fn_stack: list[tuple[str, int]] = []  # (name, depth at entry)
+        guards: list[Guard] = []
+
+        for lineno, line in enumerate(lines, 1):
+            fm = FN_RE.match(line)
+            if fm and "{" in line:
+                fn_stack.append((fm.group(1), depth))
+                fns_scanned += 1
+            cur_fn = fn_stack[-1][0] if fn_stack else "<top>"
+
+            acqs = _acquisitions(line, stem, mutexes, rwlocks, helpers)
+            acq_sites += len(acqs)
+            wait_m = WAIT_RE.search(line)
+            wait_args = wait_m.group(1) if wait_m else ""
+
+            held = list(guards)
+            for lock_id, acq_end in acqs:
+                for g in held:
+                    if g.lock == lock_id:
+                        if wait_m and re.search(rf"\b{re.escape(g.name)}\b", wait_args):
+                            continue  # condvar reacquire-on-wake
+                        res.finding(
+                            f"locks:double-acquire:{f.name}:{cur_fn}:{lock_id}",
+                            f"`{lock_id}` re-acquired while guard `{g.name}` "
+                            f"(line {g.line}) is still live — self-deadlock",
+                            file=str(f),
+                            line=lineno,
+                        )
+                    else:
+                        edges.append(Edge(g.lock, lock_id, str(f), cur_fn, lineno))
+                # Depth *at the binding*: braces earlier on this line
+                # count (a one-line `{ let g = …; *g }` scope closes
+                # before end-of-line and must release the guard).
+                bind_depth = depth + line[:acq_end].count("{") - line[:acq_end].count("}")
+                name = _binds_guard(line, acq_end)
+                if name:
+                    guards.append(Guard(name, lock_id, bind_depth, lineno))
+                else:
+                    held.append(Guard("<tmp>", lock_id, bind_depth, lineno))
+
+            if held:
+                for pat, label in BLOCKING:
+                    if pat not in line:
+                        continue
+                    res.finding(
+                        f"locks:guard-across-blocking:{f.name}:{cur_fn}:{label}",
+                        f"{label} while holding "
+                        f"{', '.join(sorted({g.lock for g in held}))} "
+                        f"(guard since line {min(g.line for g in held)})",
+                        file=str(f),
+                        line=lineno,
+                    )
+                if wait_m:
+                    exposed = [
+                        g
+                        for g in held
+                        if g.name == "<tmp>"
+                        or not re.search(rf"\b{re.escape(g.name)}\b", wait_args)
+                    ]
+                    if exposed:
+                        res.finding(
+                            f"locks:guard-across-blocking:{f.name}:{cur_fn}:wait",
+                            f"wait while holding {', '.join(sorted({g.lock for g in exposed}))} "
+                            "not handed to the condvar",
+                            file=str(f),
+                            line=lineno,
+                        )
+
+            for dm in DROP_RE.finditer(line):
+                guards = [g for g in guards if g.name != dm.group(1)]
+
+            depth += line.count("{") - line.count("}")
+            guards = [g for g in guards if depth >= g.depth]
+            while fn_stack and depth <= fn_stack[-1][1]:
+                fn_stack.pop()
+
+    # Lock-order cycles over the crate-wide acquisition digraph.
+    graph: dict[str, set[str]] = {}
+    edge_at: dict[tuple[str, str], Edge] = {}
+    for e in edges:
+        graph.setdefault(e.held, set()).add(e.acquired)
+        edge_at.setdefault((e.held, e.acquired), e)
+
+    reported: set[tuple[str, ...]] = set()
+
+    def dfs(node: str, path: list[str], on_path: set[str], seen: set[str]) -> None:
+        for nxt in sorted(graph.get(node, ())):
+            if nxt in on_path:
+                cyc = path[path.index(nxt) :]
+                i = cyc.index(min(cyc))
+                canon = tuple(cyc[i:] + cyc[:i])
+                if canon in reported:
+                    continue
+                reported.add(canon)
+                sites = []
+                ring = list(canon) + [canon[0]]
+                for a, b in zip(ring, ring[1:]):
+                    e = edge_at.get((a, b))
+                    if e:
+                        sites.append(f"{Path(e.file).name}:{e.line} ({e.fn})")
+                res.finding(
+                    "locks:lock-order-cycle:" + "->".join(canon),
+                    "lock-order cycle "
+                    + " -> ".join(ring)
+                    + " via "
+                    + "; ".join(sites),
+                    file=edge_at.get((canon[0], ring[1]), edges[0]).file if edges else "",
+                )
+                continue
+            if nxt in seen:
+                continue
+            seen.add(nxt)
+            on_path.add(nxt)
+            dfs(nxt, path + [nxt], on_path, seen)
+            on_path.remove(nxt)
+
+    visited: set[str] = set()
+    for start in sorted(graph):
+        if start not in visited:
+            visited.add(start)
+            dfs(start, [start], {start}, visited)
+
+    res.stats = {
+        "files": len(files),
+        "functions": fns_scanned,
+        "acquisition_sites": acq_sites,
+        "order_edges": len({(e.held, e.acquired) for e in edges}),
+        "known_mutex_fields": sorted(mutexes),
+        "known_rwlock_fields": sorted(rwlocks),
+        "guard_helpers": helpers,
+    }
+    return res

@@ -1,0 +1,288 @@
+"""Pass 1 — symbol-grade `use` resolution.
+
+The PR-6 checker resolved imports to *module* granularity and accepted
+any re-export leaf without following it. This pass resolves to the
+*item*: every `use crate::…` / `super::…` / `self::…` path (and
+`ohm::…` from integration tests) must land on a real definition —
+fn, struct, enum, trait, type, const, static, macro — or on a `pub use`
+whose target itself resolves, chased recursively. Enum variants are
+first-class: `use crate::a::Color::Red` checks that `Red` is a variant
+of enum `Color`.
+
+Heuristic limits (documented, deliberate): paths into external crates
+(std, vendored deps) are trusted; associated items after a struct/trait
+name are trusted (no type checking without a compiler).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from . import lexer
+from .report import PassResult
+
+DEF_RE = re.compile(
+    r"^\s*(?:pub(?:\([^)]*\))?\s+)?"
+    r"(?:unsafe\s+)?(?:async\s+)?(?:const\s+)?(?:extern\s+\"[^\"]*\"\s+)?"
+    r"(fn|struct|enum|trait|type|const|static|mod|union|macro_rules!)\s+"
+    r"([A-Za-z_][A-Za-z0-9_]*)"
+)
+IMPL_RE = re.compile(
+    r"^\s*impl(?:<[^>]*>)?\s+(?:[A-Za-z_][\w:<>, ]*\s+for\s+)?([A-Za-z_][A-Za-z0-9_]*)"
+)
+USE_RE = re.compile(r"^[ \t]*(pub(?:\([^)]*\))?[ \t]+)?use[ \t]+([^;]+);", re.M)
+VARIANT_RE = re.compile(r"^\s*(?:#\[[^\]]*\]\s*)*([A-Z][A-Za-z0-9_]*)\s*(?:[,({=]|$)")
+
+# Crates whose internals we cannot see: resolution stops at the head.
+PRELUDE = {
+    "std", "core", "alloc", "self", "Self",
+    # vendored external crates
+    "anyhow", "crossbeam_utils", "xla",
+}
+
+
+@dataclass
+class Def:
+    kind: str
+    variants: set[str] = field(default_factory=set)  # enums only
+
+
+@dataclass
+class Module:
+    path: str  # e.g. "crate::sort::quicksort"
+    defs: dict[str, Def] = field(default_factory=dict)
+    # pub-use re-exports: local leaf -> full source path (as written)
+    reexports: dict[str, str] = field(default_factory=dict)
+    glob_reexports: list[str] = field(default_factory=list)  # `pub use p::*`
+    file: str = ""
+
+
+def module_name_for(file: Path, root: Path) -> str:
+    rel = file.relative_to(root)
+    parts = list(rel.parts)
+    if parts[-1] in ("mod.rs", "lib.rs", "main.rs"):
+        parts = parts[:-1]
+    else:
+        parts[-1] = parts[-1][:-3]
+    return "::".join(["crate"] + parts)
+
+
+def split_use_tree(tree: str) -> list[str]:
+    """Expand `a::{b, c::{d, e}}` into flat paths."""
+    tree = tree.strip()
+    m = re.match(r"^(.*?)\{(.*)\}$", tree, re.S)
+    if not m:
+        return [tree]
+    prefix, inner = m.group(1), m.group(2)
+    out: list[str] = []
+    depth, cur = 0, ""
+    for ch in inner:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur)
+    flat: list[str] = []
+    for item in out:
+        flat.extend(split_use_tree(prefix + item.strip()))
+    return flat
+
+
+def _collect_enum_variants(lines: list[str], start: int) -> set[str]:
+    """Variant names of the enum whose `{` opens on `lines[start]`."""
+    variants: set[str] = set()
+    depth = 0
+    opened = False
+    for i in range(start, len(lines)):
+        line = lines[i]
+        for _ in range(line.count("{")):
+            depth += 1
+            opened = True
+        if opened and depth == 1:
+            body_line = line.split("{", 1)[1] if "{" in line else line
+            m = VARIANT_RE.match(body_line if "{" in line else line.strip())
+            if m and m.group(1) not in ("Self",):
+                variants.add(m.group(1))
+        depth -= line.count("}")
+        if opened and depth <= 0:
+            break
+    return variants
+
+
+def parse_tree(root: Path) -> dict[str, Module]:
+    """Build the module tree for a crate rooted at `root`."""
+    mods: dict[str, Module] = {}
+    for file in sorted(root.rglob("*.rs")):
+        name = module_name_for(file, root)
+        mod = mods.setdefault(name, Module(name, file=str(file)))
+        text = lexer.strip_comments(file.read_text(), blank_strings=True)
+        lines = text.split("\n")
+        depth = 0
+        for idx, line in enumerate(lines):
+            if depth <= 1:
+                d = DEF_RE.match(line)
+                if d:
+                    kind, ident = d.group(1), d.group(2)
+                    entry = mod.defs.setdefault(ident, Def(kind))
+                    if kind == "enum":
+                        entry.variants = _collect_enum_variants(lines, idx)
+                i = IMPL_RE.match(line)
+                if i:
+                    mod.defs.setdefault(i.group(1), Def("impl"))
+            depth += line.count("{") - line.count("}")
+        # `use` statements (possibly multi-line) over the whole file; only
+        # pub-use creates an externally visible name.
+        for m in USE_RE.finditer(text):
+            is_pub = bool(m.group(1))
+            for p in split_use_tree(m.group(2)):
+                p = p.strip()
+                if not p:
+                    continue
+                if " as " in p:
+                    p, alias = [s.strip() for s in p.split(" as ", 1)]
+                    leaf = alias
+                else:
+                    leaf = p.rsplit("::", 1)[-1]
+                if not is_pub:
+                    continue
+                if leaf == "*":
+                    mod.glob_reexports.append(p.rsplit("::", 1)[0])
+                else:
+                    mod.reexports[leaf] = p
+    return mods
+
+
+@dataclass
+class Resolution:
+    ok: bool
+    why: str = ""
+
+
+def resolve(
+    mods: dict[str, Module], from_mod: str, path: str, _depth: int = 0
+) -> Resolution:
+    """Resolve a use-path from `from_mod` down to the item."""
+    if _depth > 8:  # re-export cycle guard
+        return Resolution(False, "re-export chain too deep (cycle?)")
+    parts = [p.strip() for p in path.split("::") if p.strip()]
+    if not parts or parts[-1] == "*":
+        return Resolution(True)
+    if len(parts) > 1 and parts[-1] == "self":
+        parts = parts[:-1]  # `use a::b::{self}` imports module a::b
+    head = parts[0]
+    if head in PRELUDE:
+        return Resolution(True)
+    if head == "crate":
+        base, parts = "crate", parts[1:]
+    elif head == "super":
+        base = from_mod.rsplit("::", 1)[0]
+        parts = parts[1:]
+        while parts and parts[0] == "super":
+            base = base.rsplit("::", 1)[0]
+            parts = parts[1:]
+    elif head == "self":
+        base, parts = from_mod, parts[1:]
+    else:
+        return Resolution(True)  # external crate — out of scope
+    cur = base
+    for i, part in enumerate(parts):
+        child = cur + "::" + part
+        if child in mods:
+            cur = child
+            continue
+        mod = mods.get(cur)
+        if mod is None:
+            return Resolution(False, f"module `{cur}` does not exist")
+        d = mod.defs.get(part)
+        if d is not None:
+            rest = parts[i + 1 :]
+            if not rest:
+                return Resolution(True)
+            if d.kind == "enum":
+                if len(rest) == 1 and rest[0] in d.variants:
+                    return Resolution(True)
+                if len(rest) == 1:
+                    return Resolution(
+                        False,
+                        f"`{rest[0]}` is not a variant of enum `{cur}::{part}` "
+                        f"(variants: {', '.join(sorted(d.variants)) or 'none parsed'})",
+                    )
+            # Associated item on a struct/trait/type — trusted.
+            return Resolution(True)
+        target = mod.reexports.get(part)
+        if target is not None:
+            rest = "::".join(parts[i + 1 :])
+            full = target + ("::" + rest if rest else "")
+            sub = resolve(mods, cur, full, _depth + 1)
+            if sub.ok:
+                return sub
+            return Resolution(
+                False, f"re-export `{part}` in `{cur}` points at `{target}`: {sub.why}"
+            )
+        for glob in mod.glob_reexports:
+            rest = "::".join(parts[i:])
+            sub = resolve(mods, cur, glob + "::" + rest, _depth + 1)
+            if sub.ok:
+                return sub
+        return Resolution(False, f"`{part}` is not defined in `{cur}`")
+    return Resolution(True)  # path names a module itself
+
+
+def _check_file_uses(
+    mods: dict[str, Module],
+    file: Path,
+    from_mod: str,
+    crate_alias: str | None,
+    res: PassResult,
+) -> int:
+    text = lexer.strip_comments(file.read_text(), blank_strings=True)
+    checked = 0
+    for m in USE_RE.finditer(text):
+        line_no = text[: m.start()].count("\n") + 1
+        for p in split_use_tree(m.group(2)):
+            p = p.strip()
+            if " as " in p:
+                p = p.split(" as ", 1)[0].strip()
+            q = p
+            if crate_alias and (q == crate_alias or q.startswith(crate_alias + "::")):
+                q = "crate" + q[len(crate_alias) :]
+            if not q.startswith(("crate::", "super::", "self::")):
+                continue
+            checked += 1
+            r = resolve(mods, from_mod, q)
+            if not r.ok:
+                res.finding(
+                    f"symbols:unresolved:{file.name}:{p}",
+                    f"unresolved `use {p}`: {r.why}",
+                    file=str(file),
+                    line=line_no,
+                )
+    return checked
+
+
+def run(repo: Path, src_root: str = "rust/src") -> PassResult:
+    """Run the symbols pass over the crate plus tests/benches."""
+    res = PassResult("symbols")
+    root = repo / src_root
+    mods = parse_tree(root)
+    checked = 0
+    files = 0
+    for file in sorted(root.rglob("*.rs")):
+        files += 1
+        checked += _check_file_uses(mods, file, module_name_for(file, root), None, res)
+    for extra in ("rust/tests", "rust/benches"):
+        base = repo / extra
+        if not base.exists():
+            continue
+        for file in sorted(base.rglob("*.rs")):
+            files += 1
+            checked += _check_file_uses(mods, file, "crate", "ohm", res)
+    res.stats = {"modules": len(mods), "files": files, "uses_checked": checked}
+    return res

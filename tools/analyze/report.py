@@ -1,0 +1,125 @@
+"""Findings, suppressions, and the JSON report.
+
+Every pass emits `Finding`s with a stable, human-greppable id:
+
+    <pass>:<rule>:<site>
+
+e.g. ``locks:guard-across-blocking:server.rs:handle_conn:write_all`` or
+``conformance:undocumented-flag:cmd_serve:--threads``. Ids carry no
+line numbers, so routine edits don't churn the suppression file.
+
+`tools/baselines/suppressions.txt` grammar, one entry per line:
+
+    <finding-id> <reason text…>
+
+The reason is mandatory — a bare id is itself an error. `#` starts a
+comment; blank lines are skipped. A suppression that matches no current
+finding is reported as a warning (stale), not a failure, so deleting
+fixed code doesn't break `--check`.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Finding:
+    """One analyzer hit.
+
+    `id` is the stable suppression key; `file`/`line` locate the site
+    for humans (line may be 0 for repo-level findings like doc drift).
+    """
+
+    id: str
+    message: str
+    file: str = ""
+    line: int = 0
+    severity: str = "error"  # "error" | "warning"
+
+    def to_json(self) -> dict:
+        return {
+            "id": self.id,
+            "message": self.message,
+            "file": self.file,
+            "line": self.line,
+            "severity": self.severity,
+        }
+
+
+@dataclass
+class PassResult:
+    """What one pass produced: findings plus coverage counters."""
+
+    name: str
+    findings: list[Finding] = field(default_factory=list)
+    stats: dict = field(default_factory=dict)
+
+    def finding(
+        self, id: str, message: str, file: str = "", line: int = 0, severity: str = "error"
+    ) -> None:
+        self.findings.append(Finding(id, message, file, line, severity))
+
+
+class SuppressionError(ValueError):
+    """A malformed suppression entry (missing reason)."""
+
+
+def parse_suppressions(text: str) -> dict[str, str]:
+    """Parse the suppression file into {finding-id: reason}.
+
+    Raises `SuppressionError` on an entry with no reason — suppressing
+    a finding without saying why defeats the file's purpose.
+    """
+    out: dict[str, str] = {}
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split(None, 1)
+        if len(parts) < 2:
+            raise SuppressionError(
+                f"suppressions.txt:{lineno}: entry {parts[0]!r} has no reason "
+                "(grammar: '<finding-id> <why this is a false positive>')"
+            )
+        fid, reason = parts
+        out[fid] = reason
+    return out
+
+
+def apply_suppressions(
+    results: list[PassResult], suppressions: dict[str, str]
+) -> tuple[list[Finding], list[Finding], list[str]]:
+    """Split findings into (active, suppressed) and list stale entries."""
+    active: list[Finding] = []
+    suppressed: list[Finding] = []
+    seen_ids: set[str] = set()
+    for res in results:
+        for f in res.findings:
+            seen_ids.add(f.id)
+            (suppressed if f.id in suppressions else active).append(f)
+    stale = sorted(fid for fid in suppressions if fid not in seen_ids)
+    return active, suppressed, stale
+
+
+def render_json(
+    results: list[PassResult],
+    active: list[Finding],
+    suppressed: list[Finding],
+    stale: list[str],
+) -> str:
+    doc = {
+        "tool": "ohm_analyze",
+        "passes": {
+            r.name: {
+                "findings": len(r.findings),
+                "stats": r.stats,
+            }
+            for r in results
+        },
+        "active": [f.to_json() for f in active],
+        "suppressed": [f.to_json() for f in suppressed],
+        "stale_suppressions": stale,
+        "ok": not any(f.severity == "error" for f in active),
+    }
+    return json.dumps(doc, indent=2, sort_keys=False) + "\n"

@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""OHM static-analysis driver — five toolchain-free passes over the Rust tree.
+
+    python3 tools/ohm_analyze.py            # report, exit 0
+    python3 tools/ohm_analyze.py --check    # gate: exit 1 on any active finding
+    python3 tools/ohm_analyze.py --bless    # regenerate tools/baselines/atomics.txt
+    python3 tools/ohm_analyze.py --json out.json --pass locks --pass atomics
+
+Passes: symbols, locks, atomics, conformance, ledger — see
+docs/STATIC_ANALYSIS.md for what each checks and how to suppress a
+false positive (tools/baselines/suppressions.txt, reason required).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+from analyze import PASSES, atomics, conformance, ledger, locks, modules, report  # noqa: E402
+
+RUNNERS = {
+    "symbols": modules.run,
+    "locks": locks.run,
+    "atomics": atomics.run,
+    "conformance": conformance.run,
+    "ledger": ledger.run,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--repo", default=str(Path(__file__).resolve().parent.parent))
+    ap.add_argument("--root", default="rust/src", help="crate source root, relative to --repo")
+    ap.add_argument("--check", action="store_true", help="exit 1 on unsuppressed findings")
+    ap.add_argument("--bless", action="store_true", help="regenerate the atomics baseline")
+    ap.add_argument("--json", metavar="PATH", help="write the JSON report here")
+    ap.add_argument(
+        "--pass",
+        dest="passes",
+        action="append",
+        choices=PASSES,
+        help="run only these passes (repeatable; default: all five)",
+    )
+    args = ap.parse_args()
+    repo = Path(args.repo)
+    baselines = repo / "tools" / "baselines"
+
+    if args.bless:
+        baselines.mkdir(parents=True, exist_ok=True)
+        inv = atomics.inventory(repo, args.root)
+        (baselines / atomics.BASELINE_NAME).write_text(atomics.render_baseline(inv))
+        total = sum(sum(c.values()) for c in inv.values())
+        print(
+            f"blessed {baselines / atomics.BASELINE_NAME}: "
+            f"{total} Ordering sites across {len(inv)} files"
+        )
+        return 0
+
+    selected = args.passes or list(PASSES)
+    results = [RUNNERS[name](repo, args.root) for name in selected]
+
+    supp_path = baselines / "suppressions.txt"
+    try:
+        suppressions = (
+            report.parse_suppressions(supp_path.read_text()) if supp_path.exists() else {}
+        )
+    except report.SuppressionError as e:
+        print(f"FAIL {e}")
+        return 1
+    active, suppressed, stale = report.apply_suppressions(results, suppressions)
+
+    for res in results:
+        extras = []
+        for key in ("modules", "files", "uses_checked", "acquisition_sites",
+                    "order_edges", "total_sites", "wire_literals",
+                    "taxonomy_codes", "cli_flags_checked", "construction_sites"):
+            if key in res.stats:
+                extras.append(f"{key}={res.stats[key]}")
+        n = len(res.findings)
+        print(f"pass {res.name:<12} findings={n:<3} {' '.join(extras)}")
+    for f in active:
+        loc = f"{f.file}:{f.line}" if f.line else f.file
+        print(f"FAIL [{f.id}] {loc}: {f.message}")
+    for f in suppressed:
+        print(f"supp [{f.id}] {suppressions[f.id]}")
+    for fid in stale:
+        print(f"warn stale suppression: {fid}")
+
+    if args.json:
+        Path(args.json).write_text(report.render_json(results, active, suppressed, stale))
+
+    errors = [f for f in active if f.severity == "error"]
+    print(
+        f"{len(selected)} passes, {sum(len(r.findings) for r in results)} findings "
+        f"({len(errors)} active, {len(suppressed)} suppressed, {len(stale)} stale suppressions)"
+    )
+    if args.check and errors:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

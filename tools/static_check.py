@@ -1,174 +1,26 @@
 #!/usr/bin/env python3
-"""Static import/definition cross-checker for the OHM Rust workspace.
+"""Static import/definition cross-checker — compatibility entry point.
 
-The build container has no Rust toolchain, so this tool provides the
-mechanical half of a compile triage: it parses every ``.rs`` file,
-builds the module tree (including ``pub use`` re-exports), and verifies
-that every ``use crate::...`` / ``use super::...`` path resolves to a
-real definition.  It will not catch type errors, but it catches the
-most common class of uncompiled-code breakage: a name that simply does
-not exist where it is imported from.
+PR 6's module-grade checker grew into the multi-pass suite in
+`tools/analyze/` driven by `tools/ohm_analyze.py`; this wrapper keeps
+the original command line (`python3 tools/static_check.py [--root
+rust/src]`) and output shape alive for scripts and muscle memory, now
+running the *item*-grade symbols pass on the shared comment/string-aware
+lexer. The old standalone version had two lexer bugs this move fixes:
+nested `/* /* */ */` comments leaked code back in, and `//` inside a
+string literal truncated the line.
 
-Usage:  python3 tools/static_check.py [--root rust/src]
 Exit codes: 0 = clean, 1 = unresolved imports found.
 """
 from __future__ import annotations
 
 import argparse
-import re
 import sys
 from pathlib import Path
 
-DEF_RE = re.compile(
-    r"^\s*(?:pub(?:\([^)]*\))?\s+)?"
-    r"(?:unsafe\s+)?(?:async\s+)?(?:const\s+)?(?:extern\s+\"[^\"]*\"\s+)?"
-    r"(fn|struct|enum|trait|type|const|static|mod|union|macro_rules!)\s+"
-    r"([A-Za-z_][A-Za-z0-9_]*)"
-)
-IMPL_RE = re.compile(r"^\s*impl(?:<[^>]*>)?\s+(?:[A-Za-z_][\w:<>, ]*\s+for\s+)?([A-Za-z_][A-Za-z0-9_]*)")
-USE_RE = re.compile(r"^\s*(pub\s+)?use\s+(.+?);\s*$", re.S)
-MOD_DECL_RE = re.compile(r"^\s*(?:pub(?:\([^)]*\))?\s+)?mod\s+([A-Za-z_][A-Za-z0-9_]*)\s*;")
+sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-PRELUDE = {
-    "std", "core", "alloc", "self", "Self",
-    # vendored external crates
-    "anyhow", "crossbeam_utils", "xla",
-}
-
-
-def strip_comments(text: str) -> str:
-    # Remove block comments (non-nested approximation) and line comments.
-    text = re.sub(r"/\*.*?\*/", "", text, flags=re.S)
-    return "\n".join(line.split("//")[0] for line in text.splitlines())
-
-
-class Module:
-    def __init__(self, path: str):
-        self.path = path          # e.g. "crate::sort::quicksort"
-        self.defs: set[str] = set()
-        self.reexports: list[tuple[str, str]] = []  # (local name, full path)
-        self.submodules: set[str] = set()
-
-
-def module_name_for(file: Path, root: Path) -> str:
-    rel = file.relative_to(root)
-    parts = list(rel.parts)
-    if parts[-1] in ("mod.rs", "lib.rs", "main.rs"):
-        parts = parts[:-1]
-    else:
-        parts[-1] = parts[-1][:-3]
-    return "::".join(["crate"] + parts)
-
-
-def split_use_tree(tree: str) -> list[str]:
-    """Expand `a::{b, c::{d, e}}` into flat paths."""
-    tree = tree.strip()
-    m = re.match(r"^(.*?)\{(.*)\}$", tree, re.S)
-    if not m:
-        return [tree]
-    prefix, inner = m.group(1), m.group(2)
-    out, depth, cur = [], 0, ""
-    for ch in inner:
-        if ch == "{":
-            depth += 1
-        elif ch == "}":
-            depth -= 1
-        if ch == "," and depth == 0:
-            out.append(cur)
-            cur = ""
-        else:
-            cur += ch
-    if cur.strip():
-        out.append(cur)
-    flat = []
-    for item in out:
-        flat.extend(split_use_tree(prefix + item.strip()))
-    return flat
-
-
-def parse(root: Path) -> dict[str, Module]:
-    mods: dict[str, Module] = {}
-    for file in sorted(root.rglob("*.rs")):
-        name = module_name_for(file, root)
-        mod = mods.setdefault(name, Module(name))
-        text = strip_comments(file.read_text())
-        # Track only top-level-ish defs: ignore nested fn bodies by a
-        # cheap brace-depth heuristic.
-        depth = 0
-        for line in text.splitlines():
-            if depth <= 1:
-                d = DEF_RE.match(line)
-                if d:
-                    mod.defs.add(d.group(2))
-                    if d.group(1) == "mod":
-                        mod.submodules.add(d.group(2))
-                i = IMPL_RE.match(line)
-                if i:
-                    mod.defs.add(i.group(1))
-            if depth == 0:
-                u = USE_RE.match(line)
-                if u:
-                    for p in split_use_tree(u.group(2)):
-                        p = p.strip()
-                        if " as " in p:
-                            p, alias = [s.strip() for s in p.split(" as ", 1)]
-                            leaf = alias
-                        else:
-                            leaf = p.rsplit("::", 1)[-1]
-                        if u.group(1):  # pub use → re-export
-                            mod.reexports.append((leaf, p))
-                        mod.defs.add(leaf)
-            depth += line.count("{") - line.count("}")
-    return mods
-
-
-def resolve(mods: dict[str, Module], from_mod: str, path: str) -> bool:
-    """Can `path` (a use-path) be resolved from module `from_mod`?"""
-    parts = [p.strip() for p in path.split("::") if p.strip()]
-    if not parts or parts[-1] == "*":
-        return True
-    # `use a::b::{self, c}` expands to a path ending in `::self`: it
-    # imports module `a::b` itself.
-    if len(parts) > 1 and parts[-1] == "self":
-        parts = parts[:-1]
-    head = parts[0]
-    if head in PRELUDE:
-        return True
-    if head == "crate":
-        parts = parts[1:]
-        base = "crate"
-    elif head == "super":
-        base = from_mod.rsplit("::", 1)[0]
-        parts = parts[1:]
-        while parts and parts[0] == "super":
-            base = base.rsplit("::", 1)[0]
-            parts = parts[1:]
-    elif head == "self":
-        base = from_mod
-        parts = parts[1:]
-    else:
-        return True  # local / external — out of scope
-    # Walk: the longest prefix that is a module path, then the leaf must
-    # be a def (or re-export) in that module.
-    cur = base
-    for i, part in enumerate(parts):
-        child = cur + "::" + part
-        if child in mods:
-            cur = child
-            continue
-        # Not a module: must be a definition in `cur`.
-        m = mods.get(cur)
-        if m is None:
-            return False
-        if part in m.defs:
-            # Anything after a type name (assoc items/variants) — accept.
-            return True
-        # Chase re-exports one level.
-        for leaf, target in m.reexports:
-            if leaf == part:
-                return True
-        return False
-    return True  # path names a module itself
+from analyze import modules  # noqa: E402
 
 
 def main() -> int:
@@ -176,37 +28,15 @@ def main() -> int:
     ap.add_argument("--root", default="rust/src")
     args = ap.parse_args()
     root = Path(args.root)
-    mods = parse(root)
-
-    # Also index integration tests/benches against the crate namespace:
-    # they import `ohm::...`, which maps onto `crate::...`.
-    failures = []
-    for scope, base in [("rust/src", root), ("rust/tests", Path("rust/tests")), ("rust/benches", Path("rust/benches"))]:
-        if not base.exists() or base == root and scope != "rust/src":
-            pass
-        for file in sorted(base.rglob("*.rs")):
-            if base == root:
-                from_mod = module_name_for(file, root)
-            else:
-                from_mod = "crate"
-            text = strip_comments(file.read_text())
-            for line in text.splitlines():
-                u = USE_RE.match(line)
-                if not u:
-                    continue
-                for p in split_use_tree(u.group(2)):
-                    p = p.strip()
-                    if " as " in p:
-                        p = p.split(" as ", 1)[0].strip()
-                    q = p.replace("ohm::", "crate::") if base != root else p
-                    if q.startswith(("crate::", "super::", "self::")):
-                        if not resolve(mods, from_mod, q):
-                            failures.append(f"{file}: unresolved `use {p}`")
-
-    for f in failures:
-        print(f"FAIL {f}")
-    print(f"checked {len(mods)} modules; {len(failures)} unresolved imports")
-    return 1 if failures else 0
+    repo = root.parent.parent if root.name == "src" else Path(".")
+    res = modules.run(repo, str(root.relative_to(repo)))
+    for f in res.findings:
+        print(f"FAIL {f.file}: {f.message}")
+    print(
+        f"checked {res.stats['modules']} modules; "
+        f"{len(res.findings)} unresolved imports"
+    )
+    return 1 if res.findings else 0
 
 
 if __name__ == "__main__":
