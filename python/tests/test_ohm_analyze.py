@@ -18,7 +18,16 @@ import pytest
 REPO = Path(__file__).resolve().parents[2]
 sys.path.insert(0, str(REPO / "tools"))
 
-from analyze import atomics, conformance, ledger, lexer, locks, modules, report  # noqa: E402
+from analyze import (  # noqa: E402
+    atomics,
+    conformance,
+    ledger,
+    lexer,
+    locks,
+    modules,
+    report,
+    unsafe_ffi,
+)
 
 
 def make_repo(tmp_path, files):
@@ -306,6 +315,68 @@ def test_atomics_drift_fails(tmp_path):
     # cmp::Ordering variants are not atomics.
     lib.write_text(lib.read_text() + "\npub fn cmpish() -> std::cmp::Ordering { std::cmp::Ordering::Less }\n")
     assert atomics.inventory(repo)["lib.rs"] == inv["lib.rs"] | {"Relaxed": 2}
+
+
+# --------------------------------------------------------------- unsafe
+
+
+UNSAFE_SRC = {
+    "rust/src/pool/job.rs": """
+        pub struct JobRef { data: *const (), exec: unsafe fn(*const ()) }
+        unsafe impl Send for JobRef {}
+        pub unsafe fn run(j: JobRef) {
+            unsafe { (j.exec)(j.data) }
+        }
+        // unsafe in a comment and "unsafe" in a string do not count
+        pub fn s() -> &'static str { "unsafe" }
+    """
+}
+
+
+def test_unsafe_classifies_and_blesses_clean(tmp_path):
+    repo = make_repo(tmp_path, UNSAFE_SRC)
+    inv = unsafe_ffi.inventory(repo)
+    # one fn-pointer type + one unsafe fn, one unsafe impl, one block;
+    # the comment and string occurrences are invisible.
+    assert inv == {"pool/job.rs": {"fn": 2, "impl": 1, "block": 1}}
+    baselines = repo / "tools" / "baselines"
+    baselines.mkdir(parents=True)
+    (baselines / unsafe_ffi.BASELINE_NAME).write_text(unsafe_ffi.render_baseline(inv))
+    assert ids(unsafe_ffi.run(repo)) == []
+
+
+def test_unsafe_drift_fails(tmp_path):
+    repo = make_repo(tmp_path, UNSAFE_SRC)
+    baselines = repo / "tools" / "baselines"
+    baselines.mkdir(parents=True)
+    inv = unsafe_ffi.inventory(repo)
+    (baselines / unsafe_ffi.BASELINE_NAME).write_text(unsafe_ffi.render_baseline(inv))
+    job = repo / "rust" / "src" / "pool" / "job.rs"
+    job.write_text(job.read_text() + "\npub fn sneak(p: *const u32) -> u32 { unsafe { *p } }\n")
+    res = unsafe_ffi.run(repo)
+    assert any(i.startswith("unsafe:drift:pool/job.rs") for i in ids(res))
+
+
+def test_unsafe_containment_fails_even_when_blessed(tmp_path):
+    src = dict(UNSAFE_SRC)
+    src["rust/src/coordinator/server.rs"] = """
+        pub fn oops(p: *const u32) -> u32 { unsafe { *p } }
+    """
+    repo = make_repo(tmp_path, src)
+    baselines = repo / "tools" / "baselines"
+    baselines.mkdir(parents=True)
+    inv = unsafe_ffi.inventory(repo)
+    (baselines / unsafe_ffi.BASELINE_NAME).write_text(unsafe_ffi.render_baseline(inv))
+    res = unsafe_ffi.run(repo)
+    assert any(i == "unsafe:containment:coordinator/server.rs" for i in ids(res))
+    # The blessed-but-contained file stays clean.
+    assert not any(i.startswith("unsafe:drift:") for i in ids(res))
+
+
+def test_unsafe_missing_baseline_fails(tmp_path):
+    repo = make_repo(tmp_path, UNSAFE_SRC)
+    (repo / "tools" / "baselines").mkdir(parents=True)
+    assert "unsafe:missing-baseline" in ids(unsafe_ffi.run(repo))
 
 
 # ---------------------------------------------------------- conformance

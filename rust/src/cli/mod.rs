@@ -13,7 +13,8 @@
 //!            [--slo CLASS=US[,CLASS=US...]] [--admission-window-ms N]
 //!            [--rebalance off|adaptive] [--rebalance-window-ms N]
 //!            [--cache on|off] [--cache-entries N] [--cache-bytes N]
-//!            [--cost-model on|off] [--faults SPEC] [--config F]]
+//!            [--cost-model on|off] [--faults SPEC]
+//!            [--io threads|reactor] [--reactor-threads N] [--config F]]
 //!           # TCP front end: concurrent readers, per-shape-class dispatch
 //!           # lanes with work stealing, bounded per-lane admission queues
 //!           # (overflow → ERR BUSY), SLO-driven adaptive admission
@@ -30,11 +31,14 @@
 //!           # thread, admission sheds on predicted queue wait, the
 //!           # rebalancer weighs classes by predicted cost; off by
 //!           # default), cross-connection shape
-//!           # batching, DRAIN protocol for rolling restarts — see
+//!           # batching, DRAIN protocol for rolling restarts, and the
+//!           # connection edge itself (--io reactor: a fixed epoll
+//!           # reactor pool multiplexes every connection instead of a
+//!           # thread per socket; replies byte-identical) — see
 //!           # docs/PROTOCOL.md
 //! ohm loadgen --addr HOST:PORT [--clients N] [--reqs N] [--seed S]
 //!             [--retries N] [--backoff-us U] [--repeat-seeds]
-//!             [--skew S] [--drain [--out FILE]]
+//!             [--skew S] [--open-conns N] [--drain [--out FILE]]
 //!           # drive a running server: N concurrent clients × mixed
 //!           # matmul/sort shapes (round-robin, or Zipf(S)-skewed with
 //!           # --skew for a reproducible lane-imbalanced trace), verify
@@ -114,7 +118,12 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|chaos|benc
                          protocol command for rolling restarts, --faults
                          SPEC deterministic fault injection (e.g.
                          kill-lane=@3,drop-reply=0.1; off by default —
-                         grammar: docs/CHAOS.md), --config F
+                         grammar: docs/CHAOS.md), --io threads|reactor
+                         connection edge: blocking reader threads
+                         (default) or a fixed epoll reactor pool
+                         (--reactor-threads N, default ≈ cores; replies
+                         byte-identical, STATS gains a reactor table),
+                         --config F
                          reads [serving] + [lanes] + [admission] +
                          [admission.slo] + [rebalance] + [cache] +
                          [costmodel] + [faults];
@@ -125,7 +134,11 @@ const USAGE: &str = "usage: ohm <experiment|matmul|sort|serve|loadgen|chaos|benc
                         --backoff-us U jittered retry of BUSY/OVERLOADED,
                         --repeat-seeds for a cache-hitting repeated-seed
                         trace, --skew S for a Zipf(S)-skewed shape mix
-                        (reproducible lane imbalance), --drain to finish
+                        (reproducible lane imbalance), --open-conns N to
+                        hold N mostly-idle extra connections open through
+                        the run (C10k pressure; reports the held-conn
+                        count and probes the server's reactor thread
+                        count), --drain to finish
                         with a DRAIN, --out FILE to save the final STATS;
                         prints client-side p50/p90/p99 — hit vs miss path
                         when cached — plus goodput vs offered load and
@@ -302,6 +315,18 @@ fn cmd_serve(args: &Args) -> Result<String> {
             Some(path) => crate::config::ServingConfig::load(Path::new(path))?,
             None => crate::config::ServingConfig::default(),
         };
+        if let Some(v) = args.get("io") {
+            serving.io = crate::coordinator::IoMode::parse(v)
+                .with_context(|| format!("flag --io: unknown mode {v:?} (threads|reactor)"))?;
+        }
+        if let Some(v) = args.get_parsed::<usize>("reactor-threads")? {
+            // 0 is the internal derive-from-parallelism sentinel, not a
+            // valid explicit setting.
+            if v == 0 {
+                bail!("flag --reactor-threads: must be ≥ 1 (omit to derive from available parallelism)");
+            }
+            serving.reactor_threads = v;
+        }
         if let Some(v) = args.get_parsed::<usize>("serve-threads")? {
             serving.serve_threads = v.max(1);
         }
@@ -440,6 +465,12 @@ fn cmd_serve(args: &Args) -> Result<String> {
         if cfg.faults != "off" {
             extras.push_str(&format!(", faults {}", cfg.faults));
         }
+        if cfg.io == crate::coordinator::IoMode::Reactor {
+            extras.push_str(&format!(
+                ", io reactor ({} reactor threads)",
+                cfg.effective_reactor_threads()
+            ));
+        }
         eprintln!(
             "ohm serving on {} ({} reader threads, {} dispatch lanes (steal={}), per-lane queue depth {}, batch ≤{}, admission {} (slo p90 {:.0}µs), {}{})",
             server.local_addr(),
@@ -525,12 +556,66 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     let retries = args.get_parsed::<usize>("retries")?.unwrap_or(0);
     let backoff_us = args.get_parsed::<u64>("backoff-us")?.unwrap_or(500).max(1);
     let repeat_seeds = args.has("repeat-seeds");
+    let open_conns = args.get_parsed::<usize>("open-conns")?.unwrap_or(0);
     let skew = match args.get_parsed::<f64>("skew")? {
         Some(s) if !s.is_finite() || s < 0.0 => {
             bail!("flag --skew: must be a finite Zipf exponent ≥ 0, got {s:?}")
         }
         s => s,
     };
+
+    // Idle-connection ballast (`--open-conns N`): hold N extra
+    // connections open for the whole run — mix, percentiles, and DRAIN
+    // included — so the serving edge is exercised under C10k-style fd
+    // pressure, not just request pressure. Each slot is verified live
+    // with one PING and then left idle. Meant for `--io reactor`
+    // servers: a thread-per-connection server parks a reader on every
+    // idle connection, so its pool would wedge long before the mix
+    // starts.
+    let mut held: Vec<std::net::TcpStream> = Vec::with_capacity(open_conns);
+    // The server's `reactor: threads=…` STATS trailer, probed through
+    // the first held slot — the held-connection report below pairs the
+    // client-side fd count with the server-side reactor thread count.
+    let mut reactor_trailer: Option<String> = None;
+    if open_conns > 0 {
+        for i in 0..open_conns {
+            let stream = std::net::TcpStream::connect(addr.as_str()).with_context(|| {
+                format!("loadgen --open-conns: connect #{i} failed (server conn budget or fd limit?)")
+            })?;
+            {
+                // Borrowed reader/writer halves: `try_clone` would dup
+                // the fd and double the measured footprint.
+                let mut w = &stream;
+                writeln!(w, "PING")?;
+                w.flush()?;
+                let mut line = String::new();
+                BufReader::new(&stream).read_line(&mut line)?;
+                if line.trim() != "PONG" {
+                    bail!("loadgen --open-conns: slot {i} answered {:?}, want PONG", line.trim());
+                }
+            }
+            held.push(stream);
+        }
+        if let Some(first) = held.first() {
+            let mut w = first;
+            writeln!(w, "STATS")?;
+            w.flush()?;
+            let mut reader = BufReader::new(first);
+            loop {
+                let mut line = String::new();
+                if reader.read_line(&mut line)? == 0 {
+                    bail!("loadgen --open-conns: server closed mid-STATS probe");
+                }
+                let line = line.trim();
+                if line == "." {
+                    break;
+                }
+                if line.starts_with("reactor: threads=") {
+                    reactor_trailer = Some(line.to_string());
+                }
+            }
+        }
+    }
 
     // Which LOADGEN_SHAPES index client `c`'s request `k` uses. The
     // default is the historical round-robin (a balanced trace); with
@@ -768,6 +853,17 @@ fn cmd_loadgen(args: &Args) -> Result<String> {
     };
     if !latencies_us.is_empty() {
         text.push_str(&percentile_line(&mut latencies_us, "client latency, served reqs"));
+    }
+    if open_conns > 0 {
+        text.push_str(&format!(
+            "open-conns: held={} idle connections through the run{}\n",
+            held.len(),
+            if drain { " and drain" } else { "" },
+        ));
+        match &reactor_trailer {
+            Some(t) => text.push_str(&format!("open-conns: server {t}\n")),
+            None => text.push_str("open-conns: server io=threads (no reactor table)\n"),
+        }
     }
     // Hit-path vs miss-path split, once any reply came from the warm
     // cache: the lower hit p50 is the managed-away redundant work,
@@ -1372,6 +1468,19 @@ mod tests {
     fn serve_listen_rejects_bad_cost_model_flag() {
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cost-model", "maybe"]).is_err());
         assert!(call(&["serve", "--listen", "127.0.0.1:0", "--cost-model", "true"]).is_err());
+    }
+
+    #[test]
+    fn serve_listen_rejects_bad_io_flags() {
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--io", "epoll"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--io", "Reactor"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--reactor-threads", "0"]).is_err());
+        assert!(call(&["serve", "--listen", "127.0.0.1:0", "--reactor-threads", "x"]).is_err());
+    }
+
+    #[test]
+    fn loadgen_rejects_bad_open_conns() {
+        assert!(call(&["loadgen", "--addr", "127.0.0.1:1", "--open-conns", "x"]).is_err());
     }
 
     #[test]

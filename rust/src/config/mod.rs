@@ -218,7 +218,14 @@ impl ExperimentConfig {
 /// [`CoordinatorCfg::default`](crate::coordinator::CoordinatorCfg).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
-    /// Connection reader threads.
+    /// Connection-IO mode (`[serving] io = "threads"|"reactor"`):
+    /// blocking reader threads (default) or the fixed epoll reactor
+    /// pool. Replies are byte-identical either way.
+    pub io: crate::coordinator::IoMode,
+    /// Reactor event-loop threads (`[serving] reactor_threads = N`,
+    /// reactor mode only); 0 = derive from available parallelism.
+    pub reactor_threads: usize,
+    /// Connection reader threads (threads mode only).
     pub serve_threads: usize,
     /// Per-lane admission-queue depth; requests past it answer `ERR BUSY`.
     pub queue_depth: usize,
@@ -276,6 +283,8 @@ impl Default for ServingConfig {
     fn default() -> Self {
         let c = crate::coordinator::CoordinatorCfg::default();
         ServingConfig {
+            io: c.io,
+            reactor_threads: c.reactor_threads,
             serve_threads: c.serve_threads,
             queue_depth: c.queue_depth,
             batch_max: c.batch_max,
@@ -309,6 +318,21 @@ impl ServingConfig {
     pub fn from_table(t: &Table) -> Result<ServingConfig> {
         let mut cfg = ServingConfig::default();
         if let Some(sec) = t.get("serving") {
+            if let Some(v) = sec.get("io") {
+                let name = v.as_str().context("io")?;
+                cfg.io = crate::coordinator::IoMode::parse(name)
+                    .with_context(|| format!("unknown io mode {name:?} (threads|reactor)"))?;
+            }
+            if let Some(v) = sec.get("reactor_threads") {
+                // 0 is not a valid explicit setting (it is the internal
+                // "derive from parallelism" sentinel); omit the key for
+                // that behaviour.
+                let n = v.as_usize().context("reactor_threads")?;
+                if n == 0 {
+                    bail!("reactor_threads must be ≥ 1 (omit the key to derive from available parallelism)");
+                }
+                cfg.reactor_threads = n;
+            }
             if let Some(v) = sec.get("serve_threads") {
                 cfg.serve_threads = v.as_usize().context("serve_threads")?.max(1);
             }
@@ -424,6 +448,8 @@ impl ServingConfig {
 
     /// Copy the serving fields onto a coordinator configuration.
     pub fn apply(&self, cfg: &mut crate::coordinator::CoordinatorCfg) {
+        cfg.io = self.io;
+        cfg.reactor_threads = self.reactor_threads;
         cfg.serve_threads = self.serve_threads;
         cfg.queue_depth = self.queue_depth;
         cfg.batch_max = self.batch_max;
@@ -531,9 +557,31 @@ flag = true
     }
 
     #[test]
+    fn serving_io_mode_overrides_and_applies() {
+        let d = ServingConfig::default();
+        assert_eq!(d.io, crate::coordinator::IoMode::Threads, "threads is the default edge");
+        assert_eq!(d.reactor_threads, 0, "reactor pool size derives from parallelism");
+        let t = parse("[serving]\nio = \"reactor\"\nreactor_threads = 3\n").unwrap();
+        let c = ServingConfig::from_table(&t).unwrap();
+        assert_eq!(c.io, crate::coordinator::IoMode::Reactor);
+        assert_eq!(c.reactor_threads, 3);
+        let mut coord = crate::coordinator::CoordinatorCfg::default();
+        c.apply(&mut coord);
+        assert_eq!(coord.io, crate::coordinator::IoMode::Reactor);
+        assert_eq!(coord.reactor_threads, 3);
+        // Unknown mode and the 0 sentinel are config errors, not
+        // silent defaults.
+        let t = parse("[serving]\nio = \"epoll\"\n").unwrap();
+        assert!(ServingConfig::from_table(&t).is_err());
+        let t = parse("[serving]\nreactor_threads = 0\n").unwrap();
+        assert!(ServingConfig::from_table(&t).is_err());
+    }
+
+    #[test]
     fn serving_defaults_match_coordinator_cfg() {
         let s = ServingConfig::default();
         let c = crate::coordinator::CoordinatorCfg::default();
+        assert_eq!((s.io, s.reactor_threads), (c.io, c.reactor_threads));
         assert_eq!(
             (s.serve_threads, s.queue_depth, s.batch_max, s.batch_linger_us, s.lanes, s.steal),
             (c.serve_threads, c.queue_depth, c.batch_max, c.batch_linger_us, c.lanes, c.steal),

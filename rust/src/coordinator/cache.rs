@@ -409,6 +409,32 @@ impl ResultCache {
         }
     }
 
+    /// Non-blocking [`lookup`](ResultCache::lookup), for reactor
+    /// threads (which must never park on a condvar): identical
+    /// outcomes, except that the case where `lookup` would block — a
+    /// concurrent leader's execution in flight for this key — returns
+    /// `None`. The caller then *bypasses* the cache for this one
+    /// request: it executes through the normal admission path without
+    /// a fill obligation, trading one redundant execution for never
+    /// stalling the reactor's other connections. No counter moves on
+    /// the bypass — it is neither a hit nor a leader registration.
+    pub fn try_lookup(&self, kind: &TraceKind, seed: u64) -> Option<Lookup<'_>> {
+        let key = (*kind, seed);
+        let s = self.shard_of(kind);
+        let mut g = self.lock(s);
+        if let Some(value) = g.lru.get(&key) {
+            self.shards[s].counters.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Lookup::Hit(value));
+        }
+        if g.inflight.contains_key(&key) {
+            return None;
+        }
+        let cell = Arc::new(FlightCell::new());
+        g.inflight.insert(key, Arc::clone(&cell));
+        self.shards[s].counters.misses.fetch_add(1, Ordering::Relaxed);
+        Some(Lookup::Miss(Flight { cache: self, shard: s, key, cell, settled: false }))
+    }
+
     /// Resolve a flight: deregister it, optionally insert the result
     /// (evicting past the shard bounds), refresh the occupancy
     /// counters, then wake the followers.
@@ -578,6 +604,25 @@ mod tests {
         assert!(t.entries <= 2, "byte budget must bound occupancy, got {}", t.entries);
         assert!(t.bytes <= 2 * entry_bytes());
         assert_eq!(t.evictions, 3);
+    }
+
+    #[test]
+    fn try_lookup_bypasses_inflight_leaders_without_blocking() {
+        let cache = ResultCache::new(1, 8, 1 << 20);
+        // Cold key: try_lookup wins leadership exactly like lookup.
+        let flight = match cache.try_lookup(&SORT(300), 7) {
+            Some(Lookup::Miss(f)) => f,
+            other => panic!("cold key must make a leader, got {other:?}"),
+        };
+        // While the leader is in flight, try_lookup declines to wait.
+        assert!(cache.try_lookup(&SORT(300), 7).is_none(), "inflight key bypasses");
+        assert_eq!(cache.totals().misses, 1, "a bypass is not a leader registration");
+        flight.fill(CachedResult { checksum: 9.25 });
+        match cache.try_lookup(&SORT(300), 7) {
+            Some(Lookup::Hit(v)) => assert_eq!(v.checksum.to_bits(), 9.25f64.to_bits()),
+            other => panic!("filled key must hit, got {other:?}"),
+        }
+        assert_eq!(cache.totals().hits, 1);
     }
 
     #[test]

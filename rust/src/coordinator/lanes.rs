@@ -39,6 +39,7 @@
 use super::queue::{BoundedQueue, PopTimeout};
 use super::routing::{self, Router};
 use super::{Job, JobResult};
+use crate::net::Outbox;
 use crate::workload::traces::TraceKind;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
@@ -66,7 +67,82 @@ pub struct Envelope {
     /// admitted it.
     pub epoch: u64,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<JobResult>,
+    pub reply: ReplySink,
+}
+
+/// A completed (or abandoned) job on its way back to the reactor that
+/// admitted it, keyed by request id so the reactor can find the owning
+/// connection.
+#[derive(Debug)]
+pub enum Completion {
+    /// The dispatcher executed the job (ok or failed) — the result is
+    /// formatted into the wire reply by the reactor.
+    Done { id: u64, result: JobResult },
+    /// The envelope was dropped without executing (dispatcher died,
+    /// reject-drain) — the reactor answers the internal error, exactly
+    /// like a threaded reader observing its reply channel disconnect.
+    Gone { id: u64 },
+}
+
+/// The reply rendezvous back from a dispatcher, abstract over the two
+/// IO modes: a blocked reader's mpsc channel (`--io threads`) or the
+/// admitting reactor's outbox (`--io reactor`). Consuming `send` keeps
+/// delivery exactly-once in both shapes.
+#[derive(Debug)]
+pub enum ReplySink {
+    Channel(mpsc::Sender<JobResult>),
+    Outbox(OutboxTicket),
+}
+
+impl ReplySink {
+    /// Deliver the result. A hung-up receiver (reader gone, reactor
+    /// shut) just drops it — same contract the bare channel had.
+    pub fn send(self, result: JobResult) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplySink::Outbox(mut ticket) => ticket.deliver(result),
+        }
+    }
+}
+
+/// An outbox reservation for one admitted request. Mirrors the mpsc
+/// sender's disconnect semantics: dropping the ticket undelivered
+/// pushes [`Completion::Gone`], so a reactor's pending request can
+/// never wait forever — the exact analogue of a blocked reader seeing
+/// `RecvError` when a dying dispatcher drops its envelope.
+pub struct OutboxTicket {
+    outbox: Arc<Outbox<Completion>>,
+    /// The request id ([`Job::id`]) the reactor indexed its pending
+    /// connection under.
+    id: u64,
+    sent: bool,
+}
+
+impl std::fmt::Debug for OutboxTicket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OutboxTicket").field("id", &self.id).finish_non_exhaustive()
+    }
+}
+
+impl OutboxTicket {
+    pub fn new(outbox: Arc<Outbox<Completion>>, id: u64) -> OutboxTicket {
+        OutboxTicket { outbox, id, sent: false }
+    }
+
+    fn deliver(&mut self, result: JobResult) {
+        self.sent = true;
+        self.outbox.push(Completion::Done { id: self.id, result });
+    }
+}
+
+impl Drop for OutboxTicket {
+    fn drop(&mut self) {
+        if !self.sent {
+            self.outbox.push(Completion::Gone { id: self.id });
+        }
+    }
 }
 
 /// A dispatched unit of work: a shape-pure envelope run plus whether it
@@ -317,7 +393,7 @@ mod tests {
             lane: 0,  // stamped by admit(); raw-push tests leave it unused
             epoch: 0, // likewise
             enqueued: Instant::now(),
-            reply: tx,
+            reply: ReplySink::Channel(tx),
         };
         (e, rx)
     }

@@ -153,6 +153,45 @@ pub struct CoordinatorCfg {
     /// STATS, and DRAIN output are byte-for-byte what they were before
     /// the fault harness existed.
     pub faults: String,
+    /// Serving layer: connection IO model (`--io threads|reactor`).
+    /// `Threads` (default) keeps the blocking reader pool; `Reactor`
+    /// serves every connection from a fixed epoll reactor pool
+    /// (threads ≈ cores, not ≈ connections) with byte-identical
+    /// replies. Linux only; other targets refuse it at startup.
+    pub io: IoMode,
+    /// Serving layer: reactor pool size under `--io reactor`
+    /// (`--reactor-threads`). 0 (default) = auto: the host's available
+    /// parallelism, capped at 8. Ignored under `--io threads`.
+    pub reactor_threads: usize,
+}
+
+/// Connection-layer IO model (`--io`): blocking reader threads or the
+/// event-driven epoll reactor pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoMode {
+    /// One blocking reader thread per active connection (the default).
+    Threads,
+    /// A fixed pool of epoll reactor threads multiplexing every
+    /// connection (`rust/src/net/` + `server::reactor`).
+    Reactor,
+}
+
+impl IoMode {
+    /// Parse the `--io` / `[serving] io` value.
+    pub fn parse(name: &str) -> Option<IoMode> {
+        match name {
+            "threads" => Some(IoMode::Threads),
+            "reactor" => Some(IoMode::Reactor),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::Threads => "threads",
+            IoMode::Reactor => "reactor",
+        }
+    }
 }
 
 impl Default for CoordinatorCfg {
@@ -178,7 +217,22 @@ impl Default for CoordinatorCfg {
             cache_bytes: 4 * 1024 * 1024,
             cost_model: false,
             faults: "off".to_string(),
+            io: IoMode::Threads,
+            reactor_threads: 0,
         }
+    }
+}
+
+impl CoordinatorCfg {
+    /// The reactor pool size `--io reactor` actually runs with: the
+    /// configured `reactor_threads`, or (at 0 = auto) the host's
+    /// available parallelism capped at 8 — threads ≈ cores, never ≈
+    /// connections.
+    pub fn effective_reactor_threads(&self) -> usize {
+        if self.reactor_threads > 0 {
+            return self.reactor_threads;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
     }
 }
 

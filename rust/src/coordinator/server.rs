@@ -72,22 +72,38 @@
 //! handoff buffer, overload parks in the OS accept backlog (the accept
 //! loop blocks on a bounded channel), so no in-process queue is ever
 //! unbounded.
+//!
+//! With `--io reactor` only the *edge* of this model changes shape: a
+//! fixed pool of epoll reactor threads (threads ≈ cores, never ≈
+//! connections; see [`reactor`]) multiplexes every connection with
+//! nonblocking reads, incremental line reassembly, and
+//! `EPOLLOUT`-driven write backpressure, admitting through the same
+//! governor into the same lanes. Dispatchers hand completed replies
+//! back through a per-reactor outbox + eventfd wake instead of a
+//! per-request channel. Replies are byte-identical either way; the
+//! dispatcher/lane/cache/admission core stays synchronous in both
+//! modes.
 
 use super::admission::{Governor, SloTable};
 use super::cache::{self, ResultCache};
 use super::costmodel::ServeCostModel;
 use super::faults::{FaultKind, FaultPlan};
-use super::lanes::{Envelope, LanePool, ShapeClass};
+use super::lanes::{Envelope, LanePool, ReplySink, ShapeClass};
 use super::routing::{LaneLoad, RebalanceMode, Rebalancer, Router};
-use super::{Coordinator, CoordinatorCfg, Job, JobResult, RoutedEngine, Telemetry};
+use super::{Coordinator, CoordinatorCfg, IoMode, Job, JobResult, RoutedEngine, Telemetry};
+use crate::net::EventFd;
 use crate::overhead::OverheadParams;
 use crate::workload::traces::TraceKind;
 use anyhow::Result;
+use std::cell::Cell;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+mod reactor;
 
 /// State shared by readers and the lane dispatchers.
 struct Shared {
@@ -130,7 +146,22 @@ struct Shared {
     admitted: AtomicU64,
     /// Jobs finished by a dispatcher (after telemetry, before the reply).
     finished: AtomicU64,
-    /// Listener address, used to wake the accept loop at shutdown.
+    /// Threaded-mode connection registry: one clone per live reader
+    /// connection, keyed by an id private to this map. The DRAIN path
+    /// read-shuts these to wake blocked readers with EOF — no poll tick
+    /// anywhere. Empty in reactor mode.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    /// Key source for `conns`.
+    next_conn: AtomicU64,
+    /// Wakes the Linux epoll accept loop at drain. `None` where
+    /// eventfds don't exist — the loopback self-connect fallback then
+    /// wakes the blocking accept loop instead.
+    accept_wake: Option<EventFd>,
+    /// The reactor pool (`--io reactor`); `None` in threaded mode, and
+    /// every reactor-specific hook below then renders/does nothing.
+    reactors: Option<Arc<reactor::ReactorSet>>,
+    /// Listener address, used to wake the accept loop at shutdown on
+    /// targets without the accept eventfd.
     local_addr: SocketAddr,
 }
 
@@ -176,6 +207,16 @@ impl Server {
         let cost = cfg
             .cost_model
             .then(|| Arc::new(ServeCostModel::new(OverheadParams::paper_2022(), cfg.threads.max(1))));
+        // `--io reactor` needs the kernel substrate (epoll + eventfd) up
+        // front: refuse at startup with the reason, rather than wedging
+        // at runtime on a target without it.
+        let reactors = match cfg.io {
+            IoMode::Threads => None,
+            IoMode::Reactor => Some(Arc::new(
+                reactor::ReactorSet::new(cfg.effective_reactor_threads())
+                    .map_err(|e| anyhow::anyhow!("--io reactor unavailable: {e}"))?,
+            )),
+        };
         let shared = Arc::new(Shared {
             lanes: LanePool::with_router(Arc::clone(&router), cfg.queue_depth, cfg.steal),
             router,
@@ -199,6 +240,10 @@ impl Server {
             shutdown: AtomicBool::new(false),
             admitted: AtomicU64::new(0),
             finished: AtomicU64::new(0),
+            conns: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(1),
+            accept_wake: EventFd::new().ok(),
+            reactors,
             local_addr: self.local_addr(),
         });
 
@@ -224,57 +269,82 @@ impl Server {
             std::thread::spawn(move || rebalance_loop(&shared, window))
         });
 
-        // Reader pool: serve_threads workers, one connection each at a time.
-        // The handoff buffer is bounded (2× the pool) so overload parks in
-        // the OS accept backlog instead of an unbounded in-process channel —
-        // the accept loop blocks once readers and buffer are saturated.
-        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.serve_threads.max(1) * 2);
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let readers: Vec<_> = (0..cfg.serve_threads.max(1))
-            .map(|_| {
-                let shared = Arc::clone(&shared);
-                let conn_rx = Arc::clone(&conn_rx);
-                std::thread::spawn(move || loop {
-                    let next = conn_rx.lock().unwrap().recv();
-                    match next {
-                        // Per-connection IO errors end that connection only.
-                        Ok(stream) => {
-                            let _ = handle_conn(stream, &shared);
+        // Reader pool (`--io threads` only): serve_threads workers, one
+        // connection each at a time. The handoff buffer is bounded (2×
+        // the pool) so overload parks in the OS accept backlog instead
+        // of an unbounded in-process channel — the accept loop blocks
+        // once readers and buffer are saturated.
+        let mut conn_tx = None;
+        let mut readers = Vec::new();
+        if shared.reactors.is_none() {
+            let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.serve_threads.max(1) * 2);
+            let conn_rx = Arc::new(Mutex::new(rx));
+            conn_tx = Some(tx);
+            readers = (0..cfg.serve_threads.max(1))
+                .map(|_| {
+                    let shared = Arc::clone(&shared);
+                    let conn_rx = Arc::clone(&conn_rx);
+                    std::thread::spawn(move || loop {
+                        let next = conn_rx.lock().unwrap().recv();
+                        match next {
+                            // Per-connection IO errors end that connection only.
+                            Ok(stream) => {
+                                let _ = handle_conn(stream, &shared);
+                            }
+                            Err(_) => break, // accept loop done
                         }
-                        Err(_) => break, // accept loop done
-                    }
+                    })
                 })
-            })
-            .collect();
-
-        // Accept loop. An accept error must still run the drain below —
-        // otherwise the dispatchers (and their thread pools) leak, blocked
-        // forever — so capture the outcome instead of returning early.
-        let mut accepted = 0usize;
-        let mut accept_result: Result<()> = Ok(());
-        for stream in self.listener.incoming() {
-            // A completed DRAIN wakes this loop with a loopback
-            // connection; drop it and exit (rolling-restart path).
-            if shared.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            match stream {
-                Ok(stream) => {
-                    conn_tx.send(stream).expect("reader pool outlives the accept loop");
-                    accepted += 1;
-                    if max_conns.is_some_and(|m| accepted >= m) {
-                        break;
-                    }
-                }
-                Err(e) => {
-                    accept_result = Err(e.into());
-                    break;
-                }
-            }
+                .collect();
         }
+
+        // Reactor pool (`--io reactor`): a fixed set of event-loop
+        // threads adopting connections round-robin from the accept loop.
+        let reactor_threads: Vec<_> = match &shared.reactors {
+            Some(set) => (0..set.thread_count())
+                .map(|i| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::spawn(move || reactor::reactor_loop(i, &shared))
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+
+        // Accept loop. An accept error must still run the wind-down
+        // below — otherwise the dispatchers (and their thread pools)
+        // leak, blocked forever — so capture the outcome instead of
+        // returning early. On Linux the loop multiplexes the listener
+        // with the drain eventfd, so DRAIN wakes it without the
+        // loopback self-connect the blocking fallback needs.
+        let mut accepted = 0usize;
+        let dispatch = |stream: TcpStream| match (&shared.reactors, &conn_tx) {
+            (Some(set), _) => set.assign(stream),
+            (None, Some(tx)) => tx.send(stream).expect("reader pool outlives the accept loop"),
+            (None, None) => unreachable!("threads mode always has a reader pool"),
+        };
+        #[cfg(target_os = "linux")]
+        let accept_result: Result<()> = if shared.accept_wake.is_some() {
+            accept_epoll(&self.listener, &shared, &dispatch, max_conns, &mut accepted)
+        } else {
+            accept_blocking(&self.listener, &shared, &dispatch, max_conns, &mut accepted)
+        };
+        #[cfg(not(target_os = "linux"))]
+        let accept_result: Result<()> =
+            accept_blocking(&self.listener, &shared, &dispatch, max_conns, &mut accepted);
+        drop(dispatch);
         drop(conn_tx);
         for r in readers {
             let _ = r.join();
+        }
+        // Reactors wind down strictly after the accept loop (no new
+        // adoptions) and strictly before the dispatchers close: a
+        // reactor flushing its last in-flight replies still needs live
+        // dispatchers to complete them.
+        if let Some(set) = &shared.reactors {
+            set.finish_accepting();
+        }
+        for h in reactor_threads {
+            let _ = h.join();
         }
         shared.lanes.close_all();
         for d in dispatchers {
@@ -285,6 +355,88 @@ impl Server {
             let _ = h.join();
         }
         accept_result
+    }
+}
+
+/// The portable accept path: blocking `incoming()`, woken at drain by
+/// the DRAIN arm's loopback self-connect fallback.
+fn accept_blocking(
+    listener: &TcpListener,
+    shared: &Shared,
+    dispatch: &dyn Fn(TcpStream),
+    max_conns: Option<usize>,
+    accepted: &mut usize,
+) -> Result<()> {
+    for stream in listener.incoming() {
+        // A completed DRAIN wakes this loop with a connection it can
+        // drop on arrival; exit (rolling-restart path).
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(stream) => {
+                dispatch(stream);
+                *accepted += 1;
+                if max_conns.is_some_and(|m| *accepted >= m) {
+                    break;
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// The Linux accept path: a nonblocking listener multiplexed with the
+/// drain eventfd, so a completed DRAIN wakes the loop directly —
+/// wildcard binds included — with no self-connect.
+#[cfg(target_os = "linux")]
+fn accept_epoll(
+    listener: &TcpListener,
+    shared: &Shared,
+    dispatch: &dyn Fn(TcpStream),
+    max_conns: Option<usize>,
+    accepted: &mut usize,
+) -> Result<()> {
+    use crate::net::{Interest, Poller};
+    use std::os::unix::io::AsRawFd;
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKE: u64 = 1;
+    let wake = shared.accept_wake.as_ref().expect("epoll accept requires the wake eventfd");
+    listener.set_nonblocking(true)?;
+    let poller = Poller::new()?;
+    poller.add(listener.as_raw_fd(), TOKEN_LISTENER, Interest::readable())?;
+    poller.add(wake.raw(), TOKEN_WAKE, Interest::readable())?;
+    let mut events = Vec::new();
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        poller.poll_io(&mut events, None)?;
+        for ev in &events {
+            if ev.token == TOKEN_WAKE {
+                wake.drain();
+            }
+        }
+        // Accept everything ready (level-triggered: anything left is
+        // re-reported on the next poll_io).
+        loop {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    dispatch(stream);
+                    *accepted += 1;
+                    if max_conns.is_some_and(|m| *accepted >= m) {
+                        return Ok(());
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
     }
 }
 
@@ -476,26 +628,62 @@ fn execute_one(coord: &Coordinator, shared: &Shared, env: Envelope) {
         t.record_lane_served(admit_lane, admit_epoch, queue_us);
     }
     shared.finished.fetch_add(1, Ordering::SeqCst);
-    // A reader that hung up mid-flight just drops the result.
-    let _ = env.reply.send(r);
+    // A receiver that hung up mid-flight (reader gone, reactor shut)
+    // just drops the result.
+    env.reply.send(r);
 }
 
-/// Idle-connection poll tick: a reader blocks in `read_line` at most
-/// this long, so a completed DRAIN reclaims connections whose clients
-/// never hang up (bounded-grace rolling restart) instead of wedging
-/// `serve()` on the reader join forever.
-const READ_TICK: Duration = Duration::from_millis(500);
+thread_local! {
+    /// The [`Shared::conns`] registry key of the connection this reader
+    /// thread is currently serving, so the DRAIN sweep can skip the very
+    /// connection that issued the DRAIN — its pipelined post-drain lines
+    /// must still be answered (`ERR DRAINING`, `BYE`), per the protocol.
+    static CURRENT_CONN: Cell<Option<u64>> = const { Cell::new(None) };
+}
+
+/// Registry guard: deregisters the connection (and clears the
+/// thread-local) however `handle_conn` exits, so the DRAIN sweep never
+/// touches a dead entry.
+struct ConnGuard<'a> {
+    shared: &'a Shared,
+    id: u64,
+}
+
+impl<'a> ConnGuard<'a> {
+    fn register(shared: &'a Shared, id: u64, stream: TcpStream) -> ConnGuard<'a> {
+        shared.conns.lock().unwrap_or_else(|p| p.into_inner()).insert(id, stream);
+        CURRENT_CONN.with(|c| c.set(Some(id)));
+        ConnGuard { shared, id }
+    }
+}
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        CURRENT_CONN.with(|c| c.set(None));
+        self.shared.conns.lock().unwrap_or_else(|p| p.into_inner()).remove(&self.id);
+    }
+}
 
 fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
-    stream.set_read_timeout(Some(READ_TICK))?;
+    let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+    let _guard = ConnGuard::register(shared, id, stream.try_clone()?);
+    // Steady-state readers block in `read_line` with *no* timeout — a
+    // completed DRAIN wakes them by read-shutting the registered clone
+    // (EOF), not by a poll tick. Only a connection adopted after the
+    // shutdown flag is already up (it raced the accept loop's exit, so
+    // the sweep may have run before it registered) polls the flag on a
+    // short tick instead of blocking forever.
+    if shared.shutdown.load(Ordering::SeqCst) {
+        stream.set_read_timeout(Some(Duration::from_millis(1)))?;
+    }
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = BufWriter::new(stream.try_clone()?);
-    // `line` accumulates across timeout ticks: a partial line that
-    // arrived before a tick must not be dropped on retry.
+    // `line` accumulates across interrupted reads: a partial line that
+    // arrived before a wake must not be dropped on retry.
     let mut line = String::new();
     loop {
         match reader.read_line(&mut line) {
-            Ok(0) => break, // client hung up
+            Ok(0) => break, // client hung up (or the DRAIN sweep's EOF)
             Ok(_) => {
                 let response = respond(shared, line.trim());
                 line.clear();
@@ -541,8 +729,9 @@ fn handle_conn(stream: TcpStream, shared: &Shared) -> Result<()> {
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // Idle tick: keep waiting, unless a completed DRAIN is
-                // reclaiming idle connections for the server exit.
+                // Only the post-shutdown straggler path above sets a
+                // read timeout, so a tick here means the server is
+                // exiting and this connection should go with it.
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
@@ -583,6 +772,7 @@ fn respond(shared: &Shared, line: &str) -> Response {
             block.push_str(&cost_model_block(shared));
             block.push_str(&routing_block(shared));
             block.push_str(&faults_block(shared));
+            block.push_str(&reactor_block(shared));
             Response::Block(block)
         }
         Some("DRAIN") => {
@@ -606,159 +796,285 @@ fn respond(shared: &Shared, line: &str) -> Response {
             block.push_str(&cost_model_block(shared));
             block.push_str(&routing_block(shared));
             block.push_str(&faults_block(shared));
+            block.push_str(&reactor_block(shared));
             block.push_str(&format!(
                 "drained: admitted={} finished={}\n",
                 shared.admitted.load(Ordering::SeqCst),
                 shared.finished.load(Ordering::SeqCst),
             ));
-            // Rolling-restart exit: stop the accept loop (wake it with a
-            // connection it drops on arrival). A wildcard bind address is
-            // not connectable on every platform, so wake via loopback on
-            // the bound port in that case.
+            // Rolling-restart exit: raise the flag first, then wake
+            // everything blocked on the serving edge so each loop
+            // observes it — deterministically, with no poll tick
+            // anywhere.
             shared.shutdown.store(true, Ordering::SeqCst);
-            let mut wake = shared.local_addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(if wake.is_ipv4() {
-                    std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
-                } else {
-                    std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
-                });
+            // Threaded readers blocked in `read_line` on idle
+            // connections: shut their read halves. EOF wakes them
+            // immediately, while bytes already received (pipelined
+            // requests) still drain first. The draining connection
+            // itself is skipped: its post-DRAIN lines must still be
+            // answered.
+            {
+                let skip = CURRENT_CONN.with(|c| c.get());
+                let conns = shared.conns.lock().unwrap_or_else(|p| p.into_inner());
+                for (id, conn) in conns.iter() {
+                    if Some(*id) == skip {
+                        continue;
+                    }
+                    let _ = conn.shutdown(Shutdown::Read);
+                }
             }
-            let _ = TcpStream::connect(wake);
+            // The accept loop: its eventfd on Linux; where eventfds
+            // don't exist, the legacy loopback self-connect (a wildcard
+            // bind address is not connectable on every platform, so
+            // rewrite it to loopback on the bound port).
+            match &shared.accept_wake {
+                Some(wake) => wake.signal(),
+                None => {
+                    let mut wake = shared.local_addr;
+                    if wake.ip().is_unspecified() {
+                        wake.set_ip(if wake.is_ipv4() {
+                            std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                        } else {
+                            std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                        });
+                    }
+                    let _ = TcpStream::connect(wake);
+                }
+            }
+            // Every reactor: wind down — close idle connections, flush
+            // in-flight replies, then exit (bounded, event-driven).
+            if let Some(set) = &shared.reactors {
+                set.wake_all();
+            }
             Response::Block(block)
         }
         Some(cmd @ ("MATMUL" | "SORT")) => {
-            let n: usize = match toks.next().and_then(|t| t.parse().ok()) {
-                Some(n) if n > 0 && n <= 4096 => n,
-                _ => return Response::Line(format!("ERR {cmd} needs n in 1..=4096")),
-            };
-            let seed: u64 = toks.next().and_then(|t| t.parse().ok()).unwrap_or(42);
-            if shared.draining.load(Ordering::SeqCst) {
-                return Response::Line(format!("ERR DRAINING {cmd} rejected: server is draining"));
-            }
-            let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
-            // Warm result cache, consulted after the drain check (DRAIN
-            // is terminal — a draining server must not keep answering,
-            // even from memory) but before *any* admission state: a hit
-            // is served right here on the reader thread. It consumes no
-            // admission budget, touches no lane queue, and contributes
-            // nothing to the queue-wait digests — so hits keep flowing
-            // even while the lane itself is shedding. A miss makes this
-            // reader the single-flight leader: concurrent identical
-            // requests block on `flight` instead of all executing, and
-            // the leader fills the cache exactly once below (reader-side
-            // fill, so exactly-once holds even when work stealing runs
-            // the job on a thief lane). Every rejection or failure path
-            // from here on drops `flight`, which aborts it — followers
-            // wake and retry rather than hang.
-            let mut flight = None;
-            if let Some(cache) = &shared.cache {
-                let sw = Instant::now();
-                match cache.lookup(&kind, seed) {
-                    cache::Lookup::Hit(hit) => {
-                        let lookup_us = sw.elapsed().as_nanos() as f64 / 1e3;
-                        telemetry_lock(shared).record_cache_hit(lookup_us);
-                        return Response::Line(format!(
-                            "OK {cmd} n={n} engine={} us={lookup_us:.1} queue_us=0.0 checksum={:.4}",
-                            RoutedEngine::Cache.name(),
-                            hit.checksum
-                        ));
-                    }
-                    cache::Lookup::Miss(f) => flight = Some(f),
-                }
-            }
-            // abort-flight: give up the just-won single-flight
-            // leadership before execution. Followers coalesced onto this
-            // flight wake and retry as their own leaders; the request
-            // itself still executes and replies normally — only the
-            // cache fill is lost. One opportunity per won leadership.
-            if let Some(plan) = &shared.faults {
-                if flight.is_some() && plan.should_fire(FaultKind::AbortFlight) {
-                    telemetry_lock(shared).record_fault();
-                    drop(flight.take());
-                }
-            }
-            // Route under the current epoch (and register demand with
-            // the router's per-class traffic counters — sheds included,
-            // so a 100%-shed hot class still looks hot to the
-            // rebalancer). Soft admission next: the governor sheds when
-            // this lane's rolling p90 queue wait exceeds the *class's*
-            // SLO (adaptive mode only; in fixed mode admit() returns
-            // before taking any lock, and the lazy `queued` closure
-            // keeps the queue mutex untouched outside the rare
-            // empty-window path). Distinct from ERR BUSY — the queue
-            // may well have room; it is the *wait*, not the depth, that
-            // is out of budget.
-            let class = ShapeClass::of(&kind);
-            shared.router.note_request(&kind);
-            let (lane, epoch) = shared.router.route(&kind);
-            if let Err(over) =
-                shared.governor.admit(lane, class, || shared.lanes.queue(lane).len())
-            {
-                telemetry_lock(shared).record_shed(lane, epoch);
-                return Response::Line(format!(
-                    "ERR OVERLOADED p90={} slo={:.0}",
-                    over.p90_evidence(),
-                    over.slo_us
-                ));
-            }
-            let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+            let cmd: &'static str = if cmd == "MATMUL" { "MATMUL" } else { "SORT" };
+            // Threaded path: admit through the shared pipeline, then
+            // block this reader on the reply channel — per-connection
+            // response order is preserved while cross-connection
+            // execution batches.
             let (reply_tx, reply_rx) = mpsc::channel();
-            let envelope = Envelope {
-                job: Job { id, kind, seed, arrival_us: 0 },
-                lane,  // provisional; admit() re-stamps authoritatively
-                epoch, // likewise
-                enqueued: Instant::now(),
-                reply: reply_tx,
-            };
-            // Count before the push (rolled back on rejection): the DRAIN
-            // wait must never see a queued job missing from `admitted`.
-            shared.admitted.fetch_add(1, Ordering::SeqCst);
-            if shared.lanes.admit(envelope).is_err() {
-                shared.admitted.fetch_sub(1, Ordering::SeqCst);
-                if shared.draining.load(Ordering::SeqCst) {
-                    return Response::Line(format!(
-                        "ERR DRAINING {cmd} rejected: server is draining"
-                    ));
+            match admit_job(shared, cmd, &mut toks, true, move |_id| {
+                ReplySink::Channel(reply_tx)
+            }) {
+                Admit::Now(line) => Response::Line(line),
+                Admit::Queued(pending) => {
+                    Response::Line(finish_reply(pending, reply_rx.recv().ok()))
                 }
-                // Closed without draining ⇒ that lane's dispatcher is
-                // gone: an internal condition, not backpressure — clients
-                // retrying on BUSY must not spin against a dead lane.
-                if shared.lanes.queue(lane).is_closed() {
-                    return Response::Line("ERR internal dispatcher unavailable".into());
-                }
-                telemetry_lock(shared).record_rejected();
-                return Response::Line(format!(
-                    "ERR BUSY lane {lane} full (depth {})",
-                    shared.lanes.queue(lane).depth()
-                ));
-            }
-            match reply_rx.recv() {
-                Ok(r) if r.ok => {
-                    // Leader fill: publish the verbatim checksum so a
-                    // later hit renders bit-identically, and wake any
-                    // single-flight followers with it. Failed or lost
-                    // executions fall through to the arms below, where
-                    // dropping `flight` aborts instead of caching.
-                    if let Some(f) = flight.take() {
-                        f.fill(cache::CachedResult { checksum: r.checksum });
-                    }
-                    Response::Line(format!(
-                        "OK {cmd} n={n} engine={} us={:.1} queue_us={:.1} checksum={:.4}",
-                        r.engine.name(),
-                        r.service_us,
-                        r.queue_us,
-                        r.checksum
-                    ))
-                }
-                Ok(r) => {
-                    Response::Line(format!("ERR {cmd} n={n} failed on engine {}", r.engine.name()))
-                }
-                Err(_) => Response::Line("ERR internal dispatcher unavailable".into()),
             }
         }
         Some(other) => Response::Line(format!("ERR unknown command {other:?}")),
         None => Response::Line("ERR empty request".into()),
+    }
+}
+
+/// Admission outcome for a job line, shared by both IO modes.
+enum Admit<'a> {
+    /// Answered immediately: cache hit, validation error, shed, or
+    /// reject — the complete wire line.
+    Now(String),
+    /// Queued: the result arrives through the envelope's reply sink;
+    /// render the wire line with [`finish_reply`] when it lands.
+    Queued(PendingReply<'a>),
+}
+
+/// A queued request awaiting its dispatcher reply: everything needed to
+/// render the wire line once the [`JobResult`] lands, including the
+/// single-flight fill obligation (dropping it aborts the flight, so a
+/// lost reply can never strand cache followers).
+struct PendingReply<'a> {
+    /// The [`Job::id`] — reactors key their pending-connection index on
+    /// it to route the completion back.
+    id: u64,
+    cmd: &'static str,
+    n: usize,
+    flight: Option<cache::Flight<'a>>,
+}
+
+/// Everything between a parsed `MATMUL`/`SORT` command token and the
+/// lane queue: argument validation, the drain check, the warm-cache
+/// consult, fault hooks, routing, soft admission, and the bounded push.
+/// One pipeline for both IO modes, so replies stay byte-identical;
+/// the modes differ only in `block_on_flight` — may this caller park on
+/// a concurrent single-flight leader's condvar? A reactor thread must
+/// not, so it passes `false` and a contended key *bypasses* the cache
+/// ([`ResultCache::try_lookup`]): one redundant execution, never a
+/// stalled event loop. `make_sink` builds the reply sink and runs only
+/// if the request reaches envelope construction — validation, hit, and
+/// shed paths never construct one.
+fn admit_job<'a>(
+    shared: &'a Shared,
+    cmd: &'static str,
+    toks: &mut std::str::SplitWhitespace<'_>,
+    block_on_flight: bool,
+    make_sink: impl FnOnce(u64) -> ReplySink,
+) -> Admit<'a> {
+    let n: usize = match toks.next().and_then(|t| t.parse().ok()) {
+        Some(n) if n > 0 && n <= 4096 => n,
+        _ => return Admit::Now(format!("ERR {cmd} needs n in 1..=4096")),
+    };
+    let seed: u64 = toks.next().and_then(|t| t.parse().ok()).unwrap_or(42);
+    if shared.draining.load(Ordering::SeqCst) {
+        return Admit::Now(format!("ERR DRAINING {cmd} rejected: server is draining"));
+    }
+    let kind = if cmd == "MATMUL" { TraceKind::Matmul { n } } else { TraceKind::Sort { n } };
+    // Warm result cache, consulted after the drain check (DRAIN is
+    // terminal — a draining server must not keep answering, even from
+    // memory) but before *any* admission state: a hit is served right
+    // here on the calling thread. It consumes no admission budget,
+    // touches no lane queue, and contributes nothing to the queue-wait
+    // digests — so hits keep flowing even while the lane itself is
+    // shedding. A miss makes this caller the single-flight leader:
+    // concurrent identical requests coalesce onto `flight`, and the
+    // leader fills the cache exactly once in [`finish_reply`]
+    // (admission-side fill, so exactly-once holds even when work
+    // stealing runs the job on a thief lane). Every rejection or
+    // failure path from here on drops `flight`, which aborts it —
+    // followers wake and retry rather than hang.
+    let mut flight = None;
+    if let Some(cache) = &shared.cache {
+        let sw = Instant::now();
+        let looked = if block_on_flight {
+            Some(cache.lookup(&kind, seed))
+        } else {
+            cache.try_lookup(&kind, seed)
+        };
+        match looked {
+            Some(cache::Lookup::Hit(hit)) => {
+                let lookup_us = sw.elapsed().as_nanos() as f64 / 1e3;
+                telemetry_lock(shared).record_cache_hit(lookup_us);
+                return Admit::Now(format!(
+                    "OK {cmd} n={n} engine={} us={lookup_us:.1} queue_us=0.0 checksum={:.4}",
+                    RoutedEngine::Cache.name(),
+                    hit.checksum
+                ));
+            }
+            Some(cache::Lookup::Miss(f)) => flight = Some(f),
+            // A concurrent leader is in flight and this caller may not
+            // wait: bypass the cache for this one request.
+            None => {}
+        }
+    }
+    // abort-flight: give up the just-won single-flight leadership
+    // before execution. Followers coalesced onto this flight wake and
+    // retry as their own leaders; the request itself still executes and
+    // replies normally — only the cache fill is lost. One opportunity
+    // per won leadership.
+    if let Some(plan) = &shared.faults {
+        if flight.is_some() && plan.should_fire(FaultKind::AbortFlight) {
+            telemetry_lock(shared).record_fault();
+            drop(flight.take());
+        }
+    }
+    // Route under the current epoch (and register demand with the
+    // router's per-class traffic counters — sheds included, so a
+    // 100%-shed hot class still looks hot to the rebalancer). Soft
+    // admission next: the governor sheds when this lane's rolling p90
+    // queue wait exceeds the *class's* SLO (adaptive mode only; in
+    // fixed mode admit() returns before taking any lock, and the lazy
+    // `queued` closure keeps the queue mutex untouched outside the rare
+    // empty-window path). Distinct from ERR BUSY — the queue may well
+    // have room; it is the *wait*, not the depth, that is out of
+    // budget.
+    let class = ShapeClass::of(&kind);
+    shared.router.note_request(&kind);
+    let (lane, epoch) = shared.router.route(&kind);
+    if let Err(over) = shared.governor.admit(lane, class, || shared.lanes.queue(lane).len()) {
+        telemetry_lock(shared).record_shed(lane, epoch);
+        return Admit::Now(format!(
+            "ERR OVERLOADED p90={} slo={:.0}",
+            over.p90_evidence(),
+            over.slo_us
+        ));
+    }
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let envelope = Envelope {
+        job: Job { id, kind, seed, arrival_us: 0 },
+        lane,  // provisional; admit() re-stamps authoritatively
+        epoch, // likewise
+        enqueued: Instant::now(),
+        reply: make_sink(id),
+    };
+    // Count before the push (rolled back on rejection): the DRAIN wait
+    // must never see a queued job missing from `admitted`.
+    shared.admitted.fetch_add(1, Ordering::SeqCst);
+    if shared.lanes.admit(envelope).is_err() {
+        shared.admitted.fetch_sub(1, Ordering::SeqCst);
+        if shared.draining.load(Ordering::SeqCst) {
+            return Admit::Now(format!("ERR DRAINING {cmd} rejected: server is draining"));
+        }
+        // Closed without draining ⇒ that lane's dispatcher is gone: an
+        // internal condition, not backpressure — clients retrying on
+        // BUSY must not spin against a dead lane.
+        if shared.lanes.queue(lane).is_closed() {
+            return Admit::Now("ERR internal dispatcher unavailable".into());
+        }
+        telemetry_lock(shared).record_rejected();
+        return Admit::Now(format!(
+            "ERR BUSY lane {lane} full (depth {})",
+            shared.lanes.queue(lane).depth()
+        ));
+    }
+    Admit::Queued(PendingReply { id, cmd, n, flight })
+}
+
+/// Render the wire reply for a queued request once its dispatcher
+/// outcome is known. `None` means the envelope was dropped without a
+/// result (dispatcher died, reject-drain) — the internal error, exactly
+/// what a threaded reader's disconnected reply channel means. Only an
+/// `ok` result fills the single-flight obligation; failed or lost
+/// executions drop the flight, aborting it (followers retry).
+fn finish_reply(mut pending: PendingReply<'_>, result: Option<JobResult>) -> String {
+    match result {
+        Some(r) if r.ok => {
+            // Leader fill: publish the verbatim checksum so a later hit
+            // renders bit-identically, and wake any single-flight
+            // followers with it.
+            if let Some(f) = pending.flight.take() {
+                f.fill(cache::CachedResult { checksum: r.checksum });
+            }
+            format!(
+                "OK {} n={} engine={} us={:.1} queue_us={:.1} checksum={:.4}",
+                pending.cmd,
+                pending.n,
+                r.engine.name(),
+                r.service_us,
+                r.queue_us,
+                r.checksum
+            )
+        }
+        Some(r) => {
+            format!("ERR {} n={} failed on engine {}", pending.cmd, pending.n, r.engine.name())
+        }
+        None => "ERR internal dispatcher unavailable".into(),
+    }
+}
+
+/// One reactor-parsed request line. Job lines go through the shared
+/// admission pipeline with the non-blocking cache consult and a
+/// reactor-outbox reply sink; everything else answers inline via
+/// [`respond`] — byte-identical to the threaded path by construction.
+enum Step<'a> {
+    Respond(Response),
+    Pending(PendingReply<'a>),
+}
+
+fn reactor_step<'a>(
+    shared: &'a Shared,
+    line: &str,
+    make_sink: impl FnOnce(u64) -> ReplySink,
+) -> Step<'a> {
+    let mut toks = line.split_whitespace();
+    match toks.next().map(|s| s.to_ascii_uppercase()).as_deref() {
+        Some(cmd @ ("MATMUL" | "SORT")) => {
+            let cmd: &'static str = if cmd == "MATMUL" { "MATMUL" } else { "SORT" };
+            match admit_job(shared, cmd, &mut toks, false, make_sink) {
+                Admit::Now(s) => Step::Respond(Response::Line(s)),
+                Admit::Queued(p) => Step::Pending(p),
+            }
+        }
+        _ => Step::Respond(respond(shared, line)),
     }
 }
 
@@ -798,6 +1114,14 @@ fn routing_block(shared: &Shared) -> String {
 /// blocks byte-identical to a server without the fault harness.
 fn faults_block(shared: &Shared) -> String {
     shared.faults.as_ref().map_or_else(String::new, FaultPlan::render)
+}
+
+/// The reactor table appended to STATS/DRAIN blocks: per-reactor
+/// connection, adoption, wakeup, and delivered-reply counts, plus the
+/// `reactor: threads=… conns=…` trailer. Empty under `--io threads`,
+/// keeping those blocks byte-identical to a pre-reactor server.
+fn reactor_block(shared: &Shared) -> String {
+    shared.reactors.as_ref().map_or_else(String::new, |set| set.render())
 }
 
 /// The occupancy line appended to STATS/DRAIN blocks.

@@ -1,0 +1,541 @@
+//! Event-driven connection layer (`--io reactor`): a fixed pool of
+//! epoll event-loop threads replaces the thread-per-connection reader
+//! pool at the serving edge.
+//!
+//! Each reactor owns a [`Poller`] multiplexing (a) an inbox eventfd for
+//! connections assigned round-robin by the accept loop, (b) an outbox
+//! eventfd for [`Completion`]s pushed by lane dispatchers, and (c) every
+//! adopted connection, nonblocking, with a per-connection state machine
+//! ([`Conn`]): incremental line reassembly across partial reads
+//! ([`LineBuf`]), pending-write buffering with `EPOLLOUT`-driven
+//! backpressure ([`WriteBuf`]), and at most one admitted job in flight
+//! per connection (mirroring the threaded invariant that bounds queue
+//! occupancy by connection count).
+//!
+//! The dispatcher/lane/cache/admission core stays synchronous and
+//! untouched: reactors call the same [`admit_job`](super::admit_job)
+//! pipeline (via [`reactor_step`](super::reactor_step)) the threaded
+//! readers use, so replies are byte-identical in both modes. The only
+//! divergences are structural: a reactor never parks on another
+//! leader's single-flight condvar (`try_lookup` bypasses the cache
+//! instead), and a reply for a queued job returns through the owning
+//! reactor's [`Outbox`] + eventfd wake instead of a per-request mpsc
+//! channel.
+//!
+//! DRAIN wind-down is event-driven, with no poll tick: the DRAIN arm
+//! calls [`ReactorSet::wake_all`] after raising the shutdown flag, and
+//! each reactor then treats every connection as at-EOF — buffered lines
+//! are answered (`ERR DRAINING` for jobs), in-flight replies are
+//! flushed as their completions land, idle connections close — bounded
+//! by [`SHUTDOWN_GRACE`] for peers that stop reading.
+
+use super::{finish_reply, reactor_step, telemetry_lock, Response, Shared, Step};
+use crate::coordinator::faults::FaultKind;
+use crate::coordinator::lanes::{Completion, OutboxTicket, ReplySink};
+use crate::net::{Interest, LineBuf, Outbox, Poller, WriteBuf};
+use crate::report::AsciiTable;
+use std::collections::HashMap;
+use std::io::{self, Read};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Wind-down poll period: while the shutdown flag is up a reactor polls
+/// on this tick instead of blocking forever, so straggling completions
+/// and the grace deadline are both observed promptly.
+const SHUTDOWN_TICK: Duration = Duration::from_millis(25);
+
+/// Hard bound on post-shutdown lingering: a connection whose peer stops
+/// reading (unflushable reply) or whose completion never lands is
+/// force-closed this long after the shutdown flag rises, keeping
+/// DRAIN's bounded-exit guarantee unconditional.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(2);
+
+/// One reactor's shared half: what the accept loop, the dispatchers,
+/// and STATS touch from outside the event-loop thread.
+struct ReactorShared {
+    /// Accept-loop → reactor connection handoff.
+    inbox: Outbox<TcpStream>,
+    /// Dispatcher → reactor completion handoff. `Arc` because every
+    /// admitted envelope's [`OutboxTicket`] holds a clone.
+    outbox: Arc<Outbox<Completion>>,
+    stats: ReactorStats,
+}
+
+/// Monitoring counters, all `Relaxed`: single-writer gauges/counters
+/// read racily by STATS, never load-bearing.
+struct ReactorStats {
+    /// Currently adopted connections (gauge).
+    conns: AtomicU64,
+    /// Connections ever adopted.
+    accepted: AtomicU64,
+    /// Dispatcher completions delivered to a connection.
+    replies: AtomicU64,
+}
+
+/// The reactor pool handle held by [`Shared`]: assignment, wakeups, and
+/// the STATS rendering for every reactor thread.
+pub(super) struct ReactorSet {
+    reactors: Vec<ReactorShared>,
+    /// Round-robin assignment cursor.
+    next: AtomicUsize,
+    /// Raised when the accept loop has exited: no further assignments
+    /// will arrive, so a reactor with no connections may exit.
+    accepting_done: AtomicBool,
+}
+
+impl std::fmt::Debug for ReactorSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReactorSet").field("threads", &self.reactors.len()).finish_non_exhaustive()
+    }
+}
+
+impl ReactorSet {
+    /// Fails exactly where the kernel substrate (epoll + eventfd) is
+    /// unavailable — the caller surfaces that at startup.
+    pub(super) fn new(threads: usize) -> io::Result<ReactorSet> {
+        let reactors = (0..threads.max(1))
+            .map(|_| {
+                Ok(ReactorShared {
+                    inbox: Outbox::new()?,
+                    outbox: Arc::new(Outbox::new()?),
+                    stats: ReactorStats {
+                        conns: AtomicU64::new(0),
+                        accepted: AtomicU64::new(0),
+                        replies: AtomicU64::new(0),
+                    },
+                })
+            })
+            .collect::<io::Result<Vec<_>>>()?;
+        Ok(ReactorSet {
+            reactors,
+            next: AtomicUsize::new(0),
+            accepting_done: AtomicBool::new(false),
+        })
+    }
+
+    pub(super) fn thread_count(&self) -> usize {
+        self.reactors.len()
+    }
+
+    /// Hand a fresh connection to the next reactor, round-robin. Plain
+    /// modular assignment, not least-loaded: connections are cheap to
+    /// hold (a few KiB of buffers) and the load they carry is bounded
+    /// downstream by lane admission, so placement barely matters.
+    pub(super) fn assign(&self, stream: TcpStream) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.reactors.len();
+        self.reactors[i].inbox.push(stream);
+    }
+
+    /// Nudge every reactor to recheck its exit conditions (DRAIN, end
+    /// of accepting). Spurious wakes are harmless by design.
+    pub(super) fn wake_all(&self) {
+        for r in &self.reactors {
+            r.outbox.signal();
+        }
+    }
+
+    /// Called once the accept loop has exited: reactors drain existing
+    /// connections and then return instead of blocking forever.
+    pub(super) fn finish_accepting(&self) {
+        self.accepting_done.store(true, Ordering::SeqCst);
+        self.wake_all();
+    }
+
+    fn done_accepting(&self) -> bool {
+        self.accepting_done.load(Ordering::SeqCst)
+    }
+
+    /// The `STATS` reactor table plus its machine-readable trailer
+    /// (grammar in `docs/PROTOCOL.md`). Rendered only in reactor mode —
+    /// threaded-mode STATS output stays byte-identical to pre-reactor
+    /// builds.
+    pub(super) fn render(&self) -> String {
+        let mut t = AsciiTable::new(
+            "reactor (event-driven connection layer)",
+            &["reactor", "conns", "accepted", "wakeups", "replies"],
+        );
+        let (mut conns, mut accepted, mut wakeups, mut replies) = (0u64, 0u64, 0u64, 0u64);
+        for (i, r) in self.reactors.iter().enumerate() {
+            let c = r.stats.conns.load(Ordering::Relaxed);
+            let a = r.stats.accepted.load(Ordering::Relaxed);
+            let w = r.inbox.signals() + r.outbox.signals();
+            let p = r.stats.replies.load(Ordering::Relaxed);
+            conns += c;
+            accepted += a;
+            wakeups += w;
+            replies += p;
+            t.row(vec![
+                i.to_string(),
+                c.to_string(),
+                a.to_string(),
+                w.to_string(),
+                p.to_string(),
+            ]);
+        }
+        let mut out = t.render();
+        out.push_str(&format!(
+            "reactor: threads={} conns={} accepted={} wakeups={} replies={}\n",
+            self.reactors.len(),
+            conns,
+            accepted,
+            wakeups,
+            replies
+        ));
+        out
+    }
+}
+
+/// Reactor thread body. A substrate error ends this reactor (logged);
+/// non-Linux builds never get here — [`ReactorSet::new`] already
+/// refused at startup.
+pub(super) fn reactor_loop(index: usize, shared: &Shared) {
+    #[cfg(target_os = "linux")]
+    if let Err(e) = run(index, shared) {
+        eprintln!("ohm: reactor {index} exited with error: {e}");
+    }
+    #[cfg(not(target_os = "linux"))]
+    let _ = (index, shared);
+}
+
+/// Per-connection state machine. `'a` ties the in-flight reply (and its
+/// single-flight obligation) to the server's shared state.
+struct Conn<'a> {
+    stream: TcpStream,
+    rbuf: LineBuf,
+    wbuf: WriteBuf,
+    /// The one admitted-but-unanswered job, if any. While `Some`, the
+    /// connection stops reading (per-connection order is preserved
+    /// exactly as when a threaded reader blocks on its reply channel).
+    inflight: Option<super::PendingReply<'a>>,
+    /// Last interest registered with the poller, to elide no-op
+    /// `EPOLL_CTL_MOD`s.
+    interest: Interest,
+    /// Flush pending writes, then close (BYE, faults, overflow).
+    closing: bool,
+    /// Peer sent FIN (or shutdown treats it as such): answer what is
+    /// buffered, flush, close.
+    eof: bool,
+    /// Unrecoverable socket error: close now, pending writes dropped.
+    dead: bool,
+}
+
+#[cfg(target_os = "linux")]
+fn raw_fd(stream: &TcpStream) -> crate::net::sys::RawFd {
+    use std::os::unix::io::AsRawFd;
+    stream.as_raw_fd()
+}
+
+/// Register a fresh connection: nonblocking (accepted sockets do not
+/// inherit the listener's nonblocking flag), read-interest, counters.
+#[cfg(target_os = "linux")]
+fn adopt<'a>(
+    poller: &Poller,
+    me: &ReactorShared,
+    stream: TcpStream,
+    token: u64,
+) -> io::Result<Conn<'a>> {
+    crate::net::sys::set_nonblocking(raw_fd(&stream))?;
+    poller.add(raw_fd(&stream), token, Interest::readable())?;
+    me.stats.accepted.fetch_add(1, Ordering::Relaxed);
+    me.stats.conns.fetch_add(1, Ordering::Relaxed);
+    Ok(Conn {
+        stream,
+        rbuf: LineBuf::new(),
+        wbuf: WriteBuf::new(),
+        inflight: None,
+        interest: Interest::readable(),
+        closing: false,
+        eof: false,
+        dead: false,
+    })
+}
+
+/// Queue one reply line, applying the connection-level fault hooks the
+/// threaded writer applies at the same point — so the chaos matrix
+/// exercises identical client-visible failures in both IO modes.
+fn push_line(shared: &Shared, conn: &mut Conn<'_>, line: &str) {
+    if let Some(plan) = &shared.faults {
+        // wedge-client: half a reply line, then close — the peer sees a
+        // truncated line and EOF. The threaded hook also stalls 50 ms
+        // before closing; an event loop must never sleep, so the
+        // reactor skips the stall (the client-visible failure — partial
+        // line + EOF — is unchanged).
+        if plan.should_fire(FaultKind::WedgeClient) {
+            telemetry_lock(shared).record_fault();
+            let bytes = line.as_bytes();
+            conn.wbuf.push(&bytes[..bytes.len() / 2]);
+            conn.closing = true;
+            return;
+        }
+        // drop-reply: the request executed (exactly once), but its
+        // reply never reaches the socket — the connection just closes.
+        if plan.should_fire(FaultKind::DropReply) {
+            telemetry_lock(shared).record_fault();
+            conn.closing = true;
+            return;
+        }
+    }
+    conn.wbuf.push(line.as_bytes());
+    conn.wbuf.push(b"\n");
+}
+
+/// Queue a multi-line block with its `.` terminator (STATS/DRAIN). No
+/// fault hooks — the threaded writer applies none to blocks either.
+fn push_block(conn: &mut Conn<'_>, block: &str) {
+    for l in block.lines() {
+        conn.wbuf.push(l.as_bytes());
+        conn.wbuf.push(b"\n");
+    }
+    conn.wbuf.push(b".\n");
+}
+
+/// Pump one connection as far as it will go without blocking: flush,
+/// read, parse/answer, repeat until no forward progress. Each activity
+/// is gated by the state flags, so this is safe to call on any event
+/// (spurious included) — it simply does nothing when nothing is ready.
+#[cfg(target_os = "linux")]
+fn drive<'a>(
+    shared: &'a Shared,
+    me: &ReactorShared,
+    pending_index: &mut HashMap<u64, u64>,
+    token: u64,
+    conn: &mut Conn<'a>,
+) {
+    loop {
+        // Writes first: draining the pending tail may reopen the
+        // backpressure gate for the parse loop below.
+        match conn.wbuf.flush_into(&mut (&conn.stream)) {
+            Ok(_) => {}
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+        let mut progressed = false;
+        // Read while this connection may accept another request: no job
+        // in flight (per-connection ordering), pending writes under the
+        // soft cap (a wedged client bounds its own memory), not already
+        // winding down.
+        while conn.inflight.is_none() && conn.wbuf.accepting() && !conn.closing && !conn.eof {
+            let mut buf = [0u8; 4096];
+            match (&conn.stream).read(&mut buf) {
+                Ok(0) => {
+                    conn.eof = true;
+                    progressed = true;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend(&buf[..n]);
+                    progressed = true;
+                    // A newline-free line past LINE_MAX is not this
+                    // protocol: protective close instead of unbounded
+                    // buffering (the threaded reader's BufReader has no
+                    // such bound — its thread is the bound).
+                    if conn.rbuf.overflowed() {
+                        conn.closing = true;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return;
+                }
+            }
+        }
+        // Answer buffered lines under the same gates. At EOF the
+        // unterminated tail is answered too — `read_line` on the
+        // threaded path returns it as a final line, and both modes must
+        // agree byte for byte.
+        while conn.inflight.is_none() && conn.wbuf.accepting() && !conn.closing {
+            let line = match conn
+                .rbuf
+                .next_line()
+                .or_else(|| if conn.eof { conn.rbuf.take_tail() } else { None })
+            {
+                Some(l) => l,
+                None => break,
+            };
+            progressed = true;
+            let step = reactor_step(shared, line.trim(), |id| {
+                ReplySink::Outbox(OutboxTicket::new(Arc::clone(&me.outbox), id))
+            });
+            match step {
+                Step::Respond(Response::Line(s)) => push_line(shared, conn, &s),
+                Step::Respond(Response::Block(s)) => push_block(conn, &s),
+                Step::Respond(Response::Bye) => {
+                    conn.wbuf.push(b"BYE\n");
+                    conn.closing = true;
+                }
+                Step::Pending(p) => {
+                    pending_index.insert(p.id, token);
+                    conn.inflight = Some(p);
+                }
+            }
+        }
+        if !progressed {
+            return;
+        }
+    }
+}
+
+/// The event loop proper.
+#[cfg(target_os = "linux")]
+fn run(index: usize, shared: &Shared) -> io::Result<()> {
+    let set = shared.reactors.as_ref().expect("reactor thread requires the reactor set");
+    let me = &set.reactors[index];
+    const TOKEN_INBOX: u64 = 0;
+    const TOKEN_OUTBOX: u64 = 1;
+    const TOKEN_BASE: u64 = 2;
+    let poller = Poller::new()?;
+    poller.add(me.inbox.wake_fd().raw(), TOKEN_INBOX, Interest::readable())?;
+    poller.add(me.outbox.wake_fd().raw(), TOKEN_OUTBOX, Interest::readable())?;
+    let mut conns: HashMap<u64, Conn<'_>> = HashMap::new();
+    let mut pending_index: HashMap<u64, u64> = HashMap::new();
+    let mut next_token = TOKEN_BASE;
+    let mut events = Vec::new();
+    let mut grace: Option<Instant> = None;
+    loop {
+        let shutting = shared.shutdown.load(Ordering::SeqCst);
+        // Adopt newly assigned connections. Both outboxes are drained
+        // unconditionally each iteration (cheap when empty), which also
+        // resets their eventfd levels.
+        for stream in me.inbox.drain() {
+            if shutting {
+                // Raced the accept loop's exit: the server is done,
+                // drop the connection unserved (the client sees a clean
+                // EOF, same as the threaded straggler path).
+                continue;
+            }
+            if let Ok(conn) = adopt(&poller, me, stream, next_token) {
+                conns.insert(next_token, conn);
+                next_token += 1;
+            }
+        }
+        // Deliver dispatcher completions to their waiting connections.
+        let mut touched: Vec<u64> = Vec::new();
+        for completion in me.outbox.drain() {
+            let (id, result) = match completion {
+                Completion::Done { id, result } => (id, Some(result)),
+                // The envelope died without a result (dispatcher gone);
+                // render the same internal error a threaded reader's
+                // disconnected reply channel produces.
+                Completion::Gone { id } => (id, None),
+            };
+            // Unindexed ids are tickets whose connection already closed
+            // (force-close under grace): the result is dropped, exactly
+            // as a threaded reader dropping its reply receiver.
+            let Some(token) = pending_index.remove(&id) else { continue };
+            let Some(conn) = conns.get_mut(&token) else { continue };
+            let Some(pending) = conn.inflight.take() else { continue };
+            let line = finish_reply(pending, result);
+            push_line(shared, conn, &line);
+            me.stats.replies.fetch_add(1, Ordering::Relaxed);
+            touched.push(token);
+        }
+        // DRAIN wind-down: treat every connection as at-EOF — stop
+        // reading, answer what is buffered (`ERR DRAINING` for jobs),
+        // flush, close. Event-driven; the old 500 ms reader tick is
+        // gone in both IO modes.
+        if shutting {
+            for (token, conn) in conns.iter_mut() {
+                conn.eof = true;
+                if !touched.contains(token) {
+                    touched.push(*token);
+                }
+            }
+            let since = *grace.get_or_insert_with(Instant::now);
+            if since.elapsed() > SHUTDOWN_GRACE {
+                for conn in conns.values_mut() {
+                    conn.dead = true;
+                }
+            }
+        }
+        // Settle every touched connection: pump it forward, then close
+        // or re-register interest.
+        for token in touched {
+            if let Some(conn) = conns.get_mut(&token) {
+                drive(shared, me, &mut pending_index, token, conn);
+            }
+            settle(&poller, me, &mut conns, &mut pending_index, token);
+        }
+        if conns.is_empty() && (shutting || set.done_accepting()) {
+            // One final inbox look: `assign` may have raced
+            // `finish_accepting`. A straggler found here while not
+            // shutting down is adopted and served; at shutdown it is
+            // dropped unserved.
+            let stragglers = me.inbox.drain();
+            if stragglers.is_empty() || shutting {
+                return Ok(());
+            }
+            for stream in stragglers {
+                if let Ok(conn) = adopt(&poller, me, stream, next_token) {
+                    conns.insert(next_token, conn);
+                    next_token += 1;
+                }
+            }
+        }
+        let timeout = if shutting { Some(SHUTDOWN_TICK) } else { None };
+        poller.poll_io(&mut events, timeout)?;
+        for i in 0..events.len() {
+            let ev = events[i];
+            if ev.token < TOKEN_BASE {
+                // Inbox/outbox wake: handled by the unconditional
+                // drains at the top of the loop.
+                continue;
+            }
+            if let Some(conn) = conns.get_mut(&ev.token) {
+                drive(shared, me, &mut pending_index, ev.token, conn);
+            }
+            settle(&poller, me, &mut conns, &mut pending_index, ev.token);
+        }
+    }
+}
+
+/// Post-drive bookkeeping for one connection: close it when its state
+/// machine is finished, otherwise converge its poller interest.
+///
+/// Close conditions, in order: a dead socket closes immediately
+/// (pending writes are unsalvageable); `closing` waits only for the
+/// write buffer to flush (BYE and fault truncations must reach the
+/// wire); EOF closes once nothing remains — no job in flight, no
+/// unflushed reply, no unanswered buffered bytes.
+#[cfg(target_os = "linux")]
+fn settle(
+    poller: &Poller,
+    me: &ReactorShared,
+    conns: &mut HashMap<u64, Conn<'_>>,
+    pending_index: &mut HashMap<u64, u64>,
+    token: u64,
+) {
+    let Some(conn) = conns.get_mut(&token) else { return };
+    let close = conn.dead
+        || (conn.closing && conn.wbuf.is_empty())
+        || (conn.eof && conn.inflight.is_none() && conn.wbuf.is_empty() && conn.rbuf.pending() == 0);
+    if close {
+        let mut conn = conns.remove(&token).expect("checked above");
+        // A force-closed connection may still hold an in-flight reply:
+        // unindex it so the late completion is dropped, and drop the
+        // pending itself (aborting its single-flight, so cache
+        // followers retry instead of hanging).
+        if let Some(p) = conn.inflight.take() {
+            pending_index.remove(&p.id);
+        }
+        let _ = poller.remove(raw_fd(&conn.stream));
+        // FIN after everything flushed: a client must never observe EOF
+        // in place of a complete reply it was owed.
+        let _ = conn.stream.shutdown(Shutdown::Write);
+        me.stats.conns.fetch_sub(1, Ordering::Relaxed);
+        return;
+    }
+    let want = Interest {
+        readable: conn.inflight.is_none() && conn.wbuf.accepting() && !conn.closing && !conn.eof,
+        writable: !conn.wbuf.is_empty(),
+    };
+    if want != conn.interest {
+        if poller.modify(raw_fd(&conn.stream), token, want).is_ok() {
+            conn.interest = want;
+        }
+    }
+}

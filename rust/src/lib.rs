@@ -35,6 +35,10 @@
 //!   ([`coordinator::admission`]), and digest-backed telemetry. The wire
 //!   protocol is documented in `docs/PROTOCOL.md`, the data flow in
 //!   `docs/ARCHITECTURE.md`.
+//! * [`net`] — vendored epoll/eventfd substrate (raw FFI, no crates.io
+//!   dependency) behind the coordinator's `--io reactor` event-driven
+//!   connection layer: poller, line/write buffers, and the
+//!   exactly-once-wake outbox.
 //! * [`experiments`] / [`report`] — one runner per paper table/figure
 //!   (Table 1–3, Fig 1–5) plus ablations, with ASCII/CSV emitters.
 //! * [`bench`], [`prop`], [`cli`], [`config`], [`stats`], [`workload`],
@@ -80,6 +84,7 @@ pub mod exec;
 pub mod dla;
 pub mod sort;
 pub mod runtime;
+pub mod net;
 pub mod coordinator;
 pub mod report;
 pub mod config;

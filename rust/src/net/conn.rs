@@ -1,0 +1,283 @@
+//! Pure per-connection buffer state machines for the reactor: no
+//! sockets, no syscalls — just bytes in, lines/flushes out — so the
+//! split-at-every-boundary property tests (`tests/prop_connstate.rs`)
+//! can drive them exhaustively without a kernel in the loop.
+//!
+//! [`LineBuf`] reassembles the line protocol across arbitrary read
+//! fragmentation; [`WriteBuf`] holds the unflushed tail of replies for
+//! a slow-reading peer and meters further request processing through
+//! [`WriteBuf::accepting`] — the reactor stops parsing new requests
+//! (and stops reading the socket) while a connection's pending writes
+//! exceed [`WBUF_SOFT_MAX`], so a wedged client bounds its own memory
+//! instead of blocking a reactor thread.
+
+use std::collections::VecDeque;
+use std::io;
+
+/// Pending-write soft cap, per connection: above this, the reactor
+/// defers further request processing until `EPOLLOUT` drains the
+/// backlog. A soft cap — one in-flight reply may push past it — so the
+/// hard bound is `WBUF_SOFT_MAX` + the largest single reply (a STATS
+/// block, a few KiB).
+pub const WBUF_SOFT_MAX: usize = 64 * 1024;
+
+/// Longest accepted request line (bytes, newline exclusive). The
+/// protocol's longest legal request is tens of bytes; a peer that
+/// streams this much without a newline is not speaking it, and the
+/// reactor closes the connection rather than buffering without bound.
+pub const LINE_MAX: usize = 4 * 1024;
+
+/// Incremental line reassembly: bytes from nonblocking reads go in,
+/// complete `\n`-terminated lines come out, partial tails persist
+/// across any split. Byte-for-byte equivalent to `BufRead::read_line`
+/// on the whole stream (the property tests pin this).
+#[derive(Debug, Default)]
+pub struct LineBuf {
+    buf: Vec<u8>,
+    /// Scan resume point: bytes before this are known newline-free.
+    scanned: usize,
+}
+
+impl LineBuf {
+    pub fn new() -> LineBuf {
+        LineBuf::default()
+    }
+
+    /// Append one read's worth of bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Buffered bytes not yet returned as a line.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Next complete line, newline stripped (lossy UTF-8, like the
+    /// threaded reader's `read_line` + `trim` pipeline the caller
+    /// applies on top). `None` while only a partial line is buffered.
+    pub fn next_line(&mut self) -> Option<String> {
+        let pos = self.buf[self.scanned..].iter().position(|&b| b == b'\n')?;
+        let pos = self.scanned + pos;
+        let line = String::from_utf8_lossy(&self.buf[..pos]).into_owned();
+        self.buf.drain(..=pos);
+        self.scanned = 0;
+        Some(line)
+    }
+
+    /// True when a complete line is buffered — [`LineBuf::next_line`]
+    /// would return `Some` — without extracting it. Advances the scan
+    /// frontier on `false`, like `next_line`'s miss path.
+    pub fn has_line(&mut self) -> bool {
+        match self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+            Some(_) => true,
+            None => {
+                self.scanned = self.buf.len();
+                false
+            }
+        }
+    }
+
+    /// Drain the unterminated tail as a final line (lossy UTF-8). The
+    /// EOF rule: `read_line` on the threaded path returns a trailing
+    /// partial line as `Ok(n > 0)` when the stream ends without a
+    /// newline, and answers it — the reactor calls this at EOF so both
+    /// modes agree. `None` when nothing is buffered.
+    pub fn take_tail(&mut self) -> Option<String> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let line = String::from_utf8_lossy(&self.buf).into_owned();
+        self.buf.clear();
+        self.scanned = 0;
+        Some(line)
+    }
+
+    /// True when the partial tail exceeds [`LINE_MAX`] with no newline
+    /// in sight — the protective-close condition.
+    pub fn overflowed(&mut self) -> bool {
+        if self.buf.len() <= LINE_MAX {
+            return false;
+        }
+        // Remember the scan frontier so repeated overflow checks and
+        // `next_line` calls stay O(new bytes), not O(buffer).
+        match self.buf[self.scanned..].iter().position(|&b| b == b'\n') {
+            Some(_) => false,
+            None => {
+                self.scanned = self.buf.len();
+                true
+            }
+        }
+    }
+}
+
+/// Pending reply bytes for one connection, flushed opportunistically
+/// and on `EPOLLOUT`. FIFO over a `VecDeque` so partial flushes pop
+/// from the front without compaction bookkeeping.
+#[derive(Debug, Default)]
+pub struct WriteBuf {
+    buf: VecDeque<u8>,
+}
+
+impl WriteBuf {
+    pub fn new() -> WriteBuf {
+        WriteBuf::default()
+    }
+
+    /// Queue reply bytes (already newline-terminated by the caller).
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend(bytes);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Unflushed bytes.
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Backpressure gate: may the connection process another request?
+    /// False once the pending tail passes [`WBUF_SOFT_MAX`].
+    pub fn accepting(&self) -> bool {
+        self.buf.len() < WBUF_SOFT_MAX
+    }
+
+    /// Write as much as the sink takes. `Ok(true)` = drained,
+    /// `Ok(false)` = sink is full (`WouldBlock`; re-arm `EPOLLOUT`),
+    /// `Err` = the connection is dead.
+    pub fn flush_into(&mut self, w: &mut impl io::Write) -> io::Result<bool> {
+        while !self.buf.is_empty() {
+            let (front, _) = self.buf.as_slices();
+            match w.write(front) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer accepts no bytes",
+                    ))
+                }
+                Ok(n) => {
+                    self.buf.drain(..n);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_reassemble_across_any_split() {
+        let input = b"PING\nSORT 300 7\n\nQUIT\n";
+        let whole = {
+            let mut lb = LineBuf::new();
+            lb.extend(input);
+            std::iter::from_fn(move || lb.next_line()).collect::<Vec<_>>()
+        };
+        assert_eq!(whole, vec!["PING", "SORT 300 7", "", "QUIT"]);
+        // Byte-at-a-time must agree.
+        let mut lb = LineBuf::new();
+        let mut lines = Vec::new();
+        for b in input {
+            lb.extend(&[*b]);
+            while let Some(l) = lb.next_line() {
+                lines.push(l);
+            }
+        }
+        assert_eq!(lines, whole);
+        assert_eq!(lb.pending(), 0);
+    }
+
+    #[test]
+    fn partial_tail_survives_until_its_newline() {
+        let mut lb = LineBuf::new();
+        lb.extend(b"SORT 10");
+        assert_eq!(lb.next_line(), None);
+        assert_eq!(lb.pending(), 7);
+        lb.extend(b"0 42\nPI");
+        assert_eq!(lb.next_line().as_deref(), Some("SORT 100 42"));
+        assert_eq!(lb.next_line(), None);
+        lb.extend(b"NG\n");
+        assert_eq!(lb.next_line().as_deref(), Some("PING"));
+    }
+
+    #[test]
+    fn take_tail_mirrors_read_line_at_eof() {
+        let mut lb = LineBuf::new();
+        lb.extend(b"PING\nSTATS");
+        assert_eq!(lb.next_line().as_deref(), Some("PING"));
+        assert!(!lb.has_line());
+        assert_eq!(lb.take_tail().as_deref(), Some("STATS"));
+        assert_eq!(lb.take_tail(), None, "tail drains exactly once");
+        assert_eq!(lb.pending(), 0);
+        // A terminated stream leaves no tail.
+        lb.extend(b"QUIT\n");
+        assert!(lb.has_line());
+        assert_eq!(lb.next_line().as_deref(), Some("QUIT"));
+        assert_eq!(lb.take_tail(), None);
+    }
+
+    #[test]
+    fn overflow_trips_only_without_a_newline() {
+        let mut lb = LineBuf::new();
+        lb.extend(&vec![b'x'; LINE_MAX + 1]);
+        assert!(lb.overflowed(), "newline-free tail past LINE_MAX");
+        let mut ok = LineBuf::new();
+        ok.extend(&vec![b'y'; LINE_MAX + 1]);
+        ok.extend(b"\n");
+        assert!(!ok.overflowed(), "a terminated line is extractable, not an overflow");
+        assert_eq!(ok.next_line().map(|l| l.len()), Some(LINE_MAX + 1));
+    }
+
+    /// A sink that takes `cap` bytes per write, then `WouldBlock`s.
+    struct Throttled {
+        taken: Vec<u8>,
+        budget: usize,
+    }
+
+    impl io::Write for Throttled {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.budget == 0 {
+                return Err(io::ErrorKind::WouldBlock.into());
+            }
+            let n = buf.len().min(self.budget);
+            self.budget -= n;
+            self.taken.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn partial_flush_keeps_order_and_reports_backpressure() {
+        let mut wb = WriteBuf::new();
+        wb.push(b"OK one\n");
+        wb.push(b"OK two\n");
+        let mut sink = Throttled { taken: Vec::new(), budget: 9 };
+        assert!(!wb.flush_into(&mut sink).unwrap(), "sink stalled mid-reply");
+        assert_eq!(wb.pending(), 5);
+        sink.budget = usize::MAX;
+        assert!(wb.flush_into(&mut sink).unwrap());
+        assert_eq!(sink.taken, b"OK one\nOK two\n");
+        assert!(wb.is_empty());
+    }
+
+    #[test]
+    fn accepting_gate_closes_past_the_soft_cap() {
+        let mut wb = WriteBuf::new();
+        assert!(wb.accepting());
+        wb.push(&vec![0u8; WBUF_SOFT_MAX - 1]);
+        assert!(wb.accepting(), "one under the cap still accepts");
+        wb.push(&[0]);
+        assert!(!wb.accepting(), "at the cap the gate closes");
+    }
+}

@@ -1,0 +1,48 @@
+//! Vendored, offline-green event-driven IO substrate for the
+//! coordinator's reactor connection layer (`--io reactor`).
+//!
+//! The paper's serving-edge overhead is thread-per-connection: every
+//! idle client used to cost a blocked reader thread. This module is
+//! the replacement's foundation — a minimal epoll/eventfd wrapper in
+//! the same spirit as the `rust/vendor/` shims (raw `extern "C"`
+//! declarations, no crates.io dependency; see DESIGN.md §2):
+//!
+//! * [`sys`] — the unsafe surface: raw `epoll_create1` / `epoll_ctl` /
+//!   `epoll_wait` / `eventfd` / `fcntl` externs behind safe,
+//!   errno-checked wrappers. The static analyzer's `unsafe` pass
+//!   baselines every site here.
+//! * [`poller`] — [`Poller`] (owned epoll instance, token-addressed
+//!   readiness via `poll_io`) and [`EventFd`] (nonblocking cross-thread
+//!   wake).
+//! * [`conn`] — pure per-connection state: [`LineBuf`] (incremental
+//!   line reassembly across partial reads) and [`WriteBuf`]
+//!   (pending-reply backpressure with the [`conn::WBUF_SOFT_MAX`]
+//!   gate).
+//! * [`outbox`] — [`Outbox`], the mutex+eventfd batch handoff used for
+//!   dispatcher→reactor completions and accept→reactor connection
+//!   adoption, signaling exactly once per empty→non-empty batch.
+//!
+//! The reactor event loop itself lives with the serving layer
+//! (`coordinator::server`), which composes these pieces; nothing in
+//! this module knows about the wire protocol.
+//!
+//! Non-Linux targets compile all of this, but every fd-producing entry
+//! point returns [`std::io::ErrorKind::Unsupported`] — the serving
+//! layer then refuses `--io reactor` and the default threaded path
+//! (pure `std`) carries on.
+
+pub mod conn;
+pub mod outbox;
+pub mod poller;
+pub mod sys;
+
+pub use conn::{LineBuf, WriteBuf};
+pub use outbox::Outbox;
+pub use poller::{Event, EventFd, Interest, Poller};
+
+/// Whether this build target has the reactor's kernel substrate
+/// (epoll + eventfd). Tests use this to skip reactor cases instead of
+/// failing them on exotic hosts.
+pub fn supported() -> bool {
+    cfg!(target_os = "linux")
+}

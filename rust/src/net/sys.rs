@@ -1,0 +1,293 @@
+//! Raw Linux syscall bindings for the event-driven connection layer.
+//!
+//! Same vendoring policy as the `rust/vendor/` shims and the PJRT
+//! `dlopen` loader: no crates.io dependency, just the handful of
+//! `extern "C"` declarations the reactor needs — `epoll_create1`,
+//! `epoll_ctl`, `epoll_wait`, `eventfd`, `fcntl`, plus raw fd
+//! `read`/`write`/`close`. Everything is wrapped in safe functions
+//! returning `io::Result` (errno is read via
+//! `io::Error::last_os_error`), so `unsafe` stays confined to this
+//! file and each site carries its own safety argument.
+//!
+//! On non-Linux targets every entry point compiles but returns
+//! [`std::io::ErrorKind::Unsupported`]; callers degrade to the
+//! blocking threaded IO path (`--io threads`), which uses only the
+//! standard library.
+
+use std::io;
+use std::os::raw::c_int;
+
+/// Raw file descriptor. Deliberately our own alias (not
+/// `std::os::fd::RawFd`) so this module compiles on every target.
+pub type RawFd = c_int;
+
+// Event bits (uapi/linux/eventpoll.h).
+pub const EPOLLIN: u32 = 0x001;
+pub const EPOLLOUT: u32 = 0x004;
+pub const EPOLLERR: u32 = 0x008;
+pub const EPOLLHUP: u32 = 0x010;
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+// epoll_ctl ops.
+pub const EPOLL_CTL_ADD: c_int = 1;
+pub const EPOLL_CTL_DEL: c_int = 2;
+pub const EPOLL_CTL_MOD: c_int = 3;
+
+// Creation flags (x86-64/aarch64 generic values).
+pub const EPOLL_CLOEXEC: c_int = 0x80000;
+pub const EFD_CLOEXEC: c_int = 0x80000;
+pub const EFD_NONBLOCK: c_int = 0x800;
+
+// fcntl.
+pub const F_GETFL: c_int = 3;
+pub const F_SETFL: c_int = 4;
+pub const O_NONBLOCK: c_int = 0x800;
+
+/// Kernel ABI for one epoll event. Packed on x86-64 (the kernel
+/// declares the struct `__attribute__((packed))` there); naturally
+/// aligned elsewhere. Fields are `Copy`, and callers copy them out
+/// rather than taking references into the (possibly packed) struct.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Debug, Clone, Copy)]
+pub struct EpollEvent {
+    /// `EPOLLIN | EPOLLOUT | …` readiness bits.
+    pub events: u32,
+    /// Caller-chosen token, returned verbatim with each event.
+    pub data: u64,
+}
+
+impl EpollEvent {
+    /// Zeroed event, used to size the `epoll_wait` output buffer.
+    pub fn empty() -> EpollEvent {
+        EpollEvent { events: 0, data: 0 }
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod ffi {
+    use super::EpollEvent;
+    use std::os::raw::{c_int, c_uint, c_void};
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        pub fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn unsupported() -> io::Error {
+    io::Error::new(io::ErrorKind::Unsupported, "reactor IO requires Linux (epoll/eventfd)")
+}
+
+/// `epoll_create1(EPOLL_CLOEXEC)`.
+#[cfg(target_os = "linux")]
+pub fn epoll_create() -> io::Result<RawFd> {
+    // Safety: no pointer arguments; the kernel validates the flags.
+    let fd = unsafe { ffi::epoll_create1(EPOLL_CLOEXEC) };
+    if fd < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(fd)
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn epoll_create() -> io::Result<RawFd> {
+    Err(unsupported())
+}
+
+/// `epoll_ctl` with an interest mask + token (`ADD`/`MOD`), or
+/// deregistration (`DEL`, where the event argument is ignored).
+#[cfg(target_os = "linux")]
+pub fn epoll_ctl(epfd: RawFd, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+    let mut ev = EpollEvent { events, data: token };
+    // Safety: `ev` is a valid, live epoll_event for the duration of the
+    // call; the kernel copies it before returning (and ignores it for
+    // EPOLL_CTL_DEL).
+    let rc = unsafe { ffi::epoll_ctl(epfd, op, fd, &mut ev) };
+    if rc < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(())
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn epoll_ctl(_epfd: RawFd, _op: c_int, _fd: RawFd, _events: u32, _token: u64) -> io::Result<()> {
+    Err(unsupported())
+}
+
+/// `epoll_wait` into `out`, returning the number of ready events.
+/// `timeout_ms < 0` blocks indefinitely. `EINTR` is reported as zero
+/// events (a spurious wake), not an error.
+#[cfg(target_os = "linux")]
+pub fn epoll_wait(epfd: RawFd, out: &mut [EpollEvent], timeout_ms: c_int) -> io::Result<usize> {
+    if out.is_empty() {
+        return Ok(0);
+    }
+    // Safety: `out` is a valid, writable buffer of `out.len()` events;
+    // the kernel writes at most `maxevents` entries into it.
+    let rc = unsafe { ffi::epoll_wait(epfd, out.as_mut_ptr(), out.len() as c_int, timeout_ms) };
+    if rc < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(0);
+        }
+        return Err(err);
+    }
+    Ok(rc as usize)
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn epoll_wait(_epfd: RawFd, _out: &mut [EpollEvent], _timeout_ms: c_int) -> io::Result<usize> {
+    Err(unsupported())
+}
+
+/// `eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC)`: a nonblocking wakeup
+/// counter usable as an epoll registration target.
+#[cfg(target_os = "linux")]
+pub fn eventfd_create() -> io::Result<RawFd> {
+    // Safety: no pointer arguments; the kernel validates the flags.
+    let fd = unsafe { ffi::eventfd(0, EFD_NONBLOCK | EFD_CLOEXEC) };
+    if fd < 0 {
+        Err(io::Error::last_os_error())
+    } else {
+        Ok(fd)
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn eventfd_create() -> io::Result<RawFd> {
+    Err(unsupported())
+}
+
+/// Add one to an eventfd's counter (the wakeup edge). A full counter
+/// (`EAGAIN`) means a wake is already pending, which is exactly the
+/// semantic we want — report success.
+#[cfg(target_os = "linux")]
+pub fn eventfd_signal(fd: RawFd) -> io::Result<()> {
+    let one: u64 = 1;
+    // Safety: the buffer is 8 valid bytes, the size eventfd requires.
+    let rc = unsafe {
+        ffi::write(fd, (&one as *const u64).cast(), std::mem::size_of::<u64>())
+    };
+    if rc < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::WouldBlock {
+            return Ok(());
+        }
+        return Err(err);
+    }
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn eventfd_signal(_fd: RawFd) -> io::Result<()> {
+    Err(unsupported())
+}
+
+/// Consume an eventfd's pending counter (level reset). `EAGAIN`
+/// (nothing pending) is success: the fd was already quiet.
+#[cfg(target_os = "linux")]
+pub fn eventfd_drain(fd: RawFd) -> io::Result<()> {
+    let mut counter: u64 = 0;
+    // Safety: the buffer is 8 valid, writable bytes.
+    let rc = unsafe {
+        ffi::read(fd, (&mut counter as *mut u64).cast(), std::mem::size_of::<u64>())
+    };
+    if rc < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::WouldBlock {
+            return Ok(());
+        }
+        return Err(err);
+    }
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn eventfd_drain(_fd: RawFd) -> io::Result<()> {
+    Err(unsupported())
+}
+
+/// Put a raw fd into nonblocking mode via `fcntl(F_GETFL/F_SETFL)` —
+/// used on accepted sockets before epoll registration.
+#[cfg(target_os = "linux")]
+pub fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    // Safety: fcntl with F_GETFL/F_SETFL takes no pointers; an invalid
+    // fd is reported through errno, not UB.
+    let flags = unsafe { ffi::fcntl(fd, F_GETFL, 0) };
+    if flags < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if flags & O_NONBLOCK != 0 {
+        return Ok(());
+    }
+    // Safety: as above.
+    let rc = unsafe { ffi::fcntl(fd, F_SETFL, flags | O_NONBLOCK) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn set_nonblocking(_fd: RawFd) -> io::Result<()> {
+    Err(unsupported())
+}
+
+/// Close a raw fd owned by this module (epoll instances, eventfds).
+/// Sockets stay owned by their `TcpStream`s and are never closed here.
+#[cfg(target_os = "linux")]
+pub fn close_fd(fd: RawFd) {
+    // Safety: callers only pass fds this module created and owns;
+    // double-close is excluded by the owning types' Drop impls.
+    let _ = unsafe { ffi::close(fd) };
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn close_fd(_fd: RawFd) {}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_signal_then_drain_round_trips() {
+        let fd = eventfd_create().unwrap();
+        eventfd_signal(fd).unwrap();
+        eventfd_signal(fd).unwrap();
+        eventfd_drain(fd).unwrap();
+        // Drained: a second drain is the EAGAIN fast path, still Ok.
+        eventfd_drain(fd).unwrap();
+        close_fd(fd);
+    }
+
+    #[test]
+    fn epoll_sees_a_signaled_eventfd() {
+        let ep = epoll_create().unwrap();
+        let fd = eventfd_create().unwrap();
+        epoll_ctl(ep, EPOLL_CTL_ADD, fd, EPOLLIN, 7).unwrap();
+        let mut out = [EpollEvent::empty(); 4];
+        assert_eq!(epoll_wait(ep, &mut out, 0).unwrap(), 0, "quiet eventfd: no events");
+        eventfd_signal(fd).unwrap();
+        assert_eq!(epoll_wait(ep, &mut out, 1000).unwrap(), 1);
+        let (events, data) = (out[0].events, out[0].data);
+        assert_ne!(events & EPOLLIN, 0);
+        assert_eq!(data, 7, "token round-trips");
+        close_fd(fd);
+        close_fd(ep);
+    }
+}

@@ -1,0 +1,365 @@
+//! End-to-end conformance for the event-driven reactor connection layer
+//! (`--io reactor`): replies are byte-identical to the threaded edge
+//! (modulo measured latencies), the reactor STATS table appears exactly
+//! when the reactor serves, DRAIN exits bounded while thousands of idle
+//! connections would have pinned the old thread-per-socket pool, and the
+//! client-facing chaos cells (wedge-client, drop-reply) stay green.
+//!
+//! Every test gates on `ohm::net::supported()` — on targets without
+//! epoll/eventfd the reactor refuses to start and these scenarios are
+//! vacuous (the threaded suites still run there).
+
+mod common;
+
+use common::{fetch_stats, stat_u64};
+use ohm::coordinator::server::Server;
+use ohm::coordinator::{CoordinatorCfg, IoMode};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+/// A reactor-mode config: 2 event-loop threads in front of the usual
+/// synchronous core.
+fn reactor_cfg() -> CoordinatorCfg {
+    CoordinatorCfg {
+        threads: 1,
+        io: IoMode::Reactor,
+        reactor_threads: 2,
+        ..Default::default()
+    }
+}
+
+/// Serve `cfg` for exactly `scripts.len()` connections, pipelining each
+/// script's lines in one write and collecting every reply line until the
+/// server closes the connection — the same harness the threaded serving
+/// tests use, so both IO modes face identical client behavior.
+fn run_scripts(cfg: CoordinatorCfg, scripts: &[&[&str]]) -> Vec<Vec<String>> {
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let n = scripts.len();
+    let h = thread::spawn(move || server.serve(cfg, Some(n)).unwrap());
+    let mut all = Vec::new();
+    for lines in scripts {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        for l in *lines {
+            writeln!(conn, "{l}").unwrap();
+        }
+        conn.flush().unwrap();
+        let out: Vec<String> = BufReader::new(conn).lines().map(|l| l.unwrap()).collect();
+        all.push(out);
+    }
+    h.join().unwrap();
+    all
+}
+
+/// Blank out the measured-latency fields (`us=`, `queue_us=`) that
+/// legitimately differ run to run; everything else — status, command,
+/// n, engine, checksum — must match byte for byte across IO modes.
+fn normalize(lines: &[String]) -> Vec<String> {
+    lines
+        .iter()
+        .map(|line| {
+            line.split_whitespace()
+                .map(|tok| {
+                    if tok.starts_with("queue_us=") {
+                        "queue_us=X".to_string()
+                    } else if tok.starts_with("us=") {
+                        "us=X".to_string()
+                    } else {
+                        tok.to_string()
+                    }
+                })
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .collect()
+}
+
+#[test]
+fn reactor_replies_are_byte_identical_to_threaded() {
+    if !ohm::net::supported() {
+        eprintln!("skipping: reactor unsupported on this target");
+        return;
+    }
+    // A script covering every reply shape the edge produces from a
+    // single connection: OK (cold, then cache-fed), every ERR family,
+    // the empty request, and BYE. Shapes without AOT artifacts so
+    // routing is deterministic across both servers.
+    let script: &[&str] = &[
+        "PING",
+        "SORT 300 7",
+        "MATMUL 24 9",
+        "sort 300 7", // lowercase is uppercased at parse; warm, so cache-fed
+        "SORT 300 7", // warm: engine=cache in both modes
+        "SORT 0",
+        "MATMUL 5000",
+        "MATMUL abc",
+        "FROB 1 2",
+        "",
+        "QUIT",
+    ];
+    let threaded = {
+        let cfg = CoordinatorCfg {
+            threads: 1,
+            cache: true,
+            cache_entries: 64,
+            cache_bytes: 1 << 20,
+            ..Default::default()
+        };
+        run_scripts(cfg, &[script])
+    };
+    let reactor = {
+        let cfg = CoordinatorCfg {
+            cache: true,
+            cache_entries: 64,
+            cache_bytes: 1 << 20,
+            ..reactor_cfg()
+        };
+        run_scripts(cfg, &[script])
+    };
+    assert_eq!(
+        normalize(&threaded[0]),
+        normalize(&reactor[0]),
+        "threaded and reactor edges diverged on the same script"
+    );
+    // The parity run must have exercised the interesting rows, or the
+    // equality above proves less than it claims.
+    let got = &reactor[0];
+    assert!(got.iter().filter(|l| l.contains("engine=cache")).count() >= 1, "{got:?}");
+    assert!(got.iter().any(|l| l.starts_with("ERR SORT needs n")), "{got:?}");
+    assert!(got.iter().any(|l| l.starts_with("ERR MATMUL needs n")), "{got:?}");
+    assert!(got.iter().any(|l| l.starts_with("ERR unknown command")), "{got:?}");
+    assert!(got.iter().any(|l| l == "ERR empty request"), "{got:?}");
+    assert_eq!(got.last().map(|s| s.as_str()), Some("BYE"), "{got:?}");
+}
+
+#[test]
+fn reactor_answers_an_unterminated_tail_at_eof_like_read_line() {
+    if !ohm::net::supported() {
+        return;
+    }
+    // `read_line` on the threaded path returns a trailing partial line
+    // as Ok(n > 0) at EOF and answers it; the reactor's take_tail must
+    // reproduce that — a bare "PING" with no newline, then FIN, still
+    // earns a PONG.
+    for cfg in [CoordinatorCfg { threads: 1, ..Default::default() }, reactor_cfg()] {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let h = thread::spawn(move || server.serve(cfg, Some(1)).unwrap());
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        conn.write_all(b"PING").unwrap();
+        conn.flush().unwrap();
+        conn.shutdown(Shutdown::Write).unwrap();
+        let mut got = String::new();
+        conn.read_to_string(&mut got).unwrap();
+        assert_eq!(got, "PONG\n", "unterminated tail must still be answered");
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn reactor_stats_table_appears_only_in_reactor_mode() {
+    if !ohm::net::supported() {
+        return;
+    }
+    let serve_one = |cfg: CoordinatorCfg| -> String {
+        let server = Server::bind("127.0.0.1:0").unwrap();
+        let addr = server.local_addr();
+        let h = thread::spawn(move || server.serve(cfg, Some(1)).unwrap());
+        let stats = fetch_stats(addr);
+        h.join().unwrap();
+        stats
+    };
+
+    let stats = serve_one(reactor_cfg());
+    assert!(
+        stats.contains("reactor (event-driven connection layer)"),
+        "reactor table title missing:\n{stats}"
+    );
+    assert!(stats.contains("reactor: threads=2"), "reactor trailer missing:\n{stats}");
+    // The STATS connection itself is live while rendering.
+    assert!(stat_u64(&stats, "conns=") >= 1, "{stats}");
+
+    let stats = serve_one(CoordinatorCfg { threads: 1, ..Default::default() });
+    assert!(
+        !stats.contains("reactor"),
+        "threaded mode must not render a reactor table:\n{stats}"
+    );
+}
+
+/// The C10k regression this PR exists for: idle connections must cost
+/// the reactor nothing at DRAIN time. The old thread-per-socket edge
+/// needed a 500 ms read tick (or a SHUT_RD sweep) to unwedge blocked
+/// readers; the reactor just marks every connection EOF and the event
+/// loop settles. Bound: well under 5 s with dozens of idle conns held
+/// open across the drain.
+#[test]
+fn drain_exits_bounded_under_idle_connections() {
+    if !ohm::net::supported() {
+        return;
+    }
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = reactor_cfg();
+    let (done_tx, done_rx) = mpsc::channel();
+    let serve = thread::spawn(move || {
+        let result = server.serve(cfg, None);
+        let _ = done_tx.send(result);
+    });
+
+    // Hold 50 validated-idle connections: each answers one PING, then
+    // sits silent — the loadgen --open-conns shape in miniature.
+    let idle: Vec<TcpStream> = (0..50)
+        .map(|i| {
+            let stream = TcpStream::connect(addr)
+                .unwrap_or_else(|e| panic!("idle conn {i} failed: {e}"));
+            stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let mut w = &stream;
+            writeln!(w, "PING").unwrap();
+            w.flush().unwrap();
+            let mut line = String::new();
+            BufReader::new(&stream).read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), "PONG", "idle conn {i} not validated");
+            stream
+        })
+        .collect();
+
+    // One working connection does a real job, then drains.
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut out = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writeln!(out, "SORT 200 1").unwrap();
+    out.flush().unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    assert!(reply.starts_with("OK SORT n=200"), "{reply:?}");
+    writeln!(out, "DRAIN").unwrap();
+    out.flush().unwrap();
+    let drained_at = std::time::Instant::now();
+    let mut block = String::new();
+    loop {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "closed mid-DRAIN:\n{block}");
+        if line.trim() == "." {
+            break;
+        }
+        block.push_str(&line);
+    }
+    assert!(block.starts_with("DRAINED"), "{block}");
+    assert_eq!(stat_u64(&block, "admitted="), stat_u64(&block, "finished="), "{block}");
+    assert!(block.contains("reactor: threads=2"), "{block}");
+
+    // Bounded exit: no per-connection 500 ms ticks, no thread-per-socket
+    // join storm — the whole server is down well inside 5 s.
+    let serve_result =
+        done_rx.recv_timeout(Duration::from_secs(5)).expect("server did not exit within 5s");
+    serve.join().unwrap();
+    serve_result.unwrap();
+    assert!(drained_at.elapsed() < Duration::from_secs(5));
+
+    // Every idle connection was closed by the wind-down, not left
+    // dangling: reads observe EOF, not a timeout.
+    for (i, stream) in idle.iter().enumerate() {
+        let mut buf = [0u8; 8];
+        let n = (&mut &*stream).read(&mut buf).unwrap_or_else(|e| {
+            panic!("idle conn {i} not closed by drain (read error {e})")
+        });
+        assert_eq!(n, 0, "idle conn {i} saw bytes after drain: {buf:?}");
+    }
+}
+
+#[test]
+fn chaos_wedge_client_cell_is_green_under_reactor() {
+    if !ohm::net::supported() {
+        return;
+    }
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg { faults: "wedge-client=@1".to_string(), ..reactor_cfg() };
+    let h = thread::spawn(move || server.serve(cfg, Some(2)).unwrap());
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    writeln!(conn, "SORT 200 1").unwrap();
+    conn.flush().unwrap();
+    let mut got = String::new();
+    conn.read_to_string(&mut got).unwrap();
+    assert!(got.starts_with("OK SORT"), "the half that arrived is a reply prefix: {got:?}");
+    assert!(!got.contains('\n'), "never a complete line: {got:?}");
+    assert!(!got.contains("checksum="), "the tail was withheld: {got:?}");
+    drop(conn);
+
+    let out = drain_and_collect(addr);
+    h.join().unwrap();
+    assert!(
+        out.iter().any(|l| l.starts_with("drained: admitted=1 finished=1")),
+        "the wedged request still executed exactly once: {out:?}"
+    );
+    assert!(out.iter().any(|l| l.contains("wedge-client")), "{out:?}");
+}
+
+#[test]
+fn chaos_drop_reply_cell_is_green_under_reactor() {
+    if !ohm::net::supported() {
+        return;
+    }
+    let server = Server::bind("127.0.0.1:0").unwrap();
+    let addr = server.local_addr();
+    let cfg = CoordinatorCfg { faults: "drop-reply=@1".to_string(), ..reactor_cfg() };
+    let h = thread::spawn(move || server.serve(cfg, Some(2)).unwrap());
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    writeln!(conn, "SORT 200 1").unwrap();
+    conn.flush().unwrap();
+    let mut got = String::new();
+    conn.read_to_string(&mut got).unwrap();
+    assert!(got.is_empty(), "the reply was dropped, the conn closed: {got:?}");
+    drop(conn);
+
+    let out = drain_and_collect(addr);
+    h.join().unwrap();
+    assert!(
+        out.iter().any(|l| l.starts_with("drained: admitted=1 finished=1")),
+        "the dropped-reply job still executed exactly once: {out:?}"
+    );
+    assert!(out.iter().any(|l| l.contains("drop-reply")), "{out:?}");
+}
+
+#[test]
+fn drain_rejects_pipelined_later_jobs_under_reactor() {
+    if !ohm::net::supported() {
+        return;
+    }
+    // The threaded drain_reports_then_rejects_later_jobs scenario, on
+    // the reactor: lines buffered behind the DRAIN on the same
+    // connection still get their ERR DRAINING / BYE before close.
+    let out = run_scripts(reactor_cfg(), &[&["SORT 200 1", "DRAIN", "SORT 200 2", "QUIT"]]);
+    let out = &out[0];
+    assert!(out[0].starts_with("OK SORT n=200"), "{out:?}");
+    assert!(out.iter().any(|l| l == "DRAINED"), "{out:?}");
+    assert!(out.iter().any(|l| l.starts_with("drained: admitted=1 finished=1")), "{out:?}");
+    assert!(out.iter().any(|l| l == "."), "drain block terminator: {out:?}");
+    assert!(
+        out.iter().any(|l| l.starts_with("ERR DRAINING SORT rejected")),
+        "post-drain admission must answer ERR DRAINING: {out:?}"
+    );
+    assert_eq!(out.last().map(|s| s.as_str()), Some("BYE"), "{out:?}");
+}
+
+/// Pipeline DRAIN + QUIT on a fresh connection and collect every line
+/// until close — the drain block plus BYE.
+fn drain_and_collect(addr: SocketAddr) -> Vec<String> {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    for l in ["DRAIN", "QUIT"] {
+        writeln!(conn, "{l}").unwrap();
+    }
+    conn.flush().unwrap();
+    BufReader::new(conn).lines().map(|l| l.unwrap()).collect()
+}

@@ -1,0 +1,207 @@
+//! Property tests for the reactor's pure per-connection state machines
+//! (`ohm::net::conn`) and the wake-once outbox (`ohm::net::outbox`):
+//! line reassembly is split-invariant (any read fragmentation yields the
+//! same lines as the whole stream at once, EOF tail included), the
+//! write-buffer backpressure gate bounds memory under a wedged peer, and
+//! the outbox eventfd signals exactly once per empty→non-empty batch.
+
+use ohm::net::{LineBuf, Outbox, WriteBuf};
+use ohm::prop::{ensure, forall, Config};
+
+/// A protocol-shaped byte stream: random request lines (some empty, some
+/// with `\r`, some junk), optionally ending in an unterminated tail.
+fn gen_stream(g: &mut ohm::prop::Gen) -> Vec<u8> {
+    let lines = g.usize_in(0..12);
+    let mut bytes = Vec::new();
+    for _ in 0..lines {
+        let choice = g.usize_in(0..5);
+        match choice {
+            0 => bytes.extend_from_slice(b"PING"),
+            1 => {
+                bytes.extend_from_slice(b"SORT ");
+                bytes.extend_from_slice(g.usize_in(1..4096).to_string().as_bytes());
+            }
+            2 => bytes.extend_from_slice(b""),
+            3 => bytes.extend_from_slice(b"MATMUL 32 7\r"),
+            _ => {
+                let junk = g.usize_in(1..40);
+                bytes.extend(std::iter::repeat(b'x').take(junk));
+            }
+        }
+        bytes.push(b'\n');
+    }
+    if g.bool() {
+        // Unterminated tail: the stream ends mid-line (EOF rule).
+        let tail = g.usize_in(1..20);
+        bytes.extend(std::iter::repeat(b't').take(tail));
+    }
+    bytes
+}
+
+/// What `BufRead::read_line` over the whole stream yields: every
+/// `\n`-terminated line (newline stripped) plus the unterminated tail as
+/// a final line, if any — the threaded reader's view, which the reactor
+/// must reproduce byte for byte.
+fn reference_lines(stream: &[u8]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = stream;
+    while let Some(pos) = rest.iter().position(|&b| b == b'\n') {
+        out.push(String::from_utf8_lossy(&rest[..pos]).into_owned());
+        rest = &rest[pos + 1..];
+    }
+    if !rest.is_empty() {
+        out.push(String::from_utf8_lossy(rest).into_owned());
+    }
+    out
+}
+
+/// Split-invariance: feeding the stream through `LineBuf` in arbitrary
+/// fragments — byte-at-a-time included — yields exactly the whole-stream
+/// reference, with `take_tail` supplying the EOF tail.
+#[test]
+fn prop_line_reassembly_is_split_invariant() {
+    forall(Config::default().cases(60), "fragmented parse equals whole-stream parse", |g| {
+        let stream = gen_stream(g);
+        let want = reference_lines(&stream);
+        // Random fragmentation: cut points drawn until the stream is
+        // consumed; scale=shrunk cases degrade towards byte-at-a-time.
+        let mut lb = LineBuf::new();
+        let mut got = Vec::new();
+        let mut rest: &[u8] = &stream;
+        while !rest.is_empty() {
+            let take = g.usize_in(1..(rest.len() + 1).min(17));
+            lb.extend(&rest[..take]);
+            rest = &rest[take..];
+            while let Some(line) = lb.next_line() {
+                got.push(line);
+            }
+        }
+        // EOF: drain the unterminated tail exactly once.
+        if let Some(tail) = lb.take_tail() {
+            got.push(tail);
+        }
+        ensure(got == want, || {
+            format!("fragmented parse diverged:\n  got  {got:?}\n  want {want:?}")
+        })?;
+        ensure(lb.pending() == 0, || format!("{} bytes stranded after EOF drain", lb.pending()))?;
+        ensure(lb.take_tail().is_none(), || "second take_tail must be empty".into())
+    });
+}
+
+/// `has_line` agrees with `next_line` without consuming anything.
+#[test]
+fn prop_has_line_predicts_next_line() {
+    forall(Config::default().cases(40), "has_line is next_line's non-consuming oracle", |g| {
+        let stream = gen_stream(g);
+        let mut lb = LineBuf::new();
+        let mut rest: &[u8] = &stream;
+        while !rest.is_empty() {
+            let take = g.usize_in(1..(rest.len() + 1).min(9));
+            lb.extend(&rest[..take]);
+            rest = &rest[take..];
+            loop {
+                let predicted = lb.has_line();
+                let line = lb.next_line();
+                ensure(predicted == line.is_some(), || {
+                    format!("has_line={predicted} but next_line={line:?}")
+                })?;
+                if line.is_none() {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A sink accepting `budget` bytes, then `WouldBlock` — a wedged peer.
+struct Throttled {
+    taken: Vec<u8>,
+    budget: usize,
+}
+
+impl std::io::Write for Throttled {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.budget == 0 {
+            return Err(std::io::ErrorKind::WouldBlock.into());
+        }
+        let n = buf.len().min(self.budget);
+        self.budget -= n;
+        self.taken.extend_from_slice(&buf[..n]);
+        Ok(n)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Backpressure bound: processing replies only while `accepting()` —
+/// the reactor's gate — keeps pending bytes under the soft cap plus one
+/// reply, no matter how wedged the peer or how long the reply stream.
+#[test]
+fn prop_backpressure_gate_bounds_pending_bytes() {
+    forall(Config::default().cases(40), "wbuf stays under soft cap + one reply", |g| {
+        let replies = g.usize_in(1..200);
+        let reply_len = g.usize_in(1..4096);
+        let mut sink = Throttled { taken: Vec::new(), budget: g.usize_in(0..reply_len * 4) };
+        let mut wb = WriteBuf::new();
+        let reply = vec![b'r'; reply_len];
+        let mut accepted = 0usize;
+        for _ in 0..replies {
+            // The reactor's discipline: flush first, then only take on
+            // another request (which produces a reply) while accepting().
+            wb.flush_into(&mut sink).unwrap();
+            if !wb.accepting() {
+                break;
+            }
+            wb.push(&reply);
+            accepted += 1;
+            ensure(wb.pending() <= ohm::net::conn::WBUF_SOFT_MAX + reply_len, || {
+                format!(
+                    "pending {} exceeds soft cap {} + reply {}",
+                    wb.pending(),
+                    ohm::net::conn::WBUF_SOFT_MAX,
+                    reply_len
+                )
+            })?;
+        }
+        // Nothing is lost: un-wedging the sink drains every accepted
+        // reply byte in order.
+        sink.budget = usize::MAX;
+        assert!(wb.flush_into(&mut sink).unwrap());
+        ensure(sink.taken.len() == accepted * reply_len, || {
+            format!("drained {} bytes, accepted {} replies x {}", sink.taken.len(), accepted, reply_len)
+        })
+    });
+}
+
+/// Exactly-once wake per batch: N pushes onto an empty outbox cost one
+/// signal edge; each drain re-arms; interleavings never lose a batch.
+#[test]
+fn prop_outbox_signals_once_per_batch() {
+    if !ohm::net::supported() {
+        eprintln!("skipping: eventfd unavailable on this target");
+        return;
+    }
+    forall(Config::default().cases(40), "one signal per empty→non-empty edge", |g| {
+        let ob: Outbox<usize> = Outbox::new().expect("eventfd");
+        let batches = g.usize_in(1..10);
+        let mut expected_signals = 0u64;
+        let mut delivered = 0usize;
+        let mut pushed = 0usize;
+        for _ in 0..batches {
+            let pushes = g.usize_in(1..8);
+            for _ in 0..pushes {
+                ob.push(pushed);
+                pushed += 1;
+            }
+            // Only the first push of the batch may signal.
+            expected_signals += 1;
+            ensure(ob.signals() == expected_signals, || {
+                format!("{} signals after {pushed} pushes, want {expected_signals}", ob.signals())
+            })?;
+            delivered += ob.drain().len();
+        }
+        ensure(delivered == pushed, || format!("drained {delivered} of {pushed} pushes"))
+    });
+}

@@ -1,7 +1,7 @@
 """OHM static-analysis suite: toolchain-free passes over the Rust tree.
 
 The build container has no Rust toolchain, so `tools/ohm_analyze.py` is
-the mechanical half of a compile-and-review triage. Five passes:
+the mechanical half of a compile-and-review triage. Six passes:
 
 * ``symbols``     — item-grade `use` resolution (fns/structs/enums/variants
                     through `pub use` chains), the successor of
@@ -16,6 +16,10 @@ the mechanical half of a compile-and-review triage. Five passes:
                     taxonomy, and CLI flags / `[config]` keys vs README.
 * ``ledger``      — every non-test `Ledger { .. }` construction names
                     all fields (full-literal convention).
+* ``unsafe``      — every `unsafe` site (fn/impl/block) diffed against
+                    the committed baseline `tools/baselines/unsafe.txt`,
+                    plus a containment rule: `unsafe` only in the pool's
+                    job system and the net FFI shim.
 
 Shared infrastructure lives here: `lexer` (comment/string-aware Rust
 scanning), `report` (findings, suppressions, JSON emission).
@@ -23,4 +27,4 @@ scanning), `report` (findings, suppressions, JSON emission).
 
 from . import lexer, report  # noqa: F401
 
-PASSES = ("symbols", "locks", "atomics", "conformance", "ledger")
+PASSES = ("symbols", "locks", "atomics", "conformance", "ledger", "unsafe")

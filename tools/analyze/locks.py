@@ -77,6 +77,11 @@ BLOCKING = (
     (".read_exact(", "read_exact"),
     (".accept()", "accept"),
     ("TcpStream::connect", "connect"),
+    # Reactor edge: the epoll wait and socket flush must never run
+    # under a coordinator lock — one stalled peer would wedge the loop.
+    (".poll_io(", "poll_io"),
+    ("epoll_wait(", "epoll_wait"),
+    (".flush_into(", "flush_into"),
 )
 
 

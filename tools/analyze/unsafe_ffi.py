@@ -1,0 +1,144 @@
+"""Pass 6 — unsafe audit: every `unsafe` site vs a committed baseline.
+
+The reactor's epoll/eventfd substrate (`net/sys.rs`) brought raw FFI
+into the crate, joining the work-stealing pool's pointer-based job
+plumbing as the only `unsafe` in the tree. Like memory orderings
+(pass 3), soundness of an `unsafe` block is exactly the thing a
+toolchain-free repo cannot check mechanically — so the policy is the
+same review-by-diff: `tools/baselines/unsafe.txt` records, per file,
+how many sites of each kind exist. A new `unsafe` block (or one quietly
+added to a previously-safe module) changes the counts and fails
+`--check` until the baseline is re-blessed, making every unsafe-surface
+change an explicit, reviewed hunk in the PR that introduces it.
+
+Site kinds, classified by the token after `unsafe`:
+
+* ``fn``    — `unsafe fn` declarations and fn-pointer types
+* ``impl``  — `unsafe impl` (Send/Sync assertions)
+* ``block`` — `unsafe { .. }` expression blocks
+
+Counts are per-kind per-file, so moving code within a file doesn't
+churn the baseline; only adding/removing a site does. A containment
+rule rides along: files outside the allowed modules (the pool's job
+system, the net FFI shim, vendored externs) may not contain `unsafe`
+at all, baseline or not.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from . import lexer
+from .report import PassResult
+
+KINDS = ("fn", "impl", "block")
+SITE_RE = re.compile(r"\bunsafe\b\s*(\{|fn\b|impl\b)?")
+
+BASELINE_NAME = "unsafe.txt"
+
+# Modules allowed to contain `unsafe` at all. Everything else fails the
+# containment rule outright — no baseline entry can admit it.
+ALLOWED_PREFIXES = ("pool/", "net/sys.rs")
+
+
+def classify(tail: str | None) -> str:
+    if tail == "{":
+        return "block"
+    if tail == "fn":
+        return "fn"
+    if tail == "impl":
+        return "impl"
+    return "block"  # e.g. `unsafe` before attributes; count conservatively
+
+
+def inventory(repo: Path, src_root: str = "rust/src") -> dict[str, dict[str, int]]:
+    """{relative file: {kind: count}} for every file with sites."""
+    root = repo / src_root
+    out: dict[str, dict[str, int]] = {}
+    for f in sorted(root.rglob("*.rs")):
+        text = lexer.strip_comments(f.read_text(), blank_strings=True)
+        counts: dict[str, int] = {}
+        for m in SITE_RE.finditer(text):
+            kind = classify(m.group(1))
+            counts[kind] = counts.get(kind, 0) + 1
+        if counts:
+            out[str(f.relative_to(root))] = counts
+    return out
+
+
+def render_baseline(inv: dict[str, dict[str, int]]) -> str:
+    lines = [
+        "# unsafe baseline — per-file `unsafe` site counts (fn/impl/block).",
+        "# Regenerate deliberately with: python3 tools/ohm_analyze.py --bless",
+        "# (any drift from this file fails `--check`; see docs/STATIC_ANALYSIS.md)",
+    ]
+    for file in sorted(inv):
+        counts = inv[file]
+        cells = " ".join(f"{k}={counts[k]}" for k in KINDS if k in counts)
+        lines.append(f"{file} {cells}")
+    return "\n".join(lines) + "\n"
+
+
+def parse_baseline(text: str) -> dict[str, dict[str, int]]:
+    out: dict[str, dict[str, int]] = {}
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split()
+        file, cells = parts[0], parts[1:]
+        counts: dict[str, int] = {}
+        for cell in cells:
+            kind, _, n = cell.partition("=")
+            if kind in KINDS and n.isdigit():
+                counts[kind] = int(n)
+        out[file] = counts
+    return out
+
+
+def run(repo: Path, src_root: str = "rust/src", baselines: Path | None = None) -> PassResult:
+    res = PassResult("unsafe")
+    inv = inventory(repo, src_root)
+    baseline_path = (baselines or repo / "tools" / "baselines") / BASELINE_NAME
+    total = sum(sum(c.values()) for c in inv.values())
+    res.stats = {
+        "files_with_sites": len(inv),
+        "unsafe_sites": total,
+        "baseline": str(baseline_path),
+    }
+
+    # Containment first: `unsafe` outside the blessed modules is a
+    # finding even with a fresh baseline.
+    for file in sorted(inv):
+        if not file.startswith(ALLOWED_PREFIXES):
+            res.finding(
+                f"unsafe:containment:{file}",
+                "`unsafe` outside the allowed modules "
+                f"({', '.join(ALLOWED_PREFIXES)}) — move the raw operation "
+                "behind a safe wrapper in one of them",
+                file=f"{src_root}/{file}",
+            )
+
+    if not baseline_path.exists():
+        res.finding(
+            "unsafe:missing-baseline",
+            f"{baseline_path} does not exist — run `python3 tools/ohm_analyze.py --bless`",
+        )
+        return res
+    committed = parse_baseline(baseline_path.read_text())
+    for file in sorted(set(inv) | set(committed)):
+        got = inv.get(file, {})
+        want = committed.get(file, {})
+        if got == want:
+            continue
+
+        def fmt(c: dict[str, int]) -> str:
+            return " ".join(f"{k}={c[k]}" for k in KINDS if k in c) or "none"
+
+        res.finding(
+            f"unsafe:drift:{file}",
+            f"unsafe sites changed: baseline [{fmt(want)}] vs source [{fmt(got)}] "
+            "— review the new unsafe surface, then re-bless",
+            file=f"{src_root}/{file}",
+        )
+    return res

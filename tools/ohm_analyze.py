@@ -1,12 +1,12 @@
 #!/usr/bin/env python3
-"""OHM static-analysis driver — five toolchain-free passes over the Rust tree.
+"""OHM static-analysis driver — six toolchain-free passes over the Rust tree.
 
     python3 tools/ohm_analyze.py            # report, exit 0
     python3 tools/ohm_analyze.py --check    # gate: exit 1 on any active finding
-    python3 tools/ohm_analyze.py --bless    # regenerate tools/baselines/atomics.txt
+    python3 tools/ohm_analyze.py --bless    # regenerate tools/baselines/{atomics,unsafe}.txt
     python3 tools/ohm_analyze.py --json out.json --pass locks --pass atomics
 
-Passes: symbols, locks, atomics, conformance, ledger — see
+Passes: symbols, locks, atomics, conformance, ledger, unsafe — see
 docs/STATIC_ANALYSIS.md for what each checks and how to suppress a
 false positive (tools/baselines/suppressions.txt, reason required).
 """
@@ -18,7 +18,16 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
-from analyze import PASSES, atomics, conformance, ledger, locks, modules, report  # noqa: E402
+from analyze import (  # noqa: E402
+    PASSES,
+    atomics,
+    conformance,
+    ledger,
+    locks,
+    modules,
+    report,
+    unsafe_ffi,
+)
 
 RUNNERS = {
     "symbols": modules.run,
@@ -26,6 +35,7 @@ RUNNERS = {
     "atomics": atomics.run,
     "conformance": conformance.run,
     "ledger": ledger.run,
+    "unsafe": unsafe_ffi.run,
 }
 
 
@@ -34,14 +44,16 @@ def main() -> int:
     ap.add_argument("--repo", default=str(Path(__file__).resolve().parent.parent))
     ap.add_argument("--root", default="rust/src", help="crate source root, relative to --repo")
     ap.add_argument("--check", action="store_true", help="exit 1 on unsuppressed findings")
-    ap.add_argument("--bless", action="store_true", help="regenerate the atomics baseline")
+    ap.add_argument(
+        "--bless", action="store_true", help="regenerate the atomics and unsafe baselines"
+    )
     ap.add_argument("--json", metavar="PATH", help="write the JSON report here")
     ap.add_argument(
         "--pass",
         dest="passes",
         action="append",
         choices=PASSES,
-        help="run only these passes (repeatable; default: all five)",
+        help="run only these passes (repeatable; default: all six)",
     )
     args = ap.parse_args()
     repo = Path(args.repo)
@@ -55,6 +67,13 @@ def main() -> int:
         print(
             f"blessed {baselines / atomics.BASELINE_NAME}: "
             f"{total} Ordering sites across {len(inv)} files"
+        )
+        uinv = unsafe_ffi.inventory(repo, args.root)
+        (baselines / unsafe_ffi.BASELINE_NAME).write_text(unsafe_ffi.render_baseline(uinv))
+        utotal = sum(sum(c.values()) for c in uinv.values())
+        print(
+            f"blessed {baselines / unsafe_ffi.BASELINE_NAME}: "
+            f"{utotal} unsafe sites across {len(uinv)} files"
         )
         return 0
 
@@ -74,7 +93,7 @@ def main() -> int:
     for res in results:
         extras = []
         for key in ("modules", "files", "uses_checked", "acquisition_sites",
-                    "order_edges", "total_sites", "wire_literals",
+                    "order_edges", "total_sites", "unsafe_sites", "wire_literals",
                     "taxonomy_codes", "cli_flags_checked", "construction_sites"):
             if key in res.stats:
                 extras.append(f"{key}={res.stats[key]}")
